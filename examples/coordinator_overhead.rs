@@ -1,0 +1,62 @@
+//! Perf probe: coordinator overhead per request vs a direct solver call.
+//!
+//! Submits tiny and mid-size systems through the full service (ingress →
+//! batcher → worker → reply) and compares wall time per request against
+//! calling the solver directly — the L3 "coordinator should not be the
+//! bottleneck" check from DESIGN.md §Perf.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::SolverService;
+use ebv_solve::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
+use ebv_solve::solver::{LuSolver, SeqLu};
+use ebv_solve::util::fmt;
+
+fn main() -> ebv_solve::Result<()> {
+    let svc = SolverService::start(ServiceConfig {
+        lanes: 1,
+        max_batch: 1,
+        batch_window_us: 0,
+        use_runtime: false,
+        ..Default::default()
+    })?;
+    println!("per-request coordinator overhead (lanes=1, batch=1):\n");
+    let mut rows = Vec::new();
+    for n in [16usize, 64, 256, 512] {
+        let a = Arc::new(diag_dominant_dense(n, GenSeed(3)));
+        let b = rhs(n, GenSeed(4));
+        let iters = if n <= 64 { 200 } else { 30 };
+
+        // Direct call baseline (same factor-per-call semantics).
+        let solver = SeqLu::new();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(solver.solve(&a, &b)?);
+        }
+        let direct = t0.elapsed().as_secs_f64() / iters as f64;
+
+        // Through the service.
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let resp = svc.solve_dense_blocking(Arc::clone(&a), b.clone(), None)?;
+            assert!(resp.result.is_ok());
+        }
+        let service = t0.elapsed().as_secs_f64() / iters as f64;
+
+        rows.push(vec![
+            n.to_string(),
+            fmt::secs(direct),
+            fmt::secs(service),
+            fmt::secs(service - direct),
+            format!("{:.1}%", (service - direct) / service * 100.0),
+        ]);
+    }
+    println!(
+        "{}",
+        fmt::table(&["n", "direct", "via service", "overhead", "overhead %"], &rows)
+    );
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,30 @@
+// Quick perf probe (not shipped): GFLOP/s of each dense path + sparse factor timing.
+use std::time::Instant;
+use ebv_solve::matrix::generate::*;
+use ebv_solve::solver::*;
+
+fn time<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters { f(); }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    for n in [512usize, 1024, 2048] {
+        let a = diag_dominant_dense(n, GenSeed(1));
+        let flops = 2.0 / 3.0 * (n as f64).powi(3);
+        let iters = if n >= 2048 { 1 } else { 3 };
+        let t_seq = time(|| { std::hint::black_box(SeqLu::new().factor(&a).unwrap()); }, iters);
+        for nb in [32usize, 64, 128, 256] {
+            let t_b = time(|| { std::hint::black_box(BlockedLu::with_block(nb).factor(&a).unwrap()); }, iters);
+            println!("n={n} blocked(nb={nb}): {:.3}s {:.2} GFLOP/s", t_b, flops/t_b/1e9);
+        }
+        println!("n={n} seq: {:.3}s {:.2} GFLOP/s", t_seq, flops/t_seq/1e9);
+    }
+    for n in [1000usize, 2000, 4000] {
+        let a = diag_dominant_sparse(n, 5, GenSeed(2));
+        let t = time(|| { std::hint::black_box(SparseLu::new().factor(&a).unwrap()); }, 3);
+        let f = SparseLu::new().factor(&a).unwrap();
+        println!("sparse n={n}: factor {:.4}s (fill {} -> L+U nnz {})", t, f.fill_in(&a), f.l().nnz()+f.u().nnz());
+    }
+}

@@ -1,0 +1,150 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! Proves all layers compose (EXPERIMENTS.md §E2E records a run):
+//!
+//!   L1/L2  JAX/Pallas EBV kernels, AOT-compiled to `artifacts/*.hlo.txt`
+//!   RT     rust PJRT runtime loading + executing those artifacts
+//!   L3     the coordinator: routing, dynamic batching, factor cache,
+//!          worker lanes, backpressure, metrics
+//!
+//! Workload: a synthetic CFD campaign — Poisson pressure systems and
+//! dense Schur-complement-style systems arriving as a Poisson-arrival
+//! request trace; dense n=64/128/256 requests route to the compiled
+//! PJRT artifacts (with f64 refinement), everything else to the native
+//! engines. Reports throughput, latency percentiles, batch sizes, and
+//! backend mix.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example solver_service
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::SolverService;
+use ebv_solve::util::fmt;
+use ebv_solve::workload::{generate_trace, SystemKind, TraceSpec};
+
+fn main() -> ebv_solve::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
+
+    let cfg = ServiceConfig {
+        lanes: std::thread::available_parallelism().map(|p| p.get().min(8)).unwrap_or(4),
+        max_batch: 8,
+        batch_window_us: 500,
+        queue_capacity: 2048,
+        use_runtime: true, // PJRT artifacts for n ∈ {32, 64, 128, 256}
+        refine: true,      // f32 kernel + f64 refinement
+        ..Default::default()
+    };
+    println!(
+        "starting solver service: {} lanes, batch<= {}, runtime={}",
+        cfg.lanes, cfg.max_batch, cfg.use_runtime
+    );
+    let svc = SolverService::start(cfg)?;
+
+    let trace = generate_trace(&TraceSpec {
+        rate: 2000.0,
+        count: requests,
+        sizes: vec![64, 128, 256],
+        mix: vec![
+            (SystemKind::Dense, 0.5),
+            (SystemKind::Sparse, 0.3),
+            (SystemKind::Poisson, 0.2),
+        ],
+        seed: 0xCFD,
+    });
+    println!("trace: {requests} requests (dense 50% / sparse 30% / poisson 20%), sizes 64-256\n");
+
+    // Pre-materialize systems so generation cost doesn't pollute service
+    // timings. Matrices with the same (kind, n) share a key, so the
+    // batcher and factor cache see the CFD same-A-many-b pattern.
+    enum Sys {
+        D(Arc<ebv_solve::matrix::DenseMatrix>, Vec<f64>, u64),
+        S(Arc<ebv_solve::matrix::CsrMatrix>, Vec<f64>, u64),
+    }
+    let mut cache: std::collections::HashMap<(u8, usize), Sys> = Default::default();
+    let jobs: Vec<(&'static str, Sys)> = trace
+        .iter()
+        .map(|job| match job.kind {
+            SystemKind::Dense => {
+                let key = (0u8, job.n);
+                let entry = cache.entry(key).or_insert_with(|| {
+                    let (a, b) = job.dense_system();
+                    Sys::D(Arc::new(a), b, job.n as u64)
+                });
+                let Sys::D(a, _, k) = entry else { unreachable!() };
+                let (_, b) = job.dense_system();
+                ("dense", Sys::D(Arc::clone(a), b, *k))
+            }
+            _ => {
+                let kind_tag = if job.kind == SystemKind::Sparse { 1u8 } else { 2u8 };
+                let key = (kind_tag, job.n);
+                let entry = cache.entry(key).or_insert_with(|| {
+                    let (a, b) = job.sparse_system();
+                    Sys::S(Arc::new(a), b, 1000 + kind_tag as u64 * 100 + job.n as u64)
+                });
+                let Sys::S(a, _, k) = entry else { unreachable!() };
+                let (_, b) = job.sparse_system();
+                ("sparse", Sys::S(Arc::clone(a), b, *k))
+            }
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(jobs.len());
+    let mut rejected = 0usize;
+    for (_, sys) in jobs {
+        let rx = match sys {
+            Sys::D(a, b, key) => svc.submit_dense(a, b, Some(key)),
+            Sys::S(a, b, key) => svc.submit_sparse(a, b, Some(key)),
+        };
+        match rx {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    let mut worst_residual = 0.0f64;
+    let mut batch_hist: std::collections::BTreeMap<usize, usize> = Default::default();
+    for rx in rxs {
+        let resp = rx.recv().expect("service answered");
+        match resp.result {
+            Ok(_) => {
+                ok += 1;
+                worst_residual = worst_residual.max(resp.residual);
+            }
+            Err(_) => failed += 1,
+        }
+        *batch_hist.entry(resp.batch_size).or_default() += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("=== end-to-end results ===");
+    println!("completed {ok}/{requests} ({failed} failed, {rejected} rejected) in {}", fmt::secs(wall));
+    println!("throughput: {}", fmt::rate(ok as f64 / wall, "solve"));
+    println!("worst residual (after refinement): {worst_residual:.3e}");
+    println!("batch-size histogram: {batch_hist:?}");
+
+    let m = svc.metrics();
+    println!("\nservice metrics: {}", m.summary());
+    print!("backend mix:");
+    for (backend, count) in m.backend_counts() {
+        print!("  {backend}={count}");
+    }
+    println!();
+    let hits = m.factor_hits.load(Ordering::Relaxed);
+    let misses = m.factor_misses.load(Ordering::Relaxed);
+    println!("factorizations: {misses} computed, {hits} cache hits");
+
+    assert!(ok > 0, "no request completed");
+    assert!(worst_residual < 1e-6, "residuals too large: {worst_residual}");
+    println!("\nOK — all layers composed (Pallas kernels → HLO artifacts → PJRT → coordinator)");
+    svc.shutdown();
+    Ok(())
+}

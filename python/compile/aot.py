@@ -1,0 +1,134 @@
+"""AOT lowering: JAX/Pallas model → HLO text + manifest.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Sizes compiled for the dense solve path. 256 is the largest size that
+# keeps interpret-mode CPU execution snappy; on a real TPU the same
+# lowering (without interpret) extends to the paper's 16000 range.
+SOLVE_SIZES = (32, 64, 128, 256)
+FACTOR_SIZES = (64, 128)
+BATCHED = ((64, 8), (128, 8))
+SPMV_SHAPES = ((256, 8),)
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, args, name, kind, n, batch, out_dir):
+    """Lower ``fn(*args)``, write the HLO file, return the manifest row."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    inputs = [list(a.shape) for a in args]
+    dtype_name = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+    input_dtypes = [dtype_name.get(a.dtype, str(a.dtype)) for a in args]
+    out = jax.eval_shape(fn, *args)
+    outputs = [list(o.shape) for o in jax.tree_util.tree_leaves(out)]
+    print(f"  {name}: {len(text)} chars, inputs={inputs} outputs={outputs}")
+    return {
+        "name": name,
+        "kind": kind,
+        "n": n,
+        "batch": batch,
+        "dtype": "f32",
+        "input_dtypes": input_dtypes,
+        "file": fname,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def build_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    f32 = jnp.float32
+    entries = []
+
+    print("lowering lu_solve:")
+    for n in SOLVE_SIZES:
+        a = jax.ShapeDtypeStruct((n, n), f32)
+        b = jax.ShapeDtypeStruct((n,), f32)
+        entries.append(
+            lower_entry(model.lu_solve, (a, b), f"lu_solve_n{n}", "lu_solve", n, 1, out_dir)
+        )
+
+    print("lowering lu_factor:")
+    for n in FACTOR_SIZES:
+        a = jax.ShapeDtypeStruct((n, n), f32)
+        entries.append(
+            lower_entry(model.lu_factor, (a,), f"lu_factor_n{n}", "lu_factor", n, 1, out_dir)
+        )
+
+    print("lowering lu_solve_batched:")
+    for n, k in BATCHED:
+        a = jax.ShapeDtypeStruct((n, n), f32)
+        bs = jax.ShapeDtypeStruct((k, n), f32)
+        entries.append(
+            lower_entry(
+                model.lu_solve_batched,
+                (a, bs),
+                f"lu_solve_n{n}_b{k}",
+                "lu_solve_batched",
+                n,
+                k,
+                out_dir,
+            )
+        )
+
+    print("lowering spmv:")
+    for n, k in SPMV_SHAPES:
+        vals = jax.ShapeDtypeStruct((n, k), f32)
+        cols = jax.ShapeDtypeStruct((n, k), jnp.int32)
+        x = jax.ShapeDtypeStruct((n,), f32)
+        entries.append(
+            lower_entry(model.spmv, (vals, cols, x), f"spmv_n{n}_k{k}", "spmv", n, 1, out_dir)
+        )
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "generated_by": "compile.aot",
+        "entries": entries,
+    }
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(entries)} entries)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""L1 Pallas kernels for the EBV LU solver.
+
+Every kernel is authored for TPU semantics (VMEM-resident blocks,
+vector-unit row operations) but lowered with ``interpret=True`` so the
+resulting HLO runs on the CPU PJRT client — real-TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation).
+
+Modules:
+
+* :mod:`ref` — pure-jnp oracles; the correctness authority for pytest.
+* :mod:`lu_factor` — whole-matrix EBV elimination kernel.
+* :mod:`trisolve` — bi-vector (column-oriented) substitution kernel.
+* :mod:`ebv_step` — one elimination step over a fold-paired row grid:
+  the paper's equalization realized as a data-layout permutation so a
+  uniform BlockSpec carries equal work per program.
+* :mod:`spmv` — ELL sparse matrix-vector product.
+"""
+
+from . import ebv_step, lu_blocked, lu_factor, ref, spmv, trisolve  # noqa: F401

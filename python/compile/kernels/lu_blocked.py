@@ -1,0 +1,109 @@
+"""Blocked (panel) LU — the MXU-form of the EBV elimination.
+
+DESIGN.md §Hardware-Adaptation: the paper's per-step rank-1 update is a
+VPU-shaped operation (outer product — no MXU utilization). Regrouping
+``nb`` consecutive EBV steps into a panel turns the trailing update into
+a ``(n-k) × nb @ nb × (n-k)`` **matmul**, which is the shape the TPU's
+systolic array wants. On real hardware this kernel is the fast path and
+the per-step kernel is the reference; under interpret=True both are
+exercised for correctness and the §Perf tables estimate the MXU gain.
+
+Layout per panel iteration (all VMEM-resident at these sizes):
+
+    [ A11 | A12 ]   A11: nb × nb   — unblocked EBV elimination
+    [ A21 | A22 ]   A21: (n-k-nb) × nb — column panel (L21)
+                    A12: nb × (n-k-nb) — row panel (U12, trsm)
+                    A22 -= L21 @ U12   — MXU matmul
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blocked_kernel(a_ref, lu_ref, *, nb):
+    n = a_ref.shape[0]
+    lu_ref[...] = a_ref[...]
+    idx = jax.lax.iota(jnp.int32, n)
+    num_panels = (n + nb - 1) // nb
+
+    def panel(p, _):
+        k = p * nb
+        lu = lu_ref[...]
+
+        # 1. Unblocked EBV elimination inside the panel columns
+        #    [k, k+nb), applied to ALL rows below the pivot (computes L21
+        #    and the panel part of U) — the paper's per-step scale +
+        #    rank-1 update, restricted to panel columns.
+        def step(r_local, lu):
+            r = k + r_local
+            valid = r < n - 1
+
+            def do(lu):
+                piv = jax.lax.dynamic_index_in_dim(
+                    jax.lax.dynamic_index_in_dim(lu, r, 0, keepdims=False),
+                    r, 0, keepdims=False,
+                )
+                col = jax.lax.dynamic_index_in_dim(lu, r, 1, keepdims=False)
+                row = jax.lax.dynamic_index_in_dim(lu, r, 0, keepdims=False)
+                below = idx > r
+                f = jnp.where(below, col / piv, 0.0)
+                lu = jax.lax.dynamic_update_index_in_dim(
+                    lu, jnp.where(below, f, col), r, 1
+                )
+                # Panel-restricted trailing update: columns (r, k+nb).
+                in_panel = jnp.logical_and(idx > r, idx < k + nb)
+                row_m = jnp.where(in_panel, row, 0.0)
+                return lu - jnp.outer(f, row_m)
+
+            return jax.lax.cond(valid, do, lambda lu: lu, lu)
+
+        lu = jax.lax.fori_loop(0, nb, step, lu)
+
+        # 2. U12 := L11⁻¹ A12 — unit-lower triangular solve on the panel
+        #    rows, applied to the trailing columns (>= k+nb).
+        def trsm_step(r_local, lu):
+            r = k + r_local
+
+            def do(lu):
+                row_r = jax.lax.dynamic_index_in_dim(lu, r, 0, keepdims=False)
+
+                # Subtract contributions of earlier panel rows.
+                def inner(j_local, row_r):
+                    j = k + j_local
+                    l_rj = jax.lax.dynamic_index_in_dim(row_r, j, 0, keepdims=False)
+                    row_j = jax.lax.dynamic_index_in_dim(lu, j, 0, keepdims=False)
+                    trail = idx >= k + nb
+                    return jnp.where(trail, row_r - l_rj * row_j, row_r)
+
+                row_r = jax.lax.fori_loop(0, r_local, inner, row_r)
+                return jax.lax.dynamic_update_index_in_dim(lu, row_r, r, 0)
+
+            # Guard the ragged final panel (r beyond the matrix edge).
+            return jax.lax.cond(r < n, do, lambda lu: lu, lu)
+
+        lu = jax.lax.fori_loop(0, nb, trsm_step, lu)
+
+        # 3. A22 -= L21 @ U12 — THE MXU MATMUL. Masked to the trailing
+        #    block so the whole-matrix expression stays static-shaped.
+        rows_t = (idx >= k + nb).astype(lu.dtype)[:, None]
+        cols_p = jnp.logical_and(idx >= k, idx < k + nb).astype(lu.dtype)[None, :]
+        l21 = lu * rows_t * cols_p                    # (n, n) masked L21
+        u12 = lu * cols_p.T * (idx >= k + nb).astype(lu.dtype)[None, :]
+        lu_ref[...] = lu - l21 @ u12
+        return 0
+
+    jax.lax.fori_loop(0, num_panels, panel, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("nb",))
+def lu_factor_blocked(a, nb=16):
+    """Packed unpivoted LU via panel elimination + matmul updates."""
+    n = a.shape[0]
+    return pl.pallas_call(
+        functools.partial(_blocked_kernel, nb=nb),
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=True,
+    )(a)

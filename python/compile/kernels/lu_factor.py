@@ -1,0 +1,49 @@
+"""Whole-matrix EBV LU factorization as a single Pallas kernel.
+
+The `(n, n)` system lives in one VMEM block (f32 · 256² = 256 KiB — well
+inside a TPU core's ~16 MiB VMEM; DESIGN.md §Perf carries the footprint
+table). The elimination loop runs inside the kernel: per step, the
+L-column scale (the paper's Eq. 6-a) is one vector op on the VPU lanes
+and the rank-1 trailing update (Eq. 6-c) is one masked outer-product
+update — the bi-vector pair processed in a single fused sweep.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lu_kernel(a_ref, lu_ref):
+    n = a_ref.shape[0]
+    lu_ref[...] = a_ref[...]
+    idx = jax.lax.iota(jnp.int32, n)
+
+    def step(r, _):
+        lu = lu_ref[...]
+        piv = jax.lax.dynamic_index_in_dim(jax.lax.dynamic_index_in_dim(lu, r, 0, keepdims=False), r, 0, keepdims=False)
+        col = jax.lax.dynamic_index_in_dim(lu, r, 1, keepdims=False)  # column r
+        row = jax.lax.dynamic_index_in_dim(lu, r, 0, keepdims=False)  # row r
+        below = idx > r
+        f = jnp.where(below, col / piv, 0.0)
+        # Write the multipliers into column r, then apply the rank-1
+        # bi-vector update to the trailing block.
+        col_new = jnp.where(below, f, col)
+        lu = jax.lax.dynamic_update_index_in_dim(lu, col_new, r, 1)
+        row_masked = jnp.where(idx > r, row, 0.0)
+        lu_ref[...] = lu - jnp.outer(f, row_masked)
+        return 0
+
+    jax.lax.fori_loop(0, n - 1, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lu_factor(a):
+    """Packed unpivoted LU of ``a`` via the Pallas kernel."""
+    n = a.shape[0]
+    return pl.pallas_call(
+        _lu_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=True,
+    )(a)

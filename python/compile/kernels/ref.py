@@ -1,0 +1,94 @@
+"""Pure-jnp reference implementations (the correctness oracles).
+
+Everything here is written for clarity, not speed: ``pytest`` asserts the
+Pallas kernels (and, transitively, the AOT artifacts the rust runtime
+executes) against these functions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def lu_factor_ref(a):
+    """Unpivoted Doolittle LU, packed in one matrix.
+
+    Matches the paper's setting (Eq. 2): diagonally dominant systems,
+    no pivoting. Returns ``LU`` with the unit-lower multipliers below
+    the diagonal and ``U`` on/above it.
+    """
+    n = a.shape[0]
+
+    def step(r, lu):
+        piv = lu[r, r]
+        idx = jnp.arange(n)
+        col_mask = idx > r
+        f = jnp.where(col_mask, lu[:, r] / piv, 0.0)
+        # Store multipliers in column r.
+        lu = lu.at[:, r].set(jnp.where(col_mask, f, lu[:, r]))
+        # Rank-1 trailing update (Eq. 6-c): rows > r, cols > r.
+        row = jnp.where(idx > r, lu[r, :], 0.0)
+        return lu - jnp.outer(f, row)
+
+    return jax.lax.fori_loop(0, n - 1, step, a)
+
+
+def forward_ref(lu, b):
+    """Solve ``L y = b`` with the unit lower triangle of packed ``lu``.
+
+    Column-oriented (right-looking): after ``y[j]`` finalizes, apply the
+    bi-vector axpy — the paper's Eq. (4-b) reading of the substitution.
+    """
+    n = lu.shape[0]
+    idx = jnp.arange(n)
+
+    def step(j, y):
+        yj = y[j]
+        col = jnp.where(idx > j, lu[:, j], 0.0)
+        return y - col * yj
+
+    return jax.lax.fori_loop(0, n - 1, step, b)
+
+
+def backward_ref(lu, y):
+    """Solve ``U x = y`` with the upper triangle of packed ``lu``."""
+    n = lu.shape[0]
+    idx = jnp.arange(n)
+
+    def step(k, x):
+        i = n - 1 - k
+        xi = x[i] / lu[i, i]
+        x = x.at[i].set(xi)
+        col = jnp.where(idx < i, lu[:, i], 0.0)
+        return x - col * xi
+
+    return jax.lax.fori_loop(0, n, step, y)
+
+
+def lu_solve_ref(a, b):
+    """Factor + solve."""
+    lu = lu_factor_ref(a)
+    return backward_ref(lu, forward_ref(lu, b))
+
+
+def spmv_ell_ref(values, cols, x):
+    """ELL-format SpMV: ``y[i] = sum_k values[i, k] * x[cols[i, k]]``.
+
+    Padding entries use ``cols == -1`` (their value must be 0, but the
+    mask makes this robust anyway).
+    """
+    gathered = x[jnp.clip(cols, 0, x.shape[0] - 1)]
+    masked = jnp.where(cols >= 0, values * gathered, 0.0)
+    return masked.sum(axis=1)
+
+
+def fold_permutation(n):
+    """The EBV fold: row order ``[0, n-1, 1, n-2, …]``.
+
+    Pairing first with last is the paper's equalization; applying it as
+    a permutation makes every *contiguous pair* of rows an equalized
+    work unit, so a uniform block partition carries equal work.
+    """
+    head = jnp.arange((n + 1) // 2)
+    tail = n - 1 - head
+    inter = jnp.stack([head, tail], axis=1).reshape(-1)
+    return inter[:n]

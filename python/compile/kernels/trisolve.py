@@ -1,0 +1,52 @@
+"""Bi-vector triangular solves as a Pallas kernel.
+
+The substitution phase *is* the paper's Eq. (4-b/4-c): applying ``A⁻¹``
+is a sequence of elementary bi-vector axpys (one per pivot), each a full
+VPU-width vector op on the VMEM-resident solution vector. Forward and
+backward sweeps are fused into one kernel so the intermediate ``y``
+never leaves VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trisolve_kernel(lu_ref, b_ref, x_ref):
+    n = lu_ref.shape[0]
+    idx = jax.lax.iota(jnp.int32, n)
+    lu = lu_ref[...]
+
+    # Forward: L y = b (unit lower). After y[j] is final, subtract the
+    # scaled L-column — the bi-vector apply.
+    def fwd(j, y):
+        yj = jax.lax.dynamic_index_in_dim(y, j, 0, keepdims=False)
+        col = jax.lax.dynamic_index_in_dim(lu, j, 1, keepdims=False)
+        return y - jnp.where(idx > j, col, 0.0) * yj
+
+    y = jax.lax.fori_loop(0, n - 1, fwd, b_ref[...])
+
+    # Backward: U x = y.
+    def bwd(k, x):
+        i = n - 1 - k
+        num = jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False)
+        den = jax.lax.dynamic_index_in_dim(
+            jax.lax.dynamic_index_in_dim(lu, i, 0, keepdims=False), i, 0, keepdims=False
+        )
+        xi = num / den
+        x = jax.lax.dynamic_update_index_in_dim(x, xi, i, 0)
+        col = jax.lax.dynamic_index_in_dim(lu, i, 1, keepdims=False)
+        return x - jnp.where(idx < i, col, 0.0) * xi
+
+    x_ref[...] = jax.lax.fori_loop(0, n, bwd, y)
+
+
+@jax.jit
+def trisolve(lu, b):
+    """Solve ``L U x = b`` from a packed factorization."""
+    n = lu.shape[0]
+    return pl.pallas_call(
+        _trisolve_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        interpret=True,
+    )(lu, b)

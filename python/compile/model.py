@@ -1,0 +1,48 @@
+"""L2 model: the jitted compute graphs the rust runtime executes.
+
+Each function here composes the L1 Pallas kernels into the end-to-end
+programs that `aot.py` lowers to HLO text — factor-only, factor+solve,
+and the batched multi-RHS variant the coordinator's batcher feeds (the
+CFD pattern: one matrix, many right-hand sides).
+
+Python in this package runs at build time only; nothing here is imported
+on the rust request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lu_factor as lu_factor_kernel
+from .kernels import spmv as spmv_kernel
+from .kernels import trisolve as trisolve_kernel
+
+
+def lu_factor(a):
+    """Packed unpivoted LU (Pallas kernel)."""
+    return lu_factor_kernel.lu_factor(a)
+
+
+def lu_solve(a, b):
+    """Solve ``A x = b``: one factorization + fused substitutions."""
+    lu = lu_factor_kernel.lu_factor(a)
+    return trisolve_kernel.trisolve(lu, b)
+
+
+def lu_solve_batched(a, bs):
+    """Solve ``A X = B`` for a batch of RHS (``bs``: ``(k, n)``).
+
+    One factorization amortized over the batch; the substitution is
+    vmapped so XLA fuses the per-RHS sweeps into one batched loop.
+    """
+    lu = lu_factor_kernel.lu_factor(a)
+    return jax.vmap(lambda b: trisolve_kernel.trisolve(lu, b))(bs)
+
+
+def spmv(values, cols, x):
+    """ELL SpMV (sparse substrate)."""
+    return spmv_kernel.spmv_ell(values, cols, x)
+
+
+def residual_inf(a, x, b):
+    """∞-norm residual — exported so the artifact can self-check."""
+    return jnp.max(jnp.abs(a @ x - b))

@@ -1,0 +1,7 @@
+"""Test configuration: enable f64 so the jnp oracle can be checked
+against scipy at double precision (the kernels themselves are exercised
+in f32, as deployed)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

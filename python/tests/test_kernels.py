@@ -1,0 +1,183 @@
+"""Pallas kernels vs the pure-jnp oracle (and scipy where applicable).
+
+This is the CORE correctness signal for the L1 layer: everything the
+rust runtime executes was lowered from exactly these functions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+import scipy.linalg
+
+from compile.kernels import ebv_step, lu_factor, ref, spmv, trisolve
+
+
+def dominant_matrix(n, seed, dtype=np.float64):
+    """Diagonally dominant random system (the paper's Eq. 2 setting)."""
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-1.0, 1.0, size=(n, n))
+    np.fill_diagonal(a, 0.0)
+    diag = np.abs(a).sum(axis=1) + rng.uniform(1.0, 2.0, size=n)
+    np.fill_diagonal(a, diag)
+    return a.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# reference oracle vs scipy (the oracle itself must be right)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 8, 17, 32])
+def test_ref_factor_matches_scipy(n):
+    a = dominant_matrix(n, seed=n)
+    packed = np.asarray(ref.lu_factor_ref(jnp.asarray(a)))
+    l = np.tril(packed, -1) + np.eye(n)
+    u = np.triu(packed)
+    np.testing.assert_allclose(l @ u, a, rtol=0, atol=1e-9)
+
+
+@pytest.mark.parametrize("n", [2, 8, 31])
+def test_ref_solve_matches_scipy(n):
+    a = dominant_matrix(n, seed=100 + n)
+    b = np.random.default_rng(n).uniform(-1, 1, n)
+    x = np.asarray(ref.lu_solve_ref(jnp.asarray(a), jnp.asarray(b)))
+    expected = scipy.linalg.solve(a, b)
+    np.testing.assert_allclose(x, expected, rtol=0, atol=1e-8)
+
+
+def test_fold_permutation_structure():
+    p = np.asarray(ref.fold_permutation(6))
+    np.testing.assert_array_equal(p, [0, 5, 1, 4, 2, 3])
+    p = np.asarray(ref.fold_permutation(5))
+    np.testing.assert_array_equal(p, [0, 4, 1, 3, 2])
+    # Always a permutation.
+    for n in (1, 2, 9, 16):
+        assert sorted(np.asarray(ref.fold_permutation(n)).tolist()) == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# pallas kernels vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 33, 64])
+def test_lu_factor_kernel_matches_ref(n):
+    a = jnp.asarray(dominant_matrix(n, seed=n, dtype=np.float32))
+    got = lu_factor.lu_factor(a)
+    want = ref.lu_factor_ref(a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [2, 8, 32, 64])
+def test_trisolve_kernel_matches_ref(n):
+    a = jnp.asarray(dominant_matrix(n, seed=n, dtype=np.float32))
+    b = jnp.asarray(np.random.default_rng(n).uniform(-1, 1, n).astype(np.float32))
+    lu = ref.lu_factor_ref(a)
+    got = trisolve.trisolve(lu, b)
+    want = ref.backward_ref(lu, ref.forward_ref(lu, b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+def test_ebv_step_grid_factorization_matches_ref(n):
+    """The fold-paired grid path computes the same factors."""
+    a = jnp.asarray(dominant_matrix(n, seed=7 * n, dtype=np.float32))
+    got = ebv_step.lu_factor_stepped(a)
+    want = ref.lu_factor_ref(a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-4)
+
+
+def test_spmv_kernel_matches_ref_and_dense():
+    n, k = 32, 4
+    rng = np.random.default_rng(3)
+    dense = np.zeros((n, n), dtype=np.float32)
+    values = np.zeros((n, k), dtype=np.float32)
+    cols = -np.ones((n, k), dtype=np.int32)
+    for i in range(n):
+        w = rng.integers(0, k + 1)
+        picked = rng.choice(n, size=w, replace=False)
+        for slot, j in enumerate(sorted(picked)):
+            v = rng.uniform(-1, 1)
+            values[i, slot] = v
+            cols[i, slot] = j
+            dense[i, j] = v
+    x = rng.uniform(-1, 1, n).astype(np.float32)
+    got = spmv.spmv_ell(jnp.asarray(values), jnp.asarray(cols), jnp.asarray(x))
+    want = ref.spmv_ell_ref(jnp.asarray(values), jnp.asarray(cols), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got), dense @ x, rtol=0, atol=1e-5)
+
+
+def test_spmv_blocked_grid_matches_whole_array():
+    n, k = 64, 5
+    rng = np.random.default_rng(4)
+    values = rng.uniform(-1, 1, (n, k)).astype(np.float32)
+    cols = rng.integers(0, n, (n, k)).astype(np.int32)
+    x = rng.uniform(-1, 1, n).astype(np.float32)
+    whole = spmv.spmv_ell(jnp.asarray(values), jnp.asarray(cols), jnp.asarray(x))
+    blocked = spmv.spmv_ell(
+        jnp.asarray(values), jnp.asarray(cols), jnp.asarray(x), block_rows=16
+    )
+    np.testing.assert_allclose(np.asarray(whole), np.asarray(blocked), rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, seeds, dtypes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=2, max_value=24), seed=st.integers(0, 2**16))
+def test_prop_factor_reconstructs(n, seed):
+    a = dominant_matrix(n, seed=seed, dtype=np.float32)
+    packed = np.asarray(lu_factor.lu_factor(jnp.asarray(a)))
+    l = np.tril(packed, -1).astype(np.float64) + np.eye(n)
+    u = np.triu(packed).astype(np.float64)
+    np.testing.assert_allclose(l @ u, a, rtol=0, atol=5e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=2, max_value=24), seed=st.integers(0, 2**16))
+def test_prop_solve_residual_small(n, seed):
+    a = dominant_matrix(n, seed=seed, dtype=np.float32)
+    b = np.random.default_rng(seed).uniform(-1, 1, n).astype(np.float32)
+    lu = lu_factor.lu_factor(jnp.asarray(a))
+    x = np.asarray(trisolve.trisolve(lu, jnp.asarray(b)))
+    residual = np.max(np.abs(a.astype(np.float64) @ x - b))
+    assert residual < 1e-3, f"residual={residual}"
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 12, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_prop_fold_grid_equals_fused_kernel(n, seed):
+    a = dominant_matrix(n, seed=seed, dtype=np.float32)
+    stepped = np.asarray(ebv_step.lu_factor_stepped(jnp.asarray(a)))
+    fused = np.asarray(lu_factor.lu_factor(jnp.asarray(a)))
+    np.testing.assert_allclose(stepped, fused, rtol=0, atol=5e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32]),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_prop_spmv_matches_dense(n, k, seed):
+    rng = np.random.default_rng(seed)
+    values = rng.uniform(-1, 1, (n, k)).astype(np.float32)
+    cols = rng.integers(-1, n, (n, k)).astype(np.int32)
+    values[cols < 0] = 0.0
+    x = rng.uniform(-1, 1, n).astype(np.float32)
+    dense = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        for s in range(k):
+            if cols[i, s] >= 0:
+                dense[i, cols[i, s]] += values[i, s]
+    got = np.asarray(spmv.spmv_ell(jnp.asarray(values), jnp.asarray(cols), jnp.asarray(x)))
+    np.testing.assert_allclose(got, dense @ x, rtol=0, atol=1e-4)

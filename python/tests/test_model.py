@@ -1,0 +1,98 @@
+"""L2 model graphs: shapes, batching semantics, and AOT lowering."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+from .test_kernels import dominant_matrix
+
+
+def test_lu_solve_matches_ref():
+    n = 48
+    a = jnp.asarray(dominant_matrix(n, seed=1, dtype=np.float32))
+    b = jnp.asarray(np.random.default_rng(1).uniform(-1, 1, n).astype(np.float32))
+    x = model.lu_solve(a, b)
+    want = ref.lu_solve_ref(a, b)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(want), rtol=0, atol=1e-3)
+
+
+def test_batched_solve_matches_loop():
+    n, k = 32, 5
+    a = jnp.asarray(dominant_matrix(n, seed=2, dtype=np.float32))
+    bs = jnp.asarray(np.random.default_rng(2).uniform(-1, 1, (k, n)).astype(np.float32))
+    batched = model.lu_solve_batched(a, bs)
+    assert batched.shape == (k, n)
+    for i in range(k):
+        single = model.lu_solve(a, bs[i])
+        np.testing.assert_allclose(
+            np.asarray(batched[i]), np.asarray(single), rtol=0, atol=1e-4
+        )
+
+
+def test_factor_only_graph():
+    n = 24
+    a = jnp.asarray(dominant_matrix(n, seed=3, dtype=np.float32))
+    packed = model.lu_factor(a)
+    assert packed.shape == (n, n)
+    want = ref.lu_factor_ref(a)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(want), rtol=0, atol=1e-4)
+
+
+def test_residual_helper():
+    a = jnp.eye(4, dtype=jnp.float32)
+    x = jnp.ones(4, dtype=jnp.float32)
+    assert float(model.residual_inf(a, x, x)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering
+# ---------------------------------------------------------------------------
+
+
+def test_to_hlo_text_produces_parseable_module():
+    n = 8
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    b = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(model.lu_solve).lower(a, b)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_build_all_writes_manifest_and_files(tmp_path):
+    # Shrink the size grid so the test is fast.
+    old = (aot.SOLVE_SIZES, aot.FACTOR_SIZES, aot.BATCHED, aot.SPMV_SHAPES)
+    aot.SOLVE_SIZES, aot.FACTOR_SIZES = (8,), (8,)
+    aot.BATCHED, aot.SPMV_SHAPES = ((8, 2),), ((8, 2),)
+    try:
+        aot.build_all(str(tmp_path))
+    finally:
+        aot.SOLVE_SIZES, aot.FACTOR_SIZES, aot.BATCHED, aot.SPMV_SHAPES = old
+
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    kinds = {e["kind"] for e in manifest["entries"]}
+    assert kinds == {"lu_solve", "lu_factor", "lu_solve_batched", "spmv"}
+    for e in manifest["entries"]:
+        f = tmp_path / e["file"]
+        assert f.exists(), e["file"]
+        assert "HloModule" in f.read_text()[:200]
+        assert e["inputs"] and e["outputs"]
+
+
+def test_manifest_shapes_are_consistent():
+    """The manifest rows must describe exactly what the graphs take."""
+    n, k = 8, 2
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    bs = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    out = jax.eval_shape(model.lu_solve_batched, a, bs)
+    leaves = jax.tree_util.tree_leaves(out)
+    assert [list(o.shape) for o in leaves] == [[k, n]]

@@ -1,0 +1,73 @@
+//! Extension bench: the conclusion's multi-device claim.
+//!
+//! "So we pose that this method is able to use another parallel device
+//! like CPU clusters." — simulated strong scaling of the EBV schedule
+//! across 1…16 devices on two interconnects (PCIe-staged multi-GPU and
+//! a gigabit CPU cluster), exposing where the per-step pivot-row
+//! broadcast kills scaling.
+
+use ebv_solve::bench::Report;
+use ebv_solve::ebv::schedule::RowDist;
+use ebv_solve::gpusim::cluster::{scaling_efficiency, simulate_cluster_dense, Interconnect};
+use ebv_solve::gpusim::GpuModel;
+use ebv_solve::util::fmt;
+
+fn main() {
+    let gpu = GpuModel::gtx280();
+    let devices = [1usize, 2, 4, 8, 16];
+    let sizes = [1000usize, 4000, 16000];
+
+    let mut report = Report::new("Extension — multi-device strong scaling");
+    report.set_headers(&["interconnect", "n", "devices", "time, s", "speedup", "efficiency"]);
+
+    for (name, link) in [
+        ("pcie-staged", Interconnect::pcie_staged()),
+        ("gigabit-cluster", Interconnect::gigabit_cluster()),
+    ] {
+        println!("\ninterconnect: {name}");
+        let mut rows = Vec::new();
+        for &n in &sizes {
+            let t1 = simulate_cluster_dense(n, 1, &gpu, &link, RowDist::EbvFold);
+            for &d in &devices {
+                let td = simulate_cluster_dense(n, d, &gpu, &link, RowDist::EbvFold);
+                let eff = scaling_efficiency(n, d, &gpu, &link);
+                rows.push(vec![
+                    format!("{n}*{n}"),
+                    d.to_string(),
+                    format!("{td:.4}"),
+                    format!("{:.2}", t1 / td),
+                    format!("{:.0}%", eff * 100.0),
+                ]);
+                report.push_row(vec![
+                    name.to_string(),
+                    n.to_string(),
+                    d.to_string(),
+                    format!("{td:.4}"),
+                    format!("{:.2}", t1 / td),
+                    format!("{:.3}", eff),
+                ]);
+            }
+        }
+        println!("{}", fmt::table(&["size", "devices", "time, s", "speedup", "efficiency"], &rows));
+    }
+
+    println!("{}", report.render());
+    if let Ok(p) = report.write_json() {
+        println!("report: {}", p.display());
+    }
+
+    // Shape assertions: large systems scale on the fast link, small ones
+    // don't on the slow link.
+    let fast = Interconnect::pcie_staged();
+    let slow = Interconnect::gigabit_cluster();
+    let big_speedup = simulate_cluster_dense(16000, 1, &gpu, &fast, RowDist::EbvFold)
+        / simulate_cluster_dense(16000, 8, &gpu, &fast, RowDist::EbvFold);
+    assert!(big_speedup > 2.0, "16000 on 8 fast devices should scale: {big_speedup}");
+    let small_speedup = simulate_cluster_dense(500, 1, &gpu, &slow, RowDist::EbvFold)
+        / simulate_cluster_dense(500, 8, &gpu, &slow, RowDist::EbvFold);
+    assert!(small_speedup < 1.0, "500 on a gigabit cluster must not scale: {small_speedup}");
+    println!(
+        "claim check: n=16000 scales {big_speedup:.1}x on 8 fast devices; \
+         n=500 anti-scales ({small_speedup:.2}x) on a gigabit cluster ✓"
+    );
+}

@@ -1,0 +1,251 @@
+//! Measurement harness (offline substitute for `criterion`).
+//!
+//! Wall-clock benchmarking with warmup, adaptive iteration counts, and
+//! mean/median/p99/stddev statistics; plus report emission as text
+//! tables and JSON so `EXPERIMENTS.md` entries are regenerable.
+
+use std::time::{Duration, Instant};
+
+use crate::util::fmt;
+use crate::util::json::Json;
+
+/// Statistics of one measured case.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p99: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    fn from_samples(name: &str, samples: &mut [f64]) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            p99: samples[(n * 99 / 100).min(n - 1)],
+            stddev: var.sqrt(),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::from(self.name.clone())),
+            ("iters", Json::from(self.iters)),
+            ("mean_s", Json::from(self.mean)),
+            ("median_s", Json::from(self.median)),
+            ("p99_s", Json::from(self.p99)),
+            ("stddev_s", Json::from(self.stddev)),
+            ("min_s", Json::from(self.min)),
+            ("max_s", Json::from(self.max)),
+        ])
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum number of timed iterations.
+    pub min_iters: usize,
+    /// Maximum number of timed iterations.
+    pub max_iters: usize,
+    /// Target total measurement time per case.
+    pub target_time: Duration,
+    /// Warmup iterations (not recorded).
+    pub warmup_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_iters: 5,
+            max_iters: 200,
+            target_time: Duration::from_millis(800),
+            warmup_iters: 2,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive cases (large matrices).
+    pub fn quick() -> Self {
+        Bencher {
+            min_iters: 3,
+            max_iters: 20,
+            target_time: Duration::from_millis(300),
+            warmup_iters: 1,
+        }
+    }
+
+    /// Measure `f`, returning timing stats. The closure's return value is
+    /// passed through `std::hint::black_box` to keep the work alive.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.min_iters);
+        let started = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            let enough_time = started.elapsed() >= self.target_time;
+            if samples.len() >= self.max_iters || (samples.len() >= self.min_iters && enough_time)
+            {
+                break;
+            }
+        }
+        Stats::from_samples(name, &mut samples)
+    }
+}
+
+/// A collected report: rows of named stats plus free-form table rows,
+/// printable and dumpable as JSON (under `target/bench-reports/`).
+#[derive(Debug, Default)]
+pub struct Report {
+    title: String,
+    stats: Vec<Stats>,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Report { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn push_stats(&mut self, s: Stats) {
+        self.stats.push(s);
+    }
+
+    /// Set the headers of the free-form results table.
+    pub fn set_headers(&mut self, headers: &[&str]) {
+        self.headers = headers.iter().map(|s| s.to_string()).collect();
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        self.rows.push(row);
+    }
+
+    /// Render the report as text (printed by every bench binary).
+    pub fn render(&self) -> String {
+        let mut out = format!("\n=== {} ===\n", self.title);
+        if !self.rows.is_empty() {
+            let headers: Vec<&str> = self.headers.iter().map(String::as_str).collect();
+            out.push_str(&fmt::table(&headers, &self.rows));
+        }
+        if !self.stats.is_empty() {
+            out.push_str("\nTimings:\n");
+            let rows: Vec<Vec<String>> = self
+                .stats
+                .iter()
+                .map(|s| {
+                    vec![
+                        s.name.clone(),
+                        s.iters.to_string(),
+                        fmt::secs(s.mean),
+                        fmt::secs(s.median),
+                        fmt::secs(s.p99),
+                        fmt::secs(s.stddev),
+                    ]
+                })
+                .collect();
+            out.push_str(&fmt::table(
+                &["case", "iters", "mean", "median", "p99", "stddev"],
+                &rows,
+            ));
+        }
+        out
+    }
+
+    /// Write the report JSON under `target/bench-reports/<slug>.json`.
+    pub fn write_json(&self) -> std::io::Result<std::path::PathBuf> {
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+            .collect();
+        let dir = std::path::Path::new("target/bench-reports");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{slug}.json"));
+        let doc = Json::obj([
+            ("title", Json::from(self.title.clone())),
+            ("headers", Json::arr(self.headers.iter().map(|h| Json::from(h.clone())))),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::arr(r.iter().map(|c| Json::from(c.clone())))),
+                ),
+            ),
+            ("stats", Json::arr(self.stats.iter().map(Stats::to_json))),
+        ]);
+        std::fs::write(&path, doc.emit_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_sane_stats() {
+        let b = Bencher { min_iters: 5, max_iters: 10, ..Bencher::quick() };
+        let s = b.run("noop-ish", || {
+            std::hint::black_box((0..100).sum::<usize>())
+        });
+        assert!(s.iters >= 5 && s.iters <= 10);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.mean > 0.0);
+        assert!(s.p99 >= s.median);
+    }
+
+    #[test]
+    fn stats_from_known_samples() {
+        let mut samples = vec![3.0, 1.0, 2.0, 4.0, 5.0];
+        let s = Stats::from_samples("k", &mut samples);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn report_renders_rows_and_stats() {
+        let mut r = Report::new("Table X");
+        r.set_headers(&["n", "time"]);
+        r.push_row(vec!["500".into(), "1 ms".into()]);
+        let b = Bencher::quick();
+        r.push_stats(b.run("case", || 1 + 1));
+        let text = r.render();
+        assert!(text.contains("Table X"));
+        assert!(text.contains("500"));
+        assert!(text.contains("case"));
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let mut r = Report::new("json smoke");
+        r.set_headers(&["a"]);
+        r.push_row(vec!["1".into()]);
+        let path = r.write_json().unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str().unwrap(), "json smoke");
+    }
+}

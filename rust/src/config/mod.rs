@@ -1,0 +1,245 @@
+//! Configuration system (offline substitute for serde+toml).
+//!
+//! Parses a TOML subset — `[section]` headers, `key = value` with
+//! string/int/float/bool values and `#` comments — into typed config
+//! structs with defaults, validation and environment overrides
+//! (`EBV_<SECTION>_<KEY>`). Used by the service binary and examples.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::ebv::schedule::RowDist;
+use crate::util::error::{EbvError, Result};
+
+/// Raw parsed config: `section -> key -> value-as-string`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<RawConfig> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = strip_comment(line).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(EbvError::Config(format!("line {}: empty section", lineno + 1)));
+                }
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(EbvError::Config(format!(
+                    "line {}: expected `key = value`, got `{line}`",
+                    lineno + 1
+                )));
+            };
+            let key = k.trim().to_string();
+            let mut val = v.trim().to_string();
+            // Unquote strings.
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            if key.is_empty() {
+                return Err(EbvError::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            cfg.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<RawConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| EbvError::io(format!("read config {}", path.display()), e))?;
+        RawConfig::parse(&text)
+    }
+
+    /// Fetch `section.key`, checking env override `EBV_<SECTION>_<KEY>`
+    /// first.
+    pub fn get(&self, section: &str, key: &str) -> Option<String> {
+        let env_key = format!(
+            "EBV_{}_{}",
+            section.to_ascii_uppercase().replace('-', "_"),
+            key.to_ascii_uppercase().replace('-', "_")
+        );
+        if let Ok(v) = std::env::var(&env_key) {
+            return Some(v);
+        }
+        self.sections.get(section).and_then(|s| s.get(key)).cloned()
+    }
+
+    fn get_parsed<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                EbvError::Config(format!("{section}.{key}: cannot parse `{v}`"))
+            }),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Typed service configuration with validated defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// Worker lanes in the solver pool.
+    pub lanes: usize,
+    /// Row-distribution strategy for the EBV solver.
+    pub dist: RowDist,
+    /// Maximum batch size the dynamic batcher will coalesce.
+    pub max_batch: usize,
+    /// Batching window: how long the batcher waits to fill a batch.
+    pub batch_window_us: u64,
+    /// Bound on the pending-request queue (backpressure threshold).
+    pub queue_capacity: usize,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+    /// Prefer the PJRT runtime for sizes with compiled artifacts.
+    pub use_runtime: bool,
+    /// Refine runtime (f32) solutions to f64 accuracy.
+    pub refine: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            lanes: 4,
+            dist: RowDist::EbvFold,
+            max_batch: 16,
+            batch_window_us: 200,
+            queue_capacity: 1024,
+            artifacts_dir: "artifacts".to_string(),
+            use_runtime: false,
+            refine: true,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Build from a raw config's `[service]` section (all keys optional).
+    pub fn from_raw(raw: &RawConfig) -> Result<ServiceConfig> {
+        let d = ServiceConfig::default();
+        let dist = match raw.get("service", "dist").as_deref() {
+            None => d.dist,
+            Some("block") => RowDist::Block,
+            Some("cyclic") => RowDist::Cyclic,
+            Some("ebv-fold") => RowDist::EbvFold,
+            Some("greedy-lpt") => RowDist::GreedyLpt,
+            Some(other) => {
+                return Err(EbvError::Config(format!("service.dist: unknown strategy `{other}`")))
+            }
+        };
+        let cfg = ServiceConfig {
+            lanes: raw.get_parsed("service", "lanes", d.lanes)?,
+            dist,
+            max_batch: raw.get_parsed("service", "max_batch", d.max_batch)?,
+            batch_window_us: raw.get_parsed("service", "batch_window_us", d.batch_window_us)?,
+            queue_capacity: raw.get_parsed("service", "queue_capacity", d.queue_capacity)?,
+            artifacts_dir: raw
+                .get("service", "artifacts_dir")
+                .unwrap_or_else(|| d.artifacts_dir.clone()),
+            use_runtime: raw.get_parsed("service", "use_runtime", d.use_runtime)?,
+            refine: raw.get_parsed("service", "refine", d.refine)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.lanes == 0 {
+            return Err(EbvError::Config("service.lanes must be >= 1".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(EbvError::Config("service.max_batch must be >= 1".into()));
+        }
+        if self.queue_capacity < self.max_batch {
+            return Err(EbvError::Config(
+                "service.queue_capacity must be >= max_batch".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let raw = RawConfig::parse(
+            "# top comment\n\
+             [service]\n\
+             lanes = 8\n\
+             dist = \"cyclic\"  # inline comment\n\
+             refine = false\n\
+             artifacts_dir = \"my/arts\"\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.lanes, 8);
+        assert_eq!(cfg.dist, RowDist::Cyclic);
+        assert!(!cfg.refine);
+        assert_eq!(cfg.artifacts_dir, "my/arts");
+        // Unspecified keys fall back to defaults.
+        assert_eq!(cfg.max_batch, ServiceConfig::default().max_batch);
+    }
+
+    #[test]
+    fn defaults_validate() {
+        assert!(ServiceConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(RawConfig::parse("[]\n").is_err());
+        assert!(RawConfig::parse("justtext\n").is_err());
+        let raw = RawConfig::parse("[service]\nlanes = banana\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[service]\ndist = \"zigzag\"\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[service]\nlanes = 0\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let raw = RawConfig::parse("[s]\npath = \"a#b\"\n").unwrap();
+        assert_eq!(raw.get("s", "path").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn env_override_wins() {
+        let raw = RawConfig::parse("[service]\nlanes = 2\n").unwrap();
+        std::env::set_var("EBV_SERVICE_LANES", "6");
+        let cfg = ServiceConfig::from_raw(&raw).unwrap();
+        std::env::remove_var("EBV_SERVICE_LANES");
+        assert_eq!(cfg.lanes, 6);
+    }
+
+    #[test]
+    fn queue_capacity_must_cover_batch() {
+        let raw = RawConfig::parse("[service]\nmax_batch = 64\nqueue_capacity = 8\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+    }
+}

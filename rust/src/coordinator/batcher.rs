@@ -1,0 +1,209 @@
+//! Dynamic batcher: coalesces requests that share a coefficient matrix.
+//!
+//! The CFD pattern the paper's workloads come from is time-stepping:
+//! the same `A` is solved against a fresh `b` every step. Factoring once
+//! and substituting many times is the dominant win, so the batcher
+//! groups by `matrix_key` within a bounded time window, flushing when a
+//! group reaches `max_batch` or its window expires.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::SolveRequest;
+
+/// A group of requests sharing one coefficient matrix (or a singleton).
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<SolveRequest>,
+    /// When the first request of the batch was admitted.
+    pub opened_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Batcher configuration.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub window: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, window: Duration::from_micros(200) }
+    }
+}
+
+/// Keyed accumulation state. Pure data structure — the service thread
+/// drives it with `admit` and `poll`; unit-testable without threads.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    /// Open groups by matrix key.
+    open: HashMap<u64, Batch>,
+    /// Insertion order of keys, for fair flushing.
+    order: Vec<u64>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, open: HashMap::new(), order: Vec::new() }
+    }
+
+    /// Number of requests currently buffered.
+    pub fn pending(&self) -> usize {
+        self.open.values().map(Batch::len).sum()
+    }
+
+    /// Admit a request. Returns a batch if the request's group became
+    /// full (flush-on-size). Unkeyed requests return immediately as
+    /// singleton batches — nothing to coalesce with.
+    pub fn admit(&mut self, req: SolveRequest, now: Instant) -> Option<Batch> {
+        let Some(key) = req.matrix_key else {
+            return Some(Batch { requests: vec![req], opened_at: now });
+        };
+        let group = self.open.entry(key).or_insert_with(|| {
+            self.order.push(key);
+            Batch { requests: Vec::new(), opened_at: now }
+        });
+        group.requests.push(req);
+        if group.requests.len() >= self.cfg.max_batch {
+            let batch = self.open.remove(&key).expect("group exists");
+            self.order.retain(|&k| k != key);
+            return Some(batch);
+        }
+        None
+    }
+
+    /// Flush every group whose window has expired (flush-on-time).
+    pub fn poll(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let expired: Vec<u64> = self
+            .order
+            .iter()
+            .copied()
+            .filter(|k| {
+                self.open
+                    .get(k)
+                    .is_some_and(|g| now.duration_since(g.opened_at) >= self.cfg.window)
+            })
+            .collect();
+        for k in expired {
+            if let Some(batch) = self.open.remove(&k) {
+                out.push(batch);
+            }
+            self.order.retain(|&q| q != k);
+        }
+        out
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for k in std::mem::take(&mut self.order) {
+            if let Some(batch) = self.open.remove(&k) {
+                out.push(batch);
+            }
+        }
+        out
+    }
+
+    /// Deadline of the earliest-opened group, for the service thread's
+    /// `recv_timeout`.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.order
+            .iter()
+            .filter_map(|k| self.open.get(k).map(|g| g.opened_at + self.cfg.window))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, GenSeed};
+    use std::sync::Arc;
+
+    fn req(id: u64, key: Option<u64>) -> SolveRequest {
+        let a = Arc::new(diag_dominant_dense(4, GenSeed(9)));
+        SolveRequest::dense(id, a, vec![1.0; 4], key)
+    }
+
+    #[test]
+    fn unkeyed_requests_pass_straight_through() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let out = b.admit(req(1, None), Instant::now());
+        assert_eq!(out.unwrap().len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn keyed_requests_accumulate_until_max_batch() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, window: Duration::from_secs(10) });
+        let now = Instant::now();
+        assert!(b.admit(req(1, Some(7)), now).is_none());
+        assert!(b.admit(req(2, Some(7)), now).is_none());
+        let batch = b.admit(req(3, Some(7)), now).expect("flush on size");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn different_keys_do_not_mix() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, window: Duration::from_secs(10) });
+        let now = Instant::now();
+        assert!(b.admit(req(1, Some(1)), now).is_none());
+        assert!(b.admit(req(2, Some(2)), now).is_none());
+        assert_eq!(b.pending(), 2);
+        let flush = b.admit(req(3, Some(1)), now).expect("key 1 full");
+        assert!(flush.requests.iter().all(|r| r.matrix_key == Some(1)));
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn poll_flushes_expired_windows_only() {
+        let w = Duration::from_millis(5);
+        let mut b = Batcher::new(BatcherConfig { max_batch: 100, window: w });
+        let t0 = Instant::now();
+        b.admit(req(1, Some(1)), t0);
+        b.admit(req(2, Some(2)), t0 + Duration::from_millis(3));
+        // At t0+5ms only group 1 has expired.
+        let flushed = b.poll(t0 + w);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests[0].matrix_key, Some(1));
+        // At t0+8ms group 2 expires too.
+        let flushed = b.poll(t0 + Duration::from_millis(8));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn drain_empties_everything() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 100, window: Duration::from_secs(10) });
+        let now = Instant::now();
+        b.admit(req(1, Some(1)), now);
+        b.admit(req(2, Some(2)), now);
+        let all = b.drain();
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending(), 0);
+        assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn next_deadline_tracks_earliest_group() {
+        let w = Duration::from_millis(10);
+        let mut b = Batcher::new(BatcherConfig { max_batch: 100, window: w });
+        let t0 = Instant::now();
+        b.admit(req(1, Some(1)), t0);
+        b.admit(req(2, Some(2)), t0 + Duration::from_millis(5));
+        assert_eq!(b.next_deadline(), Some(t0 + w));
+    }
+}

@@ -1,0 +1,183 @@
+//! Service metrics: counters and latency histogram, lock-shared between
+//! the service threads and whoever reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fixed-bucket latency histogram (log-spaced, 1 µs … 100 s).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in seconds.
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    /// Sum of all observations (for mean), in nanoseconds.
+    sum_ns: AtomicU64,
+    total: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1µs, ~3.16µs, 10µs, ..., 100s (log10 half-decades).
+        let mut bounds = Vec::new();
+        let mut b = 1e-6f64;
+        while b <= 100.0 {
+            bounds.push(b);
+            bounds.push(b * 3.1622776601683795);
+            b *= 10.0;
+        }
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        LatencyHistogram { bounds, counts, sum_ns: AtomicU64::new(0), total: AtomicU64::new(0) }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn observe(&self, secs: f64) {
+        let idx = self.bounds.partition_point(|&b| b < secs);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th observation).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// All service-level metrics.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (for mean batch size).
+    pub batched_requests: AtomicU64,
+    /// Factor-cache hits/misses in the workers.
+    pub factor_hits: AtomicU64,
+    pub factor_misses: AtomicU64,
+    pub latency: LatencyHistogram,
+    /// Per-backend completion counts.
+    backend_counts: Mutex<Vec<(&'static str, u64)>>,
+}
+
+impl ServiceMetrics {
+    pub fn record_backend(&self, backend: &'static str) {
+        let mut v = self.backend_counts.lock().expect("metrics lock");
+        if let Some(slot) = v.iter_mut().find(|(b, _)| *b == backend) {
+            slot.1 += 1;
+        } else {
+            v.push((backend, 1));
+        }
+    }
+
+    pub fn backend_counts(&self) -> Vec<(&'static str, u64)> {
+        self.backend_counts.lock().expect("metrics lock").clone()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// One-line human summary for service logs and examples.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} rejected={} completed={} failed={} batches={} mean_batch={:.2} \
+             factor_hit_rate={:.0}% lat_mean={:.3}ms lat_p50={:.3}ms lat_p99={:.3}ms",
+            self.submitted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            {
+                let h = self.factor_hits.load(Ordering::Relaxed);
+                let m = self.factor_misses.load(Ordering::Relaxed);
+                if h + m == 0 { 0.0 } else { 100.0 * h as f64 / (h + m) as f64 }
+            },
+            self.latency.mean() * 1e3,
+            self.latency.quantile(0.5) * 1e3,
+            self.latency.quantile(0.99) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::default();
+        for _ in 0..90 {
+            h.observe(1e-3);
+        }
+        for _ in 0..10 {
+            h.observe(1.0);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - (90.0 * 1e-3 + 10.0) / 100.0).abs() < 1e-6);
+        assert!(h.quantile(0.5) <= 1e-3 * 1.01);
+        assert!(h.quantile(0.95) >= 0.9);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn backend_counters_accumulate() {
+        let m = ServiceMetrics::default();
+        m.record_backend("ebv");
+        m.record_backend("ebv");
+        m.record_backend("pjrt");
+        let counts = m.backend_counts();
+        assert!(counts.contains(&("ebv", 2)));
+        assert!(counts.contains(&("pjrt", 1)));
+    }
+
+    #[test]
+    fn summary_mentions_key_fields() {
+        let m = ServiceMetrics::default();
+        m.submitted.store(5, Ordering::Relaxed);
+        m.batches.store(2, Ordering::Relaxed);
+        m.batched_requests.store(5, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("submitted=5"));
+        assert!(s.contains("mean_batch=2.50"));
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 coordinator: the solve service.
+//!
+//! The paper's contribution is a solver kernel schedule; the system a
+//! downstream CFD code actually talks to is a **service**: requests
+//! carrying linear systems arrive, get routed to a backend (native EBV
+//! lanes, sparse LU, or the PJRT-compiled JAX/Pallas artifact), batched
+//! when they share a coefficient matrix (the CFD time-stepping pattern:
+//! same `A`, fresh `b` every step), executed on a worker pool, and
+//! answered with solution + residual + timing.
+//!
+//! Pipeline: `submit() → bounded ingress (backpressure) → Batcher
+//! (groups by matrix key, window + max_batch) → dispatch queue → Worker
+//! pool (factor-cache + solver backends) → per-request reply channels`.
+//!
+//! Everything runs on `std::thread` + `mpsc` (tokio is unavailable
+//! offline; see DESIGN.md §Substitutions).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod service;
+pub mod trace;
+pub mod worker;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::ServiceMetrics;
+pub use request::{Payload, SolveRequest, SolveResponse, Timings};
+pub use router::{Backend, Router};
+pub use service::{ServiceHandle, SolverService};
+pub use trace::{RecordedOutcome, Trace};

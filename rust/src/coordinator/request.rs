@@ -1,0 +1,152 @@
+//! Request/response types of the solve service.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::matrix::{CsrMatrix, DenseMatrix};
+
+/// The linear system carried by a request. Matrices are `Arc`-shared so
+/// batched requests against the same system don't copy it.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    Dense { a: Arc<DenseMatrix>, b: Vec<f64> },
+    Sparse { a: Arc<CsrMatrix>, b: Vec<f64> },
+}
+
+impl Payload {
+    /// System size.
+    pub fn n(&self) -> usize {
+        match self {
+            Payload::Dense { a, .. } => a.rows(),
+            Payload::Sparse { a, .. } => a.rows(),
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Payload::Dense { .. })
+    }
+
+    /// RHS access.
+    pub fn rhs(&self) -> &[f64] {
+        match self {
+            Payload::Dense { b, .. } => b,
+            Payload::Sparse { b, .. } => b,
+        }
+    }
+
+    /// ∞-norm residual of a candidate solution.
+    pub fn residual(&self, x: &[f64]) -> f64 {
+        match self {
+            Payload::Dense { a, b } => a.residual(x, b),
+            Payload::Sparse { a, b } => a.residual(x, b),
+        }
+    }
+}
+
+/// A solve request.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub id: u64,
+    pub payload: Payload,
+    /// Identifies the coefficient matrix across requests: requests with
+    /// equal keys share `A` and are batched into one factorization.
+    /// `None` disables batching for this request.
+    pub matrix_key: Option<u64>,
+    pub submitted_at: Instant,
+}
+
+impl SolveRequest {
+    pub fn dense(id: u64, a: Arc<DenseMatrix>, b: Vec<f64>, matrix_key: Option<u64>) -> Self {
+        SolveRequest {
+            id,
+            payload: Payload::Dense { a, b },
+            matrix_key,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    pub fn sparse(id: u64, a: Arc<CsrMatrix>, b: Vec<f64>, matrix_key: Option<u64>) -> Self {
+        SolveRequest {
+            id,
+            payload: Payload::Sparse { a, b },
+            matrix_key,
+            submitted_at: Instant::now(),
+        }
+    }
+}
+
+/// Phase timing of one served request.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Timings {
+    /// submit → dequeue by the batcher.
+    pub queue_secs: f64,
+    /// dequeue → batch flush (batching window share).
+    pub batch_secs: f64,
+    /// execution (factor amortized + solve).
+    pub exec_secs: f64,
+}
+
+impl Timings {
+    pub fn total(&self) -> f64 {
+        self.queue_secs + self.batch_secs + self.exec_secs
+    }
+}
+
+/// A solve response.
+#[derive(Debug, Clone)]
+pub struct SolveResponse {
+    pub id: u64,
+    /// The solution, or the error message if the solve failed.
+    pub result: std::result::Result<Vec<f64>, String>,
+    /// ∞-norm residual of the returned solution (NaN on failure).
+    pub residual: f64,
+    /// Which backend served it (router decision).
+    pub backend: &'static str,
+    /// Requests that shared the factorization with this one.
+    pub batch_size: usize,
+    pub timings: Timings,
+}
+
+impl SolveResponse {
+    pub fn failed(id: u64, err: String, backend: &'static str) -> Self {
+        SolveResponse {
+            id,
+            result: Err(err),
+            residual: f64::NAN,
+            backend,
+            batch_size: 1,
+            timings: Timings::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, GenSeed};
+
+    #[test]
+    fn payload_accessors() {
+        let a = Arc::new(diag_dominant_dense(8, GenSeed(1)));
+        let p = Payload::Dense { a: a.clone(), b: vec![1.0; 8] };
+        assert_eq!(p.n(), 8);
+        assert!(p.is_dense());
+        assert_eq!(p.rhs().len(), 8);
+    }
+
+    #[test]
+    fn residual_uses_underlying_matrix() {
+        let a = Arc::new(DenseMatrix::identity(3));
+        let p = Payload::Dense { a, b: vec![1.0, 2.0, 3.0] };
+        assert_eq!(p.residual(&[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(p.residual(&[0.0, 2.0, 3.0]), 1.0);
+    }
+
+    #[test]
+    fn timings_total() {
+        let t = Timings { queue_secs: 1.0, batch_secs: 2.0, exec_secs: 3.0 };
+        assert_eq!(t.total(), 6.0);
+    }
+
+    use crate::matrix::DenseMatrix;
+}

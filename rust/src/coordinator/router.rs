@@ -1,0 +1,105 @@
+//! Backend routing: which engine serves a request.
+//!
+//! Dense systems with a compiled PJRT artifact (and `use_runtime = true`)
+//! go to the JAX/Pallas path; other dense systems to the native EBV
+//! lanes; sparse systems to the sparse LU engine. The router is pure and
+//! unit-testable; the service applies its decisions.
+
+use std::collections::BTreeSet;
+
+use crate::coordinator::request::Payload;
+
+/// Execution backend for one batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Native multithreaded EBV LU (dense).
+    NativeEbv,
+    /// Native sparse LU with level-scheduled solves.
+    NativeSparse,
+    /// AOT-compiled JAX/Pallas artifact via PJRT.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::NativeEbv => "native-ebv",
+            Backend::NativeSparse => "native-sparse",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Routing table.
+#[derive(Debug, Clone, Default)]
+pub struct Router {
+    /// Dense sizes with a compiled `lu_solve` artifact.
+    runtime_sizes: BTreeSet<usize>,
+    /// Whether the PJRT path is enabled at all.
+    use_runtime: bool,
+}
+
+impl Router {
+    pub fn new(use_runtime: bool, runtime_sizes: impl IntoIterator<Item = usize>) -> Router {
+        Router { runtime_sizes: runtime_sizes.into_iter().collect(), use_runtime }
+    }
+
+    /// Decide the backend for a payload.
+    pub fn route(&self, payload: &Payload) -> Backend {
+        match payload {
+            Payload::Sparse { .. } => Backend::NativeSparse,
+            Payload::Dense { a, .. } => {
+                if self.use_runtime && self.runtime_sizes.contains(&a.rows()) {
+                    Backend::Pjrt
+                } else {
+                    Backend::NativeEbv
+                }
+            }
+        }
+    }
+
+    pub fn runtime_sizes(&self) -> impl Iterator<Item = usize> + '_ {
+        self.runtime_sizes.iter().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+    use std::sync::Arc;
+
+    fn dense(n: usize) -> Payload {
+        Payload::Dense { a: Arc::new(diag_dominant_dense(n, GenSeed(1))), b: vec![0.0; n] }
+    }
+
+    fn sparse(n: usize) -> Payload {
+        Payload::Sparse { a: Arc::new(diag_dominant_sparse(n, 3, GenSeed(1))), b: vec![0.0; n] }
+    }
+
+    #[test]
+    fn sparse_always_goes_native() {
+        let r = Router::new(true, [64]);
+        assert_eq!(r.route(&sparse(64)), Backend::NativeSparse);
+    }
+
+    #[test]
+    fn dense_with_artifact_goes_pjrt() {
+        let r = Router::new(true, [64, 128]);
+        assert_eq!(r.route(&dense(64)), Backend::Pjrt);
+        assert_eq!(r.route(&dense(65)), Backend::NativeEbv);
+    }
+
+    #[test]
+    fn runtime_disabled_forces_native() {
+        let r = Router::new(false, [64]);
+        assert_eq!(r.route(&dense(64)), Backend::NativeEbv);
+    }
+
+    #[test]
+    fn backend_names_are_stable() {
+        assert_eq!(Backend::NativeEbv.as_str(), "native-ebv");
+        assert_eq!(Backend::NativeSparse.as_str(), "native-sparse");
+        assert_eq!(Backend::Pjrt.as_str(), "pjrt");
+    }
+}

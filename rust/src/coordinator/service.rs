@@ -1,0 +1,385 @@
+//! The assembled solve service: ingress with backpressure, batching
+//! thread, worker pool, optional PJRT runtime.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::ServiceConfig;
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::metrics::ServiceMetrics;
+use crate::coordinator::request::{SolveRequest, SolveResponse};
+use crate::coordinator::router::Router;
+use crate::coordinator::worker::{spawn_workers, FactorCache, WorkerCtx};
+use crate::matrix::{CsrMatrix, DenseMatrix};
+use crate::runtime::{ArtifactKind, RuntimeHandle};
+use crate::util::error::{EbvError, Result};
+
+/// Service entry point.
+pub struct SolverService;
+
+impl SolverService {
+    /// Start the service: spawns the batcher thread and `lanes` workers;
+    /// when `cfg.use_runtime` is set and the artifact manifest loads, a
+    /// PJRT runtime thread is started too and dense sizes with compiled
+    /// artifacts are routed to it.
+    pub fn start(cfg: ServiceConfig) -> Result<ServiceHandle> {
+        cfg.validate()?;
+        crate::util::logging::init();
+
+        // Optional PJRT runtime.
+        let mut runtime = None;
+        let mut runtime_sizes: Vec<usize> = Vec::new();
+        if cfg.use_runtime {
+            match RuntimeHandle::spawn(cfg.artifacts_dir.clone().into()) {
+                Ok(rt) => {
+                    runtime_sizes = rt
+                        .capabilities()?
+                        .into_iter()
+                        .filter(|(k, _, b)| *k == ArtifactKind::LuSolve && *b == 1)
+                        .map(|(_, n, _)| n)
+                        .collect();
+                    log::info!(target: "service", "PJRT runtime up; lu_solve sizes {runtime_sizes:?}");
+                    runtime = Some(rt);
+                }
+                Err(e) => {
+                    log::warn!(target: "service", "runtime unavailable ({e}); native backends only");
+                }
+            }
+        }
+
+        let metrics = Arc::new(ServiceMetrics::default());
+        let replies = Mutex::new(HashMap::new());
+        let ctx = Arc::new(WorkerCtx {
+            router: Router::new(runtime.is_some(), runtime_sizes),
+            solve_lanes: cfg.lanes,
+            dist: cfg.dist,
+            cache: Mutex::new(FactorCache::with_capacity(64)),
+            replies,
+            metrics: Arc::clone(&metrics),
+            runtime: runtime.as_ref().map(|r| r.client()),
+            refine: cfg.refine,
+            pending: std::sync::atomic::AtomicUsize::new(0),
+            capacity: cfg.queue_capacity,
+        });
+
+        // Queues: bounded ingress (backpressure) -> batcher -> dispatch.
+        // Unkeyed requests bypass the batcher thread entirely (PERF note
+        // L3-C1 in EXPERIMENTS.md §Perf: saves one channel hop + wakeup,
+        // ~2 µs of the ~7 µs fixed overhead).
+        let (ingress_tx, ingress_rx) = mpsc::sync_channel::<SolveRequest>(cfg.queue_capacity);
+        let (dispatch_tx, dispatch_rx) = mpsc::channel();
+        let dispatch_rx = Arc::new(Mutex::new(dispatch_rx));
+        let bypass_tx = dispatch_tx.clone();
+
+        let worker_count = cfg.lanes.max(1);
+        let mut threads = spawn_workers(worker_count, dispatch_rx, Arc::clone(&ctx));
+
+        let batcher_cfg = BatcherConfig {
+            max_batch: cfg.max_batch,
+            window: Duration::from_micros(cfg.batch_window_us),
+        };
+        let batcher_thread = std::thread::Builder::new()
+            .name("ebv-batcher".into())
+            .spawn(move || batcher_main(ingress_rx, dispatch_tx, batcher_cfg))
+            .map_err(|e| EbvError::Coordinator(format!("spawn batcher: {e}")))?;
+        threads.push(batcher_thread);
+
+        Ok(ServiceHandle {
+            ingress: Some(ingress_tx),
+            bypass: Some(bypass_tx),
+            ctx,
+            metrics,
+            next_id: AtomicU64::new(0),
+            threads,
+            _runtime: runtime,
+        })
+    }
+}
+
+fn batcher_main(
+    ingress: mpsc::Receiver<SolveRequest>,
+    dispatch: mpsc::Sender<crate::coordinator::batcher::Batch>,
+    cfg: BatcherConfig,
+) {
+    let mut batcher = Batcher::new(cfg);
+    loop {
+        // Wait for the next request, but never past the earliest window
+        // deadline.
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match ingress.recv_timeout(timeout) {
+            Ok(req) => {
+                if let Some(batch) = batcher.admit(req, Instant::now()) {
+                    let _ = dispatch.send(batch);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for batch in batcher.drain() {
+                    let _ = dispatch.send(batch);
+                }
+                break;
+            }
+        }
+        for batch in batcher.poll(Instant::now()) {
+            let _ = dispatch.send(batch);
+        }
+    }
+    // Dropping `dispatch` lets the workers drain and exit.
+}
+
+/// Live service handle: submit requests, read metrics, shut down.
+pub struct ServiceHandle {
+    ingress: Option<mpsc::SyncSender<SolveRequest>>,
+    /// Direct path to the dispatch queue for unkeyed (unbatchable)
+    /// requests.
+    bypass: Option<mpsc::Sender<crate::coordinator::batcher::Batch>>,
+    ctx: Arc<WorkerCtx>,
+    metrics: Arc<ServiceMetrics>,
+    next_id: AtomicU64,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    /// Keeps the runtime thread alive for the service's lifetime.
+    _runtime: Option<RuntimeHandle>,
+}
+
+impl ServiceHandle {
+    fn submit(&self, mut req: SolveRequest) -> Result<mpsc::Receiver<SolveResponse>> {
+        // Admission control (shared by both paths): reject when the
+        // in-flight count reaches capacity.
+        let pending = self.ctx.pending.fetch_add(1, Ordering::Relaxed);
+        if pending >= self.ctx.capacity {
+            self.ctx.pending.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(EbvError::Coordinator("queue full (backpressure)".into()));
+        }
+
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        let (tx, rx) = mpsc::channel();
+        self.ctx.replies.lock().expect("replies lock").insert(id, tx);
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+
+        // Unkeyed requests can't coalesce with anything: skip the
+        // batcher hop and enqueue a singleton batch directly.
+        if req.matrix_key.is_none() {
+            let bypass = self
+                .bypass
+                .as_ref()
+                .ok_or_else(|| EbvError::Coordinator("service is shut down".into()))?;
+            let batch = crate::coordinator::batcher::Batch {
+                requests: vec![req],
+                opened_at: Instant::now(),
+            };
+            return match bypass.send(batch) {
+                Ok(()) => Ok(rx),
+                Err(_) => {
+                    self.ctx.replies.lock().expect("replies lock").remove(&id);
+                    self.ctx.pending.fetch_sub(1, Ordering::Relaxed);
+                    Err(EbvError::Coordinator("service is shut down".into()))
+                }
+            };
+        }
+
+        let ingress = self
+            .ingress
+            .as_ref()
+            .ok_or_else(|| EbvError::Coordinator("service is shut down".into()))?;
+        match ingress.try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.ctx.replies.lock().expect("replies lock").remove(&id);
+                self.ctx.pending.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(EbvError::Coordinator("queue full (backpressure)".into()))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.ctx.replies.lock().expect("replies lock").remove(&id);
+                self.ctx.pending.fetch_sub(1, Ordering::Relaxed);
+                Err(EbvError::Coordinator("service is shut down".into()))
+            }
+        }
+    }
+
+    /// Submit a dense system. `matrix_key` enables factor sharing across
+    /// requests with the same key.
+    pub fn submit_dense(
+        &self,
+        a: Arc<DenseMatrix>,
+        b: Vec<f64>,
+        matrix_key: Option<u64>,
+    ) -> Result<mpsc::Receiver<SolveResponse>> {
+        self.submit(SolveRequest::dense(0, a, b, matrix_key))
+    }
+
+    /// Submit a sparse system.
+    pub fn submit_sparse(
+        &self,
+        a: Arc<CsrMatrix>,
+        b: Vec<f64>,
+        matrix_key: Option<u64>,
+    ) -> Result<mpsc::Receiver<SolveResponse>> {
+        self.submit(SolveRequest::sparse(0, a, b, matrix_key))
+    }
+
+    /// Convenience: submit and wait.
+    pub fn solve_dense_blocking(
+        &self,
+        a: Arc<DenseMatrix>,
+        b: Vec<f64>,
+        matrix_key: Option<u64>,
+    ) -> Result<SolveResponse> {
+        let rx = self.submit_dense(a, b, matrix_key)?;
+        rx.recv().map_err(|_| EbvError::Coordinator("service dropped the request".into()))
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    /// Graceful shutdown: stop intake, drain queues, join every thread.
+    pub fn shutdown(mut self) {
+        // Closing ingress drains the batcher; closing the bypass sender
+        // (after the batcher exits and drops its own dispatch clone)
+        // lets the workers exit.
+        self.ingress.take();
+        self.bypass.take();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        self.ingress.take();
+        self.bypass.take();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+
+    fn test_cfg() -> ServiceConfig {
+        ServiceConfig {
+            lanes: 2,
+            max_batch: 4,
+            batch_window_us: 100,
+            queue_capacity: 64,
+            use_runtime: false,
+            ..ServiceConfig::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_dense_solve() {
+        let svc = SolverService::start(test_cfg()).unwrap();
+        let a = Arc::new(diag_dominant_dense(48, GenSeed(91)));
+        let resp = svc.solve_dense_blocking(a, vec![1.0; 48], None).unwrap();
+        assert!(resp.result.is_ok());
+        assert!(resp.residual < 1e-9);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batching_coalesces_same_key_requests() {
+        let mut cfg = test_cfg();
+        cfg.batch_window_us = 5_000;
+        let svc = SolverService::start(cfg).unwrap();
+        let a = Arc::new(diag_dominant_dense(32, GenSeed(92)));
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                svc.submit_dense(Arc::clone(&a), vec![i as f64 + 1.0; 32], Some(42)).unwrap()
+            })
+            .collect();
+        let resps: Vec<SolveResponse> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        // max_batch = 4 -> all four coalesced into one batch.
+        assert!(resps.iter().all(|r| r.batch_size == 4), "{resps:?}");
+        assert!(resps.iter().all(|r| r.result.is_ok()));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_dense_sparse_traffic() {
+        let svc = SolverService::start(test_cfg()).unwrap();
+        let da = Arc::new(diag_dominant_dense(40, GenSeed(93)));
+        let sa = Arc::new(diag_dominant_sparse(40, 4, GenSeed(94)));
+        let rx1 = svc.submit_dense(da, vec![1.0; 40], None).unwrap();
+        let rx2 = svc.submit_sparse(sa, vec![1.0; 40], None).unwrap();
+        let r1 = rx1.recv().unwrap();
+        let r2 = rx2.recv().unwrap();
+        assert_eq!(r1.backend, "native-ebv");
+        assert_eq!(r2.backend, "native-sparse");
+        assert!(r1.residual < 1e-9 && r2.residual < 1e-9);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut cfg = test_cfg();
+        cfg.queue_capacity = 4;
+        cfg.max_batch = 4;
+        // Big systems so the queue actually backs up.
+        let svc = SolverService::start(cfg).unwrap();
+        let a = Arc::new(diag_dominant_dense(256, GenSeed(95)));
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            match svc.submit_dense(Arc::clone(&a), vec![1.0; 256], None) {
+                Ok(rx) => {
+                    accepted += 1;
+                    rxs.push(rx);
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure (accepted={accepted})");
+        // Everything accepted still completes.
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.result.is_ok());
+        }
+        assert_eq!(
+            svc.metrics().rejected.load(Ordering::Relaxed),
+            rejected as u64
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_completes_in_flight_requests() {
+        let svc = SolverService::start(test_cfg()).unwrap();
+        let a = Arc::new(diag_dominant_dense(64, GenSeed(96)));
+        let rx = svc.submit_dense(a, vec![1.0; 64], None).unwrap();
+        svc.shutdown();
+        // The drained batch still produced a response.
+        let resp = rx.recv().unwrap();
+        assert!(resp.result.is_ok());
+    }
+
+    #[test]
+    fn metrics_reflect_traffic() {
+        let svc = SolverService::start(test_cfg()).unwrap();
+        let a = Arc::new(diag_dominant_dense(24, GenSeed(97)));
+        for _ in 0..3 {
+            let _ = svc.solve_dense_blocking(Arc::clone(&a), vec![1.0; 24], Some(5)).unwrap();
+        }
+        let m = svc.metrics();
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 3);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 3);
+        assert!(m.latency.count() >= 3);
+        assert!(m.summary().contains("completed=3"));
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,247 @@
+//! Request-trace recording and replay.
+//!
+//! Production solver services are tuned against recorded traffic; this
+//! module persists a workload trace (and the per-request outcomes of a
+//! run) as JSON so benchmark campaigns are reproducible and shareable.
+//! `ablation_batch`-style experiments can be replayed bit-identically
+//! from a file instead of regenerating from a seed.
+
+use std::path::Path;
+
+use crate::util::error::{EbvError, Result};
+use crate::util::json::Json;
+use crate::workload::{Job, SystemKind};
+
+/// One recorded outcome (subset of `SolveResponse` that is stable
+/// across runs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecordedOutcome {
+    pub id: u64,
+    pub ok: bool,
+    pub backend: String,
+    pub batch_size: usize,
+    pub residual: f64,
+    pub total_secs: f64,
+}
+
+/// A persisted trace: the jobs plus (optionally) one run's outcomes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub jobs: Vec<Job>,
+    pub outcomes: Vec<RecordedOutcome>,
+}
+
+fn kind_str(k: SystemKind) -> &'static str {
+    match k {
+        SystemKind::Dense => "dense",
+        SystemKind::Sparse => "sparse",
+        SystemKind::Poisson => "poisson",
+    }
+}
+
+fn kind_parse(s: &str) -> Result<SystemKind> {
+    match s {
+        "dense" => Ok(SystemKind::Dense),
+        "sparse" => Ok(SystemKind::Sparse),
+        "poisson" => Ok(SystemKind::Poisson),
+        other => Err(EbvError::Json(format!("unknown system kind `{other}`"))),
+    }
+}
+
+impl Trace {
+    pub fn from_jobs(jobs: Vec<Job>) -> Trace {
+        Trace { jobs, outcomes: Vec::new() }
+    }
+
+    pub fn record(&mut self, o: RecordedOutcome) {
+        self.outcomes.push(o);
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("version", Json::from(1usize)),
+            (
+                "jobs",
+                Json::arr(self.jobs.iter().map(|j| {
+                    Json::obj([
+                        ("id", Json::from(j.id as usize)),
+                        ("arrival", Json::from(j.arrival)),
+                        ("kind", Json::from(kind_str(j.kind))),
+                        ("n", Json::from(j.n)),
+                        // u64 seeds exceed f64's 53-bit integer range;
+                        // persist as a decimal string.
+                        ("seed", Json::from(j.seed.to_string())),
+                    ])
+                })),
+            ),
+            (
+                "outcomes",
+                Json::arr(self.outcomes.iter().map(|o| {
+                    Json::obj([
+                        ("id", Json::from(o.id as usize)),
+                        ("ok", Json::from(o.ok)),
+                        ("backend", Json::from(o.backend.clone())),
+                        ("batch_size", Json::from(o.batch_size)),
+                        ("residual", Json::from(o.residual)),
+                        ("total_secs", Json::from(o.total_secs)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Parse from JSON.
+    pub fn from_json(v: &Json) -> Result<Trace> {
+        let version = v.require("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            return Err(EbvError::Json(format!("unsupported trace version {version}")));
+        }
+        let jobs = v
+            .require("jobs")?
+            .as_arr()
+            .ok_or_else(|| EbvError::Json("jobs must be an array".into()))?
+            .iter()
+            .map(|j| {
+                Ok(Job {
+                    id: j.require("id")?.as_usize().unwrap_or(0) as u64,
+                    arrival: j.require("arrival")?.as_f64().unwrap_or(0.0),
+                    kind: kind_parse(
+                        j.require("kind")?
+                            .as_str()
+                            .ok_or_else(|| EbvError::Json("kind must be a string".into()))?,
+                    )?,
+                    n: j.require("n")?.as_usize().unwrap_or(0),
+                    seed: j
+                        .require("seed")?
+                        .as_str()
+                        .ok_or_else(|| EbvError::Json("seed must be a string".into()))?
+                        .parse::<u64>()
+                        .map_err(|_| EbvError::Json("seed must be a u64 string".into()))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let outcomes = match v.get("outcomes").and_then(Json::as_arr) {
+            None => Vec::new(),
+            Some(arr) => arr
+                .iter()
+                .map(|o| {
+                    Ok(RecordedOutcome {
+                        id: o.require("id")?.as_usize().unwrap_or(0) as u64,
+                        ok: o.require("ok")?.as_bool().unwrap_or(false),
+                        backend: o
+                            .require("backend")?
+                            .as_str()
+                            .unwrap_or("unknown")
+                            .to_string(),
+                        batch_size: o.require("batch_size")?.as_usize().unwrap_or(1),
+                        residual: o.require("residual")?.as_f64().unwrap_or(f64::NAN),
+                        total_secs: o.require("total_secs")?.as_f64().unwrap_or(0.0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(Trace { jobs, outcomes })
+    }
+
+    /// Write pretty JSON to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().emit_pretty())
+            .map_err(|e| EbvError::io(format!("write trace {}", path.display()), e))
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| EbvError::io(format!("read trace {}", path.display()), e))?;
+        Trace::from_json(&Json::parse(&text)?)
+    }
+
+    /// Summary statistics of the recorded outcomes.
+    pub fn summary(&self) -> String {
+        let n = self.outcomes.len();
+        if n == 0 {
+            return format!("{} jobs, no outcomes recorded", self.jobs.len());
+        }
+        let ok = self.outcomes.iter().filter(|o| o.ok).count();
+        let mean_lat =
+            self.outcomes.iter().map(|o| o.total_secs).sum::<f64>() / n as f64;
+        let mean_batch =
+            self.outcomes.iter().map(|o| o.batch_size).sum::<usize>() as f64 / n as f64;
+        format!(
+            "{} jobs, {ok}/{n} ok, mean latency {:.3} ms, mean batch {:.2}",
+            self.jobs.len(),
+            mean_lat * 1e3,
+            mean_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate_trace, TraceSpec};
+
+    fn sample() -> Trace {
+        let mut t = Trace::from_jobs(generate_trace(&TraceSpec {
+            count: 10,
+            ..Default::default()
+        }));
+        t.record(RecordedOutcome {
+            id: 0,
+            ok: true,
+            backend: "native-ebv".into(),
+            batch_size: 4,
+            residual: 1e-12,
+            total_secs: 0.004,
+        });
+        t
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let t = sample();
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let t = sample();
+        let dir = std::env::temp_dir().join("ebv_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        t.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_kinds() {
+        assert!(Trace::from_json(&Json::parse(r#"{"version": 2, "jobs": []}"#).unwrap()).is_err());
+        let bad = r#"{"version": 1, "jobs": [{"id": 0, "arrival": 0.0,
+            "kind": "hexagonal", "n": 4, "seed": "1"}]}"#;
+        assert!(Trace::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn summary_reports_rates() {
+        let t = sample();
+        let s = t.summary();
+        assert!(s.contains("10 jobs"), "{s}");
+        assert!(s.contains("1/1 ok"), "{s}");
+        assert!(Trace::default().summary().contains("no outcomes"));
+    }
+
+    #[test]
+    fn replayed_jobs_rebuild_identical_systems() {
+        let t = sample();
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        for (a, b) in t.jobs.iter().zip(back.jobs.iter()) {
+            if a.kind == SystemKind::Dense {
+                let (ma, _) = a.dense_system();
+                let (mb, _) = b.dense_system();
+                assert_eq!(ma, mb);
+            }
+        }
+    }
+}

@@ -1,0 +1,415 @@
+//! Worker pool: executes batches against the routed backend, with a
+//! shared factorization cache keyed by `matrix_key`.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::metrics::ServiceMetrics;
+use crate::coordinator::request::{Payload, SolveRequest, SolveResponse, Timings};
+use crate::coordinator::router::{Backend, Router};
+use crate::runtime::{ArtifactKind, RuntimeClient};
+use crate::solver::refine::refine_external_solution;
+use crate::solver::{DenseLuFactors, EbvLu, LuSolver, SparseLu, SparseLuFactors};
+use crate::util::error::Result;
+
+/// Cached factorizations, bounded LRU-ish (evicts oldest insertion).
+#[derive(Default)]
+pub struct FactorCache {
+    dense: HashMap<u64, Arc<DenseLuFactors>>,
+    sparse: HashMap<u64, Arc<SparseLuFactors>>,
+    insertion: Vec<u64>,
+    cap: usize,
+}
+
+impl FactorCache {
+    pub fn with_capacity(cap: usize) -> Self {
+        FactorCache { cap: cap.max(1), ..Default::default() }
+    }
+
+    fn evict_if_needed(&mut self) {
+        while self.dense.len() + self.sparse.len() > self.cap {
+            if self.insertion.is_empty() {
+                break;
+            }
+            let k = self.insertion.remove(0);
+            self.dense.remove(&k);
+            self.sparse.remove(&k);
+        }
+    }
+
+    pub fn get_dense(&self, key: u64) -> Option<Arc<DenseLuFactors>> {
+        self.dense.get(&key).cloned()
+    }
+
+    pub fn put_dense(&mut self, key: u64, f: Arc<DenseLuFactors>) {
+        self.dense.insert(key, f);
+        self.insertion.push(key);
+        self.evict_if_needed();
+    }
+
+    pub fn get_sparse(&self, key: u64) -> Option<Arc<SparseLuFactors>> {
+        self.sparse.get(&key).cloned()
+    }
+
+    pub fn put_sparse(&mut self, key: u64, f: Arc<SparseLuFactors>) {
+        self.sparse.insert(key, f);
+        self.insertion.push(key);
+        self.evict_if_needed();
+    }
+
+    pub fn len(&self) -> usize {
+        self.dense.len() + self.sparse.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Shared state handed to every worker.
+pub struct WorkerCtx {
+    pub router: Router,
+    /// Lanes used by the native solvers *within* one worker.
+    pub solve_lanes: usize,
+    pub dist: crate::ebv::schedule::RowDist,
+    pub cache: Mutex<FactorCache>,
+    /// id → reply channel; workers remove entries as they respond.
+    pub replies: Mutex<HashMap<u64, mpsc::Sender<SolveResponse>>>,
+    pub metrics: Arc<ServiceMetrics>,
+    pub runtime: Option<RuntimeClient>,
+    /// Refine PJRT (f32) results back to f64 accuracy.
+    pub refine: bool,
+    /// In-flight request count (admission control across both the
+    /// batcher and bypass paths); decremented as responses go out.
+    pub pending: std::sync::atomic::AtomicUsize,
+    /// Backpressure threshold (`queue_capacity`).
+    pub capacity: usize,
+}
+
+/// Spawn `count` workers draining `rx`. Workers exit when the channel
+/// closes (service shutdown).
+pub fn spawn_workers(
+    count: usize,
+    rx: Arc<Mutex<mpsc::Receiver<Batch>>>,
+    ctx: Arc<WorkerCtx>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    (0..count.max(1))
+        .map(|w| {
+            let rx = Arc::clone(&rx);
+            let ctx = Arc::clone(&ctx);
+            std::thread::Builder::new()
+                .name(format!("ebv-worker-{w}"))
+                .spawn(move || worker_main(rx, ctx))
+                .expect("spawn worker")
+        })
+        .collect()
+}
+
+fn worker_main(rx: Arc<Mutex<mpsc::Receiver<Batch>>>, ctx: Arc<WorkerCtx>) {
+    loop {
+        // Hold the lock only for the recv, not for the solve.
+        let batch = {
+            let guard = rx.lock().expect("batch queue lock");
+            guard.recv()
+        };
+        let Ok(batch) = batch else { break };
+        execute_batch(batch, &ctx);
+    }
+}
+
+/// Execute one batch and deliver responses (public for bench/test use).
+pub fn execute_batch(batch: Batch, ctx: &WorkerCtx) {
+    if batch.is_empty() {
+        return;
+    }
+    let backend = ctx.router.route(&batch.requests[0].payload);
+    let batch_size = batch.len();
+    let exec_start = Instant::now();
+
+    // Dispatch. The whole batch shares one factorization (it shares
+    // `matrix_key` by construction).
+    let results: Vec<(u64, std::result::Result<Vec<f64>, String>)> = match backend {
+        Backend::NativeEbv => solve_dense_batch(&batch.requests, ctx),
+        Backend::NativeSparse => solve_sparse_batch(&batch.requests, ctx),
+        Backend::Pjrt => solve_pjrt_batch(&batch.requests, ctx),
+    };
+    let exec_secs = exec_start.elapsed().as_secs_f64();
+
+    ctx.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    ctx.metrics.batched_requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+
+    for ((id, result), req) in results.into_iter().zip(batch.requests.iter()) {
+        debug_assert_eq!(id, req.id);
+        let residual = match &result {
+            Ok(x) => req.payload.residual(x),
+            Err(_) => f64::NAN,
+        };
+        let ok = result.is_ok();
+        let queue_secs =
+            batch.opened_at.saturating_duration_since(req.submitted_at).as_secs_f64();
+        let batch_secs =
+            exec_start.saturating_duration_since(batch.opened_at).as_secs_f64();
+        let resp = SolveResponse {
+            id,
+            result,
+            residual,
+            backend: backend.as_str(),
+            batch_size,
+            timings: Timings { queue_secs, batch_secs, exec_secs },
+        };
+        let total = req.submitted_at.elapsed().as_secs_f64();
+        ctx.metrics.latency.observe(total);
+        if ok {
+            ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            ctx.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        ctx.metrics.record_backend(backend.as_str());
+        let reply = ctx.replies.lock().expect("replies lock").remove(&id);
+        if let Some(tx) = reply {
+            let _ = tx.send(resp);
+        }
+        ctx.pending.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn dense_factors(
+    req: &SolveRequest,
+    ctx: &WorkerCtx,
+) -> Result<Arc<DenseLuFactors>> {
+    let Payload::Dense { a, .. } = &req.payload else {
+        unreachable!("routed as dense")
+    };
+    if let Some(key) = req.matrix_key {
+        if let Some(f) = ctx.cache.lock().expect("cache").get_dense(key) {
+            ctx.metrics.factor_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(f);
+        }
+    }
+    ctx.metrics.factor_misses.fetch_add(1, Ordering::Relaxed);
+    let solver = EbvLu::with_lanes(ctx.solve_lanes).with_dist(ctx.dist);
+    let f = Arc::new(solver.factor(a)?);
+    if let Some(key) = req.matrix_key {
+        ctx.cache.lock().expect("cache").put_dense(key, Arc::clone(&f));
+    }
+    Ok(f)
+}
+
+fn solve_dense_batch(
+    reqs: &[SolveRequest],
+    ctx: &WorkerCtx,
+) -> Vec<(u64, std::result::Result<Vec<f64>, String>)> {
+    // One factorization for the whole batch.
+    let factors = match dense_factors(&reqs[0], ctx) {
+        Ok(f) => f,
+        Err(e) => {
+            return reqs.iter().map(|r| (r.id, Err(e.to_string()))).collect();
+        }
+    };
+    reqs.iter()
+        .map(|r| {
+            let x = factors.solve(r.payload.rhs()).map_err(|e| e.to_string());
+            (r.id, x)
+        })
+        .collect()
+}
+
+fn sparse_factors(req: &SolveRequest, ctx: &WorkerCtx) -> Result<Arc<SparseLuFactors>> {
+    let Payload::Sparse { a, .. } = &req.payload else {
+        unreachable!("routed as sparse")
+    };
+    if let Some(key) = req.matrix_key {
+        if let Some(f) = ctx.cache.lock().expect("cache").get_sparse(key) {
+            ctx.metrics.factor_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(f);
+        }
+    }
+    ctx.metrics.factor_misses.fetch_add(1, Ordering::Relaxed);
+    let f = Arc::new(SparseLu::new().factor(a)?);
+    if let Some(key) = req.matrix_key {
+        ctx.cache.lock().expect("cache").put_sparse(key, Arc::clone(&f));
+    }
+    Ok(f)
+}
+
+fn solve_sparse_batch(
+    reqs: &[SolveRequest],
+    ctx: &WorkerCtx,
+) -> Vec<(u64, std::result::Result<Vec<f64>, String>)> {
+    let factors = match sparse_factors(&reqs[0], ctx) {
+        Ok(f) => f,
+        Err(e) => {
+            return reqs.iter().map(|r| (r.id, Err(e.to_string()))).collect();
+        }
+    };
+    reqs.iter()
+        .map(|r| {
+            let x = factors.solve_par(r.payload.rhs(), ctx.solve_lanes).map_err(|e| e.to_string());
+            (r.id, x)
+        })
+        .collect()
+}
+
+fn solve_pjrt_batch(
+    reqs: &[SolveRequest],
+    ctx: &WorkerCtx,
+) -> Vec<(u64, std::result::Result<Vec<f64>, String>)> {
+    let Some(client) = &ctx.runtime else {
+        // Router only emits Pjrt when a runtime exists, but fall back
+        // gracefully anyway.
+        return solve_dense_batch(reqs, ctx);
+    };
+    let Payload::Dense { a, .. } = &reqs[0].payload else {
+        unreachable!("pjrt path is dense-only")
+    };
+    let n = a.rows();
+    let a32 = a.to_f32_vec();
+
+    reqs.iter()
+        .map(|r| {
+            let b32: Vec<f32> = r.payload.rhs().iter().map(|&v| v as f32).collect();
+            let out = client.execute(ArtifactKind::LuSolve, n, vec![a32.clone(), b32]);
+            let x = match out {
+                Ok(mut outs) if !outs.is_empty() => {
+                    let x32 = outs.remove(0);
+                    let mut x: Vec<f64> = x32.into_iter().map(|v| v as f64).collect();
+                    if ctx.refine {
+                        // f32 kernel + f64 refinement = f64-quality answer
+                        // with the compiled kernel doing the heavy lifting.
+                        if let Ok((xr, _)) = refine_external_solution(
+                            &EbvLu::with_lanes(ctx.solve_lanes),
+                            a,
+                            r.payload.rhs(),
+                            &x,
+                            3,
+                            1e-12,
+                        ) {
+                            x = xr;
+                        }
+                    }
+                    Ok(x)
+                }
+                Ok(_) => Err("pjrt returned no outputs".to_string()),
+                Err(e) => {
+                    // Runtime failure: fall back to the native path so the
+                    // request still completes (failure injection tests rely
+                    // on this).
+                    log::warn!(target: "worker", "pjrt failed ({e}); native fallback");
+                    dense_factors(r, ctx)
+                        .and_then(|f| f.solve(r.payload.rhs()))
+                        .map_err(|e2| format!("pjrt: {e}; fallback: {e2}"))
+                }
+            };
+            (r.id, x)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Batch;
+    use crate::ebv::schedule::RowDist;
+    use crate::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+    use std::time::Instant;
+
+    fn ctx() -> Arc<WorkerCtx> {
+        Arc::new(WorkerCtx {
+            router: Router::new(false, []),
+            solve_lanes: 2,
+            dist: RowDist::EbvFold,
+            cache: Mutex::new(FactorCache::with_capacity(4)),
+            replies: Mutex::new(HashMap::new()),
+            metrics: Arc::new(ServiceMetrics::default()),
+            runtime: None,
+            refine: false,
+            pending: std::sync::atomic::AtomicUsize::new(0),
+            capacity: 1024,
+        })
+    }
+
+    fn deliver(batch: Batch, ctx: &Arc<WorkerCtx>) -> Vec<SolveResponse> {
+        let mut rxs = Vec::new();
+        for r in &batch.requests {
+            let (tx, rx) = mpsc::channel();
+            ctx.replies.lock().unwrap().insert(r.id, tx);
+            rxs.push(rx);
+        }
+        execute_batch(batch, ctx);
+        rxs.into_iter().map(|rx| rx.recv().expect("response")).collect()
+    }
+
+    #[test]
+    fn dense_batch_shares_factorization() {
+        let ctx = ctx();
+        let a = Arc::new(diag_dominant_dense(32, GenSeed(81)));
+        let reqs: Vec<SolveRequest> = (0..4)
+            .map(|i| SolveRequest::dense(i, Arc::clone(&a), vec![1.0 + i as f64; 32], Some(7)))
+            .collect();
+        let batch = Batch { requests: reqs, opened_at: Instant::now() };
+        let resps = deliver(batch, &ctx);
+        assert_eq!(resps.len(), 4);
+        for r in &resps {
+            assert!(r.result.is_ok());
+            assert!(r.residual < 1e-9, "residual={}", r.residual);
+            assert_eq!(r.backend, "native-ebv");
+            assert_eq!(r.batch_size, 4);
+        }
+        // One miss (first factor), cache now holds it.
+        assert_eq!(ctx.metrics.factor_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(ctx.cache.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn second_batch_hits_cache() {
+        let ctx = ctx();
+        let a = Arc::new(diag_dominant_dense(24, GenSeed(82)));
+        for round in 0..2 {
+            let reqs = vec![SolveRequest::dense(round, Arc::clone(&a), vec![1.0; 24], Some(9))];
+            let resps = deliver(Batch { requests: reqs, opened_at: Instant::now() }, &ctx);
+            assert!(resps[0].result.is_ok());
+        }
+        assert_eq!(ctx.metrics.factor_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(ctx.metrics.factor_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn sparse_batch_solves() {
+        let ctx = ctx();
+        let a = Arc::new(diag_dominant_sparse(40, 4, GenSeed(83)));
+        let reqs = vec![SolveRequest::sparse(0, Arc::clone(&a), vec![1.0; 40], None)];
+        let resps = deliver(Batch { requests: reqs, opened_at: Instant::now() }, &ctx);
+        assert!(resps[0].result.is_ok());
+        assert!(resps[0].residual < 1e-9);
+        assert_eq!(resps[0].backend, "native-sparse");
+    }
+
+    #[test]
+    fn singular_system_reports_failure() {
+        let ctx = ctx();
+        let a = Arc::new(
+            crate::matrix::DenseMatrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]).unwrap(),
+        );
+        let reqs = vec![SolveRequest::dense(0, a, vec![1.0, 1.0], None)];
+        let resps = deliver(Batch { requests: reqs, opened_at: Instant::now() }, &ctx);
+        assert!(resps[0].result.is_err());
+        assert!(resps[0].residual.is_nan());
+        assert_eq!(ctx.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn cache_eviction_respects_capacity() {
+        let mut cache = FactorCache::with_capacity(2);
+        let a = diag_dominant_dense(8, GenSeed(84));
+        let f = Arc::new(crate::solver::SeqLu::new().factor(&a).unwrap());
+        for k in 0..5u64 {
+            cache.put_dense(k, Arc::clone(&f));
+        }
+        assert!(cache.len() <= 2);
+        assert!(cache.get_dense(4).is_some(), "most recent survives");
+        assert!(cache.get_dense(0).is_none(), "oldest evicted");
+    }
+}

@@ -1,0 +1,111 @@
+//! Bi-vectorization: the factorization as a stream of elimination vectors.
+
+/// Which triangular factor a vector belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Triangle {
+    /// Sub-diagonal column of `L` at a pivot step.
+    Lower,
+    /// Super-diagonal row of `U` at a pivot step.
+    Upper,
+}
+
+/// One elimination vector — the unit of the paper's "bi-vectorized"
+/// decomposition (Eq. 5). At 0-based pivot step `r` of an `n×n` matrix:
+///
+/// * the `Lower` vector is `A[r+1..n, r]` (the multipliers), and
+/// * the `Upper` vector is `A[r, r+1..n]` (the pivot row tail),
+///
+/// both of length `n - 1 - r`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BiVector {
+    pub triangle: Triangle,
+    /// 0-based pivot step this vector belongs to.
+    pub step: usize,
+    /// Vector length `n - 1 - step`.
+    pub len: usize,
+}
+
+impl BiVector {
+    pub fn lower(step: usize, n: usize) -> BiVector {
+        debug_assert!(step < n);
+        BiVector { triangle: Triangle::Lower, step, len: n - 1 - step }
+    }
+
+    pub fn upper(step: usize, n: usize) -> BiVector {
+        debug_assert!(step < n);
+        BiVector { triangle: Triangle::Upper, step, len: n - 1 - step }
+    }
+}
+
+/// The full bi-vectorized stream for an `n×n` factorization, in the
+/// paper's Eq. (4-a) order: `L(1) … L(n-1)` then `U(1) … U(n-1)`.
+/// `2(n-1)` vectors with total length `n(n-1)`.
+pub fn bivectorize(n: usize) -> Vec<BiVector> {
+    let mut out = Vec::with_capacity(2 * n.saturating_sub(1));
+    for r in 0..n.saturating_sub(1) {
+        out.push(BiVector::lower(r, n));
+    }
+    for r in 0..n.saturating_sub(1) {
+        out.push(BiVector::upper(r, n));
+    }
+    out
+}
+
+/// Total elimination work attributed to row `i` across the whole
+/// factorization under static row ownership: row `i` is an *updated* row
+/// at every step `r < i`, and each update touches `n - r` trailing
+/// elements (1 multiplier + `n-1-r` row entries). This is the quantity
+/// the equalized row distribution balances across lanes.
+pub fn row_total_work(i: usize, n: usize) -> usize {
+    // sum_{r=0}^{i-1} (n - r) = i*n - i*(i-1)/2
+    // (`saturating_sub` keeps the i = 0 case from underflowing before
+    // the multiply-by-zero saves it — caught by debug overflow checks.)
+    i * n - i * i.saturating_sub(1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_has_2n_minus_2_vectors() {
+        let vs = bivectorize(8);
+        assert_eq!(vs.len(), 14);
+        assert!(vs[..7].iter().all(|v| v.triangle == Triangle::Lower));
+        assert!(vs[7..].iter().all(|v| v.triangle == Triangle::Upper));
+    }
+
+    #[test]
+    fn lengths_shrink_linearly() {
+        let vs = bivectorize(6);
+        let lower_lens: Vec<usize> =
+            vs.iter().filter(|v| v.triangle == Triangle::Lower).map(|v| v.len).collect();
+        assert_eq!(lower_lens, vec![5, 4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn total_length_is_n_times_n_minus_1() {
+        for n in [2usize, 5, 16, 33] {
+            let total: usize = bivectorize(n).iter().map(|v| v.len).sum();
+            assert_eq!(total, n * (n - 1));
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert!(bivectorize(0).is_empty());
+        assert!(bivectorize(1).is_empty());
+    }
+
+    #[test]
+    fn row_work_is_monotone_and_closed_form() {
+        let n = 10;
+        // Recompute by direct summation.
+        for i in 0..n {
+            let direct: usize = (0..i).map(|r| n - r).sum();
+            assert_eq!(row_total_work(i, n), direct);
+        }
+        assert!(row_total_work(9, n) > row_total_work(1, n));
+        assert_eq!(row_total_work(0, n), 0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Equalization: pairing unequal elimination vectors into equal work units.
+//!
+//! This is the paper's central idea (Eq. 7): within each triangle, pair
+//! vector `r` (length `n-1-r`) with vector `n-2-r` (length `r+1`) so the
+//! combined unit always has length `n`. We implement the paper's exact
+//! fold pairing plus three comparison strategies used by the ablation
+//! bench (`ablation_equalize`).
+
+use crate::ebv::bivector::{BiVector, Triangle};
+
+/// How vectors are grouped into work units.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PairingMode {
+    /// The paper's scheme: fold the stream — first with last, second with
+    /// second-to-last — within each triangle. Every unit has total length
+    /// exactly `n` (odd middle vector stands alone at length ~n/2).
+    PaperFold,
+    /// Contiguous runs of `k` vectors per unit (the naive mapping the
+    /// paper argues against).
+    Block,
+    /// Round-robin dealing of vectors to units.
+    Cyclic,
+    /// Greedy longest-processing-time bin packing onto `units` bins —
+    /// the "optimal-ish" comparator.
+    GreedyLpt,
+}
+
+/// A unit of work: one or more bi-vectors processed by a single lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkUnit {
+    pub items: Vec<BiVector>,
+    pub total_len: usize,
+}
+
+impl WorkUnit {
+    fn new() -> Self {
+        WorkUnit { items: Vec::new(), total_len: 0 }
+    }
+
+    fn push(&mut self, v: BiVector) {
+        self.total_len += v.len;
+        self.items.push(v);
+    }
+}
+
+/// Group `vectors` into `target_units` work units using `mode`.
+///
+/// For [`PairingMode::PaperFold`] the unit count is derived from the
+/// paper's pairing (⌈(n-1)/2⌉ per triangle) and `target_units` only
+/// controls the subsequent lane assignment; for the other modes the
+/// vectors are packed directly into `target_units` bins.
+pub fn equalize(vectors: &[BiVector], mode: PairingMode, target_units: usize) -> Vec<WorkUnit> {
+    assert!(target_units > 0, "equalize: target_units must be positive");
+    if vectors.is_empty() {
+        return Vec::new();
+    }
+    match mode {
+        PairingMode::PaperFold => fold_pairs(vectors),
+        PairingMode::Block => block_pack(vectors, target_units),
+        PairingMode::Cyclic => cyclic_pack(vectors, target_units),
+        PairingMode::GreedyLpt => greedy_lpt(vectors, target_units),
+    }
+}
+
+/// The paper's fold: within each triangle, pair first with last.
+fn fold_pairs(vectors: &[BiVector]) -> Vec<WorkUnit> {
+    let mut units = Vec::new();
+    for tri in [Triangle::Lower, Triangle::Upper] {
+        let tri_vecs: Vec<BiVector> =
+            vectors.iter().copied().filter(|v| v.triangle == tri).collect();
+        let m = tri_vecs.len();
+        for k in 0..m.div_ceil(2) {
+            let mut u = WorkUnit::new();
+            u.push(tri_vecs[k]);
+            let j = m - 1 - k;
+            if j != k {
+                u.push(tri_vecs[j]);
+            }
+            units.push(u);
+        }
+    }
+    units
+}
+
+fn block_pack(vectors: &[BiVector], bins: usize) -> Vec<WorkUnit> {
+    let chunk = vectors.len().div_ceil(bins);
+    vectors
+        .chunks(chunk)
+        .map(|c| {
+            let mut u = WorkUnit::new();
+            for &v in c {
+                u.push(v);
+            }
+            u
+        })
+        .collect()
+}
+
+fn cyclic_pack(vectors: &[BiVector], bins: usize) -> Vec<WorkUnit> {
+    let bins = bins.min(vectors.len());
+    let mut units = vec![WorkUnit::new(); bins];
+    for (i, &v) in vectors.iter().enumerate() {
+        units[i % bins].push(v);
+    }
+    units
+}
+
+fn greedy_lpt(vectors: &[BiVector], bins: usize) -> Vec<WorkUnit> {
+    let bins = bins.min(vectors.len());
+    let mut sorted: Vec<BiVector> = vectors.to_vec();
+    sorted.sort_by(|a, b| b.len.cmp(&a.len));
+    let mut units = vec![WorkUnit::new(); bins];
+    for v in sorted {
+        let target = units
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, u)| u.total_len)
+            .map(|(i, _)| i)
+            .unwrap();
+        units[target].push(v);
+    }
+    units
+}
+
+/// Load imbalance of a unit set: `max(total_len) / mean(total_len)`.
+/// 1.0 is perfect balance; the paper's fold achieves exactly 1.0 for
+/// even `n-1`.
+pub fn imbalance(units: &[WorkUnit]) -> f64 {
+    if units.is_empty() {
+        return 1.0;
+    }
+    let max = units.iter().map(|u| u.total_len).max().unwrap() as f64;
+    let sum: usize = units.iter().map(|u| u.total_len).sum();
+    let mean = sum as f64 / units.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ebv::bivector::bivectorize;
+
+    fn total_len(units: &[WorkUnit]) -> usize {
+        units.iter().map(|u| u.total_len).sum()
+    }
+
+    #[test]
+    fn fold_units_have_equal_length_for_odd_n() {
+        // n=9 -> 8 vectors per triangle -> 4 exact pairs of length 9.
+        let n = 9;
+        let units = equalize(&bivectorize(n), PairingMode::PaperFold, 4);
+        assert_eq!(units.len(), 8); // 4 per triangle
+        assert!(units.iter().all(|u| u.total_len == n), "{units:?}");
+        assert_eq!(imbalance(&units), 1.0);
+    }
+
+    #[test]
+    fn fold_middle_vector_stands_alone_for_even_n() {
+        // n=8 -> 7 vectors per triangle -> 3 pairs of length 8 + middle (len 4).
+        let n = 8;
+        let units = equalize(&bivectorize(n), PairingMode::PaperFold, 4);
+        assert_eq!(units.len(), 8);
+        let lens: Vec<usize> = units.iter().map(|u| u.total_len).collect();
+        assert_eq!(lens.iter().filter(|&&l| l == n).count(), 6);
+        assert_eq!(lens.iter().filter(|&&l| l == n / 2).count(), 2);
+    }
+
+    #[test]
+    fn all_modes_conserve_total_work() {
+        let vs = bivectorize(17);
+        let total: usize = vs.iter().map(|v| v.len).sum();
+        for mode in
+            [PairingMode::PaperFold, PairingMode::Block, PairingMode::Cyclic, PairingMode::GreedyLpt]
+        {
+            let units = equalize(&vs, mode, 4);
+            assert_eq!(total_len(&units), total, "{mode:?}");
+            // Every vector appears exactly once.
+            let count: usize = units.iter().map(|u| u.items.len()).sum();
+            assert_eq!(count, vs.len(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn fold_beats_block_on_imbalance() {
+        let vs = bivectorize(64);
+        let fold = imbalance(&equalize(&vs, PairingMode::PaperFold, 8));
+        let block = imbalance(&equalize(&vs, PairingMode::Block, 8));
+        assert!(fold < block, "fold={fold} block={block}");
+        assert!(fold <= 1.04, "fold imbalance should be ~1, got {fold}");
+    }
+
+    #[test]
+    fn greedy_lpt_is_near_perfect() {
+        let vs = bivectorize(33);
+        let lpt = imbalance(&equalize(&vs, PairingMode::GreedyLpt, 4));
+        assert!(lpt < 1.05, "lpt={lpt}");
+    }
+
+    #[test]
+    fn cyclic_is_reasonable() {
+        let vs = bivectorize(64);
+        let cyc = imbalance(&equalize(&vs, PairingMode::Cyclic, 8));
+        assert!(cyc < 1.2, "cyclic={cyc}");
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(equalize(&[], PairingMode::PaperFold, 4).is_empty());
+        let vs = bivectorize(2); // one vector per triangle
+        let units = equalize(&vs, PairingMode::PaperFold, 4);
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[0].total_len, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "target_units")]
+    fn zero_units_panics() {
+        equalize(&bivectorize(4), PairingMode::Block, 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's contribution: **Equal bi-Vectorization**.
+//!
+//! LU elimination produces, at pivot step `r` of an `n×n` matrix, two
+//! vectors (the paper's Eq. 5): the sub-diagonal L-column of length
+//! `n-1-r` and the super-diagonal U-row of the same length. Processing
+//! the factorization as this stream of `2(n-1)` vectors is
+//! **bi-vectorization** ([`bivector`]).
+//!
+//! Those vectors shrink linearly (`n-1, n-2, …, 1`), so mapping "one
+//! vector → one thread" is badly load-imbalanced. The paper's fix —
+//! **equalization** — pairs vector `r` with vector `n-2-r` so every work
+//! unit has combined length exactly `n` (Eq. 7): `(n-1)/2` equal units
+//! per triangle, `n-1` in total ([`equalize`]).
+//!
+//! [`schedule`] turns the equalized pairing into an executable,
+//! dependency-safe lane schedule for the parallel solvers, and
+//! [`plan`] derives the op/byte counts the GPU cost model consumes.
+
+pub mod bivector;
+pub mod equalize;
+pub mod plan;
+pub mod schedule;
+
+pub use bivector::{bivectorize, row_total_work, BiVector, Triangle};
+pub use equalize::{equalize, imbalance, PairingMode, WorkUnit};
+pub use schedule::{LaneSchedule, RowDist};

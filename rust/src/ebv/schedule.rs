@@ -1,0 +1,273 @@
+//! Executable lane schedules derived from the equalized decomposition.
+//!
+//! Elimination steps are sequential (step `r+1` reads step `r`'s trailing
+//! update), so parallelism lives *within* a step: the updated rows are
+//! partitioned across lanes. The partition is **static** (ownership fixed
+//! for the whole factorization — no per-step repartitioning traffic,
+//! matching the paper's "first contribution, then decomposition"), and
+//! the ownership pattern is where equalization enters:
+//!
+//! * [`RowDist::Block`] — contiguous chunks. Badly imbalanced: early
+//!   rows retire early, so the first lane idles for most of the run.
+//! * [`RowDist::Cyclic`] — round-robin. The classic balanced choice.
+//! * [`RowDist::EbvFold`] — the paper's equalization: row `i` is paired
+//!   with row `n-1-i` (first-with-last), and pairs are dealt to lanes;
+//!   each pair's total elimination work is near-constant, so lanes get
+//!   equal totals.
+//! * [`RowDist::GreedyLpt`] — greedy packing on exact per-row work
+//!   ([`row_total_work`]): the "optimal-ish" comparator.
+
+use crate::ebv::bivector::row_total_work;
+
+/// Static row-ownership strategy for the parallel elimination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowDist {
+    Block,
+    Cyclic,
+    /// The paper's equal-bi-vectorized fold pairing.
+    EbvFold,
+    GreedyLpt,
+}
+
+impl RowDist {
+    pub const ALL: [RowDist; 4] =
+        [RowDist::Block, RowDist::Cyclic, RowDist::EbvFold, RowDist::GreedyLpt];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RowDist::Block => "block",
+            RowDist::Cyclic => "cyclic",
+            RowDist::EbvFold => "ebv-fold",
+            RowDist::GreedyLpt => "greedy-lpt",
+        }
+    }
+}
+
+/// A static assignment of matrix rows to `lanes` worker lanes.
+#[derive(Debug, Clone)]
+pub struct LaneSchedule {
+    n: usize,
+    lanes: usize,
+    /// `owner[i]` = lane that owns row `i`.
+    owner: Vec<usize>,
+    /// `rows[l]` = sorted rows owned by lane `l`.
+    rows: Vec<Vec<usize>>,
+}
+
+impl LaneSchedule {
+    /// Build the ownership map for an `n×n` elimination on `lanes` lanes.
+    pub fn build(n: usize, lanes: usize, dist: RowDist) -> LaneSchedule {
+        assert!(lanes > 0, "LaneSchedule: lanes must be positive");
+        let mut owner = vec![0usize; n];
+        match dist {
+            RowDist::Block => {
+                let chunk = n.div_ceil(lanes);
+                for (i, o) in owner.iter_mut().enumerate() {
+                    *o = (i / chunk.max(1)).min(lanes - 1);
+                }
+            }
+            RowDist::Cyclic => {
+                for (i, o) in owner.iter_mut().enumerate() {
+                    *o = i % lanes;
+                }
+            }
+            RowDist::EbvFold => {
+                // Deal fold pairs (i, n-1-i) round-robin to lanes: pair k
+                // goes to lane k % lanes; both members share the lane.
+                let mut k = 0usize;
+                let (mut lo, mut hi) = (0usize, n.saturating_sub(1));
+                while lo < hi {
+                    owner[lo] = k % lanes;
+                    owner[hi] = k % lanes;
+                    k += 1;
+                    lo += 1;
+                    hi -= 1;
+                }
+                if lo == hi && n > 0 {
+                    owner[lo] = k % lanes;
+                }
+            }
+            RowDist::GreedyLpt => {
+                // Exact per-row elimination work, largest-first, onto the
+                // least-loaded lane.
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by_key(|&i| std::cmp::Reverse(row_total_work(i, n)));
+                let mut load = vec![0usize; lanes];
+                for i in idx {
+                    let lane =
+                        (0..lanes).min_by_key(|&l| load[l]).expect("lanes > 0");
+                    owner[i] = lane;
+                    load[lane] += row_total_work(i, n);
+                }
+            }
+        }
+        let mut rows = vec![Vec::new(); lanes];
+        for (i, &o) in owner.iter().enumerate() {
+            rows[o].push(i);
+        }
+        LaneSchedule { n, lanes, owner, rows }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Lane owning row `i`.
+    #[inline]
+    pub fn owner(&self, i: usize) -> usize {
+        self.owner[i]
+    }
+
+    /// Rows owned by lane `l` (sorted ascending).
+    #[inline]
+    pub fn rows_of(&self, l: usize) -> &[usize] {
+        &self.rows[l]
+    }
+
+    /// Rows owned by lane `l` that are strictly below pivot `r`
+    /// (the active set during elimination step `r`).
+    pub fn active_rows_of(&self, l: usize, r: usize) -> &[usize] {
+        let rows = &self.rows[l];
+        let start = rows.partition_point(|&i| i <= r);
+        &rows[start..]
+    }
+
+    /// Total elimination work assigned to each lane.
+    pub fn lane_work(&self) -> Vec<usize> {
+        let mut w = vec![0usize; self.lanes];
+        for (i, &o) in self.owner.iter().enumerate() {
+            w[o] += row_total_work(i, self.n);
+        }
+        w
+    }
+
+    /// `max / mean` of per-lane work — the schedule-level balance metric.
+    pub fn work_imbalance(&self) -> f64 {
+        let w = self.lane_work();
+        let max = *w.iter().max().unwrap_or(&0) as f64;
+        let mean = w.iter().sum::<usize>() as f64 / w.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_partition(s: &LaneSchedule) {
+        // Every row owned exactly once; rows_of is consistent with owner.
+        let mut seen = vec![false; s.n()];
+        for l in 0..s.lanes() {
+            for &i in s.rows_of(l) {
+                assert!(!seen[i], "row {i} owned twice");
+                seen[i] = true;
+                assert_eq!(s.owner(i), l);
+            }
+        }
+        assert!(seen.into_iter().all(|b| b), "not all rows owned");
+    }
+
+    #[test]
+    fn all_dists_are_valid_partitions() {
+        for dist in RowDist::ALL {
+            for (n, lanes) in [(1usize, 1usize), (7, 3), (16, 4), (33, 5), (100, 8)] {
+                let s = LaneSchedule::build(n, lanes, dist);
+                check_partition(&s);
+            }
+        }
+    }
+
+    #[test]
+    fn block_layout() {
+        let s = LaneSchedule::build(8, 2, RowDist::Block);
+        assert_eq!(s.rows_of(0), &[0, 1, 2, 3]);
+        assert_eq!(s.rows_of(1), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn cyclic_layout() {
+        let s = LaneSchedule::build(6, 3, RowDist::Cyclic);
+        assert_eq!(s.rows_of(0), &[0, 3]);
+        assert_eq!(s.rows_of(2), &[2, 5]);
+    }
+
+    #[test]
+    fn fold_pairs_first_with_last() {
+        let s = LaneSchedule::build(8, 4, RowDist::EbvFold);
+        // pair 0 = (0,7) -> lane 0; pair 1 = (1,6) -> lane 1; etc.
+        assert_eq!(s.owner(0), s.owner(7));
+        assert_eq!(s.owner(1), s.owner(6));
+        assert_eq!(s.owner(2), s.owner(5));
+        assert_eq!(s.owner(3), s.owner(4));
+        assert_ne!(s.owner(0), s.owner(1));
+    }
+
+    #[test]
+    fn fold_handles_odd_n() {
+        let s = LaneSchedule::build(7, 2, RowDist::EbvFold);
+        check_partition(&s);
+        assert_eq!(s.owner(0), s.owner(6));
+    }
+
+    #[test]
+    fn ebv_fold_beats_block_on_work_balance() {
+        for (n, lanes) in [(64usize, 4usize), (256, 8), (1000, 6)] {
+            let fold = LaneSchedule::build(n, lanes, RowDist::EbvFold).work_imbalance();
+            let block = LaneSchedule::build(n, lanes, RowDist::Block).work_imbalance();
+            assert!(
+                fold < block,
+                "n={n} lanes={lanes}: fold={fold:.3} block={block:.3}"
+            );
+            assert!(fold < 1.1, "n={n} lanes={lanes}: fold imbalance {fold:.3}");
+        }
+    }
+
+    #[test]
+    fn greedy_lpt_is_best_or_tied() {
+        let n = 128;
+        let lanes = 4;
+        let lpt = LaneSchedule::build(n, lanes, RowDist::GreedyLpt).work_imbalance();
+        for dist in RowDist::ALL {
+            let other = LaneSchedule::build(n, lanes, dist).work_imbalance();
+            assert!(lpt <= other + 1e-9, "{dist:?}: lpt={lpt} other={other}");
+        }
+    }
+
+    #[test]
+    fn active_rows_shrink_as_pivot_advances() {
+        let s = LaneSchedule::build(8, 2, RowDist::Cyclic);
+        // Lane 0 owns {0,2,4,6}. After pivot 3, active = {4,6}.
+        assert_eq!(s.active_rows_of(0, 3), &[4, 6]);
+        assert_eq!(s.active_rows_of(0, 6), &[] as &[usize]);
+        // All rows active before step 0 except row 0 itself.
+        assert_eq!(s.active_rows_of(0, 0), &[2, 4, 6]);
+    }
+
+    #[test]
+    fn lane_work_sums_to_total() {
+        let n = 50;
+        let total: usize = (0..n).map(|i| row_total_work(i, n)).sum();
+        for dist in RowDist::ALL {
+            let s = LaneSchedule::build(n, 4, dist);
+            assert_eq!(s.lane_work().iter().sum::<usize>(), total);
+        }
+    }
+
+    #[test]
+    fn more_lanes_than_rows_is_fine() {
+        for dist in RowDist::ALL {
+            let s = LaneSchedule::build(3, 8, dist);
+            check_partition(&s);
+        }
+    }
+}

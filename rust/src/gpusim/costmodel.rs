@@ -1,0 +1,98 @@
+//! Per-kernel cost model: roofline with occupancy and launch overhead.
+
+use crate::gpusim::device::GpuModel;
+
+/// Cost of one kernel launch (one elimination step, one solve sweep…).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelCost {
+    /// Floating-point operations in the kernel.
+    pub flops: f64,
+    /// Bytes moved to/from device memory.
+    pub bytes: f64,
+    /// Independent work items available (threads the kernel can fill).
+    pub parallel_width: f64,
+    /// Load imbalance factor (`max/mean` lane work, ≥ 1.0). The
+    /// equalization ablation enters the simulation through this term.
+    pub imbalance: f64,
+}
+
+impl KernelCost {
+    /// Execution time on `gpu` under the roofline-with-occupancy model:
+    ///
+    /// `t = max(flops / (peak · util · eff), bytes / bw) · imbalance + launch`
+    ///
+    /// where `util = min(1, width / cores)` — a kernel with fewer
+    /// independent items than cores cannot fill the device, which is
+    /// exactly why the paper's speedups shrink for small `n`.
+    pub fn time_on(&self, gpu: &GpuModel) -> f64 {
+        let util = (self.parallel_width / gpu.cores as f64).min(1.0).max(1e-9);
+        let flop_time = self.flops / (gpu.peak_flops() * util * gpu.efficiency);
+        // DRAM traffic is reduced by shared-memory tiling (`smem_reuse`).
+        let mem_time = self.bytes / (gpu.mem_bw * gpu.smem_reuse.max(1.0));
+        flop_time.max(mem_time) * self.imbalance.max(1.0) + gpu.launch_overhead
+    }
+}
+
+/// Sum the cost of a sequence of kernels.
+pub fn total_time(kernels: &[KernelCost], gpu: &GpuModel) -> f64 {
+    kernels.iter().map(|k| k.time_on(gpu)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(flops: f64, bytes: f64, width: f64) -> KernelCost {
+        KernelCost { flops, bytes, parallel_width: width, imbalance: 1.0 }
+    }
+
+    #[test]
+    fn tiny_kernel_is_launch_bound() {
+        let g = GpuModel::gtx280();
+        let t = k(100.0, 400.0, 100.0).time_on(&g);
+        assert!((t - g.launch_overhead).abs() / g.launch_overhead < 0.5, "t={t}");
+    }
+
+    #[test]
+    fn big_kernel_approaches_roofline() {
+        let g = GpuModel::gtx280();
+        let flops = 1e12;
+        let t = k(flops, 1e9, 1e9).time_on(&g);
+        let ideal = flops / (g.peak_flops() * g.efficiency);
+        assert!((t - ideal).abs() / ideal < 0.05, "t={t} ideal={ideal}");
+    }
+
+    #[test]
+    fn narrow_kernel_pays_occupancy_penalty() {
+        let g = GpuModel::gtx280();
+        let wide = k(1e9, 1e6, 1e6).time_on(&g);
+        let narrow = k(1e9, 1e6, 24.0).time_on(&g); // 10% of cores
+        assert!(narrow > 5.0 * wide, "narrow={narrow} wide={wide}");
+    }
+
+    #[test]
+    fn memory_bound_kernel_tracks_effective_bandwidth() {
+        let g = GpuModel::gtx280();
+        let bytes = 1e12;
+        let t = k(1.0, bytes, 1e9).time_on(&g);
+        let ideal = bytes / (g.mem_bw * g.smem_reuse);
+        assert!((t - ideal).abs() / ideal < 0.05, "t={t} ideal={ideal}");
+    }
+
+    #[test]
+    fn imbalance_scales_time() {
+        let g = GpuModel::gtx280();
+        let base = k(1e10, 1e6, 1e6);
+        let skewed = KernelCost { imbalance: 2.0, ..base };
+        let r = skewed.time_on(&g) / base.time_on(&g);
+        assert!((r - 2.0).abs() < 0.1, "r={r}");
+    }
+
+    #[test]
+    fn total_time_sums() {
+        let g = GpuModel::gtx280();
+        let ks = vec![k(1e9, 1e6, 1e6); 4];
+        let t = total_time(&ks, &g);
+        assert!((t - 4.0 * ks[0].time_on(&g)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,131 @@
+//! Device descriptors.
+//!
+//! Parameters come from public spec sheets, not from fitting the paper's
+//! tables: GTX280 = 240 scalar cores @ 1.296 GHz (the paper says "256
+//! single cores"; 240 is the actual part), 141.7 GB/s GDDR3, PCIe 2.0
+//! ×16. CPU = one core of a 3.2 GHz Core i7 (Bloomfield era) running
+//! compiler-vectorized C.
+
+/// GPU execution model parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuModel {
+    pub name: &'static str,
+    /// Scalar cores (CUDA SPs).
+    pub cores: usize,
+    /// Core clock in Hz.
+    pub clock_hz: f64,
+    /// Flops per core per cycle (MAD = 2).
+    pub flops_per_cycle: f64,
+    /// Device memory bandwidth, bytes/s (effective, ~80% of peak).
+    pub mem_bw: f64,
+    /// Per-kernel-launch overhead, seconds.
+    pub launch_overhead: f64,
+    /// Fraction of peak attainable by well-tuned elimination kernels
+    /// (coalescing, occupancy headroom).
+    pub efficiency: f64,
+    /// Effective DRAM-traffic reduction from shared-memory tiling — the
+    /// paper stresses it uses shared memory "efficiently"; a 16-wide
+    /// panel held in shared memory cuts trailing-update traffic ~8×.
+    pub smem_reuse: f64,
+}
+
+impl GpuModel {
+    /// The paper's device.
+    pub fn gtx280() -> Self {
+        GpuModel {
+            name: "GTX280",
+            cores: 240,
+            clock_hz: 1.296e9,
+            flops_per_cycle: 2.0,
+            mem_bw: 0.8 * 141.7e9,
+            launch_overhead: 6e-6,
+            efficiency: 0.55,
+            smem_reuse: 8.0,
+        }
+    }
+
+    /// A modern-ish comparison point for the extension benches.
+    pub fn a100_like() -> Self {
+        GpuModel {
+            name: "A100-like",
+            cores: 6912,
+            clock_hz: 1.41e9,
+            flops_per_cycle: 2.0,
+            mem_bw: 0.85 * 1.555e12,
+            launch_overhead: 3e-6,
+            efficiency: 0.6,
+            smem_reuse: 16.0,
+        }
+    }
+
+    /// Peak f32 throughput in FLOP/s.
+    pub fn peak_flops(&self) -> f64 {
+        self.cores as f64 * self.clock_hz * self.flops_per_cycle
+    }
+}
+
+/// CPU execution model parameters (single thread, as in the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuModel {
+    pub name: &'static str,
+    pub clock_hz: f64,
+    /// Sustained flops/cycle for the regular (dense, unit-stride)
+    /// elimination loop — SSE2-era compiler vectorization.
+    pub dense_flops_per_cycle: f64,
+    /// Sustained flops/cycle for irregular (sparse, indexed) loops —
+    /// dominated by cache misses and dependent loads.
+    pub sparse_flops_per_cycle: f64,
+    /// Main-memory bandwidth available to one core, bytes/s.
+    pub mem_bw: f64,
+    /// Effective traffic reduction from the L2/L3 cache on the blocked
+    /// trailing update (the paper's VS2008 baseline is at least mildly
+    /// cache-friendly).
+    pub cache_reuse: f64,
+}
+
+impl CpuModel {
+    /// The paper's host: Core i7 @ 3.2 GHz, one thread, VS2008 C.
+    pub fn i7_single() -> Self {
+        CpuModel {
+            name: "i7-3.2GHz(1T)",
+            clock_hz: 3.2e9,
+            dense_flops_per_cycle: 2.2,
+            sparse_flops_per_cycle: 0.35,
+            mem_bw: 8e9,
+            cache_reuse: 4.0,
+        }
+    }
+
+    pub fn dense_rate(&self) -> f64 {
+        self.clock_hz * self.dense_flops_per_cycle
+    }
+
+    pub fn sparse_rate(&self) -> f64 {
+        self.clock_hz * self.sparse_flops_per_cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gtx280_peak_is_about_620_gflops() {
+        let g = GpuModel::gtx280();
+        let peak = g.peak_flops();
+        assert!((peak - 622e9).abs() / 622e9 < 0.01, "peak={peak:e}");
+    }
+
+    #[test]
+    fn cpu_rates_are_ordered() {
+        let c = CpuModel::i7_single();
+        assert!(c.dense_rate() > c.sparse_rate());
+        // Dense ~7 GFLOP/s, the scale the paper's Table 2 CPU column implies.
+        assert!(c.dense_rate() > 5e9 && c.dense_rate() < 10e9);
+    }
+
+    #[test]
+    fn a100_outclasses_gtx280() {
+        assert!(GpuModel::a100_like().peak_flops() > 20.0 * GpuModel::gtx280().peak_flops());
+    }
+}

@@ -1,0 +1,21 @@
+//! GPU/CPU cost models used to regenerate the paper's evaluation.
+//!
+//! The paper's testbed (NVIDIA GTX280 + single-thread Core i7, CUDA 3.2)
+//! is not available; per DESIGN.md §Substitutions we reproduce the
+//! *shape* of Tables 1–3 by driving a calibrated analytic cost model
+//! with the **actual op counts of the real schedules** produced by
+//! [`crate::ebv::plan`]. Nothing in here curve-fits the published
+//! numbers: who wins, how speedup grows with `n`, and the sparse/dense
+//! gap all emerge from the algorithm's op stream and the device
+//! parameters.
+
+pub mod cluster;
+pub mod costmodel;
+pub mod device;
+pub mod sim;
+pub mod transfer;
+
+pub use costmodel::KernelCost;
+pub use device::{CpuModel, GpuModel};
+pub use sim::{simulate_cpu_dense, simulate_cpu_sparse, simulate_gpu_dense, simulate_gpu_sparse, SimResult};
+pub use transfer::{transfer_times, TransferTimes};

@@ -1,0 +1,202 @@
+//! End-to-end simulated runtimes for the paper's workloads.
+//!
+//! Feeds the *real* per-step op counts from [`crate::ebv::plan`] into
+//! the kernel cost model, one kernel per elimination step (the paper's
+//! per-vector-pair dispatch), plus the substitution sweeps.
+
+use crate::ebv::plan::{FactorPlan, SolvePlan};
+use crate::ebv::schedule::{LaneSchedule, RowDist};
+use crate::gpusim::costmodel::{total_time, KernelCost};
+use crate::gpusim::device::{CpuModel, GpuModel};
+use crate::matrix::CsrMatrix;
+
+/// Simulated runtime decomposition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimResult {
+    pub factor_time: f64,
+    pub solve_time: f64,
+}
+
+impl SimResult {
+    pub fn total(&self) -> f64 {
+        self.factor_time + self.solve_time
+    }
+}
+
+const F32: f64 = 4.0;
+
+/// Simulated GPU time for a dense `n×n` EBV factorization + solve.
+/// `dist` controls the lane-imbalance factor fed to the cost model —
+/// the equalization ablation in simulation space.
+pub fn simulate_gpu_dense(n: usize, gpu: &GpuModel, dist: RowDist) -> SimResult {
+    // The imbalance penalty of the static distribution, from the actual
+    // schedule over a GPU-scale lane count (one lane per core).
+    let sched = LaneSchedule::build(n, gpu.cores.min(n.max(1)), dist);
+    let imbalance = sched.work_imbalance();
+    let plan = FactorPlan::dense(n, &sched);
+
+    let kernels: Vec<KernelCost> = plan
+        .steps
+        .iter()
+        .map(|s| KernelCost {
+            flops: (s.scale_flops + s.update_flops) as f64,
+            bytes: s.elems_moved as f64 * F32,
+            // One thread per trailing-block element (the bi-vector pair
+            // grid): m² items at step with trailing size m.
+            parallel_width: (s.trailing * s.trailing).max(1) as f64,
+            imbalance,
+        })
+        .collect();
+    let factor_time = total_time(&kernels, gpu);
+
+    let sp = SolvePlan::dense(n);
+    // Substitution: n column sweeps, each an axpy of shrinking width —
+    // the equalized pairing keeps each sweep's width ~n/2.
+    let solve_kernels: Vec<KernelCost> = (0..n.saturating_sub(1))
+        .map(|r| KernelCost {
+            flops: sp.flops as f64 / n.max(1) as f64,
+            bytes: (2 * (n - r)) as f64 * F32,
+            parallel_width: (n / 2).max(1) as f64,
+            imbalance,
+        })
+        .collect();
+    let solve_time = total_time(&solve_kernels, gpu);
+    SimResult { factor_time, solve_time }
+}
+
+/// Simulated GPU time for a sparse factorization + level-scheduled solve,
+/// from the **actual factored pattern** of the workload.
+pub fn simulate_gpu_sparse(
+    l: &CsrMatrix,
+    u: &CsrMatrix,
+    levels: usize,
+    gpu: &GpuModel,
+    dist: RowDist,
+) -> SimResult {
+    let n = l.rows();
+    let sched = LaneSchedule::build(n, gpu.cores.min(n.max(1)), dist);
+    let imbalance = sched.work_imbalance();
+    let plan = FactorPlan::sparse(l, u, &sched);
+
+    let kernels: Vec<KernelCost> = plan
+        .steps
+        .iter()
+        .map(|s| KernelCost {
+            flops: (s.scale_flops + s.update_flops) as f64,
+            bytes: s.elems_moved as f64 * F32,
+            parallel_width: (s.scale_flops * s.scale_flops.max(1)).max(1) as f64,
+            imbalance,
+        })
+        .collect();
+    let factor_time = total_time(&kernels, gpu);
+
+    // Level-scheduled triangular solves: one kernel per level, width =
+    // rows in the level (averaged), traffic = factor nnz once through.
+    let sp = SolvePlan::sparse(l, u);
+    let levels = levels.max(1);
+    let rows_per_level = (n as f64 / levels as f64).max(1.0);
+    let solve_kernels: Vec<KernelCost> = (0..levels)
+        .map(|_| KernelCost {
+            flops: sp.flops as f64 / levels as f64,
+            bytes: sp.elems_moved as f64 * F32 / levels as f64,
+            parallel_width: rows_per_level,
+            imbalance,
+        })
+        .collect();
+    let solve_time = total_time(&solve_kernels, gpu);
+    SimResult { factor_time, solve_time }
+}
+
+/// Simulated single-thread CPU time for the dense factorization + solve.
+pub fn simulate_cpu_dense(n: usize, cpu: &CpuModel) -> SimResult {
+    let flops = (0..n.saturating_sub(1))
+        .map(|r| {
+            let m = n - 1 - r;
+            (m + 2 * m * m) as f64
+        })
+        .sum::<f64>();
+    // Roofline against single-core bandwidth: the trailing block is
+    // streamed once per step.
+    let bytes: f64 = (0..n.saturating_sub(1))
+        .map(|r| {
+            let m = (n - 1 - r) as f64;
+            (m * m + 3.0 * m) * 8.0
+        })
+        .sum();
+    let factor_time =
+        (flops / cpu.dense_rate()).max(bytes / (cpu.mem_bw * cpu.cache_reuse.max(1.0)));
+    let sp = SolvePlan::dense(n);
+    let solve_time = sp.flops as f64 / cpu.dense_rate();
+    SimResult { factor_time, solve_time }
+}
+
+/// Simulated single-thread CPU time for the sparse factorization + solve,
+/// from the actual factored pattern.
+pub fn simulate_cpu_sparse(l: &CsrMatrix, u: &CsrMatrix, cpu: &CpuModel) -> SimResult {
+    let n = l.rows();
+    let sched = LaneSchedule::build(n, 1, RowDist::Block);
+    let plan = FactorPlan::sparse(l, u, &sched);
+    let factor_time = plan.total_flops() as f64 / cpu.sparse_rate();
+    let sp = SolvePlan::sparse(l, u);
+    let solve_time = sp.flops as f64 / cpu.sparse_rate();
+    SimResult { factor_time, solve_time }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_sparse, GenSeed};
+    use crate::solver::SparseLu;
+
+    #[test]
+    fn gpu_speedup_grows_with_n_dense() {
+        let gpu = GpuModel::gtx280();
+        let cpu = CpuModel::i7_single();
+        let speedup = |n: usize| {
+            simulate_cpu_dense(n, &cpu).total()
+                / simulate_gpu_dense(n, &gpu, RowDist::EbvFold).total()
+        };
+        let s500 = speedup(500);
+        let s4000 = speedup(4000);
+        let s16000 = speedup(16000);
+        assert!(s500 < s4000 && s4000 < s16000, "{s500} {s4000} {s16000}");
+        // Table 2's qualitative scale: single digits at 500, tens at 16000.
+        assert!(s500 > 1.0 && s500 < 15.0, "s500={s500}");
+        assert!(s16000 > 15.0, "s16000={s16000}");
+    }
+
+    #[test]
+    fn equalized_dist_beats_block_in_simulation() {
+        let gpu = GpuModel::gtx280();
+        let fold = simulate_gpu_dense(2000, &gpu, RowDist::EbvFold).total();
+        let block = simulate_gpu_dense(2000, &gpu, RowDist::Block).total();
+        assert!(fold < block, "fold={fold} block={block}");
+    }
+
+    #[test]
+    fn sparse_simulation_runs_on_real_pattern() {
+        let a = diag_dominant_sparse(200, 5, GenSeed(71));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let gpu = GpuModel::gtx280();
+        let cpu = CpuModel::i7_single();
+        let g = simulate_gpu_sparse(f.l(), f.u(), f.level_count(), &gpu, RowDist::EbvFold);
+        let c = simulate_cpu_sparse(f.l(), f.u(), &cpu);
+        assert!(g.total() > 0.0 && c.total() > 0.0);
+    }
+
+    #[test]
+    fn cpu_dense_time_is_cubic_ish() {
+        let cpu = CpuModel::i7_single();
+        let t1 = simulate_cpu_dense(1000, &cpu).total();
+        let t2 = simulate_cpu_dense(2000, &cpu).total();
+        let ratio = t2 / t1;
+        assert!(ratio > 6.0 && ratio < 10.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn a100_is_faster_than_gtx280() {
+        let old = simulate_gpu_dense(4000, &GpuModel::gtx280(), RowDist::EbvFold).total();
+        let new = simulate_gpu_dense(4000, &GpuModel::a100_like(), RowDist::EbvFold).total();
+        assert!(new < old);
+    }
+}

@@ -1,0 +1,95 @@
+//! Host↔device transfer model (the paper's Table 3).
+//!
+//! PCIe 2.0 ×16: ~8 GB/s raw, ~5.5 GB/s effective H2D, slightly lower
+//! D2H on GT200-era parts, with a fixed per-transfer latency. "To GPU"
+//! carries the matrix + RHS; "From GPU" carries only the solution
+//! vector — which is why the paper's From column barely grows.
+
+/// PCIe link parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PcieModel {
+    /// Host→device effective bandwidth, bytes/s.
+    pub h2d_bw: f64,
+    /// Device→host effective bandwidth, bytes/s.
+    pub d2h_bw: f64,
+    /// Fixed per-transfer setup latency, seconds.
+    pub latency: f64,
+}
+
+impl PcieModel {
+    /// PCIe 2.0 ×16 as on the paper's testbed.
+    pub fn gen2_x16() -> Self {
+        PcieModel { h2d_bw: 5.5e9, d2h_bw: 5.0e9, latency: 1.0e-4 }
+    }
+}
+
+/// Simulated transfer times for one solve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferTimes {
+    pub to_gpu: f64,
+    pub from_gpu: f64,
+}
+
+/// Transfer cost for an `n×n` system with `payload_elems` matrix elements
+/// (dense: n²; sparse: nnz + index arrays) plus the RHS up and the
+/// solution down, in f32.
+pub fn transfer_times(n: usize, payload_elems: usize, pcie: &PcieModel) -> TransferTimes {
+    let up_bytes = (payload_elems + n) as f64 * 4.0;
+    let down_bytes = n as f64 * 4.0;
+    TransferTimes {
+        to_gpu: up_bytes / pcie.h2d_bw + pcie.latency,
+        from_gpu: down_bytes / pcie.d2h_bw + pcie.latency,
+    }
+}
+
+/// Payload size of a CSR matrix in elements-equivalent (values + column
+/// indices as 4-byte words + row pointers).
+pub fn csr_payload_elems(rows: usize, nnz: usize) -> usize {
+    2 * nnz + rows + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_gpu_is_latency_dominated_and_flat() {
+        let pcie = PcieModel::gen2_x16();
+        let small = transfer_times(500, 500 * 500, &pcie);
+        let large = transfer_times(16000, 16000 * 16000, &pcie);
+        // Paper Table 3: From column grows only ~2.5x over a 32x size range.
+        let growth = large.from_gpu / small.from_gpu;
+        assert!(growth < 3.0, "growth={growth}");
+    }
+
+    #[test]
+    fn to_gpu_grows_with_payload() {
+        let pcie = PcieModel::gen2_x16();
+        let small = transfer_times(500, 500 * 500, &pcie);
+        let large = transfer_times(16000, 16000 * 16000, &pcie);
+        assert!(large.to_gpu > 20.0 * small.to_gpu);
+    }
+
+    #[test]
+    fn to_exceeds_from_at_every_size() {
+        let pcie = PcieModel::gen2_x16();
+        for n in [500usize, 1000, 2000, 4000, 8000, 16000] {
+            let t = transfer_times(n, n * n, &pcie);
+            assert!(t.to_gpu > t.from_gpu, "n={n}");
+        }
+    }
+
+    #[test]
+    fn transfers_are_negligible_vs_solve() {
+        // The paper's point: transfer ≪ compute. 16000² f32 upload is
+        // ~0.19s vs 11s GPU solve.
+        let pcie = PcieModel::gen2_x16();
+        let t = transfer_times(16000, 16000 * 16000, &pcie);
+        assert!(t.to_gpu < 0.5);
+    }
+
+    #[test]
+    fn csr_payload_counts_indices() {
+        assert_eq!(csr_payload_elems(10, 50), 111);
+    }
+}

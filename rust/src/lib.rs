@@ -1,0 +1,61 @@
+//! # EBV-Solve
+//!
+//! Reproduction of *"Equal bi-Vectorized (EbV) method to high performance
+//! on GPU"* (Hashemi, Lahooti, Shirani — CS.DC 2019) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper proposes a parallel LU-decomposition solver built on two
+//! ideas: **bi-vectorization** (the `L` and `U` factors are processed as
+//! `2(n-1)` elimination vectors) and **equalization** (short and long
+//! vectors are paired so every parallel work unit carries the same amount
+//! of work). This crate implements that method end to end:
+//!
+//! * [`matrix`] — dense / CSR / COO / banded storage, generators, I/O;
+//! * [`ebv`] — the paper's contribution: bi-vector extraction,
+//!   equalization pairing, and the dependency-safe lane schedule;
+//! * [`solver`] — sequential, EBV-parallel, blocked, and sparse LU plus
+//!   triangular solves, pivoting and iterative refinement;
+//! * [`gpusim`] — GTX280-calibrated cost model used to regenerate the
+//!   paper's Tables 1–3 from real schedule op counts;
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`);
+//! * [`coordinator`] — the L3 solve service: routing, dynamic batching,
+//!   leader/worker lanes, backpressure and metrics;
+//! * [`bench`], [`workload`], [`testutil`] — measurement harness,
+//!   request-trace generation and a property-testing mini-framework
+//!   (offline substitutes for criterion / proptest).
+//!
+//! Quickstart:
+//!
+//! ```
+//! use ebv_solve::matrix::DenseMatrix;
+//! use ebv_solve::matrix::generate::{diag_dominant_dense, GenSeed};
+//! use ebv_solve::solver::{EbvLu, LuSolver};
+//!
+//! let n = 64;
+//! let a = diag_dominant_dense(n, GenSeed(7));
+//! let b = vec![1.0; n];
+//! let x = EbvLu::with_lanes(2).solve(&a, &b).unwrap();
+//! let r = a.residual(&x, &b);
+//! assert!(r < 1e-8);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod ebv;
+pub mod gpusim;
+pub mod matrix;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide error type (thin wrapper over the module errors).
+pub use util::error::{EbvError, Result};
+
+/// Version string baked from Cargo metadata.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

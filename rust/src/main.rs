@@ -1,0 +1,282 @@
+//! `ebv-solve` binary: CLI front-end over the library.
+//!
+//! Subcommands: `solve`, `serve`, `tables`, `schedule`, `info` — see
+//! `ebv_solve::cli::USAGE`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ebv_solve::cli::{Args, USAGE};
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::SolverService;
+use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
+use ebv_solve::ebv::{bivectorize, equalize, imbalance, PairingMode};
+use ebv_solve::gpusim::{
+    simulate_cpu_dense, simulate_cpu_sparse, simulate_gpu_dense, simulate_gpu_sparse, CpuModel,
+    GpuModel,
+};
+use ebv_solve::matrix::generate::{
+    diag_dominant_dense, diag_dominant_sparse, poisson_2d, rhs, GenSeed,
+};
+use ebv_solve::runtime::Manifest;
+use ebv_solve::solver::{solver_by_name, SparseLu};
+use ebv_solve::util::fmt;
+use ebv_solve::workload::{generate_trace, SystemKind, TraceSpec};
+
+fn main() {
+    ebv_solve::util::logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
+        "tables" => cmd_tables(&args),
+        "schedule" => cmd_schedule(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
+    let n = args.opt_parsed("n", 512usize)?;
+    let seed = args.opt_parsed("seed", 7u64)?;
+    let kind = args.opt("kind").unwrap_or("dense");
+    let lanes = args.opt_parsed(
+        "lanes",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+    )?;
+    let solver_name = args.opt("solver").unwrap_or("ebv");
+
+    match kind {
+        "dense" => {
+            let a = diag_dominant_dense(n, GenSeed(seed));
+            let b = rhs(n, GenSeed(seed ^ 1));
+            let solver = solver_by_name(solver_name, lanes).ok_or_else(|| {
+                ebv_solve::EbvError::Config(format!("unknown solver `{solver_name}`"))
+            })?;
+            let t0 = Instant::now();
+            let x = solver.solve(&a, &b)?;
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "dense n={n} solver={} lanes={lanes}: {} (residual {:.3e})",
+                solver.name(),
+                fmt::secs(dt),
+                a.residual(&x, &b)
+            );
+        }
+        "sparse" | "poisson" => {
+            let a = if kind == "sparse" {
+                diag_dominant_sparse(n, 5, GenSeed(seed))
+            } else {
+                let g = (n as f64).sqrt().round().max(2.0) as usize;
+                poisson_2d(g)
+            };
+            let b = rhs(a.rows(), GenSeed(seed ^ 1));
+            let t0 = Instant::now();
+            let f = SparseLu::new().factor(&a)?;
+            let t_factor = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let x = f.solve_par(&b, lanes)?;
+            let t_solve = t1.elapsed().as_secs_f64();
+            println!(
+                "{kind} n={} nnz={} levels={}: factor {} + solve {} (residual {:.3e})",
+                a.rows(),
+                a.nnz(),
+                f.level_count(),
+                fmt::secs(t_factor),
+                fmt::secs(t_solve),
+                a.residual(&x, &b)
+            );
+        }
+        other => {
+            return Err(ebv_solve::EbvError::Config(format!("unknown kind `{other}`")));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
+    let requests = args.opt_parsed("requests", 200usize)?;
+    let rate = args.opt_parsed("rate", 500.0f64)?;
+    let lanes = args.opt_parsed("lanes", 4usize)?;
+    let batch = args.opt_parsed("batch", 8usize)?;
+    let cfg = ServiceConfig {
+        lanes,
+        max_batch: batch,
+        use_runtime: args.flag("runtime"),
+        ..ServiceConfig::default()
+    };
+    let svc = SolverService::start(cfg)?;
+
+    let trace = generate_trace(&TraceSpec {
+        rate,
+        count: requests,
+        sizes: vec![64, 128, 256],
+        mix: vec![(SystemKind::Dense, 0.6), (SystemKind::Sparse, 0.4)],
+        seed: args.opt_parsed("seed", 0xEB5u64)?,
+    });
+
+    println!("serving {requests} requests at ~{rate}/s on {lanes} lanes (batch<={batch})");
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for job in &trace {
+        // Replay arrivals in real time (compressed 10x to keep demos fast).
+        let target = job.arrival / 10.0;
+        let now = t0.elapsed().as_secs_f64();
+        if target > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+        }
+        let rx = match job.kind {
+            SystemKind::Dense => {
+                let (a, b) = job.dense_system();
+                svc.submit_dense(Arc::new(a), b, Some(job.n as u64))
+            }
+            _ => {
+                let (a, b) = job.sparse_system();
+                svc.submit_sparse(Arc::new(a), b, Some(1000 + job.n as u64))
+            }
+        };
+        match rx {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => log::warn!("request rejected: {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("completed {ok}/{requests} in {}", fmt::secs(wall));
+    println!("throughput: {}", fmt::rate(ok as f64 / wall, "req"));
+    println!("metrics: {}", svc.metrics().summary());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> ebv_solve::Result<()> {
+    let which = args.opt("table").unwrap_or("all");
+    let sizes = args.opt_list("sizes", &[500, 1000, 2000, 4000, 8000, 16000])?;
+    let gpu = GpuModel::gtx280();
+    let cpu = CpuModel::i7_single();
+
+    if which == "1" || which == "all" {
+        println!("\nTable 1 (sparse, simulated GTX280 vs 1T CPU):");
+        let mut rows = Vec::new();
+        for &n in &sizes {
+            // Factor a real sparse system at a feasible scale and use its
+            // fill statistics; beyond 4000 extrapolate the pattern cost.
+            let sim_n = n.min(2000);
+            let a = diag_dominant_sparse(sim_n, 5, GenSeed(n as u64));
+            let f = SparseLu::new().factor(&a)?;
+            let scale = (n as f64 / sim_n as f64).powi(2);
+            let g = simulate_gpu_sparse(f.l(), f.u(), f.level_count(), &gpu, RowDist::EbvFold);
+            let c = simulate_cpu_sparse(f.l(), f.u(), &cpu);
+            let gt = g.total() * scale;
+            let ct = c.total() * scale;
+            rows.push(vec![
+                format!("{n}*{n}"),
+                format!("{gt:.5}"),
+                format!("{ct:.5}"),
+                format!("{:.1}", ct / gt),
+            ]);
+        }
+        println!("{}", fmt::table(&["Matrix size", "GPU, sec", "CPU, sec", "Speedup"], &rows));
+    }
+    if which == "2" || which == "all" {
+        println!("\nTable 2 (dense, simulated GTX280 vs 1T CPU):");
+        let mut rows = Vec::new();
+        for &n in &sizes {
+            let g = simulate_gpu_dense(n, &gpu, RowDist::EbvFold);
+            let c = simulate_cpu_dense(n, &cpu);
+            rows.push(vec![
+                format!("{n}*{n}"),
+                format!("{:.4}", g.total()),
+                format!("{:.4}", c.total()),
+                format!("{:.1}", c.total() / g.total()),
+            ]);
+        }
+        println!("{}", fmt::table(&["Matrix size", "GPU, s", "CPU, s", "Speedup"], &rows));
+    }
+    if which == "3" || which == "all" {
+        println!("\nTable 3 (host<->device transfers, simulated PCIe 2.0 x16):");
+        let pcie = ebv_solve::gpusim::transfer::PcieModel::gen2_x16();
+        let mut rows = Vec::new();
+        for &n in &sizes {
+            let t = ebv_solve::gpusim::transfer_times(n, n * n, &pcie);
+            rows.push(vec![
+                format!("{n}*{n}"),
+                format!("{:.5}", t.to_gpu),
+                format!("{:.5}", t.from_gpu),
+            ]);
+        }
+        println!("{}", fmt::table(&["Matrix size", "To GPU,s", "From GPU,s"], &rows));
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> ebv_solve::Result<()> {
+    let n = args.opt_parsed("n", 1024usize)?;
+    let lanes = args.opt_parsed("lanes", 8usize)?;
+    println!("bi-vectorization of n={n}: {} vectors", bivectorize(n).len());
+    println!("\npairing-mode imbalance (vector units):");
+    for mode in
+        [PairingMode::PaperFold, PairingMode::Block, PairingMode::Cyclic, PairingMode::GreedyLpt]
+    {
+        let units = equalize(&bivectorize(n), mode, lanes);
+        println!("  {mode:?}: {} units, imbalance {:.4}", units.len(), imbalance(&units));
+    }
+    println!("\nrow-distribution imbalance (lane work, lanes={lanes}):");
+    for dist in RowDist::ALL {
+        let s = LaneSchedule::build(n, lanes, dist);
+        println!("  {:<12} {:.4}", s.work_imbalance(), dist.name());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> ebv_solve::Result<()> {
+    println!("ebv-solve {}", ebv_solve::VERSION);
+    let dir = args.opt("artifacts").unwrap_or("artifacts");
+    match Manifest::load(std::path::Path::new(dir)) {
+        Ok(m) => {
+            println!("artifacts ({dir}): {} entries", m.entries.len());
+            for e in &m.entries {
+                println!("  {:<22} kind={:<16} n={:<6} batch={}", e.name, e.kind.as_str(), e.n, e.batch);
+            }
+        }
+        Err(e) => println!("artifacts ({dir}): unavailable ({e})"),
+    }
+    let gpu = GpuModel::gtx280();
+    println!(
+        "gpu model: {} ({} cores, {:.0} GFLOP/s peak, {:.1} GB/s)",
+        gpu.name,
+        gpu.cores,
+        gpu.peak_flops() / 1e9,
+        gpu.mem_bw / 1e9
+    );
+    let cpu = CpuModel::i7_single();
+    println!(
+        "cpu model: {} ({:.1} GFLOP/s dense, {:.1} GFLOP/s sparse)",
+        cpu.name,
+        cpu.dense_rate() / 1e9,
+        cpu.sparse_rate() / 1e9
+    );
+    Ok(())
+}

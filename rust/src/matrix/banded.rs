@@ -1,0 +1,181 @@
+//! Banded matrix storage (CFD-style discretizations).
+//!
+//! The paper's motivation is CFD linear systems, which are typically
+//! banded (tridiagonal from 1-D, pentadiagonal from 2-D stencils). This
+//! format stores only the diagonals in `[-kl, +ku]`.
+
+use crate::matrix::{CsrMatrix, DenseMatrix};
+use crate::util::error::{EbvError, Result};
+
+/// Banded square matrix with `kl` sub- and `ku` super-diagonals.
+/// Diagonal `d ∈ [-kl, ku]` is stored as a dense vector of length `n`
+/// (entries outside the matrix are 0 and ignored).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BandedMatrix {
+    n: usize,
+    kl: usize,
+    ku: usize,
+    /// `bands[d + kl][i]` = A[i, i + d - kl ... ] — see `get`.
+    bands: Vec<Vec<f64>>,
+}
+
+impl BandedMatrix {
+    pub fn zeros(n: usize, kl: usize, ku: usize) -> Result<Self> {
+        if kl >= n.max(1) || ku >= n.max(1) {
+            return Err(EbvError::Shape(format!("bandwidths kl={kl}, ku={ku} too large for n={n}")));
+        }
+        Ok(BandedMatrix { n, kl, ku, bands: vec![vec![0.0; n]; kl + ku + 1] })
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn kl(&self) -> usize {
+        self.kl
+    }
+
+    #[inline]
+    pub fn ku(&self) -> usize {
+        self.ku
+    }
+
+    /// Total bandwidth (number of stored diagonals).
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.kl + self.ku + 1
+    }
+
+    fn band_of(&self, i: usize, j: usize) -> Option<usize> {
+        let d = j as isize - i as isize;
+        if d < -(self.kl as isize) || d > self.ku as isize {
+            None
+        } else {
+            Some((d + self.kl as isize) as usize)
+        }
+    }
+
+    /// Element access; positions outside the band read as 0.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.n && j < self.n);
+        match self.band_of(i, j) {
+            Some(b) => self.bands[b][i],
+            None => 0.0,
+        }
+    }
+
+    /// Set an element; writing outside the band is an error.
+    pub fn set(&mut self, i: usize, j: usize, v: f64) -> Result<()> {
+        if i >= self.n || j >= self.n {
+            return Err(EbvError::Shape(format!("({i},{j}) out of bounds for n={}", self.n)));
+        }
+        match self.band_of(i, j) {
+            Some(b) => {
+                self.bands[b][i] = v;
+                Ok(())
+            }
+            None => Err(EbvError::Shape(format!(
+                "({i},{j}) outside band [-{}, +{}]",
+                self.kl, self.ku
+            ))),
+        }
+    }
+
+    /// Banded matvec `y = A x` in O(n · bandwidth).
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.n {
+            return Err(EbvError::Shape("matvec length mismatch".into()));
+        }
+        let mut y = vec![0.0; self.n];
+        for i in 0..self.n {
+            let jlo = i.saturating_sub(self.kl);
+            let jhi = (i + self.ku).min(self.n.saturating_sub(1));
+            let mut acc = 0.0;
+            for j in jlo..=jhi {
+                acc += self.get(i, j) * x[j];
+            }
+            y[i] = acc;
+        }
+        Ok(y)
+    }
+
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.n, self.n);
+        for i in 0..self.n {
+            let jlo = i.saturating_sub(self.kl);
+            let jhi = (i + self.ku).min(self.n.saturating_sub(1));
+            for j in jlo..=jhi {
+                m.set(i, j, self.get(i, j));
+            }
+        }
+        m
+    }
+
+    pub fn to_csr(&self) -> CsrMatrix {
+        CsrMatrix::from_dense(&self.to_dense(), 0.0)
+    }
+
+    /// Tridiagonal constructor (`sub`, `diag`, `sup` of lengths n-1, n, n-1).
+    pub fn tridiagonal(sub: &[f64], diag: &[f64], sup: &[f64]) -> Result<Self> {
+        let n = diag.len();
+        if sub.len() + 1 != n || sup.len() + 1 != n {
+            return Err(EbvError::Shape("tridiagonal band lengths".into()));
+        }
+        let mut m = BandedMatrix::zeros(n, 1, 1)?;
+        for i in 0..n {
+            m.set(i, i, diag[i])?;
+            if i + 1 < n {
+                m.set(i + 1, i, sub[i])?;
+                m.set(i, i + 1, sup[i])?;
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_validates_bandwidth() {
+        assert!(BandedMatrix::zeros(4, 4, 0).is_err());
+        assert!(BandedMatrix::zeros(4, 3, 3).is_ok());
+    }
+
+    #[test]
+    fn get_set_in_and_out_of_band() {
+        let mut m = BandedMatrix::zeros(4, 1, 1).unwrap();
+        m.set(1, 2, 5.0).unwrap();
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.get(0, 3), 0.0); // outside band reads 0
+        assert!(m.set(0, 3, 1.0).is_err()); // outside band write errors
+    }
+
+    #[test]
+    fn tridiagonal_layout() {
+        let m = BandedMatrix::tridiagonal(&[1.0, 2.0], &[4.0, 5.0, 6.0], &[7.0, 8.0]).unwrap();
+        let d = m.to_dense();
+        assert_eq!(d.get(0, 0), 4.0);
+        assert_eq!(d.get(1, 0), 1.0);
+        assert_eq!(d.get(0, 1), 7.0);
+        assert_eq!(d.get(2, 1), 2.0);
+        assert_eq!(d.get(2, 2), 6.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = BandedMatrix::tridiagonal(&[1.0, 2.0], &[4.0, 5.0, 6.0], &[7.0, 8.0]).unwrap();
+        let x = vec![1.0, -1.0, 2.0];
+        assert_eq!(m.matvec(&x).unwrap(), m.to_dense().matvec(&x).unwrap());
+    }
+
+    #[test]
+    fn csr_round_trip_preserves_values() {
+        let m = BandedMatrix::tridiagonal(&[1.0, 2.0], &[4.0, 5.0, 6.0], &[7.0, 8.0]).unwrap();
+        assert_eq!(m.to_csr().to_dense(), m.to_dense());
+        assert_eq!(m.to_csr().nnz(), 7);
+    }
+}

@@ -1,0 +1,146 @@
+//! Coordinate-format sparse matrix (assembly format).
+
+use crate::matrix::{CsrMatrix, DenseMatrix};
+use crate::util::error::{EbvError, Result};
+
+/// COO (triplet) sparse matrix. Duplicates are allowed during assembly
+/// and summed on conversion to CSR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooMatrix {
+    rows: usize,
+    cols: usize,
+    entries: Vec<(usize, usize, f64)>,
+}
+
+impl CooMatrix {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        CooMatrix { rows, cols, entries: Vec::new() }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored (possibly duplicate) entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn entries(&self) -> &[(usize, usize, f64)] {
+        &self.entries
+    }
+
+    /// Add `v` at `(i, j)`. Duplicate coordinates accumulate.
+    pub fn push(&mut self, i: usize, j: usize, v: f64) -> Result<()> {
+        if i >= self.rows || j >= self.cols {
+            return Err(EbvError::Shape(format!(
+                "entry ({i},{j}) out of bounds for {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        self.entries.push((i, j, v));
+        Ok(())
+    }
+
+    /// Convert to CSR, summing duplicates and dropping exact zeros.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut sorted = self.entries.clone();
+        sorted.sort_unstable_by_key(|&(i, j, _)| (i, j));
+
+        // Merge duplicates into (i, j, v) runs.
+        let mut merged: Vec<(usize, usize, f64)> = Vec::with_capacity(sorted.len());
+        for (i, j, v) in sorted {
+            match merged.last_mut() {
+                Some((li, lj, lv)) if *li == i && *lj == j => *lv += v,
+                _ => merged.push((i, j, v)),
+            }
+        }
+
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        let mut col_idx = Vec::with_capacity(merged.len());
+        let mut values = Vec::with_capacity(merged.len());
+        for (i, j, v) in merged {
+            row_ptr[i + 1] += 1;
+            col_idx.push(j);
+            values.push(v);
+        }
+        for i in 0..self.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        CsrMatrix::from_raw(self.rows, self.cols, row_ptr, col_idx, values)
+            .expect("COO->CSR produced invalid CSR")
+            .drop_zeros()
+    }
+
+    /// Convert to dense (duplicates accumulate).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for &(i, j, v) in &self.entries {
+            m.set(i, j, m.get(i, j) + v);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_validates_bounds() {
+        let mut m = CooMatrix::new(2, 2);
+        assert!(m.push(0, 0, 1.0).is_ok());
+        assert!(m.push(2, 0, 1.0).is_err());
+        assert!(m.push(0, 2, 1.0).is_err());
+    }
+
+    #[test]
+    fn to_dense_accumulates_duplicates() {
+        let mut m = CooMatrix::new(2, 2);
+        m.push(0, 0, 1.0).unwrap();
+        m.push(0, 0, 2.0).unwrap();
+        m.push(1, 1, 4.0).unwrap();
+        let d = m.to_dense();
+        assert_eq!(d.get(0, 0), 3.0);
+        assert_eq!(d.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn to_csr_matches_dense() {
+        let mut m = CooMatrix::new(3, 3);
+        // Deliberately unsorted with a duplicate.
+        m.push(2, 1, 5.0).unwrap();
+        m.push(0, 0, 1.0).unwrap();
+        m.push(1, 2, 3.0).unwrap();
+        m.push(0, 2, 2.0).unwrap();
+        m.push(2, 1, -1.0).unwrap();
+        let csr = m.to_csr();
+        assert_eq!(csr.to_dense().max_abs_diff(&m.to_dense()), 0.0);
+        assert_eq!(csr.nnz(), 4); // duplicate merged
+    }
+
+    #[test]
+    fn to_csr_drops_cancelled_entries() {
+        let mut m = CooMatrix::new(2, 2);
+        m.push(0, 1, 2.0).unwrap();
+        m.push(0, 1, -2.0).unwrap();
+        m.push(1, 0, 1.0).unwrap();
+        let csr = m.to_csr();
+        assert_eq!(csr.nnz(), 1);
+    }
+
+    #[test]
+    fn empty_matrix_converts() {
+        let m = CooMatrix::new(3, 4);
+        let csr = m.to_csr();
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!((csr.rows(), csr.cols()), (3, 4));
+    }
+}

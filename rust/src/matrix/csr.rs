@@ -1,0 +1,349 @@
+//! Compressed sparse row matrix (compute format).
+
+use crate::matrix::DenseMatrix;
+use crate::util::error::{EbvError, Result};
+
+/// CSR sparse matrix: `row_ptr` (len `rows+1`), `col_idx`/`values`
+/// (len `nnz`), column indices strictly increasing within each row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from raw arrays, validating the CSR invariants.
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Result<Self> {
+        if row_ptr.len() != rows + 1 {
+            return Err(EbvError::Shape(format!(
+                "row_ptr length {} != rows+1 ({})",
+                row_ptr.len(),
+                rows + 1
+            )));
+        }
+        if col_idx.len() != values.len() {
+            return Err(EbvError::Shape("col_idx/values length mismatch".into()));
+        }
+        if row_ptr[0] != 0 || *row_ptr.last().unwrap() != col_idx.len() {
+            return Err(EbvError::Shape("row_ptr endpoints invalid".into()));
+        }
+        for w in row_ptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(EbvError::Shape("row_ptr not monotone".into()));
+            }
+        }
+        for r in 0..rows {
+            let idx = &col_idx[row_ptr[r]..row_ptr[r + 1]];
+            for w in idx.windows(2) {
+                if w[1] <= w[0] {
+                    return Err(EbvError::Shape(format!(
+                        "row {r}: column indices not strictly increasing"
+                    )));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last >= cols {
+                    return Err(EbvError::Shape(format!("row {r}: column index {last} >= {cols}")));
+                }
+            }
+        }
+        Ok(CsrMatrix { rows, cols, row_ptr, col_idx, values })
+    }
+
+    /// Empty matrix with no stored entries.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr: vec![0; rows + 1],
+            col_idx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    #[inline]
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    #[inline]
+    pub fn col_idx(&self) -> &[usize] {
+        &self.col_idx
+    }
+
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Entries of row `r` as parallel (col, value) slices.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let span = self.row_ptr[r]..self.row_ptr[r + 1];
+        (&self.col_idx[span.clone()], &self.values[span])
+    }
+
+    /// Number of stored entries in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Value at `(i, j)` (binary search; 0.0 if not stored).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&j) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Sparse matrix–vector product `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.cols {
+            return Err(EbvError::Shape(format!(
+                "spmv: x has length {}, expected {}",
+                x.len(),
+                self.cols
+            )));
+        }
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0;
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                acc += v * x[j];
+            }
+            y[r] = acc;
+        }
+        Ok(y)
+    }
+
+    /// ∞-norm residual `max_i |A x - b|_i`.
+    pub fn residual(&self, x: &[f64], b: &[f64]) -> f64 {
+        let ax = self.matvec(x).expect("residual: shape mismatch");
+        ax.iter().zip(b.iter()).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max)
+    }
+
+    /// Densify (test/oracle use).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                m.set(r, j, v);
+            }
+        }
+        m
+    }
+
+    /// Build from dense, keeping entries with `|a_ij| > tol`.
+    pub fn from_dense(m: &DenseMatrix, tol: f64) -> CsrMatrix {
+        let mut row_ptr = vec![0usize; m.rows() + 1];
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                let v = m.get(i, j);
+                if v.abs() > tol {
+                    col_idx.push(j);
+                    values.push(v);
+                    row_ptr[i + 1] += 1;
+                }
+            }
+        }
+        for i in 0..m.rows() {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        CsrMatrix { rows: m.rows(), cols: m.cols(), row_ptr, col_idx, values }
+    }
+
+    /// Copy without exact-zero stored entries.
+    pub fn drop_zeros(&self) -> CsrMatrix {
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        let mut col_idx = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                if v != 0.0 {
+                    col_idx.push(j);
+                    values.push(v);
+                    row_ptr[r + 1] += 1;
+                }
+            }
+        }
+        for i in 0..self.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, row_ptr, col_idx, values }
+    }
+
+    /// Transposed copy (CSR of Aᵀ, i.e. CSC view of A).
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut row_ptr = vec![0usize; self.cols + 1];
+        for &j in &self.col_idx {
+            row_ptr[j + 1] += 1;
+        }
+        for j in 0..self.cols {
+            row_ptr[j + 1] += row_ptr[j];
+        }
+        let mut cursor = row_ptr.clone();
+        let mut col_idx = vec![0usize; self.nnz()];
+        let mut values = vec![0.0f64; self.nnz()];
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                let slot = cursor[j];
+                col_idx[slot] = i;
+                values[slot] = v;
+                cursor[j] += 1;
+            }
+        }
+        CsrMatrix { rows: self.cols, cols: self.rows, row_ptr, col_idx, values }
+    }
+
+    /// Is the sparse matrix strictly diagonally dominant by rows?
+    pub fn is_diag_dominant(&self) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                if j == i {
+                    diag = v.abs();
+                } else {
+                    off += v.abs();
+                }
+            }
+            if diag <= off {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Density `nnz / (rows*cols)`.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [ 4 0 1 ]
+        // [ 0 3 0 ]
+        // [ 2 0 5 ]
+        CsrMatrix::from_raw(
+            3,
+            3,
+            vec![0, 2, 3, 5],
+            vec![0, 2, 1, 0, 2],
+            vec![4.0, 1.0, 3.0, 2.0, 5.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_raw_validates_invariants() {
+        assert!(CsrMatrix::from_raw(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // row_ptr len
+        assert!(CsrMatrix::from_raw(1, 2, vec![0, 2], vec![1, 0], vec![1.0, 2.0]).is_err()); // unsorted
+        assert!(CsrMatrix::from_raw(1, 2, vec![0, 2], vec![0, 0], vec![1.0, 2.0]).is_err()); // dup col
+        assert!(CsrMatrix::from_raw(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err()); // col oob
+        assert!(CsrMatrix::from_raw(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err()); // not monotone
+    }
+
+    #[test]
+    fn get_and_row_access() {
+        let m = sample();
+        assert_eq!(m.get(0, 0), 4.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert_eq!(m.get(2, 2), 5.0);
+        assert_eq!(m.row_nnz(1), 1);
+        let (cols, vals) = m.row(2);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[2.0, 5.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sample();
+        let x = vec![1.0, 2.0, 3.0];
+        let y = m.matvec(&x).unwrap();
+        let yd = m.to_dense().matvec(&x).unwrap();
+        assert_eq!(y, yd);
+        assert!(m.matvec(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let m = sample();
+        let back = CsrMatrix::from_dense(&m.to_dense(), 0.0);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = sample();
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(2, 0), 1.0);
+    }
+
+    #[test]
+    fn drop_zeros_removes_stored_zeros() {
+        let m = CsrMatrix::from_raw(2, 2, vec![0, 2, 3], vec![0, 1, 1], vec![1.0, 0.0, 2.0])
+            .unwrap();
+        let d = m.drop_zeros();
+        assert_eq!(d.nnz(), 2);
+        assert_eq!(d.get(0, 1), 0.0);
+        assert_eq!(d.get(1, 1), 2.0);
+    }
+
+    #[test]
+    fn diag_dominance() {
+        let m = sample(); // |4|>1, |3|>0, |5|>2 -> dominant
+        assert!(m.is_diag_dominant());
+        let not = CsrMatrix::from_raw(2, 2, vec![0, 2, 3], vec![0, 1, 1], vec![1.0, 2.0, 1.0])
+            .unwrap();
+        assert!(!not.is_diag_dominant());
+    }
+
+    #[test]
+    fn density_is_fractional() {
+        assert!((sample().density() - 5.0 / 9.0).abs() < 1e-12);
+        assert_eq!(CsrMatrix::zeros(0, 0).density(), 0.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! MatrixMarket (.mtx) I/O for sparse matrices and simple vector files.
+//!
+//! Supports the `matrix coordinate real general|symmetric` header, which
+//! covers the CFD matrices the paper's workloads represent. Used by the
+//! examples to persist/reload systems and by the test suite for
+//! round-trip checks.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::matrix::{CooMatrix, CsrMatrix};
+use crate::util::error::{EbvError, Result};
+
+/// Read a MatrixMarket coordinate file into CSR.
+pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| EbvError::io(format!("open {}", path.display()), e))?;
+    parse_matrix_market(BufReader::new(f))
+}
+
+/// Parse MatrixMarket text from any reader.
+pub fn parse_matrix_market<R: BufRead>(reader: R) -> Result<CsrMatrix> {
+    let mut lines = reader.lines();
+
+    let header = lines
+        .next()
+        .ok_or_else(|| EbvError::Json("empty MatrixMarket file".into()))
+        .and_then(|l| l.map_err(|e| EbvError::io("read header", e)))?;
+    let head_lc = header.to_ascii_lowercase();
+    if !head_lc.starts_with("%%matrixmarket") {
+        return Err(EbvError::Config("missing %%MatrixMarket header".into()));
+    }
+    let symmetric = if head_lc.contains("general") {
+        false
+    } else if head_lc.contains("symmetric") {
+        true
+    } else {
+        return Err(EbvError::Config(format!("unsupported MatrixMarket variant: {header}")));
+    };
+    if !head_lc.contains("coordinate") || !head_lc.contains("real") {
+        return Err(EbvError::Config(format!("only `coordinate real` supported: {header}")));
+    }
+
+    // Skip comments, read the size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line.map_err(|e| EbvError::io("read size line", e))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| EbvError::Config("missing size line".into()))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().map_err(|_| EbvError::Config(format!("bad size line: {size_line}"))))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        return Err(EbvError::Config(format!("size line needs 3 fields: {size_line}")));
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = CooMatrix::new(rows, cols);
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line.map_err(|e| EbvError::io("read entry", e))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (i, j, v) = match (it.next(), it.next(), it.next()) {
+            (Some(i), Some(j), Some(v)) => (i, j, v),
+            _ => return Err(EbvError::Config(format!("bad entry line: {t}"))),
+        };
+        let i: usize = i.parse().map_err(|_| EbvError::Config(format!("bad row index: {t}")))?;
+        let j: usize = j.parse().map_err(|_| EbvError::Config(format!("bad col index: {t}")))?;
+        let v: f64 = v.parse().map_err(|_| EbvError::Config(format!("bad value: {t}")))?;
+        if i == 0 || j == 0 {
+            return Err(EbvError::Config("MatrixMarket indices are 1-based".into()));
+        }
+        coo.push(i - 1, j - 1, v)?;
+        if symmetric && i != j {
+            coo.push(j - 1, i - 1, v)?;
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        return Err(EbvError::Config(format!("expected {nnz} entries, found {seen}")));
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write CSR to a MatrixMarket `general` coordinate file.
+pub fn write_matrix_market(m: &CsrMatrix, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| EbvError::io(format!("create {}", path.display()), e))?;
+    let mut buf = String::new();
+    buf.push_str("%%MatrixMarket matrix coordinate real general\n");
+    buf.push_str("% written by ebv-solve\n");
+    buf.push_str(&format!("{} {} {}\n", m.rows(), m.cols(), m.nnz()));
+    for r in 0..m.rows() {
+        let (cols, vals) = m.row(r);
+        for (&j, &v) in cols.iter().zip(vals.iter()) {
+            buf.push_str(&format!("{} {} {:.17e}\n", r + 1, j + 1, v));
+        }
+    }
+    f.write_all(buf.as_bytes())
+        .map_err(|e| EbvError::io(format!("write {}", path.display()), e))
+}
+
+/// Write a vector as one value per line (examples' RHS/solution dumps).
+pub fn write_vector(x: &[f64], path: &Path) -> Result<()> {
+    let body: String = x.iter().map(|v| format!("{v:.17e}\n")).collect();
+    std::fs::write(path, body).map_err(|e| EbvError::io(format!("write {}", path.display()), e))
+}
+
+/// Read a one-value-per-line vector file.
+pub fn read_vector(path: &Path) -> Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| EbvError::io(format!("read {}", path.display()), e))?;
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(|l| l.parse::<f64>().map_err(|_| EbvError::Config(format!("bad vector entry: {l}"))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_sparse, GenSeed};
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general_matrix() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % comment\n\
+                    2 2 3\n\
+                    1 1 4.0\n\
+                    1 2 -1.0\n\
+                    2 2 3.0\n";
+        let m = parse_matrix_market(Cursor::new(text)).unwrap();
+        assert_eq!(m.get(0, 0), 4.0);
+        assert_eq!(m.get(0, 1), -1.0);
+        assert_eq!(m.get(1, 0), 0.0);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn parse_symmetric_mirrors_entries() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    2 2 2\n\
+                    1 1 4.0\n\
+                    2 1 -1.0\n";
+        let m = parse_matrix_market(Cursor::new(text)).unwrap();
+        assert_eq!(m.get(0, 1), -1.0);
+        assert_eq!(m.get(1, 0), -1.0);
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(parse_matrix_market(Cursor::new("not a header\n")).is_err());
+        let missing = "%%MatrixMarket matrix coordinate real general\n2 2 5\n1 1 1.0\n";
+        assert!(parse_matrix_market(Cursor::new(missing)).is_err());
+        let zero_based = "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n";
+        assert!(parse_matrix_market(Cursor::new(zero_based)).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("ebv_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.mtx");
+        let m = diag_dominant_sparse(20, 4, GenSeed(7));
+        write_matrix_market(&m, &path).unwrap();
+        let back = read_matrix_market(&path).unwrap();
+        assert_eq!(back.to_dense().max_abs_diff(&m.to_dense()), 0.0);
+    }
+
+    #[test]
+    fn vector_round_trip() {
+        let dir = std::env::temp_dir().join("ebv_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v.txt");
+        let x = vec![1.5, -2.25, 1e-17, 3.0];
+        write_vector(&x, &path).unwrap();
+        let back = read_vector(&path).unwrap();
+        assert_eq!(back, x);
+    }
+}

@@ -1,0 +1,21 @@
+//! Matrix storage formats, generators, I/O and norms.
+//!
+//! Dense matrices are row-major `f64`. Sparse matrices use CSR for
+//! compute and COO for assembly, with lossless conversions between all
+//! formats. [`generate`] builds the diagonally-dominant dense/sparse
+//! systems the paper evaluates on (Eq. 2 assumes diagonal dominance,
+//! which makes pivot-free elimination well-defined), plus Poisson-2D
+//! stencil systems for the CFD-flavoured examples.
+
+pub mod banded;
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod generate;
+pub mod io;
+pub mod norms;
+
+pub use banded::BandedMatrix;
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;
+pub use dense::DenseMatrix;

@@ -1,0 +1,92 @@
+//! Vector and matrix norms + residual helpers.
+
+use crate::matrix::{CsrMatrix, DenseMatrix};
+
+/// Euclidean norm ‖x‖₂.
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Max norm ‖x‖∞.
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).fold(0.0, f64::max)
+}
+
+/// 1-norm ‖x‖₁.
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// Element-wise difference norm ‖a − b‖∞ (panics on length mismatch).
+pub fn diff_inf(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "diff_inf: length mismatch");
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// Relative residual ‖Ax − b‖₂ / ‖b‖₂ for a dense system.
+pub fn rel_residual_dense(a: &DenseMatrix, x: &[f64], b: &[f64]) -> f64 {
+    let ax = a.matvec(x).expect("shape");
+    let r: Vec<f64> = ax.iter().zip(b.iter()).map(|(p, q)| p - q).collect();
+    let nb = norm2(b);
+    if nb == 0.0 {
+        norm2(&r)
+    } else {
+        norm2(&r) / nb
+    }
+}
+
+/// Relative residual for a sparse system.
+pub fn rel_residual_csr(a: &CsrMatrix, x: &[f64], b: &[f64]) -> f64 {
+    let ax = a.matvec(x).expect("shape");
+    let r: Vec<f64> = ax.iter().zip(b.iter()).map(|(p, q)| p - q).collect();
+    let nb = norm2(b);
+    if nb == 0.0 {
+        norm2(&r)
+    } else {
+        norm2(&r) / nb
+    }
+}
+
+/// Matrix ∞-norm (max row sum of absolute values).
+pub fn matrix_norm_inf(a: &DenseMatrix) -> f64 {
+    (0..a.rows())
+        .map(|i| a.row(i).iter().map(|v| v.abs()).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+/// Frobenius norm.
+pub fn frobenius(a: &DenseMatrix) -> f64 {
+    a.data().iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::DenseMatrix;
+
+    #[test]
+    fn vector_norms() {
+        let x = [3.0, -4.0];
+        assert_eq!(norm2(&x), 5.0);
+        assert_eq!(norm_inf(&x), 4.0);
+        assert_eq!(norm1(&x), 7.0);
+    }
+
+    #[test]
+    fn diff_inf_basic() {
+        assert_eq!(diff_inf(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+
+    #[test]
+    fn relative_residual_zero_for_exact() {
+        let a = DenseMatrix::from_rows(&[&[2.0, 0.0], &[0.0, 2.0]]).unwrap();
+        assert_eq!(rel_residual_dense(&a, &[1.0, 1.0], &[2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn matrix_norms() {
+        let a = DenseMatrix::from_rows(&[&[1.0, -2.0], &[3.0, 4.0]]).unwrap();
+        assert_eq!(matrix_norm_inf(&a), 7.0);
+        assert!((frobenius(&a) - (30.0f64).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,258 @@
+//! Artifact manifest: what `python -m compile.aot` produced.
+//!
+//! `artifacts/manifest.json` lists every lowered program with its kind,
+//! size, dtype and I/O shapes. The rust side never guesses shapes — it
+//! validates every execution against this manifest.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{EbvError, Result};
+use crate::util::json::Json;
+
+/// What a compiled program computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Packed LU factorization of a dense system.
+    LuFactor,
+    /// Full solve: factorization + both substitutions.
+    LuSolve,
+    /// Batched solve: `k` right-hand sides.
+    LuSolveBatched,
+    /// Sparse matrix–vector product (ELL layout).
+    Spmv,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<ArtifactKind> {
+        match s {
+            "lu_factor" => Ok(ArtifactKind::LuFactor),
+            "lu_solve" => Ok(ArtifactKind::LuSolve),
+            "lu_solve_batched" => Ok(ArtifactKind::LuSolveBatched),
+            "spmv" => Ok(ArtifactKind::Spmv),
+            other => Err(EbvError::Runtime(format!("unknown artifact kind `{other}`"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArtifactKind::LuFactor => "lu_factor",
+            ArtifactKind::LuSolve => "lu_solve",
+            ArtifactKind::LuSolveBatched => "lu_solve_batched",
+            ArtifactKind::Spmv => "spmv",
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// System size `n`.
+    pub n: usize,
+    /// Batch width (1 unless `LuSolveBatched`).
+    pub batch: usize,
+    pub dtype: String,
+    /// Per-input element dtypes (`"f32"` / `"i32"`); defaults to all-f32
+    /// when the manifest omits the field.
+    pub input_dtypes: Vec<String>,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Input shapes, outermost-first.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<ArtifactEntry> {
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+            v.require(key)?
+                .as_arr()
+                .ok_or_else(|| EbvError::Json(format!("{key} must be an array")))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .ok_or_else(|| EbvError::Json(format!("{key} entries must be arrays")))?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize()
+                                .ok_or_else(|| EbvError::Json("bad shape dim".into()))
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let inputs = shapes("inputs")?;
+        let input_dtypes = match v.get("input_dtypes").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|d| {
+                    d.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| EbvError::Json("input_dtypes entries must be strings".into()))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => vec!["f32".to_string(); inputs.len()],
+        };
+        Ok(ArtifactEntry {
+            name: v
+                .require("name")?
+                .as_str()
+                .ok_or_else(|| EbvError::Json("name must be a string".into()))?
+                .to_string(),
+            kind: ArtifactKind::parse(
+                v.require("kind")?
+                    .as_str()
+                    .ok_or_else(|| EbvError::Json("kind must be a string".into()))?,
+            )?,
+            n: v.require("n")?.as_usize().ok_or_else(|| EbvError::Json("bad n".into()))?,
+            batch: v.get("batch").and_then(Json::as_usize).unwrap_or(1),
+            dtype: v
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f32")
+                .to_string(),
+            input_dtypes,
+            file: v
+                .require("file")?
+                .as_str()
+                .ok_or_else(|| EbvError::Json("file must be a string".into()))?
+                .to_string(),
+            inputs,
+            outputs: shapes("outputs")?,
+        })
+    }
+
+    /// Total element count expected for input `i`.
+    pub fn input_elems(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub version: usize,
+    pub entries: Vec<ArtifactEntry>,
+    /// Directory the manifest was loaded from (resolves `file` paths).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| EbvError::io(format!("read {}", path.display()), e))?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let version = v.require("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            return Err(EbvError::Runtime(format!("unsupported manifest version {version}")));
+        }
+        let entries = v
+            .require("entries")?
+            .as_arr()
+            .ok_or_else(|| EbvError::Json("entries must be an array".into()))?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { version, entries, dir: dir.to_path_buf() })
+    }
+
+    /// Find the entry for `kind` at size `n` (batch 1).
+    pub fn find(&self, kind: ArtifactKind, n: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.kind == kind && e.n == n && e.batch == 1)
+    }
+
+    /// Find a batched entry covering `batch` right-hand sides.
+    pub fn find_batched(&self, n: usize, batch: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::LuSolveBatched && e.n == n && e.batch >= batch)
+            .min_by_key(|e| e.batch)
+    }
+
+    /// All sizes available for a kind.
+    pub fn sizes(&self, kind: ArtifactKind) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.entries.iter().filter(|e| e.kind == kind).map(|e| e.n).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "lu_solve_n64", "kind": "lu_solve", "n": 64, "dtype": "f32",
+         "file": "lu_solve_n64.hlo.txt",
+         "inputs": [[64, 64], [64]], "outputs": [[64]]},
+        {"name": "lu_solve_n64_b8", "kind": "lu_solve_batched", "n": 64, "batch": 8,
+         "dtype": "f32", "file": "lu_solve_n64_b8.hlo.txt",
+         "inputs": [[64, 64], [8, 64]], "outputs": [[8, 64]]},
+        {"name": "lu_factor_n128", "kind": "lu_factor", "n": 128, "dtype": "f32",
+         "file": "lu_factor_n128.hlo.txt",
+         "inputs": [[128, 128]], "outputs": [[128, 128]]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds_entries() {
+        let m = Manifest::parse(SAMPLE, Path::new("arts")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.find(ArtifactKind::LuSolve, 64).unwrap();
+        assert_eq!(e.inputs, vec![vec![64, 64], vec![64]]);
+        assert_eq!(e.input_elems(0), 4096);
+        assert!(m.find(ArtifactKind::LuSolve, 32).is_none());
+        assert_eq!(m.sizes(ArtifactKind::LuFactor), vec![128]);
+        assert_eq!(
+            m.path_of(e),
+            Path::new("arts").join("lu_solve_n64.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn batched_lookup_picks_smallest_cover() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let e = m.find_batched(64, 3).unwrap();
+        assert_eq!(e.batch, 8);
+        assert!(m.find_batched(64, 9).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"version": 2, "entries": []}"#, Path::new(".")).is_err());
+        let bad_kind = r#"{"version": 1, "entries": [{"name": "x", "kind": "wat",
+            "n": 4, "file": "f", "inputs": [], "outputs": []}]}"#;
+        assert!(Manifest::parse(bad_kind, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn kind_round_trips() {
+        for k in [
+            ArtifactKind::LuFactor,
+            ArtifactKind::LuSolve,
+            ArtifactKind::LuSolveBatched,
+            ArtifactKind::Spmv,
+        ] {
+            assert_eq!(ArtifactKind::parse(k.as_str()).unwrap(), k);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Dedicated runtime thread: owns the PJRT client and every compiled
+//! executable, serves execution requests over channels.
+//!
+//! PJRT handles are not `Send`; confining them to one thread both
+//! satisfies that constraint and models the single device context the
+//! paper's GPU had. Callers hold a cheap, cloneable [`RuntimeHandle`].
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::runtime::artifacts::{ArtifactKind, Manifest};
+use crate::runtime::pjrt::PjrtRuntime;
+use crate::util::error::{EbvError, Result};
+
+/// A request to the runtime thread.
+enum Request {
+    Execute {
+        kind: ArtifactKind,
+        n: usize,
+        batch: usize,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    /// List available (kind, n) pairs.
+    Capabilities {
+        reply: mpsc::Sender<Vec<(ArtifactKind, usize, usize)>>,
+    },
+    Shutdown,
+}
+
+/// Execution counters, shared with callers.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub failures: u64,
+    pub total_exec_secs: f64,
+    pub compilations: u64,
+}
+
+/// Owner of the runtime thread: shuts it down on drop. Obtain cheap
+/// per-worker clients with [`RuntimeHandle::client`].
+pub struct RuntimeHandle {
+    client: RuntimeClient,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable, `Send` client to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeClient {
+    tx: mpsc::Sender<Request>,
+    stats: Arc<Mutex<RuntimeStats>>,
+}
+
+impl RuntimeHandle {
+    /// Spawn the runtime thread over the manifest in `dir`. Executables
+    /// are compiled lazily on first use and cached.
+    pub fn spawn(dir: PathBuf) -> Result<RuntimeHandle> {
+        let manifest = Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stats = Arc::new(Mutex::new(RuntimeStats::default()));
+        let thread_stats = Arc::clone(&stats);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let join = std::thread::Builder::new()
+            .name("ebv-runtime".into())
+            .spawn(move || runtime_main(manifest, rx, thread_stats, ready_tx))
+            .map_err(|e| EbvError::Runtime(format!("spawn runtime thread: {e}")))?;
+
+        // Wait for the client to come up (or fail fast).
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(RuntimeHandle {
+                client: RuntimeClient { tx, stats },
+                join: Some(join),
+            }),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(EbvError::Runtime("runtime thread died during startup".into())),
+        }
+    }
+
+    /// A cheap cloneable client for worker threads.
+    pub fn client(&self) -> RuntimeClient {
+        self.client.clone()
+    }
+
+    /// Execute the artifact of `kind` at size `n` (batch 1).
+    pub fn execute(
+        &self,
+        kind: ArtifactKind,
+        n: usize,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.client.execute_batched(kind, n, 1, inputs)
+    }
+
+    /// Execute a batched artifact covering `batch` RHS.
+    pub fn execute_batched(
+        &self,
+        kind: ArtifactKind,
+        n: usize,
+        batch: usize,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.client.execute_batched(kind, n, batch, inputs)
+    }
+
+    /// Available `(kind, n, batch)` triples.
+    pub fn capabilities(&self) -> Result<Vec<(ArtifactKind, usize, usize)>> {
+        self.client.capabilities()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.client.stats()
+    }
+}
+
+impl RuntimeClient {
+    /// Execute the artifact of `kind` at size `n` (batch 1).
+    pub fn execute(
+        &self,
+        kind: ArtifactKind,
+        n: usize,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.execute_batched(kind, n, 1, inputs)
+    }
+
+    /// Execute a batched artifact covering `batch` RHS.
+    pub fn execute_batched(
+        &self,
+        kind: ArtifactKind,
+        n: usize,
+        batch: usize,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute { kind, n, batch, inputs, reply })
+            .map_err(|_| EbvError::Runtime("runtime thread is gone".into()))?;
+        rx.recv().map_err(|_| EbvError::Runtime("runtime reply channel closed".into()))?
+    }
+
+    /// Available `(kind, n, batch)` triples.
+    pub fn capabilities(&self) -> Result<Vec<(ArtifactKind, usize, usize)>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Capabilities { reply })
+            .map_err(|_| EbvError::Runtime("runtime thread is gone".into()))?;
+        rx.recv().map_err(|_| EbvError::Runtime("runtime reply channel closed".into()))
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().expect("stats poisoned").clone()
+    }
+}
+
+impl Drop for RuntimeHandle {
+    fn drop(&mut self) {
+        let _ = self.client.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn runtime_main(
+    manifest: Manifest,
+    rx: mpsc::Receiver<Request>,
+    stats: Arc<Mutex<RuntimeStats>>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let runtime = match PjrtRuntime::cpu() {
+        Ok(r) => {
+            let _ = ready.send(Ok(()));
+            r
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    log::info!(target: "runtime", "PJRT client up on `{}`, {} artifacts", runtime.platform(), manifest.entries.len());
+
+    // (kind, n, batch) -> compiled kernel, filled lazily.
+    let mut cache: HashMap<(ArtifactKind, usize, usize), crate::runtime::pjrt::LoadedKernel> =
+        HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Capabilities { reply } => {
+                let caps =
+                    manifest.entries.iter().map(|e| (e.kind, e.n, e.batch)).collect::<Vec<_>>();
+                let _ = reply.send(caps);
+            }
+            Request::Execute { kind, n, batch, inputs, reply } => {
+                let result = execute_one(&runtime, &manifest, &mut cache, kind, n, batch, inputs, &stats);
+                if result.is_err() {
+                    stats.lock().expect("stats").failures += 1;
+                }
+                let _ = reply.send(result);
+            }
+        }
+    }
+    log::info!(target: "runtime", "runtime thread shutting down");
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_one(
+    runtime: &PjrtRuntime,
+    manifest: &Manifest,
+    cache: &mut HashMap<(ArtifactKind, usize, usize), crate::runtime::pjrt::LoadedKernel>,
+    kind: ArtifactKind,
+    n: usize,
+    batch: usize,
+    inputs: Vec<Vec<f32>>,
+    stats: &Arc<Mutex<RuntimeStats>>,
+) -> Result<Vec<Vec<f32>>> {
+    let entry = if batch == 1 {
+        manifest.find(kind, n)
+    } else {
+        manifest.find_batched(n, batch)
+    }
+    .ok_or_else(|| {
+        EbvError::Runtime(format!("no artifact for kind={} n={n} batch={batch}", kind.as_str()))
+    })?
+    .clone();
+
+    let key = (entry.kind, entry.n, entry.batch);
+    if !cache.contains_key(&key) {
+        let t0 = Instant::now();
+        let kernel = runtime.load(&entry, &manifest.path_of(&entry))?;
+        log::info!(
+            target: "runtime",
+            "compiled `{}` in {:.1} ms",
+            entry.name,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        stats.lock().expect("stats").compilations += 1;
+        cache.insert(key, kernel);
+    }
+    let kernel = cache.get(&key).expect("just inserted");
+
+    let t0 = Instant::now();
+    let out = kernel.run_f32(&inputs)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let mut s = stats.lock().expect("stats");
+    s.executions += 1;
+    s.total_exec_secs += dt;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_fails_cleanly_without_manifest() {
+        let err = RuntimeHandle::spawn(PathBuf::from("/nonexistent-dir"));
+        assert!(err.is_err());
+    }
+}

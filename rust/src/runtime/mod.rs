@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from the rust hot path.
+//!
+//! Layering (see DESIGN.md): python lowers the L2 model once at build
+//! time to HLO *text* (jax ≥ 0.5 emits serialized protos with 64-bit ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! This module compiles that text on a `PjRtClient` and exposes typed
+//! f32 execution.
+//!
+//! PJRT handles are not `Send`, so [`executor::RuntimeHandle`] confines
+//! the client and all executables to one dedicated thread and serves
+//! execution requests over channels — the same discipline a single GPU
+//! context would impose.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactEntry, ArtifactKind, Manifest};
+pub use executor::{RuntimeClient, RuntimeHandle, RuntimeStats};
+pub use pjrt::{LoadedKernel, PjrtRuntime};

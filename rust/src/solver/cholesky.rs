@@ -1,0 +1,168 @@
+//! Cholesky factorization for SPD systems (A = L Lᵀ).
+//!
+//! The Poisson pressure systems the CFD examples produce are symmetric
+//! positive definite; Cholesky halves the flops and storage relative to
+//! LU. Included as the "exploit structure" comparator the evaluation
+//! section contrasts against the general EBV path, and as a correctness
+//! cross-check (LLᵀ must agree with LU on SPD inputs).
+
+use crate::matrix::DenseMatrix;
+use crate::util::error::{EbvError, Result};
+
+/// Lower-triangular Cholesky factor.
+#[derive(Debug, Clone)]
+pub struct CholeskyFactors {
+    l: DenseMatrix,
+}
+
+impl CholeskyFactors {
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    pub fn l(&self) -> &DenseMatrix {
+        &self.l
+    }
+
+    /// Solve `A x = b` via `L y = b`, `Lᵀ x = y`.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.n();
+        if b.len() != n {
+            return Err(EbvError::Shape("rhs length mismatch".into()));
+        }
+        // Forward with explicit diagonal.
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut acc = y[i];
+            for (j, &lij) in row[..i].iter().enumerate() {
+                acc -= lij * y[j];
+            }
+            y[i] = acc / row[i];
+        }
+        // Backward with Lᵀ (column access on L).
+        let mut x = y;
+        for i in (0..n).rev() {
+            let mut acc = x[i];
+            for j in (i + 1)..n {
+                acc -= self.l.get(j, i) * x[j];
+            }
+            x[i] = acc / self.l.get(i, i);
+        }
+        Ok(x)
+    }
+
+    /// Reconstruct `L Lᵀ` (test helper).
+    pub fn reconstruct(&self) -> DenseMatrix {
+        self.l.matmul(&self.l.transpose()).expect("square")
+    }
+}
+
+/// Factor an SPD matrix. Fails with `Numeric` if a non-positive pivot
+/// shows the input is not positive definite (or not symmetric enough).
+pub fn cholesky_factor(a: &DenseMatrix) -> Result<CholeskyFactors> {
+    if !a.is_square() {
+        return Err(EbvError::Shape("Cholesky needs a square matrix".into()));
+    }
+    let n = a.rows();
+    // Symmetry gate (cheap sample for large n, exact for small).
+    let check = |i: usize, j: usize| (a.get(i, j) - a.get(j, i)).abs() > 1e-9;
+    let sym_violation = if n <= 64 {
+        (0..n).any(|i| (0..i).any(|j| check(i, j)))
+    } else {
+        (0..64).any(|k| check(k * (n - 1) / 63, (k * 37) % n))
+    };
+    if sym_violation {
+        return Err(EbvError::Numeric("matrix is not symmetric".into()));
+    }
+
+    let mut l = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(EbvError::Numeric(format!(
+                        "non-positive pivot {sum:.3e} at step {i}: matrix is not SPD"
+                    )));
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Ok(CholeskyFactors { l })
+}
+
+/// Factor + solve.
+pub fn cholesky_solve(a: &DenseMatrix, b: &[f64]) -> Result<Vec<f64>> {
+    cholesky_factor(a)?.solve(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{manufactured_solution, poisson_2d, GenSeed};
+    use crate::matrix::norms::diff_inf;
+    use crate::solver::{LuSolver, SeqLu};
+
+    fn spd(n: usize, seed: u64) -> DenseMatrix {
+        // B Bᵀ + n I is SPD.
+        let b = crate::matrix::generate::diag_dominant_dense(n, GenSeed(seed));
+        let mut a = b.matmul(&b.transpose()).unwrap();
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f64);
+        }
+        a
+    }
+
+    #[test]
+    fn reconstructs_spd_matrix() {
+        let a = spd(24, 1);
+        let f = cholesky_factor(&a).unwrap();
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-6 * a.get(0, 0).abs().max(1.0));
+        // L is lower triangular with positive diagonal.
+        for i in 0..24 {
+            assert!(f.l().get(i, i) > 0.0);
+            for j in (i + 1)..24 {
+                assert_eq!(f.l().get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_lu() {
+        let a = spd(40, 2);
+        let b: Vec<f64> = (0..40).map(|i| (i as f64 * 0.11).sin()).collect();
+        let xc = cholesky_solve(&a, &b).unwrap();
+        let xl = SeqLu::new().solve(&a, &b).unwrap();
+        assert!(diff_inf(&xc, &xl) < 1e-7, "{}", diff_inf(&xc, &xl));
+    }
+
+    #[test]
+    fn poisson_system_is_spd() {
+        let a = poisson_2d(8).to_dense();
+        let f = cholesky_factor(&a).unwrap();
+        let (x_true, b) = manufactured_solution(&poisson_2d(8), GenSeed(3));
+        let x = f.solve(&b).unwrap();
+        assert!(diff_inf(&x, &x_true) < 1e-9);
+    }
+
+    #[test]
+    fn rejects_indefinite_and_asymmetric() {
+        let indefinite =
+            DenseMatrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]).unwrap(); // eigenvalues 3, -1
+        assert!(cholesky_factor(&indefinite).is_err());
+        let asym = DenseMatrix::from_rows(&[&[2.0, 1.0], &[0.0, 2.0]]).unwrap();
+        assert!(matches!(cholesky_factor(&asym), Err(EbvError::Numeric(_))));
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(cholesky_factor(&DenseMatrix::zeros(2, 3)).is_err());
+    }
+}

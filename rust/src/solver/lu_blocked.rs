@@ -1,0 +1,224 @@
+//! Blocked right-looking LU — the "tuned library" comparator.
+//!
+//! Plays the role cuBLAS plays in the paper's closing comparison (the
+//! paper notes library solvers top out around 15× speedup). Cache
+//! blocking regroups the rank-1 updates into panel factorizations plus a
+//! GEMM trailing update; on real TPU hardware this is also the form that
+//! maps onto the MXU (see DESIGN.md §Hardware-Adaptation), which is why
+//! the L1 Pallas kernel set includes a blocked variant.
+
+use crate::matrix::DenseMatrix;
+use crate::solver::pivot::Permutation;
+use crate::solver::{DenseLuFactors, LuSolver};
+use crate::util::error::{EbvError, Result};
+
+/// Blocked (panel) LU without pivoting.
+#[derive(Debug, Clone)]
+pub struct BlockedLu {
+    block: usize,
+    pivot_tol: f64,
+}
+
+impl BlockedLu {
+    pub fn new() -> Self {
+        // nb=32 measured best-or-tied across n=512…2048 on this host
+        // (EXPERIMENTS.md §Perf, L3-D1 sweep).
+        BlockedLu { block: 32, pivot_tol: 1e-12 }
+    }
+
+    pub fn with_block(block: usize) -> Self {
+        assert!(block > 0, "block size must be positive");
+        BlockedLu { block, pivot_tol: 1e-12 }
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+}
+
+impl Default for BlockedLu {
+    fn default() -> Self {
+        BlockedLu::new()
+    }
+}
+
+impl LuSolver for BlockedLu {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn factor(&self, a: &DenseMatrix) -> Result<DenseLuFactors> {
+        if !a.is_square() {
+            return Err(EbvError::Shape("LU needs a square matrix".into()));
+        }
+        let n = a.rows();
+        let nb = self.block;
+        let mut lu = a.clone();
+
+        let mut k = 0usize;
+        while k < n {
+            let kb = nb.min(n - k);
+
+            // 1. Factor the diagonal panel A[k.., k..k+kb] (unblocked,
+            //    updates the panel's sub-diagonal rows too).
+            for r in k..k + kb {
+                let piv = lu.get(r, r);
+                if piv.abs() < self.pivot_tol {
+                    return Err(EbvError::SingularPivot {
+                        step: r,
+                        value: piv,
+                        tol: self.pivot_tol,
+                    });
+                }
+                let inv = 1.0 / piv;
+                for i in (r + 1)..n {
+                    let f = lu.get(i, r) * inv;
+                    lu.set(i, r, f);
+                    if f == 0.0 {
+                        continue;
+                    }
+                    // Within the panel factorization only columns up to
+                    // the panel edge are updated; the trailing block is
+                    // handled by the GEMM below.
+                    let hi = (k + kb).min(n);
+                    for j in (r + 1)..hi {
+                        let v = lu.get(i, j) - f * lu.get(r, j);
+                        lu.set(i, j, v);
+                    }
+                }
+            }
+
+            let rest = k + kb;
+            if rest >= n {
+                break;
+            }
+
+            // 2. U12 := L11⁻¹ A12 (unit lower triangular solve on block
+            //    rows k..k+kb, columns rest..n).
+            for r in k..k + kb {
+                for p in k..r {
+                    let l_rp = lu.get(r, p);
+                    if l_rp == 0.0 {
+                        continue;
+                    }
+                    let cols = n;
+                    let data = lu.data_mut();
+                    let (top, bottom) = data.split_at_mut(r * cols);
+                    let p_row = &top[p * cols + rest..p * cols + cols];
+                    let r_row = &mut bottom[rest..cols];
+                    for (t, &s) in r_row.iter_mut().zip(p_row.iter()) {
+                        *t -= l_rp * s;
+                    }
+                }
+            }
+
+            // 3. A22 -= L21 · U12 (GEMM trailing update, ikj order).
+            //
+            // PERF NOTE (EXPERIMENTS.md §Perf, L3-D1): processing four
+            // panel columns per sweep of `i_row` quarters the write
+            // traffic on the trailing row — the loop is memory-bound on
+            // one core, so this is worth ~1.5× over the single-p saxpy.
+            for i in rest..n {
+                let cols = n;
+                let data = lu.data_mut();
+                let (top, bottom) = data.split_at_mut(i * cols);
+                // Row i = bottom[..cols]; its multipliers (L21 slice) sit
+                // in columns [k, k+kb), its trailing update target in
+                // columns [rest, n).
+                let (l_part, i_row) = bottom[..cols].split_at_mut(rest);
+                let i_l = &l_part[k..k + kb];
+                let mut p = 0usize;
+                while p + 4 <= kb {
+                    let (l0, l1, l2, l3) = (i_l[p], i_l[p + 1], i_l[p + 2], i_l[p + 3]);
+                    if l0 == 0.0 && l1 == 0.0 && l2 == 0.0 && l3 == 0.0 {
+                        p += 4;
+                        continue;
+                    }
+                    let base = |q: usize| (k + p + q) * cols + rest;
+                    let p0 = &top[base(0)..base(0) + cols - rest];
+                    let p1 = &top[base(1)..base(1) + cols - rest];
+                    let p2 = &top[base(2)..base(2) + cols - rest];
+                    let p3 = &top[base(3)..base(3) + cols - rest];
+                    for (j, t) in i_row.iter_mut().enumerate() {
+                        *t -= l0 * p0[j] + l1 * p1[j] + l2 * p2[j] + l3 * p3[j];
+                    }
+                    p += 4;
+                }
+                while p < kb {
+                    let l_ip = i_l[p];
+                    if l_ip != 0.0 {
+                        let base = (k + p) * cols + rest;
+                        let p_row = &top[base..base + cols - rest];
+                        for (t, &s) in i_row.iter_mut().zip(p_row.iter()) {
+                            *t -= l_ip * s;
+                        }
+                    }
+                    p += 1;
+                }
+            }
+
+            k += kb;
+        }
+        Ok(DenseLuFactors::new(lu, Permutation::identity(n)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
+    use crate::matrix::norms::rel_residual_dense;
+    use crate::solver::SeqLu;
+
+    #[test]
+    fn matches_unblocked_factors() {
+        for n in [5usize, 16, 63, 64, 65, 130] {
+            let a = diag_dominant_dense(n, GenSeed(31 + n as u64));
+            let blocked = BlockedLu::with_block(16).factor(&a).unwrap();
+            let seq = SeqLu::new().factor(&a).unwrap();
+            assert!(
+                blocked.packed().max_abs_diff(seq.packed()) < 1e-9,
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_larger_than_matrix_degenerates_gracefully() {
+        let a = diag_dominant_dense(10, GenSeed(33));
+        let f = BlockedLu::with_block(256).factor(&a).unwrap();
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn block_of_one_is_plain_elimination() {
+        let a = diag_dominant_dense(12, GenSeed(34));
+        let f = BlockedLu::with_block(1).factor(&a).unwrap();
+        let seq = SeqLu::new().factor(&a).unwrap();
+        assert!(f.packed().max_abs_diff(seq.packed()) < 1e-10);
+    }
+
+    #[test]
+    fn solve_residual_is_small() {
+        let n = 150;
+        let a = diag_dominant_dense(n, GenSeed(35));
+        let b = rhs(n, GenSeed(36));
+        let x = BlockedLu::new().solve(&a, &b).unwrap();
+        assert!(rel_residual_dense(&a, &x, &b) < 1e-12);
+    }
+
+    #[test]
+    fn singular_matrix_detected() {
+        let a = DenseMatrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]).unwrap();
+        assert!(matches!(
+            BlockedLu::new().factor(&a),
+            Err(EbvError::SingularPivot { .. })
+        ));
+    }
+
+    #[test]
+    #[should_panic(expected = "block size")]
+    fn zero_block_panics() {
+        BlockedLu::with_block(0);
+    }
+}

@@ -1,0 +1,266 @@
+//! The paper's parallel solver: **Equal bi-Vectorized LU**.
+//!
+//! Right-looking elimination where the updated rows are statically owned
+//! by worker lanes according to an equalized (fold-paired) distribution
+//! — the GPU thread mapping of the paper realized on CPU lanes (see
+//! DESIGN.md §Substitutions: GTX280 threads → `std::thread` lanes; the
+//! tables' GPU-scale numbers come from `gpusim` fed with this exact
+//! schedule).
+//!
+//! Synchronization is one barrier per elimination step: after the barrier
+//! at step `r`, every lane may safely read pivot row `r` (its final
+//! update happened at step `r-1`, sequenced before the barrier). Lanes
+//! write only rows they own, so writes are disjoint by construction of
+//! [`LaneSchedule`].
+
+use std::sync::Barrier;
+
+use crate::ebv::schedule::{LaneSchedule, RowDist};
+use crate::matrix::DenseMatrix;
+use crate::solver::pivot::Permutation;
+use crate::solver::{DenseLuFactors, LuSolver};
+use crate::util::error::{EbvError, Result};
+
+/// Parallel EBV LU factorization.
+#[derive(Debug, Clone)]
+pub struct EbvLu {
+    lanes: usize,
+    dist: RowDist,
+    pivot_tol: f64,
+    /// Below this size the parallel machinery costs more than it saves;
+    /// fall through to the sequential kernel.
+    seq_threshold: usize,
+}
+
+impl EbvLu {
+    /// EBV solver with the paper's fold distribution on `lanes` lanes.
+    pub fn with_lanes(lanes: usize) -> Self {
+        EbvLu { lanes: lanes.max(1), dist: RowDist::EbvFold, pivot_tol: 1e-12, seq_threshold: 128 }
+    }
+
+    /// Use all available parallelism.
+    pub fn auto() -> Self {
+        let lanes = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        EbvLu::with_lanes(lanes)
+    }
+
+    /// Override the row-distribution strategy (ablation hook).
+    pub fn with_dist(mut self, dist: RowDist) -> Self {
+        self.dist = dist;
+        self
+    }
+
+    /// Override the sequential fall-through threshold (bench hook).
+    pub fn seq_threshold(mut self, t: usize) -> Self {
+        self.seq_threshold = t;
+        self
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn dist(&self) -> RowDist {
+        self.dist
+    }
+}
+
+impl LuSolver for EbvLu {
+    fn name(&self) -> &'static str {
+        "ebv"
+    }
+
+    fn factor(&self, a: &DenseMatrix) -> Result<DenseLuFactors> {
+        if !a.is_square() {
+            return Err(EbvError::Shape("LU needs a square matrix".into()));
+        }
+        let n = a.rows();
+        if self.lanes == 1 || n <= self.seq_threshold {
+            // The parallel path is bitwise-identical in arithmetic order
+            // per row, so falling through is exact, not approximate.
+            return crate::solver::SeqLu::new().pivot_tol(self.pivot_tol).factor(a);
+        }
+        let mut lu = a.clone();
+        let schedule = LaneSchedule::build(n, self.lanes, self.dist);
+        parallel_eliminate(&mut lu, &schedule, self.pivot_tol)?;
+        Ok(DenseLuFactors::new(lu, Permutation::identity(n)))
+    }
+}
+
+/// Shared mutable matrix for the scoped lanes. Writes are restricted to
+/// owned rows (disjoint across lanes); reads of the pivot row are
+/// sequenced by the per-step barrier.
+struct SharedMatrix {
+    ptr: *mut f64,
+    cols: usize,
+}
+unsafe impl Send for SharedMatrix {}
+unsafe impl Sync for SharedMatrix {}
+
+impl SharedMatrix {
+    /// Immutable view of row `r`. Caller must guarantee no lane is
+    /// concurrently writing row `r` (holds for the pivot row after the
+    /// step barrier).
+    #[inline]
+    unsafe fn row(&self, r: usize) -> &[f64] {
+        std::slice::from_raw_parts(self.ptr.add(r * self.cols), self.cols)
+    }
+
+    /// Mutable view of row `i`. Caller must own row `i`.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row_mut(&self, i: usize) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.cols), self.cols)
+    }
+}
+
+fn parallel_eliminate(
+    lu: &mut DenseMatrix,
+    schedule: &LaneSchedule,
+    pivot_tol: f64,
+) -> Result<()> {
+    let n = lu.rows();
+    let lanes = schedule.lanes();
+    let barrier = Barrier::new(lanes);
+    let shared = SharedMatrix { ptr: lu.data_mut().as_mut_ptr(), cols: n };
+    // First singular pivot seen by any lane (steps are synchronized, so
+    // every lane sees the same pivot value at the same step).
+    let mut first_bad: Vec<Option<(usize, f64)>> = vec![None; lanes];
+
+    std::thread::scope(|s| {
+        for (lane, bad_slot) in first_bad.iter_mut().enumerate() {
+            let barrier = &barrier;
+            let shared = &shared;
+            s.spawn(move || {
+                for r in 0..n - 1 {
+                    barrier.wait();
+                    // SAFETY: after the barrier, row r's final update
+                    // (performed at step r-1 by its owner) has completed;
+                    // no lane writes row r during step r because active
+                    // rows are strictly below the pivot.
+                    let pivot_row = unsafe { shared.row(r) };
+                    let piv = pivot_row[r];
+                    if piv.abs() < pivot_tol {
+                        *bad_slot = Some((r, piv));
+                        return;
+                    }
+                    let inv = 1.0 / piv;
+                    for &i in schedule.active_rows_of(lane, r) {
+                        // SAFETY: lane owns row i exclusively.
+                        let row_i = unsafe { shared.row_mut(i) };
+                        let f = row_i[r] * inv;
+                        row_i[r] = f;
+                        if f == 0.0 {
+                            continue;
+                        }
+                        let (head, tail) = row_i.split_at_mut(r + 1);
+                        let _ = head;
+                        for (t, &p) in tail.iter_mut().zip(pivot_row[r + 1..].iter()) {
+                            *t -= f * p;
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    if let Some((step, value)) = first_bad.into_iter().flatten().next() {
+        return Err(EbvError::SingularPivot { step, value, tol: pivot_tol });
+    }
+    // Check the last pivot too (never used as a divisor during
+    // elimination but required for the solve).
+    let last = lu.get(n - 1, n - 1);
+    if last.abs() < pivot_tol {
+        return Err(EbvError::SingularPivot { step: n - 1, value: last, tol: pivot_tol });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
+    use crate::matrix::norms::rel_residual_dense;
+    use crate::solver::SeqLu;
+
+    /// Force the parallel path regardless of size.
+    fn par(lanes: usize, dist: RowDist) -> EbvLu {
+        EbvLu::with_lanes(lanes).with_dist(dist).seq_threshold(0)
+    }
+
+    #[test]
+    fn matches_sequential_exactly_for_all_dists() {
+        // The parallel elimination performs the same per-row arithmetic in
+        // the same order, so the factors are bit-identical to SeqLu.
+        let n = 96;
+        let a = diag_dominant_dense(n, GenSeed(21));
+        let reference = SeqLu::new().factor(&a).unwrap();
+        for dist in RowDist::ALL {
+            for lanes in [2usize, 3, 4] {
+                let f = par(lanes, dist).factor(&a).unwrap();
+                assert_eq!(
+                    f.packed().max_abs_diff(reference.packed()),
+                    0.0,
+                    "{dist:?} lanes={lanes}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn solves_with_small_residual() {
+        let n = 200;
+        let a = diag_dominant_dense(n, GenSeed(22));
+        let b = rhs(n, GenSeed(23));
+        let x = par(4, RowDist::EbvFold).solve(&a, &b).unwrap();
+        assert!(rel_residual_dense(&a, &x, &b) < 1e-12);
+    }
+
+    #[test]
+    fn sequential_fallthrough_for_small_systems() {
+        let a = diag_dominant_dense(16, GenSeed(24));
+        // threshold 128 (default) > 16 -> sequential path, still correct.
+        let f = EbvLu::with_lanes(8).factor(&a).unwrap();
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn single_lane_degenerates_to_sequential() {
+        let a = diag_dominant_dense(64, GenSeed(25));
+        let f1 = EbvLu::with_lanes(1).seq_threshold(0).factor(&a).unwrap();
+        let f2 = SeqLu::new().factor(&a).unwrap();
+        assert_eq!(f1.packed().max_abs_diff(f2.packed()), 0.0);
+    }
+
+    #[test]
+    fn detects_singular_pivot_in_parallel_path() {
+        let mut a = diag_dominant_dense(64, GenSeed(26));
+        // Zero out a middle pivot's whole row/column region to force a
+        // singular pivot mid-elimination.
+        for j in 0..64 {
+            a.set(30, j, 0.0);
+        }
+        let err = par(4, RowDist::EbvFold).factor(&a);
+        assert!(matches!(err, Err(EbvError::SingularPivot { .. })), "{err:?}");
+    }
+
+    #[test]
+    fn detects_singular_last_pivot() {
+        // 2x2 with dependent rows hits the last-pivot check.
+        let a = DenseMatrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]).unwrap();
+        let err = par(2, RowDist::EbvFold).factor(&a);
+        assert!(matches!(err, Err(EbvError::SingularPivot { step: 1, .. })), "{err:?}");
+    }
+
+    #[test]
+    fn more_lanes_than_rows_still_correct() {
+        let a = diag_dominant_dense(8, GenSeed(27));
+        let f = par(16, RowDist::EbvFold).factor(&a).unwrap();
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(par(2, RowDist::EbvFold).factor(&DenseMatrix::zeros(2, 3)).is_err());
+    }
+}

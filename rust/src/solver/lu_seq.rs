@@ -1,0 +1,186 @@
+//! Sequential LU factorization — the paper's "CPU" baseline.
+//!
+//! Right-looking (Doolittle) elimination, in place, optionally with
+//! partial pivoting. The non-pivoting path matches the paper's setting
+//! (diagonally dominant systems, Eq. 2) and is the reference every other
+//! solver is validated against.
+
+use crate::matrix::DenseMatrix;
+use crate::solver::pivot::{argmax_pivot, Permutation};
+use crate::solver::{DenseLuFactors, LuSolver};
+use crate::util::error::{EbvError, Result};
+
+/// Sequential Doolittle LU.
+#[derive(Debug, Clone)]
+pub struct SeqLu {
+    pivoting: bool,
+    /// Pivot magnitude below which the matrix is declared singular.
+    pivot_tol: f64,
+}
+
+impl SeqLu {
+    /// Non-pivoting variant (requires a well-conditioned, e.g.
+    /// diagonally dominant, matrix — the paper's assumption).
+    pub fn new() -> Self {
+        SeqLu { pivoting: false, pivot_tol: 1e-12 }
+    }
+
+    /// Partial-pivoting variant for general matrices.
+    pub fn with_pivoting() -> Self {
+        SeqLu { pivoting: true, pivot_tol: 1e-12 }
+    }
+
+    pub fn pivot_tol(mut self, tol: f64) -> Self {
+        self.pivot_tol = tol;
+        self
+    }
+}
+
+impl Default for SeqLu {
+    fn default() -> Self {
+        SeqLu::new()
+    }
+}
+
+impl LuSolver for SeqLu {
+    fn name(&self) -> &'static str {
+        if self.pivoting {
+            "seq-pivot"
+        } else {
+            "seq"
+        }
+    }
+
+    fn factor(&self, a: &DenseMatrix) -> Result<DenseLuFactors> {
+        if !a.is_square() {
+            return Err(EbvError::Shape("LU needs a square matrix".into()));
+        }
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut perm = Permutation::identity(n);
+
+        for r in 0..n {
+            if self.pivoting {
+                let p = argmax_pivot(&lu, r, r);
+                if p != r {
+                    // Swap whole rows (including already-computed L part —
+                    // standard LAPACK-style row interchange).
+                    let (lo, hi) = (r.min(p), r.max(p));
+                    let data = lu.data_mut();
+                    let cols = n;
+                    let (a_half, b_half) = data.split_at_mut(hi * cols);
+                    a_half[lo * cols..(lo + 1) * cols]
+                        .swap_with_slice(&mut b_half[..cols]);
+                    perm.swap(r, p);
+                }
+            }
+            let piv = lu.get(r, r);
+            if piv.abs() < self.pivot_tol {
+                return Err(EbvError::SingularPivot { step: r, value: piv, tol: self.pivot_tol });
+            }
+            if r + 1 == n {
+                break;
+            }
+            // Scale the L column (the paper's Eq. 6-a) and apply the
+            // rank-1 trailing update (Eq. 6-c).
+            let inv = 1.0 / piv;
+            for i in (r + 1)..n {
+                let f = lu.get(i, r) * inv;
+                lu.set(i, r, f);
+                if f == 0.0 {
+                    continue;
+                }
+                // row_i[r+1..] -= f * row_r[r+1..], via split_at_mut to
+                // borrow the pivot row and target row simultaneously.
+                let cols = n;
+                let data = lu.data_mut();
+                let (top, bottom) = data.split_at_mut(i * cols);
+                let pivot_row = &top[r * cols + r + 1..r * cols + cols];
+                let target = &mut bottom[r + 1..cols];
+                for (t, &p) in target.iter_mut().zip(pivot_row.iter()) {
+                    *t -= f * p;
+                }
+            }
+        }
+        Ok(DenseLuFactors::new(lu, perm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
+    use crate::matrix::norms::rel_residual_dense;
+
+    #[test]
+    fn hand_case_2x2() {
+        // A = [[4, 3], [6, 3]] => L21 = 1.5, U = [[4, 3], [0, -1.5]]
+        let a = DenseMatrix::from_rows(&[&[4.0, 3.0], &[6.0, 3.0]]).unwrap();
+        let f = SeqLu::new().factor(&a).unwrap();
+        assert!((f.packed().get(1, 0) - 1.5).abs() < 1e-15);
+        assert!((f.packed().get(1, 1) + 1.5).abs() < 1e-15);
+        let x = f.solve(&[7.0, 9.0]).unwrap();
+        assert!(a.residual(&x, &[7.0, 9.0]) < 1e-12);
+    }
+
+    #[test]
+    fn factor_reconstructs_for_random_dominant_systems() {
+        for n in [1usize, 2, 3, 10, 33, 64] {
+            let a = diag_dominant_dense(n, GenSeed(n as u64));
+            let f = SeqLu::new().factor(&a).unwrap();
+            assert!(f.reconstruct().max_abs_diff(&a) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_has_small_residual() {
+        let n = 100;
+        let a = diag_dominant_dense(n, GenSeed(42));
+        let b = rhs(n, GenSeed(43));
+        let x = SeqLu::new().solve(&a, &b).unwrap();
+        assert!(rel_residual_dense(&a, &x, &b) < 1e-12);
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let a = DenseMatrix::zeros(2, 3);
+        assert!(SeqLu::new().factor(&a).is_err());
+    }
+
+    #[test]
+    fn detects_singularity_without_pivoting() {
+        let a = DenseMatrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]).unwrap();
+        assert!(matches!(
+            SeqLu::new().factor(&a),
+            Err(EbvError::SingularPivot { step: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_diagonal() {
+        let a = DenseMatrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]).unwrap();
+        let f = SeqLu::with_pivoting().factor(&a).unwrap();
+        let x = f.solve(&[2.0, 3.0]).unwrap();
+        assert!(a.residual(&x, &[2.0, 3.0]) < 1e-12);
+        assert!(!f.perm().is_identity());
+    }
+
+    #[test]
+    fn pivoting_reconstructs_pa_equals_lu() {
+        // A general (non-dominant) matrix needing interchanges.
+        let a = DenseMatrix::from_rows(&[
+            &[1e-10, 1.0, 2.0],
+            &[3.0, 1.0, -1.0],
+            &[2.0, -2.0, 0.5],
+        ])
+        .unwrap();
+        let f = SeqLu::with_pivoting().factor(&a).unwrap();
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn truly_singular_matrix_fails_even_with_pivoting() {
+        let a = DenseMatrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]).unwrap();
+        assert!(SeqLu::with_pivoting().factor(&a).is_err());
+    }
+}

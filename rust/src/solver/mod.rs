@@ -1,0 +1,185 @@
+//! LU factorization solvers: sequential baseline, the paper's parallel
+//! EBV method, a blocked library-style comparator, sparse LU, triangular
+//! solves, pivoting and iterative refinement.
+//!
+//! All dense factorizations produce [`DenseLuFactors`] (packed in-place
+//! LU, Doolittle convention: unit lower triangle below the diagonal, U on
+//! and above it), so every algorithm is cross-checked against every other
+//! in the tests.
+
+pub mod cholesky;
+pub mod gauss_jordan;
+pub mod lu_blocked;
+pub mod lu_ebv;
+pub mod lu_seq;
+pub mod pivot;
+pub mod refine;
+pub mod sparse_lu;
+pub mod thomas;
+pub mod trisolve;
+
+use crate::matrix::DenseMatrix;
+use crate::util::error::Result;
+
+pub use cholesky::{cholesky_factor, cholesky_solve, CholeskyFactors};
+pub use gauss_jordan::GaussJordan;
+pub use lu_blocked::BlockedLu;
+pub use lu_ebv::EbvLu;
+pub use lu_seq::SeqLu;
+pub use pivot::Permutation;
+pub use refine::Refined;
+pub use sparse_lu::{SparseLu, SparseLuFactors};
+pub use thomas::{thomas_factor, thomas_solve, ThomasFactors};
+
+/// Packed dense LU factors (Doolittle): `L` is unit-lower (multipliers
+/// stored below the diagonal), `U` is upper including the diagonal, both
+/// packed into one matrix. `perm` is the row permutation applied to `A`
+/// (i.e. `P A = L U` with `P` selecting row `perm[i]`), identity if the
+/// factorization did not pivot.
+#[derive(Debug, Clone)]
+pub struct DenseLuFactors {
+    lu: DenseMatrix,
+    perm: Permutation,
+}
+
+impl DenseLuFactors {
+    pub fn new(lu: DenseMatrix, perm: Permutation) -> Self {
+        assert!(lu.is_square(), "LU factors must be square");
+        assert_eq!(perm.len(), lu.rows(), "permutation size mismatch");
+        DenseLuFactors { lu, perm }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.lu.rows()
+    }
+
+    /// The packed LU matrix.
+    #[inline]
+    pub fn packed(&self) -> &DenseMatrix {
+        &self.lu
+    }
+
+    #[inline]
+    pub fn perm(&self) -> &Permutation {
+        &self.perm
+    }
+
+    /// Extract the unit-lower factor `L` (tests/oracles).
+    pub fn l(&self) -> DenseMatrix {
+        let n = self.n();
+        let mut l = DenseMatrix::identity(n);
+        for i in 0..n {
+            for j in 0..i {
+                l.set(i, j, self.lu.get(i, j));
+            }
+        }
+        l
+    }
+
+    /// Extract the upper factor `U` (tests/oracles).
+    pub fn u(&self) -> DenseMatrix {
+        let n = self.n();
+        let mut u = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                u.set(i, j, self.lu.get(i, j));
+            }
+        }
+        u
+    }
+
+    /// Reconstruct `P A = L U` (test helper): returns `Pᵀ (L U)`,
+    /// which must equal the original `A`.
+    pub fn reconstruct(&self) -> DenseMatrix {
+        let prod = self.l().matmul(&self.u()).expect("square");
+        self.perm.unapply_rows(&prod)
+    }
+
+    /// Solve `A x = b` using the stored factors:
+    /// forward substitution on `P b`, then backward substitution.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let pb = self.perm.apply_vec(b)?;
+        let y = trisolve::forward_unit_dense(&self.lu, &pb)?;
+        trisolve::backward_dense(&self.lu, &y)
+    }
+
+    /// Solve for multiple right-hand sides (columns of `B`).
+    pub fn solve_many(&self, bs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        bs.iter().map(|b| self.solve(b)).collect()
+    }
+}
+
+/// Common interface over the dense LU algorithms, so benches, the
+/// coordinator and the examples can swap solvers by name.
+pub trait LuSolver: Send + Sync {
+    /// Short identifier used in configs and bench output.
+    fn name(&self) -> &'static str;
+
+    /// Factor `A` into packed LU.
+    fn factor(&self, a: &DenseMatrix) -> Result<DenseLuFactors>;
+
+    /// Factor and solve in one call.
+    fn solve(&self, a: &DenseMatrix, b: &[f64]) -> Result<Vec<f64>> {
+        self.factor(a)?.solve(b)
+    }
+}
+
+/// Look a solver up by its config name.
+pub fn solver_by_name(name: &str, lanes: usize) -> Option<Box<dyn LuSolver>> {
+    match name {
+        "seq" => Some(Box::new(SeqLu::new())),
+        "seq-pivot" => Some(Box::new(SeqLu::with_pivoting())),
+        "ebv" => Some(Box::new(EbvLu::with_lanes(lanes))),
+        "blocked" => Some(Box::new(BlockedLu::new())),
+        "gauss-jordan" => Some(Box::new(GaussJordan::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, GenSeed};
+
+    #[test]
+    fn factors_expose_l_and_u_shapes() {
+        let a = diag_dominant_dense(8, GenSeed(1));
+        let f = SeqLu::new().factor(&a).unwrap();
+        let l = f.l();
+        let u = f.u();
+        for i in 0..8 {
+            assert_eq!(l.get(i, i), 1.0);
+            for j in (i + 1)..8 {
+                assert_eq!(l.get(i, j), 0.0);
+                assert_eq!(u.get(j, i), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruct_recovers_a() {
+        let a = diag_dominant_dense(16, GenSeed(2));
+        let f = SeqLu::new().factor(&a).unwrap();
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn solve_many_matches_individual_solves() {
+        let a = diag_dominant_dense(12, GenSeed(3));
+        let f = SeqLu::new().factor(&a).unwrap();
+        let b1 = vec![1.0; 12];
+        let b2: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let many = f.solve_many(&[b1.clone(), b2.clone()]).unwrap();
+        assert_eq!(many[0], f.solve(&b1).unwrap());
+        assert_eq!(many[1], f.solve(&b2).unwrap());
+    }
+
+    #[test]
+    fn solver_registry_resolves_names() {
+        for name in ["seq", "seq-pivot", "ebv", "blocked", "gauss-jordan"] {
+            assert!(solver_by_name(name, 2).is_some(), "{name}");
+        }
+        assert!(solver_by_name("nope", 2).is_none());
+    }
+}

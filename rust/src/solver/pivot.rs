@@ -1,0 +1,167 @@
+//! Row permutations and pivot selection.
+
+use crate::matrix::DenseMatrix;
+use crate::util::error::{EbvError, Result};
+
+/// A row permutation `P`: `(P A)[i] = A[map[i]]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Permutation {
+    map: Vec<usize>,
+}
+
+impl Permutation {
+    /// Identity permutation of size `n`.
+    pub fn identity(n: usize) -> Self {
+        Permutation { map: (0..n).collect() }
+    }
+
+    /// Build from an explicit map, validating it is a permutation.
+    pub fn from_map(map: Vec<usize>) -> Result<Self> {
+        let n = map.len();
+        let mut seen = vec![false; n];
+        for &i in &map {
+            if i >= n || seen[i] {
+                return Err(EbvError::Shape(format!("invalid permutation map: {map:?}")));
+            }
+            seen[i] = true;
+        }
+        Ok(Permutation { map })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    #[inline]
+    pub fn map(&self) -> &[usize] {
+        &self.map
+    }
+
+    /// Is this the identity?
+    pub fn is_identity(&self) -> bool {
+        self.map.iter().enumerate().all(|(i, &p)| i == p)
+    }
+
+    /// Swap two targets (records a pivot exchange).
+    pub fn swap(&mut self, i: usize, j: usize) {
+        self.map.swap(i, j);
+    }
+
+    /// Apply to a vector: `out[i] = v[map[i]]`.
+    pub fn apply_vec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.map.len() {
+            return Err(EbvError::Shape(format!(
+                "permutation of size {} applied to vector of size {}",
+                self.map.len(),
+                v.len()
+            )));
+        }
+        Ok(self.map.iter().map(|&p| v[p]).collect())
+    }
+
+    /// Inverse-apply to a vector: `out[map[i]] = v[i]`.
+    pub fn unapply_vec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.map.len() {
+            return Err(EbvError::Shape("permutation size mismatch".into()));
+        }
+        let mut out = vec![0.0; v.len()];
+        for (i, &p) in self.map.iter().enumerate() {
+            out[p] = v[i];
+        }
+        Ok(out)
+    }
+
+    /// Apply to matrix rows: `out[i] = m[map[i]]`.
+    pub fn apply_rows(&self, m: &DenseMatrix) -> DenseMatrix {
+        m.permute_rows(&self.map).expect("size checked by construction")
+    }
+
+    /// Inverse-apply to matrix rows.
+    pub fn unapply_rows(&self, m: &DenseMatrix) -> DenseMatrix {
+        let mut inv = vec![0usize; self.map.len()];
+        for (i, &p) in self.map.iter().enumerate() {
+            inv[p] = i;
+        }
+        m.permute_rows(&inv).expect("size checked by construction")
+    }
+}
+
+/// Find the partial-pivot row for column `col` at step `step`:
+/// the row in `step..n` with the largest `|A[i][col]|`.
+pub fn argmax_pivot(a: &DenseMatrix, step: usize, col: usize) -> usize {
+    let mut best = step;
+    let mut best_val = a.get(step, col).abs();
+    for i in (step + 1)..a.rows() {
+        let v = a.get(i, col).abs();
+        if v > best_val {
+            best = i;
+            best_val = v;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_identity() {
+        let p = Permutation::identity(4);
+        assert!(p.is_identity());
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(p.apply_vec(&v).unwrap(), v);
+    }
+
+    #[test]
+    fn from_map_validates() {
+        assert!(Permutation::from_map(vec![1, 0, 2]).is_ok());
+        assert!(Permutation::from_map(vec![0, 0, 1]).is_err());
+        assert!(Permutation::from_map(vec![0, 3]).is_err());
+    }
+
+    #[test]
+    fn apply_then_unapply_is_identity() {
+        let p = Permutation::from_map(vec![2, 0, 3, 1]).unwrap();
+        let v = vec![10.0, 20.0, 30.0, 40.0];
+        let w = p.apply_vec(&v).unwrap();
+        assert_eq!(w, vec![30.0, 10.0, 40.0, 20.0]);
+        assert_eq!(p.unapply_vec(&w).unwrap(), v);
+    }
+
+    #[test]
+    fn matrix_row_permutation_round_trip() {
+        let m = DenseMatrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0]]).unwrap();
+        let p = Permutation::from_map(vec![1, 0]).unwrap();
+        let pm = p.apply_rows(&m);
+        assert_eq!(pm.get(0, 1), 2.0);
+        assert_eq!(p.unapply_rows(&pm), m);
+    }
+
+    #[test]
+    fn swaps_accumulate() {
+        let mut p = Permutation::identity(3);
+        p.swap(0, 2);
+        p.swap(1, 2);
+        // map = [2, 0, 1]
+        assert_eq!(p.map(), &[2, 0, 1]);
+        assert!(!p.is_identity());
+    }
+
+    #[test]
+    fn argmax_finds_largest_below() {
+        let a = DenseMatrix::from_rows(&[
+            &[1.0, 9.0],
+            &[-5.0, 1.0],
+        ])
+        .unwrap();
+        assert_eq!(argmax_pivot(&a, 0, 0), 1);
+        assert_eq!(argmax_pivot(&a, 1, 1), 1);
+    }
+}

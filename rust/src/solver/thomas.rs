@@ -1,0 +1,154 @@
+//! Thomas algorithm: the O(n) tridiagonal fast path.
+//!
+//! CFD codes (the paper's motivating domain) spend much of their time in
+//! 1-D implicit sweeps — tridiagonal systems where general LU is wasteful.
+//! The router can short-circuit banded systems with `kl = ku = 1` here.
+//! No pivoting: diagonal dominance (Peclet < 2 in the convection-
+//! diffusion generator) is the usual CFD guarantee.
+
+use crate::matrix::BandedMatrix;
+use crate::util::error::{EbvError, Result};
+
+/// Factored tridiagonal system (the forward-sweep coefficients), ready
+/// for repeated O(n) solves — the same factor-once/solve-many shape as
+/// the LU paths.
+#[derive(Debug, Clone)]
+pub struct ThomasFactors {
+    /// Modified upper diagonal c'.
+    cp: Vec<f64>,
+    /// Original sub/main diagonals needed by the solve sweep.
+    sub: Vec<f64>,
+    diag_mod: Vec<f64>,
+}
+
+impl ThomasFactors {
+    pub fn n(&self) -> usize {
+        self.diag_mod.len()
+    }
+
+    /// Solve against a right-hand side.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.n();
+        if b.len() != n {
+            return Err(EbvError::Shape("rhs length mismatch".into()));
+        }
+        let mut d = vec![0.0; n];
+        // Forward sweep on the RHS with the cached coefficients.
+        d[0] = b[0] / self.diag_mod[0];
+        for i in 1..n {
+            d[i] = (b[i] - self.sub[i - 1] * d[i - 1]) / self.diag_mod[i];
+        }
+        // Back substitution.
+        let mut x = d;
+        for i in (0..n - 1).rev() {
+            let next = x[i + 1];
+            x[i] -= self.cp[i] * next;
+        }
+        Ok(x)
+    }
+}
+
+/// Factor a tridiagonal matrix (as a `BandedMatrix` with `kl = ku = 1`).
+pub fn thomas_factor(m: &BandedMatrix) -> Result<ThomasFactors> {
+    if m.kl() != 1 || m.ku() != 1 {
+        return Err(EbvError::Shape(format!(
+            "Thomas needs a tridiagonal matrix, got kl={} ku={}",
+            m.kl(),
+            m.ku()
+        )));
+    }
+    let n = m.n();
+    if n == 0 {
+        return Err(EbvError::Shape("empty system".into()));
+    }
+    let mut cp = vec![0.0; n.saturating_sub(1)];
+    let mut diag_mod = vec![0.0; n];
+    let mut sub = vec![0.0; n.saturating_sub(1)];
+
+    let tol = 1e-12;
+    let d0 = m.get(0, 0);
+    if d0.abs() < tol {
+        return Err(EbvError::SingularPivot { step: 0, value: d0, tol });
+    }
+    diag_mod[0] = d0;
+    if n > 1 {
+        cp[0] = m.get(0, 1) / d0;
+    }
+    for i in 1..n {
+        let a_i = m.get(i, i - 1);
+        sub[i - 1] = a_i;
+        let denom = m.get(i, i) - a_i * cp[i - 1];
+        if denom.abs() < tol {
+            return Err(EbvError::SingularPivot { step: i, value: denom, tol });
+        }
+        diag_mod[i] = denom;
+        if i + 1 < n {
+            cp[i] = m.get(i, i + 1) / denom;
+        }
+    }
+    Ok(ThomasFactors { cp, sub, diag_mod })
+}
+
+/// Factor + solve in one call.
+pub fn thomas_solve(m: &BandedMatrix, b: &[f64]) -> Result<Vec<f64>> {
+    thomas_factor(m)?.solve(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::convection_diffusion_1d;
+    use crate::matrix::norms::diff_inf;
+    use crate::solver::{LuSolver, SeqLu};
+
+    #[test]
+    fn matches_dense_lu() {
+        let n = 64;
+        let m = convection_diffusion_1d(n, 0.8);
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).sin()).collect();
+        let x = thomas_solve(&m, &b).unwrap();
+        let xd = SeqLu::new().solve(&m.to_dense(), &b).unwrap();
+        assert!(diff_inf(&x, &xd) < 1e-10);
+        assert!(m.to_dense().residual(&x, &b) < 1e-10);
+    }
+
+    #[test]
+    fn hand_case_3x3() {
+        // [2 1 0; 1 2 1; 0 1 2] x = [3, 4, 3] -> x = [1, 1, 1]
+        let m = BandedMatrix::tridiagonal(&[1.0, 1.0], &[2.0, 2.0, 2.0], &[1.0, 1.0]).unwrap();
+        let x = thomas_solve(&m, &[3.0, 4.0, 3.0]).unwrap();
+        assert!(diff_inf(&x, &[1.0, 1.0, 1.0]) < 1e-14);
+    }
+
+    #[test]
+    fn factor_once_solve_many() {
+        let n = 32;
+        let m = convection_diffusion_1d(n, 0.5);
+        let f = thomas_factor(&m).unwrap();
+        for seed in 0..5u64 {
+            let b: Vec<f64> = (0..n).map(|i| ((i as u64 + seed) as f64 * 0.3).cos()).collect();
+            let x = f.solve(&b).unwrap();
+            assert!(m.to_dense().residual(&x, &b) < 1e-10, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_bandwidth() {
+        let m = BandedMatrix::zeros(8, 2, 1).unwrap();
+        assert!(thomas_factor(&m).is_err());
+    }
+
+    #[test]
+    fn detects_singular_pivot() {
+        let m = BandedMatrix::tridiagonal(&[1.0], &[0.0, 1.0], &[1.0]).unwrap();
+        assert!(matches!(thomas_factor(&m), Err(EbvError::SingularPivot { step: 0, .. })));
+    }
+
+    #[test]
+    fn two_element_system() {
+        // (n=1 is unrepresentable as a kl=ku=1 BandedMatrix by design.)
+        let m = BandedMatrix::tridiagonal(&[1.0], &[4.0, 4.0], &[1.0]).unwrap();
+        let x = thomas_solve(&m, &[5.0, 5.0]).unwrap();
+        assert!(diff_inf(&x, &[1.0, 1.0]) < 1e-14);
+    }
+}

@@ -1,0 +1,83 @@
+//! Crate error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by EBV-Solve's public API.
+#[derive(Error, Debug)]
+pub enum EbvError {
+    /// Matrix shape is invalid for the requested operation.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// The matrix violates a solver precondition (e.g. zero pivot on a
+    /// non-pivoting path, or not diagonally dominant when required).
+    #[error("numeric precondition failed: {0}")]
+    Numeric(String),
+
+    /// A singular (or numerically singular) pivot was encountered.
+    #[error("singular pivot at step {step}: |{value}| < {tol}")]
+    SingularPivot { step: usize, value: f64, tol: f64 },
+
+    /// Artifact registry / runtime failures (missing HLO, compile error).
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Coordinator-level failures (queue closed, request rejected).
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    /// Configuration / CLI parse errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// JSON parse errors (manifest, traces, reports).
+    #[error("json: {0}")]
+    Json(String),
+
+    /// I/O errors with context.
+    #[error("io: {context}: {source}")]
+    Io {
+        context: String,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// XLA/PJRT errors from the `xla` crate.
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl EbvError {
+    /// Attach a context string to an `std::io::Error`.
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        EbvError::Io { context: context.into(), source }
+    }
+}
+
+impl From<xla::Error> for EbvError {
+    fn from(e: xla::Error) -> Self {
+        EbvError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, EbvError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_stable() {
+        let e = EbvError::Shape("expected 4x4, got 4x3".into());
+        assert_eq!(e.to_string(), "shape mismatch: expected 4x4, got 4x3");
+        let e = EbvError::SingularPivot { step: 3, value: 1e-20, tol: 1e-12 };
+        assert!(e.to_string().contains("step 3"));
+    }
+
+    #[test]
+    fn io_error_carries_context() {
+        let e = EbvError::io("reading manifest", std::io::Error::other("boom"));
+        assert!(e.to_string().contains("reading manifest"));
+    }
+}

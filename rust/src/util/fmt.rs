@@ -1,0 +1,127 @@
+//! Human-readable formatting helpers for benchmark and report output.
+
+/// Format seconds adaptively (`1.23 s`, `4.56 ms`, `7.89 µs`, `12.3 ns`).
+pub fn secs(t: f64) -> String {
+    if !t.is_finite() {
+        return format!("{t}");
+    }
+    let a = t.abs();
+    if a >= 1.0 {
+        format!("{t:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", t * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} µs", t * 1e6)
+    } else {
+        format!("{:.1} ns", t * 1e9)
+    }
+}
+
+/// Format a byte count (`1.5 GiB`, `23.4 MiB`, ...).
+pub fn bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format an operation rate (`12.3 GFLOP/s` style, generic suffix).
+pub fn rate(per_sec: f64, suffix: &str) -> String {
+    let a = per_sec.abs();
+    if a >= 1e9 {
+        format!("{:.2} G{suffix}/s", per_sec / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2} M{suffix}/s", per_sec / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2} K{suffix}/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} {suffix}/s")
+    }
+}
+
+/// Render a text table: header row plus data rows, columns padded.
+/// Used by the bench harness to print the paper's tables.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut width = vec![0usize; ncol];
+    for (i, h) in headers.iter().enumerate() {
+        width[i] = h.len();
+    }
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            width[i] = width[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        out.push('+');
+        for w in &width {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('+');
+        }
+        out.push('\n');
+    };
+    sep(&mut out);
+    out.push('|');
+    for (i, h) in headers.iter().enumerate() {
+        out.push_str(&format!(" {:<w$} |", h, w = width[i]));
+    }
+    out.push('\n');
+    sep(&mut out);
+    for row in rows {
+        out.push('|');
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            out.push_str(&format!(" {:<w$} |", cell, w = width[i]));
+        }
+        out.push('\n');
+    }
+    sep(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_picks_sane_units() {
+        assert_eq!(secs(1.5), "1.500 s");
+        assert_eq!(secs(0.0042), "4.200 ms");
+        assert_eq!(secs(2.5e-6), "2.500 µs");
+        assert!(secs(3e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn bytes_scales() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.0 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn rate_scales() {
+        assert!(rate(2.5e9, "FLOP").starts_with("2.50 G"));
+        assert!(rate(12.0, "req").starts_with("12.00 req"));
+    }
+
+    #[test]
+    fn table_is_aligned() {
+        let t = table(
+            &["Matrix size", "GPU, s"],
+            &[vec!["500*500".into(), "0.00096".into()], vec!["16000*16000".into(), "0.21".into()]],
+        );
+        assert!(t.contains("| Matrix size "));
+        assert!(t.lines().count() >= 6);
+        // Every data line has the same width.
+        let widths: Vec<usize> = t.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,76 @@
+//! Tiny `log` backend (offline substitute for `env_logger`).
+//!
+//! Level is taken from `EBV_LOG` (error|warn|info|debug|trace), default
+//! `info`. Writes to stderr with elapsed-time prefixes so coordinator
+//! traces read like a service log.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record<'_>) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:>8.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger. Safe to call more than once; later calls are no-ops.
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(level_from_env());
+    }
+}
+
+fn level_from_env() -> LevelFilter {
+    match std::env::var("EBV_LOG").unwrap_or_default().to_ascii_lowercase().as_str() {
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        "off" => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logging smoke test");
+    }
+}

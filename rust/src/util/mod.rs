@@ -1,0 +1,12 @@
+//! Small shared utilities: error type, JSON, logging, env helpers.
+//!
+//! `serde`/`serde_json` are unavailable in this offline environment, so
+//! [`json`] provides a minimal but complete JSON parser/emitter used for
+//! the artifact manifest, config dumps and benchmark reports.
+
+pub mod error;
+pub mod fmt;
+pub mod json;
+pub mod logging;
+
+pub use error::{EbvError, Result};

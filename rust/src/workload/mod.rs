@@ -1,0 +1,162 @@
+//! Workload generation for benches and the service examples: request
+//! traces with Poisson arrivals over a mix of system sizes/formats,
+//! mirroring how a CFD code would hit the solver service.
+
+use crate::matrix::generate::{
+    diag_dominant_dense, diag_dominant_sparse, poisson_2d, rhs, GenSeed,
+};
+use crate::matrix::{CsrMatrix, DenseMatrix};
+use crate::rng::Rng;
+
+/// What kind of system a request carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    Dense,
+    Sparse,
+    Poisson,
+}
+
+/// One generated solve job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub id: u64,
+    /// Arrival offset from trace start, seconds.
+    pub arrival: f64,
+    pub kind: SystemKind,
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl Job {
+    /// Materialize the dense system for this job (dense jobs only).
+    pub fn dense_system(&self) -> (DenseMatrix, Vec<f64>) {
+        assert_eq!(self.kind, SystemKind::Dense);
+        let a = diag_dominant_dense(self.n, GenSeed(self.seed));
+        let b = rhs(self.n, GenSeed(self.seed ^ 1));
+        (a, b)
+    }
+
+    /// Materialize the sparse system for this job.
+    pub fn sparse_system(&self) -> (CsrMatrix, Vec<f64>) {
+        let a = match self.kind {
+            SystemKind::Sparse => diag_dominant_sparse(self.n, 5, GenSeed(self.seed)),
+            SystemKind::Poisson => {
+                let g = (self.n as f64).sqrt().round() as usize;
+                poisson_2d(g.max(2))
+            }
+            SystemKind::Dense => panic!("dense job has no sparse system"),
+        };
+        let b = rhs(a.rows(), GenSeed(self.seed ^ 1));
+        (a, b)
+    }
+}
+
+/// Trace generator configuration.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Mean request rate (requests/second).
+    pub rate: f64,
+    /// Number of requests.
+    pub count: usize,
+    /// Sizes sampled uniformly per request.
+    pub sizes: Vec<usize>,
+    /// Mix of kinds, as (kind, weight).
+    pub mix: Vec<(SystemKind, f64)>,
+    pub seed: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            rate: 200.0,
+            count: 100,
+            sizes: vec![64, 128, 256],
+            mix: vec![(SystemKind::Dense, 0.5), (SystemKind::Sparse, 0.5)],
+            seed: 0xEB5,
+        }
+    }
+}
+
+/// Generate a Poisson-arrival request trace.
+pub fn generate_trace(spec: &TraceSpec) -> Vec<Job> {
+    assert!(!spec.sizes.is_empty(), "trace needs at least one size");
+    assert!(!spec.mix.is_empty(), "trace needs at least one kind");
+    let mut rng = Rng::seed_from(spec.seed);
+    let total_w: f64 = spec.mix.iter().map(|(_, w)| w).sum();
+    let mut t = 0.0f64;
+    let mut jobs = Vec::with_capacity(spec.count);
+    for id in 0..spec.count {
+        t += rng.exponential(spec.rate.max(1e-9));
+        let mut pick = rng.uniform() * total_w;
+        let mut kind = spec.mix[0].0;
+        for &(k, w) in &spec.mix {
+            if pick < w {
+                kind = k;
+                break;
+            }
+            pick -= w;
+        }
+        let n = *spec.sizes.get(rng.below(spec.sizes.len())).unwrap();
+        jobs.push(Job { id: id as u64, arrival: t, kind, n, seed: rng.next_u64() });
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let spec = TraceSpec::default();
+        let a = generate_trace(&spec);
+        let b = generate_trace(&spec);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.iter().map(|j| j.id).collect::<Vec<_>>(),
+                   b.iter().map(|j| j.id).collect::<Vec<_>>());
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches() {
+        let spec = TraceSpec { rate: 1000.0, count: 2000, ..Default::default() };
+        let jobs = generate_trace(&spec);
+        let span = jobs.last().unwrap().arrival;
+        let rate = jobs.len() as f64 / span;
+        assert!((rate - 1000.0).abs() / 1000.0 < 0.15, "rate={rate}");
+    }
+
+    #[test]
+    fn mix_respects_weights() {
+        let spec = TraceSpec {
+            mix: vec![(SystemKind::Dense, 0.9), (SystemKind::Sparse, 0.1)],
+            count: 1000,
+            ..Default::default()
+        };
+        let jobs = generate_trace(&spec);
+        let dense = jobs.iter().filter(|j| j.kind == SystemKind::Dense).count();
+        assert!(dense > 820 && dense < 970, "dense={dense}");
+    }
+
+    #[test]
+    fn jobs_materialize_consistent_systems() {
+        let spec = TraceSpec::default();
+        let jobs = generate_trace(&spec);
+        let dense_job = jobs.iter().find(|j| j.kind == SystemKind::Dense).unwrap();
+        let (a, b) = dense_job.dense_system();
+        assert_eq!(a.rows(), dense_job.n);
+        assert_eq!(b.len(), dense_job.n);
+        let sparse_job = jobs.iter().find(|j| j.kind == SystemKind::Sparse).unwrap();
+        let (a, b) = sparse_job.sparse_system();
+        assert_eq!(a.rows(), sparse_job.n);
+        assert_eq!(b.len(), sparse_job.n);
+        assert!(a.is_diag_dominant());
+    }
+
+    #[test]
+    fn poisson_jobs_square_the_size() {
+        let j = Job { id: 0, arrival: 0.0, kind: SystemKind::Poisson, n: 100, seed: 1 };
+        let (a, _) = j.sparse_system();
+        assert_eq!(a.rows(), 100); // 10x10 grid
+    }
+}

@@ -1,0 +1,176 @@
+//! Coordinator end-to-end under load, mixed traffic, and failure
+//! injection (no PJRT required — `runtime_integration` covers that).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::SolverService;
+use ebv_solve::matrix::generate::{diag_dominant_dense, GenSeed};
+use ebv_solve::matrix::DenseMatrix;
+use ebv_solve::workload::{generate_trace, SystemKind, TraceSpec};
+
+fn cfg(lanes: usize) -> ServiceConfig {
+    ServiceConfig {
+        lanes,
+        max_batch: 8,
+        batch_window_us: 300,
+        queue_capacity: 512,
+        use_runtime: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn serves_a_full_mixed_trace() {
+    let svc = SolverService::start(cfg(4)).unwrap();
+    let trace = generate_trace(&TraceSpec {
+        rate: 1e9, // all-at-once: stress the queues, not the clock
+        count: 120,
+        sizes: vec![24, 48, 96],
+        mix: vec![
+            (SystemKind::Dense, 0.5),
+            (SystemKind::Sparse, 0.3),
+            (SystemKind::Poisson, 0.2),
+        ],
+        seed: 0xFEED,
+    });
+    let mut rxs = Vec::new();
+    for job in &trace {
+        let rx = match job.kind {
+            SystemKind::Dense => {
+                let (a, b) = job.dense_system();
+                svc.submit_dense(Arc::new(a), b, Some(job.seed))
+            }
+            _ => {
+                let (a, b) = job.sparse_system();
+                svc.submit_sparse(Arc::new(a), b, Some(job.seed))
+            }
+        };
+        rxs.push(rx.expect("queue sized for the trace"));
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.result.is_ok(), "{:?}", resp.result);
+        assert!(resp.residual < 1e-8, "residual {}", resp.residual);
+        ok += 1;
+    }
+    assert_eq!(ok, 120);
+    let m = svc.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 120);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn factor_cache_amortizes_repeated_matrices() {
+    let svc = SolverService::start(cfg(2)).unwrap();
+    let a = Arc::new(diag_dominant_dense(64, GenSeed(21)));
+    // 30 solves against one matrix, sequential submits (worst case for
+    // batching, best case for the cache).
+    for i in 0..30 {
+        let resp = svc
+            .solve_dense_blocking(Arc::clone(&a), vec![1.0 + i as f64; 64], Some(1))
+            .unwrap();
+        assert!(resp.result.is_ok());
+    }
+    let m = svc.metrics();
+    let misses = m.factor_misses.load(Ordering::Relaxed);
+    let hits = m.factor_hits.load(Ordering::Relaxed);
+    assert_eq!(misses, 1, "exactly one factorization for 30 solves");
+    assert_eq!(hits, 29);
+    svc.shutdown();
+}
+
+#[test]
+fn failure_injection_bad_systems_dont_poison_the_service() {
+    let svc = SolverService::start(cfg(2)).unwrap();
+    let singular = Arc::new(
+        DenseMatrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]).unwrap(),
+    );
+    let good = Arc::new(diag_dominant_dense(32, GenSeed(22)));
+
+    // Interleave failing and healthy requests.
+    let mut rxs = Vec::new();
+    for i in 0..10 {
+        if i % 2 == 0 {
+            rxs.push(svc.submit_dense(Arc::clone(&singular), vec![1.0, 1.0], None).unwrap());
+        } else {
+            rxs.push(svc.submit_dense(Arc::clone(&good), vec![1.0; 32], None).unwrap());
+        }
+    }
+    let mut failures = 0;
+    let mut successes = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        match resp.result {
+            Ok(_) => {
+                successes += 1;
+                assert!(resp.residual < 1e-9);
+            }
+            Err(msg) => {
+                failures += 1;
+                assert!(msg.contains("singular"), "{msg}");
+            }
+        }
+    }
+    assert_eq!((failures, successes), (5, 5));
+    let m = svc.metrics();
+    assert_eq!(m.failed.load(Ordering::Relaxed), 5);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 5);
+    svc.shutdown();
+}
+
+#[test]
+fn zero_length_rhs_is_rejected_not_crashed() {
+    let svc = SolverService::start(cfg(1)).unwrap();
+    let a = Arc::new(diag_dominant_dense(8, GenSeed(23)));
+    // Mismatched RHS length: the solver reports shape error via result.
+    let resp = svc.solve_dense_blocking(a, vec![1.0; 3], None).unwrap();
+    assert!(resp.result.is_err());
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_submitters_are_safe() {
+    let svc = Arc::new(SolverService::start(cfg(4)).unwrap());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let svc = Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            let a = Arc::new(diag_dominant_dense(48, GenSeed(100 + t)));
+            let mut oks = 0;
+            for i in 0..20 {
+                let resp = svc
+                    .solve_dense_blocking(Arc::clone(&a), vec![i as f64 + 1.0; 48], Some(t))
+                    .unwrap();
+                if resp.result.is_ok() {
+                    oks += 1;
+                }
+            }
+            oks
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 80);
+    let m = svc.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 80);
+    // 4 distinct keys -> exactly 4 factorizations.
+    assert_eq!(m.factor_misses.load(Ordering::Relaxed), 4);
+    Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+}
+
+#[test]
+fn latency_histogram_populates_under_load() {
+    let svc = SolverService::start(cfg(2)).unwrap();
+    let a = Arc::new(diag_dominant_dense(96, GenSeed(24)));
+    for _ in 0..12 {
+        let _ = svc.solve_dense_blocking(Arc::clone(&a), vec![1.0; 96], Some(3)).unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.latency.count(), 12);
+    assert!(m.latency.mean() > 0.0);
+    assert!(m.latency.quantile(0.99) >= m.latency.quantile(0.5));
+    svc.shutdown();
+}

@@ -1,0 +1,236 @@
+//! Property-based invariants over the whole stack (testutil framework —
+//! the offline stand-in for proptest).
+
+use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
+use ebv_solve::ebv::{bivectorize, equalize, imbalance, PairingMode};
+use ebv_solve::matrix::generate::{
+    diag_dominant_dense, diag_dominant_sparse, manufactured_solution, GenSeed,
+};
+use ebv_solve::matrix::norms::{diff_inf, rel_residual_dense};
+use ebv_solve::matrix::{CooMatrix, CsrMatrix};
+use ebv_solve::solver::{EbvLu, LuSolver, SeqLu, SparseLu};
+use ebv_solve::testutil::forall;
+use ebv_solve::util::json::Json;
+
+#[test]
+fn prop_lu_reconstructs_a() {
+    forall("P(LU) == A for dominant systems", 40, |g| {
+        let n = g.usize_in(1, 60);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let f = SeqLu::new().factor(&a).unwrap();
+        let diff = f.reconstruct().max_abs_diff(&a);
+        assert!(diff < 1e-9, "n={n} diff={diff}");
+    });
+}
+
+#[test]
+fn prop_solve_residual_small_for_every_solver() {
+    forall("residual < 1e-10 across solvers", 30, |g| {
+        let n = g.usize_in(2, 80);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let b = g.vec_f64(n, -1.0, 1.0);
+        let lanes = g.usize_in(1, 4);
+        let dist = *g.choose(&RowDist::ALL);
+        let solvers: Vec<Box<dyn LuSolver>> = vec![
+            Box::new(SeqLu::new()),
+            Box::new(EbvLu::with_lanes(lanes).with_dist(dist).seq_threshold(0)),
+        ];
+        for s in solvers {
+            let x = s.solve(&a, &b).unwrap();
+            let r = rel_residual_dense(&a, &x, &b);
+            assert!(r < 1e-10, "{} n={n} lanes={lanes} r={r}", s.name());
+        }
+    });
+}
+
+#[test]
+fn prop_ebv_parallel_equals_sequential_bitwise() {
+    forall("parallel EBV == sequential (bitwise)", 25, |g| {
+        let n = g.usize_in(2, 100);
+        let lanes = g.usize_in(2, 6);
+        let dist = *g.choose(&RowDist::ALL);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let seq = SeqLu::new().factor(&a).unwrap();
+        let par = EbvLu::with_lanes(lanes).with_dist(dist).seq_threshold(0).factor(&a).unwrap();
+        assert_eq!(par.packed().max_abs_diff(seq.packed()), 0.0, "n={n} lanes={lanes}");
+    });
+}
+
+#[test]
+fn prop_equalize_conserves_and_fold_balances() {
+    forall("equalize invariants", 60, |g| {
+        let n = g.usize_in(2, 200);
+        let lanes = g.usize_in(1, 16);
+        let vs = bivectorize(n);
+        let total: usize = vs.iter().map(|v| v.len).sum();
+        assert_eq!(total, n * (n - 1));
+        for mode in
+            [PairingMode::PaperFold, PairingMode::Block, PairingMode::Cyclic, PairingMode::GreedyLpt]
+        {
+            let units = equalize(&vs, mode, lanes);
+            let sum: usize = units.iter().map(|u| u.total_len).sum();
+            assert_eq!(sum, total, "{mode:?} loses work");
+        }
+        // The paper's fold: every unit's length is n or (middle) ~n/2.
+        let fold = equalize(&vs, PairingMode::PaperFold, lanes);
+        for u in &fold {
+            assert!(u.total_len == n || u.total_len == n / 2, "unit len {}", u.total_len);
+        }
+        assert!(imbalance(&fold) <= 2.0);
+    });
+}
+
+#[test]
+fn prop_schedule_partitions_rows() {
+    forall("LaneSchedule is a partition with sane balance", 60, |g| {
+        let n = g.usize_in(1, 400);
+        let lanes = g.usize_in(1, 12);
+        let dist = *g.choose(&RowDist::ALL);
+        let s = LaneSchedule::build(n, lanes, dist);
+        let mut seen = vec![false; n];
+        for l in 0..lanes {
+            for &i in s.rows_of(l) {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.into_iter().all(|b| b));
+        // EBV fold is never worse than block for multi-lane runs.
+        if lanes > 1 && n >= 8 * lanes {
+            let fold = LaneSchedule::build(n, lanes, RowDist::EbvFold).work_imbalance();
+            let block = LaneSchedule::build(n, lanes, RowDist::Block).work_imbalance();
+            assert!(fold <= block + 1e-9, "n={n} lanes={lanes} fold={fold} block={block}");
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_dense_agreement() {
+    forall("sparse LU == dense LU on sparse systems", 20, |g| {
+        let n = g.usize_in(2, 60);
+        let k = g.usize_in(1, 6.min(n.saturating_sub(1)).max(1));
+        let a = diag_dominant_sparse(n, k, GenSeed(g.seed()));
+        let (x_true, b) = manufactured_solution(&a, GenSeed(g.seed()));
+        let xs = SparseLu::new().solve(&a, &b).unwrap();
+        let xd = SeqLu::new().solve(&a.to_dense(), &b).unwrap();
+        assert!(diff_inf(&xs, &xd) < 1e-8, "n={n}");
+        assert!(diff_inf(&xs, &x_true) < 1e-7, "n={n}");
+    });
+}
+
+#[test]
+fn prop_csr_round_trips() {
+    forall("COO -> CSR -> dense -> CSR round-trips", 50, |g| {
+        let rows = g.usize_in(1, 30);
+        let cols = g.usize_in(1, 30);
+        let entries = g.usize_in(0, rows * cols / 2 + 1);
+        let mut coo = CooMatrix::new(rows, cols);
+        for _ in 0..entries {
+            let i = g.usize_in(0, rows - 1);
+            let j = g.usize_in(0, cols - 1);
+            let v = g.f64_in(-5.0, 5.0);
+            coo.push(i, j, v).unwrap();
+        }
+        let csr = coo.to_csr();
+        // Duplicates are summed in sorted order by to_csr but insertion
+        // order by to_dense — equal up to f64 re-association only.
+        assert!(csr.to_dense().max_abs_diff(&coo.to_dense()) < 1e-12);
+        let back = CsrMatrix::from_dense(&csr.to_dense(), 0.0);
+        assert_eq!(back.to_dense().max_abs_diff(&csr.to_dense()), 0.0);
+        // Transpose is an involution.
+        assert_eq!(csr.transpose().transpose(), csr);
+    });
+}
+
+#[test]
+fn prop_json_round_trips() {
+    forall("json emit/parse round-trips", 80, |g| {
+        fn gen_value(g: &mut ebv_solve::testutil::Gen, depth: usize) -> Json {
+            let pick = if depth >= 3 { g.usize_in(0, 3) } else { g.usize_in(0, 5) };
+            match pick {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                3 => Json::Str(format!("s{}-\"quoted\" \u{1F600}", g.usize_in(0, 999))),
+                4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_value(g, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), gen_value(g, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen_value(g, 0);
+        assert_eq!(Json::parse(&v.emit()).unwrap(), v);
+        assert_eq!(Json::parse(&v.emit_pretty()).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_thomas_matches_dense_lu() {
+    use ebv_solve::matrix::generate::convection_diffusion_1d;
+    use ebv_solve::solver::thomas_solve;
+    forall("Thomas == dense LU on tridiagonal systems", 30, |g| {
+        let n = g.usize_in(2, 120);
+        let peclet = g.f64_in(0.0, 1.8); // < 2 keeps dominance
+        let m = convection_diffusion_1d(n, peclet);
+        let b = g.vec_f64(n, -1.0, 1.0);
+        let x = thomas_solve(&m, &b).unwrap();
+        let xd = SeqLu::new().solve(&m.to_dense(), &b).unwrap();
+        assert!(diff_inf(&x, &xd) < 1e-8, "n={n} peclet={peclet}");
+    });
+}
+
+#[test]
+fn prop_cholesky_matches_lu_on_spd() {
+    use ebv_solve::solver::cholesky_solve;
+    forall("Cholesky == LU on SPD systems", 20, |g| {
+        let n = g.usize_in(2, 40);
+        let b0 = diag_dominant_dense(n, GenSeed(g.seed()));
+        // B Bᵀ + n·I is SPD.
+        let mut a = b0.matmul(&b0.transpose()).unwrap();
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f64);
+        }
+        let rhs = g.vec_f64(n, -1.0, 1.0);
+        let xc = cholesky_solve(&a, &rhs).unwrap();
+        let xl = SeqLu::new().solve(&a, &rhs).unwrap();
+        assert!(diff_inf(&xc, &xl) < 1e-6, "n={n}");
+    });
+}
+
+#[test]
+fn prop_cluster_sim_sane() {
+    use ebv_solve::gpusim::cluster::{simulate_cluster_dense, Interconnect};
+    use ebv_solve::gpusim::GpuModel;
+    forall("cluster sim: positive, 1-device == baseline régime", 20, |g| {
+        let n = g.usize_in(64, 4000);
+        let d = g.usize_in(1, 16);
+        let gpu = GpuModel::gtx280();
+        let link = Interconnect::pcie_staged();
+        let t = simulate_cluster_dense(n, d, &gpu, &link, RowDist::EbvFold);
+        assert!(t > 0.0 && t.is_finite(), "n={n} d={d} t={t}");
+        // More devices never reduce total *work*; time may rise or fall,
+        // but a single device must cost at least the 2-device compute
+        // share (sanity bound).
+        if d > 1 {
+            let t1 = simulate_cluster_dense(n, 1, &gpu, &link, RowDist::EbvFold);
+            assert!(t > t1 / d as f64 * 0.99, "superlinear scaling is a bug");
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_trisolve_levels_equal_sequential() {
+    forall("level-scheduled trisolve == sequential", 20, |g| {
+        let n = g.usize_in(4, 80);
+        let k = g.usize_in(2, 5);
+        let lanes = g.usize_in(2, 4);
+        let a = diag_dominant_sparse(n, k.min(n - 1), GenSeed(g.seed()));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let b = g.vec_f64(n, -1.0, 1.0);
+        let seq = f.solve(&b).unwrap();
+        let par = f.solve_par(&b, lanes).unwrap();
+        assert!(diff_inf(&seq, &par) < 1e-12, "n={n} lanes={lanes}");
+    });
+}

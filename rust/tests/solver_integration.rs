@@ -1,0 +1,132 @@
+//! Cross-algorithm integration: every dense solver against every other,
+//! sparse vs dense agreement, banded and MatrixMarket paths, refinement.
+
+use ebv_solve::ebv::schedule::RowDist;
+use ebv_solve::matrix::generate::{
+    convection_diffusion_1d, diag_dominant_dense, diag_dominant_sparse, manufactured_solution,
+    poisson_2d, rhs, GenSeed,
+};
+use ebv_solve::matrix::io::{read_matrix_market, write_matrix_market};
+use ebv_solve::matrix::norms::{diff_inf, rel_residual_dense};
+use ebv_solve::matrix::CsrMatrix;
+use ebv_solve::solver::{BlockedLu, EbvLu, GaussJordan, LuSolver, Refined, SeqLu, SparseLu};
+
+#[test]
+fn all_dense_solvers_agree() {
+    let n = 120;
+    let a = diag_dominant_dense(n, GenSeed(7));
+    let b = rhs(n, GenSeed(8));
+    let reference = SeqLu::new().solve(&a, &b).unwrap();
+
+    let solvers: Vec<Box<dyn LuSolver>> = vec![
+        Box::new(SeqLu::with_pivoting()),
+        Box::new(EbvLu::with_lanes(4).seq_threshold(0)),
+        Box::new(EbvLu::with_lanes(3).with_dist(RowDist::Cyclic).seq_threshold(0)),
+        Box::new(BlockedLu::with_block(32)),
+        Box::new(GaussJordan::new()),
+        Box::new(Refined::new(SeqLu::new())),
+    ];
+    for s in &solvers {
+        let x = s.solve(&a, &b).unwrap();
+        assert!(
+            diff_inf(&x, &reference) < 1e-8,
+            "{} diverges: {}",
+            s.name(),
+            diff_inf(&x, &reference)
+        );
+    }
+}
+
+#[test]
+fn sparse_solver_agrees_with_dense_on_same_system() {
+    let n = 90;
+    let a = diag_dominant_sparse(n, 6, GenSeed(9));
+    let (x_true, b) = manufactured_solution(&a, GenSeed(10));
+    let xs = SparseLu::new().solve(&a, &b).unwrap();
+    let xd = SeqLu::new().solve(&a.to_dense(), &b).unwrap();
+    assert!(diff_inf(&xs, &xd) < 1e-9);
+    assert!(diff_inf(&xs, &x_true) < 1e-8);
+}
+
+#[test]
+fn poisson_pipeline_through_matrix_market_round_trip() {
+    let a = poisson_2d(8);
+    let dir = std::env::temp_dir().join("ebv_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("poisson.mtx");
+    write_matrix_market(&a, &path).unwrap();
+    let a2 = read_matrix_market(&path).unwrap();
+    assert_eq!(a2.to_dense().max_abs_diff(&a.to_dense()), 0.0);
+
+    let (x_true, b) = manufactured_solution(&a2, GenSeed(11));
+    let x = SparseLu::new().solve(&a2, &b).unwrap();
+    assert!(diff_inf(&x, &x_true) < 1e-8);
+}
+
+#[test]
+fn banded_cfd_system_solves_via_csr() {
+    let m = convection_diffusion_1d(64, 0.5);
+    let a: CsrMatrix = m.to_csr();
+    let (x_true, b) = manufactured_solution(&a, GenSeed(12));
+    let x = SparseLu::new().solve(&a, &b).unwrap();
+    assert!(diff_inf(&x, &x_true) < 1e-9);
+    // Tridiagonal factorization has no fill-in.
+    let f = SparseLu::new().factor(&a).unwrap();
+    assert_eq!(f.fill_in(&a), 0);
+}
+
+#[test]
+fn parallel_ebv_scales_and_stays_exact() {
+    let n = 300;
+    let a = diag_dominant_dense(n, GenSeed(13));
+    let b = rhs(n, GenSeed(14));
+    let seq = SeqLu::new().factor(&a).unwrap();
+    for lanes in [2usize, 4, 8] {
+        let f = EbvLu::with_lanes(lanes).seq_threshold(0).factor(&a).unwrap();
+        assert_eq!(
+            f.packed().max_abs_diff(seq.packed()),
+            0.0,
+            "lanes={lanes}: parallel elimination must be bit-identical"
+        );
+        let x = f.solve(&b).unwrap();
+        assert!(rel_residual_dense(&a, &x, &b) < 1e-12);
+    }
+}
+
+#[test]
+fn refinement_tightens_drop_tolerance_factorization() {
+    let a = poisson_2d(10);
+    let b = rhs(a.rows(), GenSeed(15));
+    // ILU-style dropped factorization leaves a visible residual...
+    let ilu = SparseLu::new().with_drop_tol(1e-2).factor(&a).unwrap();
+    let x0 = ilu.solve(&b).unwrap();
+    let r0 = a.residual(&x0, &b);
+    // ...which a few refinement sweeps against the true matrix shrink.
+    let mut x = x0;
+    for _ in 0..20 {
+        let ax = a.matvec(&x).unwrap();
+        let r: Vec<f64> = b.iter().zip(ax.iter()).map(|(bb, aa)| bb - aa).collect();
+        let dx = ilu.solve(&r).unwrap();
+        for (xi, di) in x.iter_mut().zip(dx.iter()) {
+            *xi += di;
+        }
+    }
+    let r1 = a.residual(&x, &b);
+    assert!(r1 < r0 / 10.0, "refinement stalled: {r0} -> {r1}");
+}
+
+#[test]
+fn singular_failures_are_consistent_across_solvers() {
+    use ebv_solve::matrix::DenseMatrix;
+    let a = DenseMatrix::from_rows(&[
+        &[1.0, 2.0, 3.0],
+        &[2.0, 4.0, 6.0],
+        &[1.0, 0.0, 1.0],
+    ])
+    .unwrap();
+    let b = vec![1.0, 2.0, 3.0];
+    assert!(SeqLu::with_pivoting().solve(&a, &b).is_err());
+    assert!(EbvLu::with_lanes(2).seq_threshold(0).solve(&a, &b).is_err());
+    assert!(BlockedLu::new().solve(&a, &b).is_err());
+    assert!(GaussJordan::new().solve(&a, &b).is_err());
+}
