@@ -1,0 +1,81 @@
+//! WIRE DEMO: a full NDJSON session against a live service, in-process.
+//!
+//! The same bytes could flow through `ebv-solve serve` on a pipe; here
+//! the request stream is built with the codec, run through
+//! `serve_session` over in-memory buffers, and the raw NDJSON of both
+//! directions is printed so the protocol is visible end to end:
+//!
+//!   1. dense solve, matrix inline        → solution frame
+//!   2. same matrix, fresh RHS            → solution frame (factor-cache
+//!      hit via the auto-computed fingerprint — no client-side key)
+//!   3. sparse solve via COO triplets     → solution frame
+//!   4. metrics probe                     → metrics frame (shows the hit)
+//!   5. shutdown                          → goodbye frame
+//!
+//! ```sh
+//! cargo run --release --example wire_session
+//! ```
+
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::SolverService;
+use ebv_solve::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, rhs, GenSeed};
+use ebv_solve::wire::{encode_request, serve_session, RequestFrame, WireSolve};
+
+fn main() -> ebv_solve::Result<()> {
+    let n = 48;
+    let dense = diag_dominant_dense(n, GenSeed(7));
+    let sparse = diag_dominant_sparse(n, 4, GenSeed(8));
+
+    let frames = vec![
+        encode_request(&RequestFrame::Solve(WireSolve::dense(dense.clone(), rhs(n, GenSeed(1))))),
+        encode_request(&RequestFrame::Solve(WireSolve::dense(dense, rhs(n, GenSeed(2))))),
+        encode_request(&RequestFrame::SolveSparse(WireSolve::sparse(sparse, rhs(n, GenSeed(3))))),
+        encode_request(&RequestFrame::Metrics),
+        encode_request(&RequestFrame::Shutdown),
+    ];
+    let input = frames.join("\n") + "\n";
+
+    println!("=== client → server ===");
+    for line in input.lines() {
+        println!("{}", preview(line));
+    }
+
+    let svc = SolverService::start(ServiceConfig { lanes: 2, ..Default::default() })?;
+    let mut output = Vec::new();
+    let stats = serve_session(&svc, input.as_bytes(), &mut output)?;
+
+    println!("\n=== server → client ===");
+    let text = String::from_utf8(output).expect("frames are UTF-8");
+    for line in text.lines() {
+        println!("{}", preview(line));
+    }
+
+    println!("\nsession: {} frames, {} solves, {} errors", stats.frames, stats.solves, stats.errors);
+    println!("service: {}", svc.metrics().summary());
+
+    let m = svc.metrics().snapshot();
+    assert!(m.factor_hits >= 1, "second dense solve should hit the factor cache");
+    println!(
+        "factor cache: {} miss(es), {} hit(s) — repeat traffic coalesced by fingerprint",
+        m.factor_misses, m.factor_hits
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+/// Long payload arrays make raw frames unreadable; elide the middle.
+fn preview(line: &str) -> String {
+    const LIMIT: usize = 160;
+    if line.len() <= LIMIT {
+        return line.to_string();
+    }
+    let mut head = LIMIT / 2;
+    while !line.is_char_boundary(head) {
+        head -= 1;
+    }
+    let mut tail = line.len() - LIMIT / 2;
+    while !line.is_char_boundary(tail) {
+        tail += 1;
+    }
+    format!("{} …[{} bytes]… {}", &line[..head], line.len(), &line[tail..])
+}

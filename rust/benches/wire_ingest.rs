@@ -1,0 +1,165 @@
+//! Wire ingest throughput: streaming scanner vs tree parse on
+//! ~1M-nonzero matrix payloads.
+//!
+//! Two implementations of "NDJSON line → solver-ready matrix":
+//!
+//! * `scan`  — `wire::codec::decode_request`: scanner events routed
+//!   straight into flat buffers, fingerprint hashed in-stream;
+//! * `tree`  — `util::json::Json::parse` followed by a tree walk into
+//!   the same matrix types (what the wire layer would have been without
+//!   the scanner; kept here as the measured baseline).
+//!
+//! Cases: dense 1000×1000 (1M floats inline) and sparse n=200 000 with
+//! ~5 nnz/row (~1M triplet entries). Writes the standard bench report
+//! and a repo-level `BENCH_wire.json` summary.
+//!
+//! ```sh
+//! cargo bench --bench wire_ingest     # or: cargo run --release --bin ...
+//! ```
+
+use std::time::Duration;
+
+use ebv_solve::bench::{Bencher, Report};
+use ebv_solve::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, rhs, GenSeed};
+use ebv_solve::matrix::{CooMatrix, DenseMatrix};
+use ebv_solve::util::json::Json;
+use ebv_solve::wire::{decode_request, encode_request, RequestFrame, WireMatrix, WireSolve};
+
+/// Tree-parse baseline: full `Json` materialization, then ingest.
+fn tree_ingest_dense(line: &str) -> DenseMatrix {
+    let doc = Json::parse(line).expect("payload parses");
+    let rows = doc.require("rows").unwrap().as_usize().unwrap();
+    let cols = doc.require("cols").unwrap().as_usize().unwrap();
+    let values: Vec<f64> =
+        doc.require("values").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+    DenseMatrix::from_vec(rows, cols, values).unwrap()
+}
+
+fn tree_ingest_sparse(line: &str) -> ebv_solve::matrix::CsrMatrix {
+    let doc = Json::parse(line).expect("payload parses");
+    let rows = doc.require("rows").unwrap().as_usize().unwrap();
+    let cols = doc.require("cols").unwrap().as_usize().unwrap();
+    let ri = doc.require("row").unwrap().as_arr().unwrap();
+    let ci = doc.require("col").unwrap().as_arr().unwrap();
+    let vv = doc.require("val").unwrap().as_arr().unwrap();
+    let mut coo = CooMatrix::new(rows, cols);
+    for ((i, j), v) in ri.iter().zip(ci.iter()).zip(vv.iter()) {
+        coo.push(i.as_usize().unwrap(), j.as_usize().unwrap(), v.as_f64().unwrap()).unwrap();
+    }
+    coo.to_csr()
+}
+
+fn mb(bytes: usize) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+fn main() {
+    let mut report = Report::new("Wire ingest — streaming scan vs tree parse");
+    report.set_headers(&["case", "payload", "tree parse, s", "stream scan, s", "scan MB/s", "speedup"]);
+
+    let bencher = Bencher {
+        min_iters: 3,
+        max_iters: 12,
+        target_time: Duration::from_millis(600),
+        warmup_iters: 1,
+    };
+
+    let mut results = Vec::new();
+
+    // ---- dense: 1000×1000 = 1M floats inline ------------------------------
+    {
+        let n = 1000;
+        let a = diag_dominant_dense(n, GenSeed(71));
+        let line =
+            encode_request(&RequestFrame::Solve(WireSolve::dense(a.clone(), rhs(n, GenSeed(72)))));
+        println!("dense case: n={n}, payload {:.1} MiB", mb(line.len()));
+
+        let t_tree = bencher.run("dense-tree-parse", || tree_ingest_dense(&line));
+        let t_scan = bencher.run("dense-stream-scan", || decode_request(&line).unwrap());
+
+        // Both paths must produce the same matrix.
+        let RequestFrame::Solve(ws) = decode_request(&line).unwrap() else { unreachable!() };
+        let WireMatrix::Dense(scanned) = ws.matrix else { unreachable!() };
+        assert_eq!(scanned, tree_ingest_dense(&line));
+        assert_eq!(scanned, a);
+
+        let speedup = t_tree.median / t_scan.median;
+        report.push_row(vec![
+            "dense 1000x1000".into(),
+            format!("{:.1} MiB", mb(line.len())),
+            format!("{:.4}", t_tree.median),
+            format!("{:.4}", t_scan.median),
+            format!("{:.1}", mb(line.len()) / t_scan.median),
+            format!("{speedup:.2}x"),
+        ]);
+        results.push(("dense_1m_values", line.len(), t_tree.median, t_scan.median));
+        report.push_stats(t_tree);
+        report.push_stats(t_scan);
+    }
+
+    // ---- sparse: n=200k, ~5 nnz/row ≈ 1M triplets --------------------------
+    {
+        let n = 200_000;
+        let a = diag_dominant_sparse(n, 5, GenSeed(73));
+        println!("sparse case: n={n}, nnz={}", a.nnz());
+        let line =
+            encode_request(&RequestFrame::SolveSparse(WireSolve::sparse(a, rhs(n, GenSeed(74)))));
+        println!("sparse payload {:.1} MiB", mb(line.len()));
+
+        let t_tree = bencher.run("sparse-tree-parse", || tree_ingest_sparse(&line));
+        let t_scan = bencher.run("sparse-stream-scan", || decode_request(&line).unwrap());
+
+        let RequestFrame::SolveSparse(ws) = decode_request(&line).unwrap() else { unreachable!() };
+        let WireMatrix::Sparse(scanned) = ws.matrix else { unreachable!() };
+        assert_eq!(scanned, tree_ingest_sparse(&line));
+
+        let speedup = t_tree.median / t_scan.median;
+        report.push_row(vec![
+            "sparse 200k (~1M nnz)".into(),
+            format!("{:.1} MiB", mb(line.len())),
+            format!("{:.4}", t_tree.median),
+            format!("{:.4}", t_scan.median),
+            format!("{:.1}", mb(line.len()) / t_scan.median),
+            format!("{speedup:.2}x"),
+        ]);
+        results.push(("sparse_1m_nnz", line.len(), t_tree.median, t_scan.median));
+        report.push_stats(t_tree);
+        report.push_stats(t_scan);
+    }
+
+    println!("{}", report.render());
+    if let Ok(p) = report.write_json() {
+        println!("report: {}", p.display());
+    }
+
+    // Repo-level summary the docs reference (BENCH_wire.json).
+    let doc = Json::obj([
+        ("bench", Json::from("wire_ingest")),
+        ("status", Json::from("measured")),
+        (
+            "cases",
+            Json::arr(results.iter().map(|(name, bytes, tree_s, scan_s)| {
+                Json::obj([
+                    ("name", Json::from(*name)),
+                    ("payload_bytes", Json::from(*bytes)),
+                    ("tree_parse_median_s", Json::from(*tree_s)),
+                    ("stream_scan_median_s", Json::from(*scan_s)),
+                    ("scan_mb_per_s", Json::from(mb(*bytes) / *scan_s)),
+                    ("speedup_tree_over_scan", Json::from(*tree_s / *scan_s)),
+                ])
+            })),
+        ),
+    ]);
+    if std::fs::write("BENCH_wire.json", doc.emit_pretty()).is_ok() {
+        println!("wrote BENCH_wire.json");
+    }
+
+    // Direction check: streaming ingest must not lose to full tree
+    // materialization on either payload.
+    for (name, _, tree_s, scan_s) in &results {
+        assert!(
+            scan_s <= tree_s,
+            "{name}: streaming scan ({scan_s:.4}s) slower than tree parse ({tree_s:.4}s)"
+        );
+    }
+}

@@ -96,9 +96,15 @@ COMMANDS:
               --solver seq|ebv|blocked|gauss-jordan (default ebv)
               --lanes <k>                   (default #cpus)
               --seed <u64>                  (default 7)
-    serve     Run the solver service on a synthetic trace
-              --requests <k> --rate <r/s> --lanes <k> --batch <k>
+    serve     Serve solves over the NDJSON wire protocol on stdin/stdout
+              (see README.md §Wire protocol for the frame format)
+              --lanes <k> --batch <k> --window-us <µs> --queue <k>
+              --allow-mtx-path              (let frames reference local
+                                             .mtx files; trusted peers only)
               --runtime                     (use PJRT artifacts)
+              --trace                       (replay a synthetic trace
+                                             instead of serving stdio)
+              --requests <k> --rate <r/s>   (trace mode volume)
     tables    Regenerate the paper's tables via the cost model
               --table 1|2|3|all             (default all)
     schedule  Print equalization diagnostics for a size

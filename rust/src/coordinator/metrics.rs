@@ -69,6 +69,25 @@ impl LatencyHistogram {
     }
 }
 
+/// Point-in-time copy of the service counters, detached from the
+/// atomics so it can be carried in wire frames and compared in tests.
+/// Produced by [`ServiceMetrics::snapshot`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub factor_hits: u64,
+    pub factor_misses: u64,
+    pub mean_batch: f64,
+    pub lat_mean_s: f64,
+    pub lat_p50_s: f64,
+    pub lat_p99_s: f64,
+}
+
 /// All service-level metrics.
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
@@ -107,6 +126,25 @@ impl ServiceMetrics {
             return 0.0;
         }
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Snapshot the counters (individually `Relaxed`-loaded; a snapshot
+    /// taken under traffic is approximate, like any metrics scrape).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            factor_hits: self.factor_hits.load(Ordering::Relaxed),
+            factor_misses: self.factor_misses.load(Ordering::Relaxed),
+            mean_batch: self.mean_batch_size(),
+            lat_mean_s: self.latency.mean(),
+            lat_p50_s: self.latency.quantile(0.5),
+            lat_p99_s: self.latency.quantile(0.99),
+        }
     }
 
     /// One-line human summary for service logs and examples.
@@ -168,6 +206,24 @@ mod tests {
         let counts = m.backend_counts();
         assert!(counts.contains(&("ebv", 2)));
         assert!(counts.contains(&("pjrt", 1)));
+    }
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = ServiceMetrics::default();
+        m.submitted.store(7, Ordering::Relaxed);
+        m.factor_hits.store(3, Ordering::Relaxed);
+        m.factor_misses.store(1, Ordering::Relaxed);
+        m.latency.observe(1e-3);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 7);
+        assert_eq!(s.factor_hits, 3);
+        assert_eq!(s.factor_misses, 1);
+        assert!(s.lat_mean_s > 0.0);
+        // Snapshots are detached: mutating the live metrics afterwards
+        // does not change the copy.
+        m.submitted.store(100, Ordering::Relaxed);
+        assert_eq!(s.submitted, 7);
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod trace;
 pub mod worker;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use metrics::ServiceMetrics;
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use request::{Payload, SolveRequest, SolveResponse, Timings};
 pub use router::{Backend, Router};
 pub use service::{ServiceHandle, SolverService};

@@ -50,7 +50,10 @@ pub struct SolveRequest {
     pub payload: Payload,
     /// Identifies the coefficient matrix across requests: requests with
     /// equal keys share `A` and are batched into one factorization.
-    /// `None` disables batching for this request.
+    /// `None` disables batching for this request. Wire-layer requests
+    /// get this auto-populated with a streaming content fingerprint
+    /// (see `wire::fingerprint`), so remote repeat traffic coalesces
+    /// without clients choosing keys.
     pub matrix_key: Option<u64>,
     pub submitted_at: Instant,
 }
@@ -108,6 +111,11 @@ pub struct SolveResponse {
 }
 
 impl SolveResponse {
+    /// Whether the solve succeeded.
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+
     pub fn failed(id: u64, err: String, backend: &'static str) -> Self {
         SolveResponse {
             id,
@@ -140,6 +148,13 @@ mod tests {
         let p = Payload::Dense { a, b: vec![1.0, 2.0, 3.0] };
         assert_eq!(p.residual(&[1.0, 2.0, 3.0]), 0.0);
         assert_eq!(p.residual(&[0.0, 2.0, 3.0]), 1.0);
+    }
+
+    #[test]
+    fn response_ok_accessor() {
+        let failed = SolveResponse::failed(1, "boom".into(), "native-ebv");
+        assert!(!failed.is_ok());
+        assert!(failed.residual.is_nan());
     }
 
     #[test]

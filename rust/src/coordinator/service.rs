@@ -1,5 +1,10 @@
 //! The assembled solve service: ingress with backpressure, batching
 //! thread, worker pool, optional PJRT runtime.
+//!
+//! In-process callers hold a [`ServiceHandle`] directly; remote callers
+//! go through the [`wire`](crate::wire) layer, whose session loop
+//! borrows the same handle — one warmed-up service (and its
+//! `FactorCache`) can outlive many wire sessions.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -237,6 +242,18 @@ impl ServiceHandle {
         rx.recv().map_err(|_| EbvError::Coordinator("service dropped the request".into()))
     }
 
+    /// Convenience: submit a sparse system and wait (the wire server's
+    /// sparse path, mirroring [`ServiceHandle::solve_dense_blocking`]).
+    pub fn solve_sparse_blocking(
+        &self,
+        a: Arc<CsrMatrix>,
+        b: Vec<f64>,
+        matrix_key: Option<u64>,
+    ) -> Result<SolveResponse> {
+        let rx = self.submit_sparse(a, b, matrix_key)?;
+        rx.recv().map_err(|_| EbvError::Coordinator("service dropped the request".into()))
+    }
+
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.metrics
     }
@@ -354,6 +371,17 @@ mod tests {
             svc.metrics().rejected.load(Ordering::Relaxed),
             rejected as u64
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sparse_blocking_convenience_solves() {
+        let svc = SolverService::start(test_cfg()).unwrap();
+        let a = Arc::new(diag_dominant_sparse(32, 4, GenSeed(90)));
+        let resp = svc.solve_sparse_blocking(a, vec![1.0; 32], Some(11)).unwrap();
+        assert!(resp.result.is_ok());
+        assert!(resp.residual < 1e-9);
+        assert_eq!(resp.backend, "native-sparse");
         svc.shutdown();
     }
 

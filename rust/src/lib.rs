@@ -21,6 +21,11 @@
 //!   artifacts (`artifacts/*.hlo.txt`);
 //! * [`coordinator`] — the L3 solve service: routing, dynamic batching,
 //!   leader/worker lanes, backpressure and metrics;
+//! * [`wire`] — the L4 serving surface: a streaming NDJSON solve
+//!   protocol (`ebv-solve serve`) whose zero-tree scanner ingests
+//!   million-float matrix payloads straight into solver buffers and
+//!   auto-keys repeat traffic into the factor cache via streaming
+//!   FNV-1a content fingerprints;
 //! * [`bench`], [`workload`], [`testutil`] — measurement harness,
 //!   request-trace generation and a property-testing mini-framework
 //!   (offline substitutes for criterion / proptest).
@@ -39,6 +44,23 @@
 //! let r = a.residual(&x, &b);
 //! assert!(r < 1e-8);
 //! ```
+//!
+//! Serving the same solve over the wire protocol (README.md documents
+//! the NDJSON session format):
+//!
+//! ```
+//! use ebv_solve::config::ServiceConfig;
+//! use ebv_solve::coordinator::SolverService;
+//! use ebv_solve::wire::serve_session;
+//!
+//! let svc = SolverService::start(ServiceConfig::default()).unwrap();
+//! let input = "{\"op\":\"solve\",\"rows\":2,\"values\":[4,1,1,3],\"b\":[1,2]}\n\
+//!              {\"op\":\"shutdown\"}\n";
+//! let mut output = Vec::new();
+//! let stats = serve_session(&svc, input.as_bytes(), &mut output).unwrap();
+//! assert_eq!(stats.solves, 1);
+//! svc.shutdown();
+//! ```
 
 pub mod bench;
 pub mod cli;
@@ -52,6 +74,7 @@ pub mod runtime;
 pub mod solver;
 pub mod testutil;
 pub mod util;
+pub mod wire;
 pub mod workload;
 
 /// Crate-wide error type (thin wrapper over the module errors).

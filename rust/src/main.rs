@@ -21,6 +21,7 @@ use ebv_solve::matrix::generate::{
 use ebv_solve::runtime::Manifest;
 use ebv_solve::solver::{solver_by_name, SparseLu};
 use ebv_solve::util::fmt;
+use ebv_solve::wire::{serve_session_with, DecodeOptions, SessionOptions};
 use ebv_solve::workload::{generate_trace, SystemKind, TraceSpec};
 
 fn main() {
@@ -112,6 +113,40 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
+    if args.flag("trace") {
+        return cmd_serve_trace(args);
+    }
+    // Default: the NDJSON wire session on stdin/stdout. Diagnostics go
+    // to stderr so stdout stays a clean frame stream.
+    let cfg = ServiceConfig {
+        lanes: args.opt_parsed("lanes", 4usize)?,
+        max_batch: args.opt_parsed("batch", 16usize)?,
+        batch_window_us: args.opt_parsed("window-us", 200u64)?,
+        queue_capacity: args.opt_parsed("queue", 1024usize)?,
+        use_runtime: args.flag("runtime"),
+        ..ServiceConfig::default()
+    };
+    let svc = SolverService::start(cfg)?;
+    let opts = SessionOptions {
+        decode: DecodeOptions { allow_mtx_path: args.flag("allow-mtx-path") },
+    };
+    eprintln!(
+        "ebv-solve serve: NDJSON wire session on stdin/stdout \
+         (send {{\"op\":\"shutdown\"}} or EOF to end)"
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let stats = serve_session_with(&svc, stdin.lock(), stdout.lock(), opts)?;
+    eprintln!(
+        "session done: {} frames, {} solves, {} errors",
+        stats.frames, stats.solves, stats.errors
+    );
+    eprintln!("metrics: {}", svc.metrics().summary());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_serve_trace(args: &Args) -> ebv_solve::Result<()> {
     let requests = args.opt_parsed("requests", 200usize)?;
     let rate = args.opt_parsed("rate", 500.0f64)?;
     let lanes = args.opt_parsed("lanes", 4usize)?;

@@ -22,9 +22,12 @@ pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix> {
 pub fn parse_matrix_market<R: BufRead>(reader: R) -> Result<CsrMatrix> {
     let mut lines = reader.lines();
 
+    // An empty file is a malformed input, not a JSON problem — report it
+    // in the same error class as every other header defect so callers
+    // (and wire-protocol error frames) classify it correctly.
     let header = lines
         .next()
-        .ok_or_else(|| EbvError::Json("empty MatrixMarket file".into()))
+        .ok_or_else(|| EbvError::Config("empty MatrixMarket file".into()))
         .and_then(|l| l.map_err(|e| EbvError::io("read header", e)))?;
     let head_lc = header.to_ascii_lowercase();
     if !head_lc.starts_with("%%matrixmarket") {
@@ -158,6 +161,15 @@ mod tests {
         let m = parse_matrix_market(Cursor::new(text)).unwrap();
         assert_eq!(m.get(0, 1), -1.0);
         assert_eq!(m.get(1, 0), -1.0);
+    }
+
+    #[test]
+    fn empty_file_is_a_config_error_not_json() {
+        // Regression: this used to surface as `EbvError::Json`, which
+        // misled callers into treating a truncated .mtx as a JSON bug.
+        let err = parse_matrix_market(Cursor::new("")).unwrap_err();
+        assert!(matches!(err, EbvError::Config(_)), "got {err:?}");
+        assert!(err.to_string().contains("empty MatrixMarket"), "{err}");
     }
 
     #[test]

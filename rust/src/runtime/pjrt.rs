@@ -4,105 +4,178 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `compile` → `execute`. All programs are lowered with
 //! `return_tuple=True`, so outputs are unpacked from a tuple literal.
+//!
+//! The real client needs the external `xla` crate, which cannot be
+//! vendored offline; it is compiled only under the `pjrt` cargo
+//! feature. Without it this module exposes the same API but
+//! `PjrtRuntime::cpu()` fails with a descriptive error, which the
+//! executor surfaces as "runtime unavailable" — the service then runs
+//! every request on the native backends.
 
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::Path;
 
-use crate::runtime::artifacts::ArtifactEntry;
-use crate::util::error::{EbvError, Result};
+    use crate::runtime::artifacts::ArtifactEntry;
+    use crate::util::error::{EbvError, Result};
 
-/// A PJRT client (CPU platform in this environment).
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<PjrtRuntime> {
-        Ok(PjrtRuntime { client: xla::PjRtClient::cpu()? })
+    /// A PJRT client (CPU platform in this environment).
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile one artifact.
-    pub fn load(&self, entry: &ArtifactEntry, path: &Path) -> Result<LoadedKernel> {
-        if !path.exists() {
-            return Err(EbvError::Runtime(format!(
-                "artifact file missing: {} (run `make artifacts`)",
-                path.display()
-            )));
+    impl PjrtRuntime {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<PjrtRuntime> {
+            Ok(PjrtRuntime { client: xla::PjRtClient::cpu()? })
         }
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(LoadedKernel { entry: entry.clone(), exe })
-    }
-}
 
-/// One compiled program plus its manifest entry (for shape checking).
-pub struct LoadedKernel {
-    entry: ArtifactEntry,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl LoadedKernel {
-    pub fn entry(&self) -> &ArtifactEntry {
-        &self.entry
-    }
-
-    /// Execute with f32 inputs, validating shapes against the manifest.
-    /// Returns the flattened f32 outputs in manifest order.
-    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        if inputs.len() != self.entry.inputs.len() {
-            return Err(EbvError::Runtime(format!(
-                "{}: expected {} inputs, got {}",
-                self.entry.name,
-                self.entry.inputs.len(),
-                inputs.len()
-            )));
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, data) in inputs.iter().enumerate() {
-            let want = self.entry.input_elems(i);
-            if data.len() != want {
+
+        /// Load and compile one artifact.
+        pub fn load(&self, entry: &ArtifactEntry, path: &Path) -> Result<LoadedKernel> {
+            if !path.exists() {
                 return Err(EbvError::Runtime(format!(
-                    "{}: input {i} has {} elements, expected {want}",
-                    self.entry.name,
-                    data.len()
+                    "artifact file missing: {} (run `make artifacts`)",
+                    path.display()
                 )));
             }
-            let dims: Vec<i64> = self.entry.inputs[i].iter().map(|&d| d as i64).collect();
-            // Integer inputs (e.g. the SpMV column-index array) arrive as
-            // f32 host data and are converted per the manifest dtype.
-            let lit = match self.entry.input_dtypes.get(i).map(String::as_str) {
-                Some("i32") => {
-                    let ints: Vec<i32> = data.iter().map(|&v| v as i32).collect();
-                    xla::Literal::vec1(&ints).reshape(&dims)?
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(LoadedKernel { entry: entry.clone(), exe })
+        }
+    }
+
+    /// One compiled program plus its manifest entry (for shape checking).
+    pub struct LoadedKernel {
+        entry: ArtifactEntry,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl LoadedKernel {
+        pub fn entry(&self) -> &ArtifactEntry {
+            &self.entry
+        }
+
+        /// Execute with f32 inputs, validating shapes against the manifest.
+        /// Returns the flattened f32 outputs in manifest order.
+        pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            if inputs.len() != self.entry.inputs.len() {
+                return Err(EbvError::Runtime(format!(
+                    "{}: expected {} inputs, got {}",
+                    self.entry.name,
+                    self.entry.inputs.len(),
+                    inputs.len()
+                )));
+            }
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (i, data) in inputs.iter().enumerate() {
+                let want = self.entry.input_elems(i);
+                if data.len() != want {
+                    return Err(EbvError::Runtime(format!(
+                        "{}: input {i} has {} elements, expected {want}",
+                        self.entry.name,
+                        data.len()
+                    )));
                 }
-                _ => xla::Literal::vec1(data).reshape(&dims)?,
-            };
-            literals.push(lit);
+                let dims: Vec<i64> = self.entry.inputs[i].iter().map(|&d| d as i64).collect();
+                // Integer inputs (e.g. the SpMV column-index array) arrive as
+                // f32 host data and are converted per the manifest dtype.
+                let lit = match self.entry.input_dtypes.get(i).map(String::as_str) {
+                    Some("i32") => {
+                        let ints: Vec<i32> = data.iter().map(|&v| v as i32).collect();
+                        xla::Literal::vec1(&ints).reshape(&dims)?
+                    }
+                    _ => xla::Literal::vec1(data).reshape(&dims)?,
+                };
+                literals.push(lit);
+            }
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let out_literal = result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| EbvError::Runtime("empty execution result".into()))?
+                .to_literal_sync()?;
+            // Programs are lowered with return_tuple=True.
+            let parts = out_literal.to_tuple()?;
+            if parts.len() != self.entry.outputs.len() {
+                return Err(EbvError::Runtime(format!(
+                    "{}: got {} outputs, manifest says {}",
+                    self.entry.name,
+                    parts.len(),
+                    self.entry.outputs.len()
+                )));
+            }
+            parts.into_iter().map(|p| p.to_vec::<f32>().map_err(Into::into)).collect()
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let out_literal = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| EbvError::Runtime("empty execution result".into()))?
-            .to_literal_sync()?;
-        // Programs are lowered with return_tuple=True.
-        let parts = out_literal.to_tuple()?;
-        if parts.len() != self.entry.outputs.len() {
-            return Err(EbvError::Runtime(format!(
-                "{}: got {} outputs, manifest says {}",
-                self.entry.name,
-                parts.len(),
-                self.entry.outputs.len()
-            )));
-        }
-        parts.into_iter().map(|p| p.to_vec::<f32>().map_err(Into::into)).collect()
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use crate::runtime::artifacts::ArtifactEntry;
+    use crate::util::error::{EbvError, Result};
+
+    fn unavailable() -> EbvError {
+        EbvError::Runtime(
+            "PJRT support not compiled in (build with `--features pjrt` and the `xla` crate)"
+                .into(),
+        )
+    }
+
+    /// Stub PJRT client: construction always fails, so callers take the
+    /// native fallback paths.
+    pub struct PjrtRuntime {
+        _priv: (),
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            Err(unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load(&self, _entry: &ArtifactEntry, _path: &Path) -> Result<LoadedKernel> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub compiled program; never constructed.
+    pub struct LoadedKernel {
+        entry: ArtifactEntry,
+    }
+
+    impl LoadedKernel {
+        pub fn entry(&self) -> &ArtifactEntry {
+            &self.entry
+        }
+
+        pub fn run_f32(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Err(unavailable())
+        }
+    }
+}
+
+pub use imp::{LoadedKernel, PjrtRuntime};
 
 // Tests for this module live in `rust/tests/runtime_integration.rs`
 // because they need real artifacts produced by `make artifacts`.
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_fails_with_descriptive_error() {
+        let err = PjrtRuntime::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

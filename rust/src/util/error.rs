@@ -1,50 +1,71 @@
 //! Crate error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (offline substitute for
+//! `thiserror`) — the display strings are stable API, relied on by
+//! tests and by wire-protocol error frames.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by EBV-Solve's public API.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum EbvError {
     /// Matrix shape is invalid for the requested operation.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// The matrix violates a solver precondition (e.g. zero pivot on a
     /// non-pivoting path, or not diagonally dominant when required).
-    #[error("numeric precondition failed: {0}")]
     Numeric(String),
 
     /// A singular (or numerically singular) pivot was encountered.
-    #[error("singular pivot at step {step}: |{value}| < {tol}")]
     SingularPivot { step: usize, value: f64, tol: f64 },
 
     /// Artifact registry / runtime failures (missing HLO, compile error).
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// Coordinator-level failures (queue closed, request rejected).
-    #[error("coordinator: {0}")]
     Coordinator(String),
 
     /// Configuration / CLI parse errors.
-    #[error("config: {0}")]
     Config(String),
 
-    /// JSON parse errors (manifest, traces, reports).
-    #[error("json: {0}")]
+    /// JSON parse errors (manifest, traces, reports, wire frames).
     Json(String),
 
     /// I/O errors with context.
-    #[error("io: {context}: {source}")]
     Io {
         context: String,
-        #[source]
         source: std::io::Error,
     },
 
     /// XLA/PJRT errors from the `xla` crate.
-    #[error("xla: {0}")]
     Xla(String),
+}
+
+impl fmt::Display for EbvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EbvError::Shape(s) => write!(f, "shape mismatch: {s}"),
+            EbvError::Numeric(s) => write!(f, "numeric precondition failed: {s}"),
+            EbvError::SingularPivot { step, value, tol } => {
+                write!(f, "singular pivot at step {step}: |{value}| < {tol}")
+            }
+            EbvError::Runtime(s) => write!(f, "runtime: {s}"),
+            EbvError::Coordinator(s) => write!(f, "coordinator: {s}"),
+            EbvError::Config(s) => write!(f, "config: {s}"),
+            EbvError::Json(s) => write!(f, "json: {s}"),
+            EbvError::Io { context, source } => write!(f, "io: {context}: {source}"),
+            EbvError::Xla(s) => write!(f, "xla: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for EbvError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EbvError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl EbvError {
@@ -54,6 +75,7 @@ impl EbvError {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for EbvError {
     fn from(e: xla::Error) -> Self {
         EbvError::Xla(e.to_string())
@@ -79,5 +101,13 @@ mod tests {
     fn io_error_carries_context() {
         let e = EbvError::io("reading manifest", std::io::Error::other("boom"));
         assert!(e.to_string().contains("reading manifest"));
+    }
+
+    #[test]
+    fn io_error_exposes_source() {
+        use std::error::Error as _;
+        let e = EbvError::io("ctx", std::io::Error::other("boom"));
+        assert!(e.source().is_some());
+        assert!(EbvError::Config("x".into()).source().is_none());
     }
 }

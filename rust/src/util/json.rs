@@ -225,7 +225,10 @@ fn emit_num(x: f64, out: &mut String) {
     }
 }
 
-fn emit_str(s: &str, out: &mut String) {
+/// Emit a JSON string literal (quoted, escaped) into `out`. Public so
+/// streaming emitters (the wire codec) can escape without building a
+/// `Json` tree.
+pub fn emit_str(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {

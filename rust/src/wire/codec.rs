@@ -1,0 +1,860 @@
+//! NDJSON frame codec: one JSON object per line, scanned — never
+//! tree-parsed — on the way in.
+//!
+//! Decoding pulls [`Scanner`](super::scanner::Scanner) events and
+//! routes `values`/`row`/`col`/`val`/`b` arrays straight into flat
+//! `Vec` buffers, hashing matrix content with FNV-1a as the numbers
+//! stream by (see [`super::fingerprint`]). Field order on the wire is
+//! free (JSON objects are unordered) and unknown fields are skipped,
+//! so the protocol is forward-extensible.
+//!
+//! Request schema (`op` selects the frame):
+//!
+//! ```text
+//! {"op":"solve",        "rows":N,["cols":N,] "values":[row-major f64...],
+//!                       "b":[f64...], ["id":u64,] ["key":u64,] ["no_cache":bool]}
+//! {"op":"solve_sparse", "rows":N,"cols":N, "row":[i...],"col":[j...],"val":[v...],
+//!                       "b":[f64...], ...}               // COO triplets, any order
+//! {"op":"solve_sparse", "mtx_path":"path.mtx", "b":[f64...], ...}
+//! {"op":"metrics"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Response schema mirrors [`ResponseFrame`]; see `README.md` for a
+//! copy-pasteable session.
+
+use std::fmt::Write as _;
+use std::io::BufRead;
+
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::request::Timings;
+use crate::matrix::{io as matrix_io, CooMatrix, DenseMatrix};
+use crate::util::error::{EbvError, Result};
+use crate::util::json::emit_str;
+use crate::wire::fingerprint::{combine_dense, fingerprint_csr, Fnv1a};
+use crate::wire::frame::{RequestFrame, ResponseFrame, WireMatrix, WireSolve, WireSolution};
+use crate::wire::scanner::{Event, Scanner};
+
+// ---- decoding --------------------------------------------------------------
+
+fn jerr(msg: impl Into<String>) -> EbvError {
+    EbvError::Json(msg.into())
+}
+
+/// Convert a JSON number to a non-negative integer field.
+fn as_index(x: f64, field: &str) -> Result<u64> {
+    if x >= 0.0 && x.fract() == 0.0 && x <= 2f64.powi(53) {
+        Ok(x as u64)
+    } else {
+        Err(jerr(format!("field `{field}`: expected a non-negative integer, got {x}")))
+    }
+}
+
+/// Pull events for one member value and discard them (unknown field).
+fn skip_value<R: BufRead>(sc: &mut Scanner<R>) -> Result<()> {
+    let mut depth = 0usize;
+    loop {
+        match sc.next_event()?.ok_or_else(|| jerr("unexpected end of frame"))? {
+            Event::ObjectStart | Event::ArrayStart => depth += 1,
+            Event::ObjectEnd | Event::ArrayEnd => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(());
+                }
+            }
+            _ => {
+                if depth == 0 {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// Stream a `[f64...]` member into `out`, hashing each element.
+fn read_f64_array<R: BufRead>(
+    sc: &mut Scanner<R>,
+    out: &mut Vec<f64>,
+    hash: &mut Fnv1a,
+    field: &str,
+) -> Result<()> {
+    match sc.next_event()? {
+        Some(Event::ArrayStart) => {}
+        _ => return Err(jerr(format!("field `{field}`: expected an array"))),
+    }
+    loop {
+        match sc.next_event()?.ok_or_else(|| jerr("unexpected end of frame"))? {
+            Event::Num(x) => {
+                hash.write_f64(x);
+                out.push(x);
+            }
+            Event::ArrayEnd => return Ok(()),
+            other => {
+                return Err(jerr(format!("field `{field}`: expected numbers, got {other:?}")))
+            }
+        }
+    }
+}
+
+/// Stream a `[usize...]` member into `out`.
+fn read_index_array<R: BufRead>(
+    sc: &mut Scanner<R>,
+    out: &mut Vec<usize>,
+    field: &str,
+) -> Result<()> {
+    match sc.next_event()? {
+        Some(Event::ArrayStart) => {}
+        _ => return Err(jerr(format!("field `{field}`: expected an array"))),
+    }
+    loop {
+        match sc.next_event()?.ok_or_else(|| jerr("unexpected end of frame"))? {
+            Event::Num(x) => out.push(as_index(x, field)? as usize),
+            Event::ArrayEnd => return Ok(()),
+            other => {
+                return Err(jerr(format!("field `{field}`: expected indices, got {other:?}")))
+            }
+        }
+    }
+}
+
+fn expect_num<R: BufRead>(sc: &mut Scanner<R>, field: &str) -> Result<f64> {
+    match sc.next_event()? {
+        Some(Event::Num(x)) => Ok(x),
+        other => Err(jerr(format!("field `{field}`: expected a number, got {other:?}"))),
+    }
+}
+
+fn expect_str<R: BufRead>(sc: &mut Scanner<R>, field: &str) -> Result<String> {
+    match sc.next_event()? {
+        Some(Event::Str(s)) => Ok(s),
+        other => Err(jerr(format!("field `{field}`: expected a string, got {other:?}"))),
+    }
+}
+
+fn expect_bool<R: BufRead>(sc: &mut Scanner<R>, field: &str) -> Result<bool> {
+    match sc.next_event()? {
+        Some(Event::Bool(b)) => Ok(b),
+        other => Err(jerr(format!("field `{field}`: expected a bool, got {other:?}"))),
+    }
+}
+
+/// Decode-time policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeOptions {
+    /// Permit `mtx_path` references, which make the decoder read a
+    /// server-local file named by the client. Off by default: only
+    /// enable when every session peer is trusted with the server's
+    /// filesystem (the CLI exposes `--allow-mtx-path`).
+    pub allow_mtx_path: bool,
+}
+
+impl Default for DecodeOptions {
+    fn default() -> Self {
+        DecodeOptions { allow_mtx_path: false }
+    }
+}
+
+/// Accumulated request fields; arrays land here directly from the scan.
+#[derive(Default)]
+struct ReqAcc {
+    op: Option<String>,
+    id: Option<u64>,
+    rows: Option<usize>,
+    cols: Option<usize>,
+    values: Option<Vec<f64>>,
+    row: Option<Vec<usize>>,
+    col: Option<Vec<usize>>,
+    val: Option<Vec<f64>>,
+    b: Option<Vec<f64>>,
+    key: Option<u64>,
+    no_cache: bool,
+    mtx_path: Option<String>,
+    /// Streaming hash of `values` in arrival (row-major) order.
+    values_hash: Fnv1a,
+}
+
+/// Decode one request line with default (restrictive) options.
+pub fn decode_request(line: &str) -> Result<RequestFrame> {
+    decode_request_with(line, &DecodeOptions::default())
+}
+
+/// Decode one request line. The scanner runs over the raw bytes; large
+/// payload arrays are ingested without constructing a `Json` tree.
+pub fn decode_request_with(line: &str, opts: &DecodeOptions) -> Result<RequestFrame> {
+    let mut sc = Scanner::new(line.as_bytes());
+    match sc.next_event()? {
+        Some(Event::ObjectStart) => {}
+        _ => return Err(jerr("request frame must be a JSON object")),
+    }
+
+    let mut acc = ReqAcc::default();
+    loop {
+        match sc.next_event()?.ok_or_else(|| jerr("unexpected end of frame"))? {
+            Event::ObjectEnd => break,
+            Event::Key(k) => match k.as_str() {
+                "op" => acc.op = Some(expect_str(&mut sc, "op")?),
+                "id" => acc.id = Some(as_index(expect_num(&mut sc, "id")?, "id")?),
+                "rows" => {
+                    acc.rows = Some(as_index(expect_num(&mut sc, "rows")?, "rows")? as usize)
+                }
+                "cols" => {
+                    acc.cols = Some(as_index(expect_num(&mut sc, "cols")?, "cols")? as usize)
+                }
+                "key" => acc.key = Some(as_index(expect_num(&mut sc, "key")?, "key")?),
+                "no_cache" => acc.no_cache = expect_bool(&mut sc, "no_cache")?,
+                "mtx_path" => acc.mtx_path = Some(expect_str(&mut sc, "mtx_path")?),
+                "values" => {
+                    // Last duplicate member wins (matching the tree
+                    // parser); restart the hash so the fingerprint
+                    // always describes the values actually kept.
+                    acc.values_hash = Fnv1a::new();
+                    let mut v = Vec::new();
+                    read_f64_array(&mut sc, &mut v, &mut acc.values_hash, "values")?;
+                    acc.values = Some(v);
+                }
+                "row" => {
+                    let mut v = Vec::new();
+                    read_index_array(&mut sc, &mut v, "row")?;
+                    acc.row = Some(v);
+                }
+                "col" => {
+                    let mut v = Vec::new();
+                    read_index_array(&mut sc, &mut v, "col")?;
+                    acc.col = Some(v);
+                }
+                "val" => {
+                    let mut v = Vec::new();
+                    let mut scratch = Fnv1a::new();
+                    read_f64_array(&mut sc, &mut v, &mut scratch, "val")?;
+                    acc.val = Some(v);
+                }
+                "b" => {
+                    let mut v = Vec::new();
+                    let mut scratch = Fnv1a::new();
+                    read_f64_array(&mut sc, &mut v, &mut scratch, "b")?;
+                    acc.b = Some(v);
+                }
+                _ => skip_value(&mut sc)?,
+            },
+            other => return Err(jerr(format!("malformed request frame: {other:?}"))),
+        }
+    }
+    sc.finish()?;
+
+    match acc.op.as_deref() {
+        Some("metrics") => Ok(RequestFrame::Metrics),
+        Some("shutdown") => Ok(RequestFrame::Shutdown),
+        Some("solve") => build_dense(acc).map(RequestFrame::Solve),
+        Some("solve_sparse") => build_sparse(acc, opts).map(RequestFrame::SolveSparse),
+        Some(other) => Err(jerr(format!("unknown op `{other}`"))),
+        None => Err(jerr("request frame missing `op`")),
+    }
+}
+
+fn require<T>(v: Option<T>, field: &str) -> Result<T> {
+    v.ok_or_else(|| jerr(format!("missing required field `{field}`")))
+}
+
+fn build_dense(acc: ReqAcc) -> Result<WireSolve> {
+    let rows = require(acc.rows, "rows")?;
+    let cols = acc.cols.unwrap_or(rows);
+    let values = require(acc.values, "values")?;
+    let b = require(acc.b, "b")?;
+    // Checked: `rows`/`cols` are wire-supplied, and a wrapped multiply
+    // would let an absurd shape slip past the length check.
+    let expected = rows
+        .checked_mul(cols)
+        .ok_or_else(|| jerr(format!("rows*cols overflows: {rows}x{cols}")))?;
+    if values.len() != expected {
+        return Err(jerr(format!(
+            "`values` has {} elements, expected rows*cols = {expected}",
+            values.len(),
+        )));
+    }
+    if b.len() != rows {
+        return Err(jerr(format!("`b` has {} elements, expected rows = {rows}", b.len())));
+    }
+    // The hash streamed through during the `values` scan; combining it
+    // with the shape here matches `fingerprint_dense` exactly.
+    let fingerprint = combine_dense(rows, cols, acc.values_hash.finish());
+    let a = DenseMatrix::from_vec(rows, cols, values)
+        .map_err(|e| jerr(format!("dense payload: {e}")))?;
+    Ok(WireSolve {
+        id: acc.id,
+        matrix: WireMatrix::Dense(a),
+        b,
+        key: acc.key,
+        no_cache: acc.no_cache,
+        fingerprint,
+    })
+}
+
+fn build_sparse(acc: ReqAcc, opts: &DecodeOptions) -> Result<WireSolve> {
+    let b = require(acc.b, "b")?;
+    let a = if let Some(path) = &acc.mtx_path {
+        if !opts.allow_mtx_path {
+            return Err(jerr(
+                "`mtx_path` is disabled on this server (start with --allow-mtx-path)".to_string(),
+            ));
+        }
+        matrix_io::read_matrix_market(std::path::Path::new(path))?
+    } else {
+        let rows = require(acc.rows, "rows")?;
+        let cols = acc.cols.unwrap_or(rows);
+        // `rows` sizes the CSR row_ptr allocation; tie it to the inline
+        // `b` payload *before* assembly so one absurd frame can't
+        // allocate the server to death.
+        if b.len() != rows {
+            return Err(jerr(format!(
+                "`b` has {} elements, expected rows = {rows}",
+                b.len(),
+            )));
+        }
+        let ri = require(acc.row, "row")?;
+        let ci = require(acc.col, "col")?;
+        let vv = require(acc.val, "val")?;
+        if ri.len() != ci.len() || ri.len() != vv.len() {
+            return Err(jerr(format!(
+                "triplet arrays disagree: row={} col={} val={}",
+                ri.len(),
+                ci.len(),
+                vv.len()
+            )));
+        }
+        let mut coo = CooMatrix::new(rows, cols);
+        for ((i, j), v) in ri.into_iter().zip(ci).zip(vv) {
+            coo.push(i, j, v).map_err(|e| jerr(format!("triplet payload: {e}")))?;
+        }
+        coo.to_csr()
+    };
+    if b.len() != a.rows() {
+        return Err(jerr(format!(
+            "`b` has {} elements, expected rows = {}",
+            b.len(),
+            a.rows()
+        )));
+    }
+    // Hash the assembled CSR so triplet order on the wire cannot split
+    // the cache key for the same matrix.
+    let fingerprint = fingerprint_csr(&a);
+    Ok(WireSolve {
+        id: acc.id,
+        matrix: WireMatrix::Sparse(a),
+        b,
+        key: acc.key,
+        no_cache: acc.no_cache,
+        fingerprint,
+    })
+}
+
+// ---- encoding --------------------------------------------------------------
+
+/// Emit an f64 the same way `util::json` does: integral values without a
+/// fraction, everything else via Rust's shortest round-trip formatting.
+/// Non-finite values become `null` (only `residual` can legally be NaN).
+fn push_num(out: &mut String, x: f64) {
+    if x.is_finite() {
+        if x.fract() == 0.0 && x.abs() < 1e15 {
+            let _ = write!(out, "{}", x as i64);
+        } else {
+            let _ = write!(out, "{x}");
+        }
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn push_f64_array(out: &mut String, xs: &[f64]) {
+    out.push('[');
+    for (i, &x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_num(out, x);
+    }
+    out.push(']');
+}
+
+fn push_usize_array(out: &mut String, xs: impl IntoIterator<Item = usize>) {
+    out.push('[');
+    for (i, x) in xs.into_iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{x}");
+    }
+    out.push(']');
+}
+
+fn push_solve_common(out: &mut String, ws: &WireSolve) {
+    if let Some(id) = ws.id {
+        let _ = write!(out, ",\"id\":{id}");
+    }
+    out.push_str(",\"b\":");
+    push_f64_array(out, &ws.b);
+    if let Some(key) = ws.key {
+        let _ = write!(out, ",\"key\":{key}");
+    }
+    if ws.no_cache {
+        out.push_str(",\"no_cache\":true");
+    }
+}
+
+/// Encode a request frame as one NDJSON line (no trailing newline).
+/// Matrices are written element-by-element — no intermediate `Json`
+/// tree even for megabyte payloads.
+pub fn encode_request(frame: &RequestFrame) -> String {
+    let mut out = String::new();
+    match frame {
+        RequestFrame::Metrics => out.push_str("{\"op\":\"metrics\"}"),
+        RequestFrame::Shutdown => out.push_str("{\"op\":\"shutdown\"}"),
+        RequestFrame::Solve(ws) => {
+            let WireMatrix::Dense(a) = &ws.matrix else {
+                // Constructed only through WireSolve::dense/sparse, which
+                // keep op and matrix variant consistent.
+                unreachable!("Solve frame carries a dense matrix");
+            };
+            let _ = write!(out, "{{\"op\":\"solve\",\"rows\":{},\"cols\":{}", a.rows(), a.cols());
+            out.push_str(",\"values\":");
+            push_f64_array(&mut out, a.data());
+            push_solve_common(&mut out, ws);
+            out.push('}');
+        }
+        RequestFrame::SolveSparse(ws) => {
+            let WireMatrix::Sparse(a) = &ws.matrix else {
+                unreachable!("SolveSparse frame carries a CSR matrix");
+            };
+            let _ = write!(
+                out,
+                "{{\"op\":\"solve_sparse\",\"rows\":{},\"cols\":{}",
+                a.rows(),
+                a.cols()
+            );
+            out.push_str(",\"row\":");
+            push_usize_array(
+                &mut out,
+                (0..a.rows()).flat_map(|r| {
+                    let count = a.row_ptr()[r + 1] - a.row_ptr()[r];
+                    std::iter::repeat(r).take(count)
+                }),
+            );
+            out.push_str(",\"col\":");
+            push_usize_array(&mut out, a.col_idx().iter().copied());
+            out.push_str(",\"val\":");
+            push_f64_array(&mut out, a.values());
+            push_solve_common(&mut out, ws);
+            out.push('}');
+        }
+    }
+    out
+}
+
+/// Encode a response frame as one NDJSON line (no trailing newline).
+pub fn encode_response(frame: &ResponseFrame) -> String {
+    let mut out = String::new();
+    match frame {
+        ResponseFrame::Error { message } => {
+            out.push_str("{\"op\":\"error\",\"error\":");
+            emit_str(message, &mut out);
+            out.push('}');
+        }
+        ResponseFrame::Goodbye { served } => {
+            let _ = write!(out, "{{\"op\":\"goodbye\",\"served\":{served}}}");
+        }
+        ResponseFrame::Metrics(m) => {
+            let _ = write!(
+                out,
+                "{{\"op\":\"metrics\",\"submitted\":{},\"rejected\":{},\"completed\":{},\
+                 \"failed\":{},\"batches\":{},\"batched_requests\":{},\"factor_hits\":{},\
+                 \"factor_misses\":{}",
+                m.submitted,
+                m.rejected,
+                m.completed,
+                m.failed,
+                m.batches,
+                m.batched_requests,
+                m.factor_hits,
+                m.factor_misses
+            );
+            out.push_str(",\"mean_batch\":");
+            push_num(&mut out, m.mean_batch);
+            out.push_str(",\"lat_mean_s\":");
+            push_num(&mut out, m.lat_mean_s);
+            out.push_str(",\"lat_p50_s\":");
+            push_num(&mut out, m.lat_p50_s);
+            out.push_str(",\"lat_p99_s\":");
+            push_num(&mut out, m.lat_p99_s);
+            out.push('}');
+        }
+        ResponseFrame::Solution(s) => {
+            let _ = write!(out, "{{\"op\":\"solution\",\"id\":{}", s.id);
+            match &s.result {
+                Ok(x) => {
+                    out.push_str(",\"ok\":true,\"x\":");
+                    push_f64_array(&mut out, x);
+                }
+                Err(e) => {
+                    out.push_str(",\"ok\":false,\"error\":");
+                    emit_str(e, &mut out);
+                }
+            }
+            out.push_str(",\"residual\":");
+            push_num(&mut out, s.residual);
+            out.push_str(",\"backend\":");
+            emit_str(&s.backend, &mut out);
+            let _ = write!(out, ",\"batch_size\":{}", s.batch_size);
+            if let Some(k) = s.matrix_key {
+                let _ = write!(out, ",\"matrix_key\":{k}");
+            }
+            let _ = write!(
+                out,
+                ",\"timings\":{{\"queue_secs\":{},\"batch_secs\":{},\"exec_secs\":{}}}",
+                fmt_num(s.timings.queue_secs),
+                fmt_num(s.timings.batch_secs),
+                fmt_num(s.timings.exec_secs)
+            );
+            out.push('}');
+        }
+    }
+    out
+}
+
+fn fmt_num(x: f64) -> String {
+    let mut s = String::new();
+    push_num(&mut s, x);
+    s
+}
+
+// ---- response decoding (client side / round-trip tests) --------------------
+
+#[derive(Default)]
+struct RespAcc {
+    op: Option<String>,
+    id: Option<u64>,
+    ok: Option<bool>,
+    x: Option<Vec<f64>>,
+    error: Option<String>,
+    residual: Option<f64>,
+    backend: Option<String>,
+    batch_size: Option<usize>,
+    matrix_key: Option<u64>,
+    timings: Timings,
+    served: Option<u64>,
+    metrics: MetricsSnapshot,
+}
+
+/// Decode one response line (the client half of the protocol).
+pub fn decode_response(line: &str) -> Result<ResponseFrame> {
+    let mut sc = Scanner::new(line.as_bytes());
+    match sc.next_event()? {
+        Some(Event::ObjectStart) => {}
+        _ => return Err(jerr("response frame must be a JSON object")),
+    }
+
+    let mut acc = RespAcc::default();
+    loop {
+        match sc.next_event()?.ok_or_else(|| jerr("unexpected end of frame"))? {
+            Event::ObjectEnd => break,
+            Event::Key(k) => match k.as_str() {
+                "op" => acc.op = Some(expect_str(&mut sc, "op")?),
+                "id" => acc.id = Some(as_index(expect_num(&mut sc, "id")?, "id")?),
+                "ok" => acc.ok = Some(expect_bool(&mut sc, "ok")?),
+                "error" => acc.error = Some(expect_str(&mut sc, "error")?),
+                "backend" => acc.backend = Some(expect_str(&mut sc, "backend")?),
+                "served" => acc.served = Some(as_index(expect_num(&mut sc, "served")?, "served")?),
+                "batch_size" => {
+                    acc.batch_size =
+                        Some(as_index(expect_num(&mut sc, "batch_size")?, "batch_size")? as usize)
+                }
+                "matrix_key" => {
+                    acc.matrix_key = Some(as_index(expect_num(&mut sc, "matrix_key")?, "matrix_key")?)
+                }
+                "x" => {
+                    let mut v = Vec::new();
+                    let mut scratch = Fnv1a::new();
+                    read_f64_array(&mut sc, &mut v, &mut scratch, "x")?;
+                    acc.x = Some(v);
+                }
+                "residual" => {
+                    acc.residual = Some(match sc.next_event()? {
+                        Some(Event::Num(v)) => v,
+                        Some(Event::Null) => f64::NAN,
+                        other => {
+                            return Err(jerr(format!("field `residual`: unexpected {other:?}")))
+                        }
+                    })
+                }
+                "timings" => acc.timings = decode_timings(&mut sc)?,
+                "submitted" => acc.metrics.submitted = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "rejected" => acc.metrics.rejected = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "completed" => acc.metrics.completed = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "failed" => acc.metrics.failed = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "batches" => acc.metrics.batches = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "batched_requests" => {
+                    acc.metrics.batched_requests = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "factor_hits" => acc.metrics.factor_hits = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "factor_misses" => {
+                    acc.metrics.factor_misses = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "mean_batch" => acc.metrics.mean_batch = expect_num(&mut sc, &k)?,
+                "lat_mean_s" => acc.metrics.lat_mean_s = expect_num(&mut sc, &k)?,
+                "lat_p50_s" => acc.metrics.lat_p50_s = expect_num(&mut sc, &k)?,
+                "lat_p99_s" => acc.metrics.lat_p99_s = expect_num(&mut sc, &k)?,
+                _ => skip_value(&mut sc)?,
+            },
+            other => return Err(jerr(format!("malformed response frame: {other:?}"))),
+        }
+    }
+    sc.finish()?;
+
+    match acc.op.as_deref() {
+        Some("goodbye") => Ok(ResponseFrame::Goodbye { served: require(acc.served, "served")? }),
+        Some("error") => Ok(ResponseFrame::Error { message: require(acc.error, "error")? }),
+        Some("metrics") => Ok(ResponseFrame::Metrics(acc.metrics)),
+        Some("solution") => {
+            let ok = require(acc.ok, "ok")?;
+            let result = if ok {
+                Ok(require(acc.x, "x")?)
+            } else {
+                Err(require(acc.error, "error")?)
+            };
+            Ok(ResponseFrame::Solution(WireSolution {
+                id: require(acc.id, "id")?,
+                result,
+                residual: acc.residual.unwrap_or(f64::NAN),
+                backend: acc.backend.unwrap_or_default(),
+                batch_size: acc.batch_size.unwrap_or(1),
+                matrix_key: acc.matrix_key,
+                timings: acc.timings,
+            }))
+        }
+        Some(other) => Err(jerr(format!("unknown response op `{other}`"))),
+        None => Err(jerr("response frame missing `op`")),
+    }
+}
+
+fn decode_timings<R: BufRead>(sc: &mut Scanner<R>) -> Result<Timings> {
+    match sc.next_event()? {
+        Some(Event::ObjectStart) => {}
+        _ => return Err(jerr("field `timings`: expected an object")),
+    }
+    let mut t = Timings::default();
+    loop {
+        match sc.next_event()?.ok_or_else(|| jerr("unexpected end of frame"))? {
+            Event::ObjectEnd => return Ok(t),
+            Event::Key(k) => {
+                let v = expect_num(sc, &k)?;
+                match k.as_str() {
+                    "queue_secs" => t.queue_secs = v,
+                    "batch_secs" => t.batch_secs = v,
+                    "exec_secs" => t.exec_secs = v,
+                    _ => {}
+                }
+            }
+            other => return Err(jerr(format!("malformed timings: {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+    use crate::wire::fingerprint::fingerprint_dense;
+
+    #[test]
+    fn dense_request_round_trips() {
+        let a = diag_dominant_dense(5, GenSeed(11));
+        let ws = WireSolve::dense(a, vec![1.0, 2.0, 3.0, 4.0, 5.0]).with_id(7).with_key(42);
+        let frame = RequestFrame::Solve(ws.clone());
+        let line = encode_request(&frame);
+        let back = decode_request(&line).unwrap();
+        assert_eq!(back, frame);
+        // Decoding recomputed the identical fingerprint.
+        let RequestFrame::Solve(dec) = back else { unreachable!() };
+        assert_eq!(dec.fingerprint, ws.fingerprint);
+    }
+
+    #[test]
+    fn sparse_request_round_trips() {
+        let a = diag_dominant_sparse(12, 4, GenSeed(12));
+        let ws = WireSolve::sparse(a, vec![0.5; 12]);
+        let frame = RequestFrame::SolveSparse(ws);
+        let line = encode_request(&frame);
+        assert_eq!(decode_request(&line).unwrap(), frame);
+    }
+
+    #[test]
+    fn control_requests_round_trip() {
+        for frame in [RequestFrame::Metrics, RequestFrame::Shutdown] {
+            assert_eq!(decode_request(&encode_request(&frame)).unwrap(), frame);
+        }
+    }
+
+    #[test]
+    fn decode_accepts_any_field_order_and_unknown_fields() {
+        let line = r#"{"b":[1,2],"future_field":{"nested":[1,2,3]},"values":[4,1,1,3],"op":"solve","rows":2}"#;
+        let RequestFrame::Solve(ws) = decode_request(line).unwrap() else {
+            panic!("expected solve frame")
+        };
+        assert_eq!(ws.n(), 2);
+        assert_eq!(ws.b, vec![1.0, 2.0]);
+        assert_eq!(ws.fingerprint, fingerprint_dense(2, 2, &[4.0, 1.0, 1.0, 3.0]));
+    }
+
+    #[test]
+    fn streaming_fingerprint_matches_slice_fingerprint() {
+        let a = diag_dominant_dense(9, GenSeed(13));
+        let expected = fingerprint_dense(9, 9, a.data());
+        let line = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 9])));
+        let RequestFrame::Solve(ws) = decode_request(&line).unwrap() else { unreachable!() };
+        assert_eq!(ws.fingerprint, expected);
+    }
+
+    #[test]
+    fn triplet_order_does_not_change_fingerprint() {
+        let fwd = r#"{"op":"solve_sparse","rows":2,"cols":2,"row":[0,0,1],"col":[0,1,1],"val":[4,-1,3],"b":[1,2]}"#;
+        let rev = r#"{"op":"solve_sparse","rows":2,"cols":2,"row":[1,0,0],"col":[1,1,0],"val":[3,-1,4],"b":[1,2]}"#;
+        let RequestFrame::SolveSparse(a) = decode_request(fwd).unwrap() else { unreachable!() };
+        let RequestFrame::SolveSparse(b) = decode_request(rev).unwrap() else { unreachable!() };
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.matrix, b.matrix);
+    }
+
+    #[test]
+    fn decode_rejects_inconsistent_payloads() {
+        // values length mismatch
+        assert!(decode_request(r#"{"op":"solve","rows":2,"values":[1,2,3],"b":[1,2]}"#).is_err());
+        // rhs length mismatch
+        assert!(
+            decode_request(r#"{"op":"solve","rows":2,"values":[1,0,0,1],"b":[1]}"#).is_err()
+        );
+        // triplet arrays disagree
+        assert!(decode_request(
+            r#"{"op":"solve_sparse","rows":2,"cols":2,"row":[0],"col":[0,1],"val":[1],"b":[1,2]}"#
+        )
+        .is_err());
+        // out-of-bounds triplet
+        assert!(decode_request(
+            r#"{"op":"solve_sparse","rows":2,"cols":2,"row":[5],"col":[0],"val":[1],"b":[1,2]}"#
+        )
+        .is_err());
+        // unknown / missing op
+        assert!(decode_request(r#"{"op":"fly"}"#).is_err());
+        assert!(decode_request(r#"{"rows":2}"#).is_err());
+        // non-integer index fields
+        assert!(decode_request(r#"{"op":"solve","rows":2.5,"values":[],"b":[]}"#).is_err());
+        // not an object
+        assert!(decode_request("[1,2,3]").is_err());
+        // trailing garbage
+        assert!(decode_request(r#"{"op":"metrics"} extra"#).is_err());
+    }
+
+    #[test]
+    fn hostile_shapes_are_rejected_before_allocation() {
+        // rows*cols wraps u64 — must error, not bypass the length check.
+        let overflow = format!(
+            r#"{{"op":"solve","rows":2048,"cols":{},"values":[],"b":[{}]}}"#,
+            1u64 << 53, // passes the integer-field check; 2048 * 2^53 wraps u64
+            vec!["1"; 2048].join(",")
+        );
+        let err = decode_request(&overflow).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        // Absurd sparse `rows` with a tiny payload: caught by the b/rows
+        // tie *before* the CSR row_ptr allocation would happen.
+        let huge = r#"{"op":"solve_sparse","rows":4503599627370496,"cols":1,"row":[],"col":[],"val":[],"b":[]}"#;
+        assert!(decode_request(huge).is_err());
+    }
+
+    #[test]
+    fn mtx_path_requires_opt_in() {
+        let line = r#"{"op":"solve_sparse","mtx_path":"/etc/hostname","b":[1]}"#;
+        let err = decode_request(line).unwrap_err();
+        assert!(err.to_string().contains("mtx_path"), "{err}");
+        // With the option set, the failure becomes an ordinary I/O or
+        // parse error from actually resolving the file.
+        let opts = DecodeOptions { allow_mtx_path: true };
+        let err = decode_request_with(
+            r#"{"op":"solve_sparse","mtx_path":"/nonexistent.mtx","b":[1]}"#,
+            &opts,
+        )
+        .unwrap_err();
+        assert!(!err.to_string().contains("disabled"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_values_member_keeps_fingerprint_of_kept_array() {
+        // Last duplicate wins (tree-parser semantics) — and the
+        // fingerprint must describe the kept array, not both.
+        let line = r#"{"op":"solve","rows":2,"values":[9,9,9,9],"values":[4,1,1,3],"b":[1,2]}"#;
+        let RequestFrame::Solve(ws) = decode_request(line).unwrap() else { unreachable!() };
+        assert_eq!(ws.fingerprint, fingerprint_dense(2, 2, &[4.0, 1.0, 1.0, 3.0]));
+    }
+
+    #[test]
+    fn solution_responses_round_trip() {
+        let ok = ResponseFrame::Solution(WireSolution {
+            id: 3,
+            result: Ok(vec![1.0, -2.5, 3.25]),
+            residual: 1.25e-12,
+            backend: "native-ebv".into(),
+            batch_size: 4,
+            matrix_key: Some(0xdead_beef),
+            timings: Timings { queue_secs: 0.5, batch_secs: 0.25, exec_secs: 0.125 },
+        });
+        assert_eq!(decode_response(&encode_response(&ok)).unwrap(), ok);
+
+        let failed = ResponseFrame::Solution(WireSolution {
+            id: 4,
+            result: Err("singular pivot at step 1: |0| < 0.0000000001".into()),
+            residual: f64::NAN,
+            backend: "native-ebv".into(),
+            batch_size: 1,
+            matrix_key: None,
+            timings: Timings::default(),
+        });
+        // NaN != NaN, so compare the decoded pieces.
+        let ResponseFrame::Solution(dec) = decode_response(&encode_response(&failed)).unwrap()
+        else {
+            panic!("expected solution")
+        };
+        assert_eq!(dec.id, 4);
+        assert!(dec.result.is_err());
+        assert!(dec.residual.is_nan());
+    }
+
+    #[test]
+    fn metrics_error_goodbye_round_trip() {
+        let m = ResponseFrame::Metrics(MetricsSnapshot {
+            submitted: 10,
+            rejected: 1,
+            completed: 9,
+            failed: 0,
+            batches: 5,
+            batched_requests: 9,
+            factor_hits: 6,
+            factor_misses: 3,
+            mean_batch: 1.8,
+            lat_mean_s: 0.001,
+            lat_p50_s: 0.00075,
+            lat_p99_s: 0.0042,
+        });
+        assert_eq!(decode_response(&encode_response(&m)).unwrap(), m);
+
+        let e = ResponseFrame::Error { message: "json: bad \"frame\"\nwith newline".into() };
+        assert_eq!(decode_response(&encode_response(&e)).unwrap(), e);
+
+        let g = ResponseFrame::Goodbye { served: 17 };
+        assert_eq!(decode_response(&encode_response(&g)).unwrap(), g);
+    }
+
+    #[test]
+    fn encoded_frames_are_single_lines() {
+        let a = diag_dominant_dense(3, GenSeed(14));
+        let line = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 3])));
+        assert!(!line.contains('\n'));
+        let resp = encode_response(&ResponseFrame::Error { message: "multi\nline".into() });
+        assert!(!resp.contains('\n'), "escapes keep frames single-line: {resp}");
+    }
+}

@@ -1,0 +1,209 @@
+//! Streaming FNV-1a content fingerprints for wire payloads.
+//!
+//! The serving win GLU3.0-style systems get from repeated same-pattern
+//! traffic (Peng & Tan, 2019) requires recognising "same matrix"
+//! cheaply at ingest. The wire codec hashes matrix content *while the
+//! bytes stream through the scanner* and uses the result as the
+//! request's `matrix_key`, so the coordinator's `FactorCache` and the
+//! batcher's key-grouping kick in without callers managing keys.
+//!
+//! Properties:
+//! * dense fingerprints are computed incrementally from the `values`
+//!   array in row-major arrival order — no second pass over a payload
+//!   that may hold millions of floats;
+//! * sparse fingerprints are computed from the *assembled CSR* (canonical
+//!   row-sorted, duplicate-summed form), so the same matrix produces the
+//!   same key regardless of triplet order on the wire;
+//! * dense and sparse domains are tag-separated so a dense and a sparse
+//!   matrix can never alias each other's cache entries.
+//!
+//! Keys are 53-bit so they survive every f64 JSON number path
+//! unchanged (the wire carries numbers as f64; integers above 2^53 are
+//! not exactly representable and would corrupt on decode).
+//!
+//! Trust boundary: FNV-1a is *not* collision-resistant, and the worker
+//! `FactorCache` trusts keys without re-checking matrix identity — a
+//! key collision (accidental or crafted, including via the explicit
+//! `key` override) makes the colliding request reuse the other
+//! matrix's factors and return a wrong solution, detectable only
+//! through the reported residual. All clients of one service therefore
+//! share a trust domain; do not expose a shared service to mutually
+//! untrusting parties without disabling caching (`no_cache`) or adding
+//! an authenticated keying layer.
+
+use crate::matrix::CsrMatrix;
+
+/// Wire keys are truncated to 53 bits (see module docs).
+pub const KEY_MASK: u64 = (1 << 53) - 1;
+
+/// Incremental 64-bit FNV-1a hasher.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    pub const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Fnv1a {
+        Fnv1a(Self::OFFSET_BASIS)
+    }
+
+    /// Absorb raw bytes.
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(Self::PRIME);
+        }
+        self.0 = h;
+    }
+
+    /// Absorb a `u64` (little-endian).
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.update(&v.to_le_bytes());
+    }
+
+    /// Absorb an `f64` by bit pattern. Bit-level hashing means `-0.0`
+    /// and `0.0` get different keys — a harmless false cache miss, never
+    /// a false hit.
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) {
+        self.update(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+/// Combine a dense shape with a pre-computed hash of the row-major
+/// values (as produced by streaming `write_f64` calls during scan).
+/// Truncated to [`KEY_MASK`] like every wire key.
+pub fn combine_dense(rows: usize, cols: usize, values_hash: u64) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(b"EBV:dense");
+    h.write_u64(rows as u64);
+    h.write_u64(cols as u64);
+    h.write_u64(values_hash);
+    h.finish() & KEY_MASK
+}
+
+/// Fingerprint a dense matrix given its row-major values in one slice.
+/// Identical to the streaming path: `combine_dense` over a `write_f64`
+/// fold of the values.
+pub fn fingerprint_dense(rows: usize, cols: usize, values: &[f64]) -> u64 {
+    let mut hv = Fnv1a::new();
+    for &v in values {
+        hv.write_f64(v);
+    }
+    combine_dense(rows, cols, hv.finish())
+}
+
+/// Fingerprint an assembled CSR matrix (canonical sparse form).
+/// Truncated to [`KEY_MASK`] like every wire key.
+pub fn fingerprint_csr(m: &CsrMatrix) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(b"EBV:csr");
+    h.write_u64(m.rows() as u64);
+    h.write_u64(m.cols() as u64);
+    for &p in m.row_ptr() {
+        h.write_u64(p as u64);
+    }
+    for &j in m.col_idx() {
+        h.write_u64(j as u64);
+    }
+    for &v in m.values() {
+        h.write_f64(v);
+    }
+    h.finish() & KEY_MASK
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_sparse, GenSeed};
+    use crate::matrix::CooMatrix;
+
+    #[test]
+    fn matches_known_fnv1a_vectors() {
+        // Reference values from the FNV spec (64-bit FNV-1a).
+        assert_eq!(Fnv1a::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv1a::new();
+        h.update(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv1a::new();
+        h.update(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn keys_fit_in_53_bits_for_f64_json_transport() {
+        for seed in 0..32u64 {
+            let m = diag_dominant_sparse(8, 3, GenSeed(seed));
+            let k = fingerprint_csr(&m);
+            assert!(k <= KEY_MASK);
+            // Round-trips through f64 exactly — the wire invariant.
+            assert_eq!(k as f64 as u64, k);
+            let d = m.to_dense();
+            let kd = fingerprint_dense(d.rows(), d.cols(), d.data());
+            assert!(kd <= KEY_MASK);
+        }
+    }
+
+    #[test]
+    fn dense_fingerprint_is_order_and_shape_sensitive() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        let swapped = [2.0, 1.0, 3.0, 4.0];
+        assert_eq!(fingerprint_dense(2, 2, &v), fingerprint_dense(2, 2, &v));
+        assert_ne!(fingerprint_dense(2, 2, &v), fingerprint_dense(2, 2, &swapped));
+        assert_ne!(fingerprint_dense(2, 2, &v), fingerprint_dense(1, 4, &v));
+    }
+
+    #[test]
+    fn streaming_and_slice_dense_paths_agree() {
+        let v = [0.5, -3.25, 1e300, 0.0];
+        let mut hv = Fnv1a::new();
+        for &x in &v {
+            hv.write_f64(x);
+        }
+        assert_eq!(combine_dense(2, 2, hv.finish()), fingerprint_dense(2, 2, &v));
+    }
+
+    #[test]
+    fn csr_fingerprint_is_triplet_order_independent() {
+        let mut a = CooMatrix::new(3, 3);
+        a.push(0, 0, 2.0).unwrap();
+        a.push(2, 1, -1.0).unwrap();
+        a.push(1, 1, 3.0).unwrap();
+        let mut b = CooMatrix::new(3, 3);
+        b.push(1, 1, 3.0).unwrap();
+        b.push(0, 0, 2.0).unwrap();
+        b.push(2, 1, -1.0).unwrap();
+        assert_eq!(fingerprint_csr(&a.to_csr()), fingerprint_csr(&b.to_csr()));
+    }
+
+    #[test]
+    fn dense_and_sparse_domains_never_alias() {
+        let m = diag_dominant_sparse(8, 3, GenSeed(3));
+        let dense = m.to_dense();
+        assert_ne!(
+            fingerprint_csr(&m),
+            fingerprint_dense(dense.rows(), dense.cols(), dense.data())
+        );
+    }
+
+    #[test]
+    fn different_matrices_get_different_keys() {
+        let a = diag_dominant_sparse(16, 4, GenSeed(1));
+        let b = diag_dominant_sparse(16, 4, GenSeed(2));
+        assert_ne!(fingerprint_csr(&a), fingerprint_csr(&b));
+    }
+}

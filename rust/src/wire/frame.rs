@@ -1,0 +1,172 @@
+//! Wire frame types of the NDJSON solve protocol.
+//!
+//! One frame per line. Requests are [`RequestFrame`]s (`solve`,
+//! `solve_sparse`, `metrics`, `shutdown`); the server answers each with
+//! exactly one [`ResponseFrame`] (`solution`, `metrics`, `error`,
+//! `goodbye`). Encoding/decoding lives in [`super::codec`]; this module
+//! holds the typed shapes and the fingerprint/key policy.
+
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::request::Timings;
+use crate::matrix::{CsrMatrix, DenseMatrix};
+use crate::wire::fingerprint::{fingerprint_csr, fingerprint_dense};
+
+/// The coefficient matrix carried by a solve frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMatrix {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl WireMatrix {
+    pub fn n(&self) -> usize {
+        match self {
+            WireMatrix::Dense(a) => a.rows(),
+            WireMatrix::Sparse(a) => a.rows(),
+        }
+    }
+}
+
+/// A decoded solve request: matrix + RHS + caching directives.
+///
+/// `fingerprint` is the streaming FNV-1a content hash computed while
+/// the payload was scanned (or at construction, for locally built
+/// frames). Unless the client pins an explicit `key` or opts out with
+/// `no_cache`, the fingerprint becomes the request's `matrix_key`, so
+/// repeated same-matrix traffic shares factorizations without clients
+/// managing keys.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireSolve {
+    /// Client-chosen correlation id, echoed in the response. Server
+    /// assigns session-sequential ids when absent.
+    pub id: Option<u64>,
+    pub matrix: WireMatrix,
+    pub b: Vec<f64>,
+    /// Explicit cache key override.
+    pub key: Option<u64>,
+    /// Disable factor caching/batching for this request.
+    pub no_cache: bool,
+    /// Content fingerprint of `matrix`.
+    pub fingerprint: u64,
+}
+
+impl WireSolve {
+    /// Build a dense solve frame, computing the fingerprint.
+    pub fn dense(a: DenseMatrix, b: Vec<f64>) -> WireSolve {
+        let fingerprint = fingerprint_dense(a.rows(), a.cols(), a.data());
+        WireSolve { id: None, matrix: WireMatrix::Dense(a), b, key: None, no_cache: false, fingerprint }
+    }
+
+    /// Build a sparse solve frame, computing the fingerprint.
+    pub fn sparse(a: CsrMatrix, b: Vec<f64>) -> WireSolve {
+        let fingerprint = fingerprint_csr(&a);
+        WireSolve { id: None, matrix: WireMatrix::Sparse(a), b, key: None, no_cache: false, fingerprint }
+    }
+
+    pub fn with_id(mut self, id: u64) -> WireSolve {
+        self.id = Some(id);
+        self
+    }
+
+    /// Pin an explicit cache key. Keys must fit the wire's 53-bit key
+    /// space (see [`crate::wire::fingerprint::KEY_MASK`]) — larger
+    /// values are rejected when the frame is decoded.
+    pub fn with_key(mut self, key: u64) -> WireSolve {
+        self.key = Some(key);
+        self
+    }
+
+    pub fn without_cache(mut self) -> WireSolve {
+        self.no_cache = true;
+        self
+    }
+
+    /// System size.
+    pub fn n(&self) -> usize {
+        self.matrix.n()
+    }
+
+    /// The `matrix_key` this frame submits with: explicit key if given,
+    /// else the content fingerprint; `None` when caching is disabled.
+    pub fn effective_key(&self) -> Option<u64> {
+        if self.no_cache {
+            None
+        } else {
+            self.key.or(Some(self.fingerprint))
+        }
+    }
+}
+
+/// A decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestFrame {
+    /// Dense solve (`op: "solve"`).
+    Solve(WireSolve),
+    /// Sparse solve (`op: "solve_sparse"`), inline triplets or `mtx_path`.
+    SolveSparse(WireSolve),
+    /// Metrics snapshot request (`op: "metrics"`).
+    Metrics,
+    /// Orderly end of session (`op: "shutdown"`).
+    Shutdown,
+}
+
+/// The solved system sent back for a solve frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireSolution {
+    pub id: u64,
+    /// Solution vector, or the failure message.
+    pub result: std::result::Result<Vec<f64>, String>,
+    /// ∞-norm residual (NaN on failure; encoded as JSON `null`).
+    pub residual: f64,
+    pub backend: String,
+    pub batch_size: usize,
+    /// The effective matrix key the request ran under.
+    pub matrix_key: Option<u64>,
+    pub timings: Timings,
+}
+
+/// A response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseFrame {
+    Solution(WireSolution),
+    Metrics(MetricsSnapshot),
+    /// Frame-level failure (decode error, rejected request). The session
+    /// continues after an error frame.
+    Error { message: String },
+    /// Acknowledges `shutdown`; last frame of a session.
+    Goodbye { served: u64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+
+    #[test]
+    fn effective_key_prefers_explicit_then_fingerprint() {
+        let a = diag_dominant_dense(4, GenSeed(1));
+        let ws = WireSolve::dense(a.clone(), vec![1.0; 4]);
+        assert_eq!(ws.effective_key(), Some(ws.fingerprint));
+        let pinned = WireSolve::dense(a.clone(), vec![1.0; 4]).with_key(99);
+        assert_eq!(pinned.effective_key(), Some(99));
+        let uncached = WireSolve::dense(a, vec![1.0; 4]).without_cache();
+        assert_eq!(uncached.effective_key(), None);
+    }
+
+    #[test]
+    fn same_matrix_same_fingerprint_across_frames() {
+        let a = diag_dominant_dense(6, GenSeed(2));
+        let f1 = WireSolve::dense(a.clone(), vec![1.0; 6]).fingerprint;
+        let f2 = WireSolve::dense(a, vec![2.0; 6]).fingerprint;
+        // The RHS is not part of the matrix identity.
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn sparse_frames_fingerprint_csr_content() {
+        let a = diag_dominant_sparse(8, 3, GenSeed(3));
+        let ws = WireSolve::sparse(a.clone(), vec![1.0; 8]);
+        assert_eq!(ws.fingerprint, crate::wire::fingerprint::fingerprint_csr(&a));
+        assert_eq!(ws.n(), 8);
+    }
+}

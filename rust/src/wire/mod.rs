@@ -1,0 +1,44 @@
+//! L4 wire layer: the streaming NDJSON solve protocol.
+//!
+//! Turns the in-process [`coordinator`](crate::coordinator) service
+//! into a servable system: clients speak newline-delimited JSON frames
+//! over any byte stream (today `stdin`/`stdout` via `ebv-solve serve`;
+//! the session loop is transport-agnostic so sockets slot in later).
+//!
+//! Why a bespoke layer instead of tree-parsing requests with
+//! [`util::json`](crate::util::json): a solve request carries the
+//! matrix *inline* — `values` arrays of potentially millions of floats.
+//! A `Json` tree holds every element as a boxed enum node before the
+//! ingest code ever sees it; the [`scanner`] instead pulls SAX-style
+//! events off the reader and the [`codec`] routes numbers directly into
+//! `DenseMatrix`/`CooMatrix` buffers, hashing content with streaming
+//! FNV-1a ([`fingerprint`]) along the way. That hash auto-populates
+//! `matrix_key`, so a client replaying the same system against fresh
+//! right-hand sides (the CFD time-stepping pattern, and the GLU3.0
+//! observation that same-pattern repeat traffic is where serving wins
+//! live) hits the worker `FactorCache` with zero key management.
+//!
+//! Module map:
+//! * [`scanner`] — incremental zero-tree JSON event scanner;
+//! * [`fingerprint`] — streaming FNV-1a matrix content hashes;
+//! * [`frame`] — typed request/response frames;
+//! * [`codec`] — NDJSON line encode/decode;
+//! * [`server`] — the blocking per-session loop.
+//!
+//! A complete session transcript lives in `README.md`; see
+//! `examples/wire_session.rs` for the programmatic equivalent.
+
+pub mod codec;
+pub mod fingerprint;
+pub mod frame;
+pub mod scanner;
+pub mod server;
+
+pub use codec::{
+    decode_request, decode_request_with, decode_response, encode_request, encode_response,
+    DecodeOptions,
+};
+pub use fingerprint::{fingerprint_csr, fingerprint_dense, Fnv1a, KEY_MASK};
+pub use frame::{RequestFrame, ResponseFrame, WireMatrix, WireSolution, WireSolve};
+pub use scanner::{parse_via_events, Event, Scanner};
+pub use server::{serve_session, serve_session_with, SessionOptions, SessionStats};

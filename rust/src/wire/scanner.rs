@@ -1,0 +1,549 @@
+//! Incremental, zero-tree JSON scanner (SAX-style event pull).
+//!
+//! [`Scanner`] yields a stream of [`Event`]s over any `BufRead` without
+//! materialising a [`Json`](crate::util::json::Json) tree. A dense
+//! `values: [...]` array of a million floats costs one `Vec<f64>` in
+//! the consumer and nothing here — compare `Json::parse`, which builds
+//! a million boxed `Json::Num` nodes first. The wire codec feeds
+//! matrix payloads straight from scanner events into
+//! `DenseMatrix`/`CooMatrix` buffers (see [`super::codec`]).
+//!
+//! Grammar and escape handling deliberately mirror `util::json`'s tree
+//! parser — the two are differential-tested against each other in
+//! `rust/tests/prop_wire.rs` on arbitrary valid documents.
+
+use std::io::BufRead;
+
+use crate::util::error::{EbvError, Result};
+use crate::util::json::Json;
+
+/// One scanner event. Container contents are delivered between the
+/// matching `*Start`/`*End` pair; object members arrive as a `Key`
+/// event followed by the member value's event(s).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    ObjectStart,
+    ObjectEnd,
+    ArrayStart,
+    ArrayEnd,
+    Key(String),
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// Where the scanner is inside the current innermost container.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ctx {
+    /// Inside `[`, no element consumed yet.
+    ArrFirst,
+    /// Inside `[`, after an element (expect `,` or `]`).
+    ArrNext,
+    /// Inside `{`, no member consumed yet.
+    ObjFirstKey,
+    /// Inside `{`, after a member value (expect `,` or `}`).
+    ObjNextKey,
+    /// Inside `{`, after a `key:` (expect the member value).
+    ObjValue,
+}
+
+/// Pull scanner over a byte stream. One JSON document per scanner; use
+/// [`Scanner::finish`] to assert nothing but whitespace remains (NDJSON
+/// framing feeds one line per document).
+pub struct Scanner<R> {
+    src: R,
+    /// Byte offset consumed so far, for error messages.
+    pos: u64,
+    stack: Vec<Ctx>,
+    /// Top-level value fully consumed.
+    done: bool,
+    /// Scratch for number tokens (reused across events).
+    scratch: Vec<u8>,
+}
+
+impl<R: BufRead> Scanner<R> {
+    pub fn new(src: R) -> Scanner<R> {
+        Scanner { src, pos: 0, stack: Vec::new(), done: false, scratch: Vec::new() }
+    }
+
+    /// Current nesting depth (containers opened and not yet closed).
+    pub fn depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    fn err(&self, msg: &str) -> EbvError {
+        EbvError::Json(format!("{msg} at byte {}", self.pos))
+    }
+
+    fn peek(&mut self) -> Result<Option<u8>> {
+        let buf = self.src.fill_buf().map_err(|e| EbvError::io("wire scan: read", e))?;
+        Ok(buf.first().copied())
+    }
+
+    fn bump(&mut self) -> Result<Option<u8>> {
+        let b = self.peek()?;
+        if b.is_some() {
+            self.src.consume(1);
+            self.pos += 1;
+        }
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) -> Result<()> {
+        while matches!(self.peek()?, Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.src.consume(1);
+            self.pos += 1;
+        }
+        Ok(())
+    }
+
+    fn expect(&mut self, want: u8) -> Result<()> {
+        match self.bump()? {
+            Some(b) if b == want => Ok(()),
+            _ => Err(self.err(&format!("expected `{}`", want as char))),
+        }
+    }
+
+    /// Consume a literal word whose first byte is already peeked.
+    fn literal(&mut self, word: &'static str) -> Result<()> {
+        for &w in word.as_bytes() {
+            match self.bump()? {
+                Some(b) if b == w => {}
+                _ => return Err(self.err(&format!("expected `{word}`"))),
+            }
+        }
+        Ok(())
+    }
+
+    /// Bookkeeping after a complete value (scalar or closed container).
+    fn after_value(&mut self) {
+        match self.stack.last_mut() {
+            None => self.done = true,
+            Some(c @ (Ctx::ArrFirst | Ctx::ArrNext)) => *c = Ctx::ArrNext,
+            Some(c @ (Ctx::ObjValue | Ctx::ObjFirstKey | Ctx::ObjNextKey)) => *c = Ctx::ObjNextKey,
+        }
+    }
+
+    /// Parse the start of a value at the current position.
+    fn value_event(&mut self) -> Result<Event> {
+        match self.peek()? {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'{') => {
+                self.bump()?;
+                self.stack.push(Ctx::ObjFirstKey);
+                Ok(Event::ObjectStart)
+            }
+            Some(b'[') => {
+                self.bump()?;
+                self.stack.push(Ctx::ArrFirst);
+                Ok(Event::ArrayStart)
+            }
+            Some(b'"') => {
+                let s = self.string()?;
+                self.after_value();
+                Ok(Event::Str(s))
+            }
+            Some(b'n') => {
+                self.literal("null")?;
+                self.after_value();
+                Ok(Event::Null)
+            }
+            Some(b't') => {
+                self.literal("true")?;
+                self.after_value();
+                Ok(Event::Bool(true))
+            }
+            Some(b'f') => {
+                self.literal("false")?;
+                self.after_value();
+                Ok(Event::Bool(false))
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let x = self.number()?;
+                self.after_value();
+                Ok(Event::Num(x))
+            }
+            Some(_) => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    /// Read a `"key":` prefix (cursor on the opening quote), leaving the
+    /// cursor at the start of the member value.
+    fn key_event(&mut self) -> Result<Event> {
+        let key = self.string()?;
+        self.skip_ws()?;
+        self.expect(b':')?;
+        self.skip_ws()?;
+        *self.stack.last_mut().expect("key inside object") = Ctx::ObjValue;
+        Ok(Event::Key(key))
+    }
+
+    /// Next event, or `None` once the document is fully consumed.
+    /// Trailing non-whitespace after the document is an error.
+    pub fn next_event(&mut self) -> Result<Option<Event>> {
+        self.skip_ws()?;
+        if self.done {
+            return match self.peek()? {
+                None => Ok(None),
+                Some(_) => Err(self.err("trailing garbage after document")),
+            };
+        }
+        match self.stack.last().copied() {
+            // Top-level value start.
+            None => self.value_event().map(Some),
+            Some(Ctx::ArrFirst) => {
+                if self.peek()? == Some(b']') {
+                    self.bump()?;
+                    self.stack.pop();
+                    self.after_value();
+                    Ok(Some(Event::ArrayEnd))
+                } else {
+                    self.value_event().map(Some)
+                }
+            }
+            Some(Ctx::ArrNext) => match self.bump()? {
+                Some(b',') => {
+                    self.skip_ws()?;
+                    self.value_event().map(Some)
+                }
+                Some(b']') => {
+                    self.stack.pop();
+                    self.after_value();
+                    Ok(Some(Event::ArrayEnd))
+                }
+                _ => Err(self.err("expected `,` or `]`")),
+            },
+            Some(Ctx::ObjFirstKey) => {
+                if self.peek()? == Some(b'}') {
+                    self.bump()?;
+                    self.stack.pop();
+                    self.after_value();
+                    Ok(Some(Event::ObjectEnd))
+                } else {
+                    self.key_event().map(Some)
+                }
+            }
+            Some(Ctx::ObjNextKey) => match self.bump()? {
+                Some(b',') => {
+                    self.skip_ws()?;
+                    self.key_event().map(Some)
+                }
+                Some(b'}') => {
+                    self.stack.pop();
+                    self.after_value();
+                    Ok(Some(Event::ObjectEnd))
+                }
+                _ => Err(self.err("expected `,` or `}`")),
+            },
+            Some(Ctx::ObjValue) => self.value_event().map(Some),
+        }
+    }
+
+    /// Assert the document is complete and only whitespace remains.
+    pub fn finish(&mut self) -> Result<()> {
+        if !self.done || !self.stack.is_empty() {
+            return Err(self.err("document incomplete"));
+        }
+        self.skip_ws()?;
+        match self.peek()? {
+            None => Ok(()),
+            Some(_) => Err(self.err("trailing garbage after document")),
+        }
+    }
+
+    // ---- token readers ---------------------------------------------------
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump()? {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.bump()? {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        let c = if (0xD800..0xDC00).contains(&cp) {
+                            self.expect(b'\\')?;
+                            self.expect(b'u')?;
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            char::from_u32(c)
+                        } else {
+                            char::from_u32(cp)
+                        };
+                        s.push(c.ok_or_else(|| self.err("invalid \\u escape"))?);
+                    }
+                    _ => return Err(self.err("invalid escape")),
+                },
+                Some(b) if b < 0x80 => s.push(b as char),
+                Some(b) => {
+                    // Multi-byte UTF-8: collect the full sequence and decode.
+                    let len = utf8_len(b);
+                    self.scratch.clear();
+                    self.scratch.push(b);
+                    for _ in 1..len {
+                        let nb =
+                            self.bump()?.ok_or_else(|| self.err("truncated UTF-8"))?;
+                        self.scratch.push(nb);
+                    }
+                    let chunk = std::str::from_utf8(&self.scratch)
+                        .map_err(|_| self.err("invalid UTF-8"))?;
+                    s.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let b = self.bump()?.ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d =
+                (b as char).to_digit(16).ok_or_else(|| self.err("bad hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        self.scratch.clear();
+        if self.peek()? == Some(b'-') {
+            self.scratch.push(b'-');
+            self.bump()?;
+        }
+        while matches!(self.peek()?, Some(c) if c.is_ascii_digit()) {
+            let b = self.bump()?.unwrap();
+            self.scratch.push(b);
+        }
+        if self.peek()? == Some(b'.') {
+            self.scratch.push(b'.');
+            self.bump()?;
+            while matches!(self.peek()?, Some(c) if c.is_ascii_digit()) {
+                let b = self.bump()?.unwrap();
+                self.scratch.push(b);
+            }
+        }
+        if matches!(self.peek()?, Some(b'e' | b'E')) {
+            let b = self.bump()?.unwrap();
+            self.scratch.push(b);
+            if matches!(self.peek()?, Some(b'+' | b'-')) {
+                let b = self.bump()?.unwrap();
+                self.scratch.push(b);
+            }
+            while matches!(self.peek()?, Some(c) if c.is_ascii_digit()) {
+                let b = self.bump()?.unwrap();
+                self.scratch.push(b);
+            }
+        }
+        let text = std::str::from_utf8(&self.scratch).expect("number bytes are ASCII");
+        text.parse::<f64>().map_err(|_| self.err("invalid number"))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Build a [`Json`] tree from scanner events. Exists for differential
+/// testing against `Json::parse` and as a migration aid — production
+/// ingest paths consume events directly and never call this.
+pub fn parse_via_events<R: BufRead>(src: R) -> Result<Json> {
+    let mut sc = Scanner::new(src);
+    let ev = sc
+        .next_event()?
+        .ok_or_else(|| EbvError::Json("empty document".into()))?;
+    let v = build_value(&mut sc, ev)?;
+    sc.finish()?;
+    Ok(v)
+}
+
+fn build_value<R: BufRead>(sc: &mut Scanner<R>, ev: Event) -> Result<Json> {
+    match ev {
+        Event::Null => Ok(Json::Null),
+        Event::Bool(b) => Ok(Json::Bool(b)),
+        Event::Num(x) => Ok(Json::Num(x)),
+        Event::Str(s) => Ok(Json::Str(s)),
+        Event::ArrayStart => {
+            let mut items = Vec::new();
+            loop {
+                match sc.next_event()? {
+                    Some(Event::ArrayEnd) => return Ok(Json::Arr(items)),
+                    Some(ev) => items.push(build_value(sc, ev)?),
+                    None => return Err(EbvError::Json("unterminated array".into())),
+                }
+            }
+        }
+        Event::ObjectStart => {
+            let mut map = std::collections::BTreeMap::new();
+            loop {
+                match sc.next_event()? {
+                    Some(Event::ObjectEnd) => return Ok(Json::Obj(map)),
+                    Some(Event::Key(k)) => {
+                        let ev = sc
+                            .next_event()?
+                            .ok_or_else(|| EbvError::Json("missing member value".into()))?;
+                        map.insert(k, build_value(sc, ev)?);
+                    }
+                    _ => return Err(EbvError::Json("malformed object".into())),
+                }
+            }
+        }
+        Event::Key(_) | Event::ArrayEnd | Event::ObjectEnd => {
+            Err(EbvError::Json("unexpected structural event".into()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(text: &str) -> Vec<Event> {
+        let mut sc = Scanner::new(text.as_bytes());
+        let mut out = Vec::new();
+        while let Some(ev) = sc.next_event().unwrap() {
+            out.push(ev);
+        }
+        sc.finish().unwrap();
+        out
+    }
+
+    #[test]
+    fn scalar_documents() {
+        assert_eq!(events("null"), vec![Event::Null]);
+        assert_eq!(events(" true "), vec![Event::Bool(true)]);
+        assert_eq!(events("-1.5e3"), vec![Event::Num(-1500.0)]);
+        assert_eq!(events("\"hi\\n\""), vec![Event::Str("hi\n".into())]);
+    }
+
+    #[test]
+    fn nested_structure_event_order() {
+        let evs = events(r#"{"a": [1, {"b": null}], "c": true}"#);
+        assert_eq!(
+            evs,
+            vec![
+                Event::ObjectStart,
+                Event::Key("a".into()),
+                Event::ArrayStart,
+                Event::Num(1.0),
+                Event::ObjectStart,
+                Event::Key("b".into()),
+                Event::Null,
+                Event::ObjectEnd,
+                Event::ArrayEnd,
+                Event::Key("c".into()),
+                Event::Bool(true),
+                Event::ObjectEnd,
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(events("[]"), vec![Event::ArrayStart, Event::ArrayEnd]);
+        assert_eq!(events("{}"), vec![Event::ObjectStart, Event::ObjectEnd]);
+        assert_eq!(
+            events("[[],{}]"),
+            vec![
+                Event::ArrayStart,
+                Event::ArrayStart,
+                Event::ArrayEnd,
+                Event::ObjectStart,
+                Event::ObjectEnd,
+                Event::ArrayEnd,
+            ]
+        );
+    }
+
+    #[test]
+    fn long_numeric_array_streams_without_tree() {
+        let doc = format!("[{}]", (0..10_000).map(|i| i.to_string()).collect::<Vec<_>>().join(","));
+        let mut sc = Scanner::new(doc.as_bytes());
+        assert_eq!(sc.next_event().unwrap(), Some(Event::ArrayStart));
+        let mut sum = 0.0;
+        loop {
+            match sc.next_event().unwrap().unwrap() {
+                Event::Num(x) => sum += x,
+                Event::ArrayEnd => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        sc.finish().unwrap();
+        assert_eq!(sum, (0..10_000).sum::<i64>() as f64);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in ["{", "[1,]", "[1 2]", "{\"a\" 1}", "nul", "\"open", "1 2", "[1],"] {
+            let mut sc = Scanner::new(bad.as_bytes());
+            let mut failed = false;
+            loop {
+                match sc.next_event() {
+                    Err(_) => {
+                        failed = true;
+                        break;
+                    }
+                    Ok(None) => break,
+                    Ok(Some(_)) => {}
+                }
+            }
+            if !failed {
+                failed = sc.finish().is_err();
+            }
+            assert!(failed, "accepted malformed input {bad:?}");
+        }
+    }
+
+    #[test]
+    fn unicode_strings_and_escapes() {
+        assert_eq!(events(r#""é😀""#), vec![Event::Str("é😀".into())]);
+        assert_eq!(events(r#""😀""#), vec![Event::Str("😀".into())]);
+        assert_eq!(events(r#""é""#), vec![Event::Str("é".into())]);
+    }
+
+    #[test]
+    fn finish_rejects_trailing_garbage() {
+        let mut sc = Scanner::new("{} x".as_bytes());
+        assert_eq!(sc.next_event().unwrap(), Some(Event::ObjectStart));
+        assert_eq!(sc.next_event().unwrap(), Some(Event::ObjectEnd));
+        assert!(sc.finish().is_err());
+    }
+
+    #[test]
+    fn parse_via_events_matches_tree_parser() {
+        for doc in [
+            "null",
+            "[1,2,3]",
+            r#"{"a":{"b":[true,false,null]},"c":"x\ty"}"#,
+            r#"[{"deep":[[[1.25]]]}]"#,
+        ] {
+            assert_eq!(parse_via_events(doc.as_bytes()).unwrap(), Json::parse(doc).unwrap());
+        }
+    }
+
+    #[test]
+    fn errors_carry_byte_positions() {
+        let mut sc = Scanner::new("[1,,]".as_bytes());
+        sc.next_event().unwrap();
+        sc.next_event().unwrap();
+        let err = sc.next_event().unwrap_err();
+        assert!(err.to_string().contains("byte"), "{err}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Blocking NDJSON session loop over the solve service.
+//!
+//! [`serve_session`] is generic over `BufRead`/`Write`, so the same
+//! loop serves `stdin`/`stdout` behind `ebv-solve serve`, in-memory
+//! buffers in tests, and (future work) an accepted socket per session.
+//! Framing is one JSON object per line; every request line produces
+//! exactly one response line, written and flushed before the next read,
+//! so a pipe client can drive the session synchronously.
+//!
+//! Error containment: a malformed line produces an `error` frame and
+//! the session continues — one bad request in a long-lived pipe must
+//! not tear down the connection. Only I/O failure (peer gone) or a
+//! `shutdown` frame ends the loop.
+
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+
+use crate::coordinator::service::ServiceHandle;
+use crate::util::error::{EbvError, Result};
+use crate::wire::codec::{decode_request_with, encode_response, DecodeOptions};
+use crate::wire::frame::{RequestFrame, ResponseFrame, WireMatrix, WireSolution, WireSolve};
+
+/// Counters of one wire session.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SessionStats {
+    /// Non-empty request lines read.
+    pub frames: u64,
+    /// Solve frames that produced a solution frame (ok or failed);
+    /// rejected/undeliverable submissions count as `errors` instead.
+    pub solves: u64,
+    /// Error frames written (decode failures, rejected submissions).
+    pub errors: u64,
+}
+
+/// Per-session policy.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SessionOptions {
+    pub decode: DecodeOptions,
+}
+
+/// Run one session with default (restrictive) options; see
+/// [`serve_session_with`].
+pub fn serve_session<R: BufRead, W: Write>(
+    svc: &ServiceHandle,
+    input: R,
+    output: W,
+) -> Result<SessionStats> {
+    serve_session_with(svc, input, output, SessionOptions::default())
+}
+
+/// Run one session: read NDJSON request frames from `input`, answer
+/// each on `output`, until `shutdown`, EOF, or an I/O error. The
+/// service handle is borrowed — the caller owns service lifetime and
+/// can serve sequential sessions on one warmed-up service (keeping the
+/// `FactorCache` across sessions is the point of the fingerprint key).
+pub fn serve_session_with<R: BufRead, W: Write>(
+    svc: &ServiceHandle,
+    mut input: R,
+    mut output: W,
+    opts: SessionOptions,
+) -> Result<SessionStats> {
+    let mut stats = SessionStats::default();
+    let mut line = String::new();
+    // Session-sequential fallback ids for requests that don't carry one.
+    let mut next_id: u64 = 0;
+
+    loop {
+        line.clear();
+        let n = input
+            .read_line(&mut line)
+            .map_err(|e| EbvError::io("wire session: read", e))?;
+        if n == 0 {
+            // EOF without `shutdown`: client hung up; end quietly.
+            break;
+        }
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        stats.frames += 1;
+
+        let response = match decode_request_with(text, &opts.decode) {
+            Err(e) => {
+                stats.errors += 1;
+                ResponseFrame::Error { message: e.to_string() }
+            }
+            Ok(RequestFrame::Shutdown) => {
+                log::info!(target: "wire", "shutdown frame after {} frames", stats.frames);
+                write_frame(&mut output, &ResponseFrame::Goodbye { served: stats.solves })?;
+                break;
+            }
+            Ok(RequestFrame::Metrics) => ResponseFrame::Metrics(svc.metrics().snapshot()),
+            Ok(RequestFrame::Solve(ws)) | Ok(RequestFrame::SolveSparse(ws)) => {
+                let id = ws.id.unwrap_or(next_id);
+                next_id = next_id.max(id) + 1;
+                let resp = run_solve(svc, id, ws);
+                // `served` promises produced solutions; a rejected or
+                // dropped submission is an error, not a serve.
+                match &resp {
+                    ResponseFrame::Solution(_) => stats.solves += 1,
+                    ResponseFrame::Error { .. } => stats.errors += 1,
+                    _ => {}
+                }
+                resp
+            }
+        };
+        write_frame(&mut output, &response)?;
+    }
+    Ok(stats)
+}
+
+/// Submit one solve and block for its response frame.
+fn run_solve(svc: &ServiceHandle, id: u64, ws: WireSolve) -> ResponseFrame {
+    let key = ws.effective_key();
+    let WireSolve { matrix, b, .. } = ws;
+    let submitted = match matrix {
+        WireMatrix::Dense(a) => svc.submit_dense(Arc::new(a), b, key),
+        WireMatrix::Sparse(a) => svc.submit_sparse(Arc::new(a), b, key),
+    };
+    let rx = match submitted {
+        Ok(rx) => rx,
+        // Admission-control rejection (backpressure): an error frame,
+        // not a failed solution — the client should retry later.
+        Err(e) => return ResponseFrame::Error { message: e.to_string() },
+    };
+    match rx.recv() {
+        Ok(resp) => ResponseFrame::Solution(WireSolution {
+            id,
+            result: resp.result,
+            residual: resp.residual,
+            backend: resp.backend.to_string(),
+            batch_size: resp.batch_size,
+            matrix_key: key,
+            timings: resp.timings,
+        }),
+        Err(_) => ResponseFrame::Error {
+            message: "coordinator: service dropped the request".to_string(),
+        },
+    }
+}
+
+fn write_frame<W: Write>(output: &mut W, frame: &ResponseFrame) -> Result<()> {
+    let mut line = encode_response(frame);
+    line.push('\n');
+    output
+        .write_all(line.as_bytes())
+        .and_then(|()| output.flush())
+        .map_err(|e| EbvError::io("wire session: write", e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+    use crate::coordinator::SolverService;
+    use crate::matrix::generate::{diag_dominant_dense, GenSeed};
+    use crate::wire::codec::{decode_response, encode_request};
+    use crate::wire::frame::RequestFrame;
+
+    fn test_service() -> ServiceHandle {
+        SolverService::start(ServiceConfig {
+            lanes: 2,
+            max_batch: 4,
+            batch_window_us: 100,
+            queue_capacity: 64,
+            use_runtime: false,
+            ..ServiceConfig::default()
+        })
+        .unwrap()
+    }
+
+    fn run(input: &str) -> (SessionStats, Vec<ResponseFrame>) {
+        let svc = test_service();
+        let mut out = Vec::new();
+        let stats = serve_session(&svc, input.as_bytes(), &mut out).unwrap();
+        svc.shutdown();
+        let text = String::from_utf8(out).unwrap();
+        let frames = text.lines().map(|l| decode_response(l).unwrap()).collect();
+        (stats, frames)
+    }
+
+    #[test]
+    fn session_solves_and_says_goodbye() {
+        let a = diag_dominant_dense(8, GenSeed(21));
+        let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 8])));
+        let input = format!("{solve}\n{{\"op\":\"shutdown\"}}\n");
+        let (stats, frames) = run(&input);
+        assert_eq!(stats.solves, 1);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(frames.len(), 2);
+        let ResponseFrame::Solution(s) = &frames[0] else { panic!("{frames:?}") };
+        assert!(s.result.is_ok());
+        assert!(s.residual < 1e-9);
+        assert_eq!(frames[1], ResponseFrame::Goodbye { served: 1 });
+    }
+
+    #[test]
+    fn bad_line_gets_error_frame_and_session_continues() {
+        let a = diag_dominant_dense(6, GenSeed(22));
+        let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 6])));
+        let input = format!("this is not json\n{solve}\n");
+        let (stats, frames) = run(&input);
+        assert_eq!(stats.frames, 2);
+        assert_eq!(stats.errors, 1);
+        assert!(matches!(frames[0], ResponseFrame::Error { .. }));
+        assert!(matches!(&frames[1], ResponseFrame::Solution(s) if s.result.is_ok()));
+    }
+
+    #[test]
+    fn eof_without_shutdown_ends_cleanly() {
+        let (stats, frames) = run("");
+        assert_eq!(stats, SessionStats::default());
+        assert!(frames.is_empty());
+    }
+
+    #[test]
+    fn server_assigns_sequential_ids_and_echoes_explicit_ones() {
+        let a = diag_dominant_dense(4, GenSeed(23));
+        let unnumbered = encode_request(&RequestFrame::Solve(WireSolve::dense(a.clone(), vec![1.0; 4])));
+        let numbered =
+            encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![2.0; 4]).with_id(90)));
+        let input = format!("{unnumbered}\n{numbered}\n{unnumbered}\n");
+        let (_, frames) = run(&input);
+        let ids: Vec<u64> = frames
+            .iter()
+            .map(|f| match f {
+                ResponseFrame::Solution(s) => s.id,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(ids, vec![0, 90, 91]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Property tests for the wire layer.
+//!
+//! The streaming scanner and the tree parser implement the same
+//! grammar twice; these differential properties hold them together on
+//! arbitrary valid documents (the seeded `testutil::forall` runner
+//! reports a replayable seed on failure). A second group round-trips
+//! random frames through the codec.
+
+use std::collections::BTreeMap;
+
+use ebv_solve::matrix::generate::{diag_dominant_sparse, GenSeed};
+use ebv_solve::matrix::DenseMatrix;
+use ebv_solve::testutil::{forall, Gen};
+use ebv_solve::util::json::Json;
+use ebv_solve::wire::{
+    decode_request, encode_request, parse_via_events, RequestFrame, WireSolve,
+};
+
+// ---- document generator ----------------------------------------------------
+
+fn gen_string(g: &mut Gen) -> String {
+    const PALETTE: &[&str] = &[
+        "a", "Z", "0", " ", "\"", "\\", "\n", "\t", "\r", "é", "😀", "\u{1}", "/", "{", "[", ",",
+        ":",
+    ];
+    let n = g.usize_in(0, 8);
+    (0..n).map(|_| *g.choose(PALETTE)).collect()
+}
+
+fn gen_num(g: &mut Gen) -> f64 {
+    match g.usize_in(0, 3) {
+        0 => g.usize_in(0, 1_000_000) as f64,
+        1 => -(g.usize_in(0, 100_000) as f64),
+        2 => g.f64_in(-1e9, 1e9),
+        _ => g.f64_in(-1.0, 1.0) * 1e-9,
+    }
+}
+
+fn gen_json(g: &mut Gen, depth: usize) -> Json {
+    if depth == 0 || g.bool() {
+        match g.usize_in(0, 3) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num(gen_num(g)),
+            _ => Json::Str(gen_string(g)),
+        }
+    } else if g.bool() {
+        let n = g.usize_in(0, 4);
+        Json::Arr((0..n).map(|_| gen_json(g, depth - 1)).collect())
+    } else {
+        let n = g.usize_in(0, 4);
+        let mut map = BTreeMap::new();
+        for i in 0..n {
+            // Suffix with the index so duplicate keys can't shadow each
+            // other differently in the two parsers.
+            map.insert(format!("{}#{i}", gen_string(g)), gen_json(g, depth - 1));
+        }
+        Json::Obj(map)
+    }
+}
+
+// ---- scanner ↔ tree parser -------------------------------------------------
+
+#[test]
+fn prop_scanner_agrees_with_tree_parser_on_compact_documents() {
+    forall("scanner == Json::parse (compact)", 200, |g| {
+        let doc = gen_json(g, 4);
+        let text = doc.emit();
+        let tree = Json::parse(&text).expect("emitted JSON parses");
+        let scanned = parse_via_events(text.as_bytes()).expect("emitted JSON scans");
+        assert_eq!(scanned, tree, "document text: {text}");
+    });
+}
+
+#[test]
+fn prop_scanner_agrees_with_tree_parser_on_pretty_documents() {
+    forall("scanner == Json::parse (pretty)", 200, |g| {
+        let doc = gen_json(g, 4);
+        let text = doc.emit_pretty();
+        let tree = Json::parse(&text).expect("emitted JSON parses");
+        let scanned = parse_via_events(text.as_bytes()).expect("emitted JSON scans");
+        assert_eq!(scanned, tree);
+    });
+}
+
+#[test]
+fn prop_scanner_round_trips_emitted_trees() {
+    // scanner(emit(v)) == v for generated values — ties the scanner to
+    // the emitter as well as to the parser.
+    forall("scanner inverts emit", 200, |g| {
+        let doc = gen_json(g, 3);
+        let scanned = parse_via_events(doc.emit().as_bytes()).unwrap();
+        assert_eq!(scanned, doc);
+    });
+}
+
+#[test]
+fn prop_scanner_and_parser_reject_truncations_alike() {
+    // Chop an emitted document mid-stream: wherever the tree parser
+    // errors, the scanner must error too (and vice versa nothing may
+    // panic). Truncation can also leave a *valid* shorter document
+    // (e.g. "123" → "12"), so agreement, not rejection, is the property.
+    forall("truncation agreement", 100, |g| {
+        let doc = gen_json(g, 3);
+        let text = doc.emit();
+        if text.len() < 2 {
+            return;
+        }
+        let mut cut = g.usize_in(1, text.len() - 1);
+        while !text.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        if cut == 0 {
+            return;
+        }
+        let chopped = &text[..cut];
+        let tree = Json::parse(chopped);
+        let scanned = parse_via_events(chopped.as_bytes());
+        assert_eq!(
+            tree.is_ok(),
+            scanned.is_ok(),
+            "disagree on {chopped:?}: tree={tree:?} scanned={scanned:?}"
+        );
+    });
+}
+
+// ---- codec round-trips -----------------------------------------------------
+
+#[test]
+fn prop_dense_frames_round_trip_through_codec() {
+    forall("dense frame round-trip", 60, |g| {
+        let n = g.usize_in(1, 12);
+        let a = DenseMatrix::from_vec(n, n, g.vec_f64(n * n, -50.0, 50.0)).unwrap();
+        let mut ws = WireSolve::dense(a, g.vec_f64(n, -5.0, 5.0));
+        if g.bool() {
+            ws = ws.with_id(g.usize_in(0, 1 << 20) as u64);
+        }
+        if g.bool() {
+            ws = ws.with_key(g.usize_in(0, 1 << 20) as u64);
+        }
+        if g.bool() {
+            ws = ws.without_cache();
+        }
+        let frame = RequestFrame::Solve(ws);
+        let decoded = decode_request(&encode_request(&frame)).expect("round-trip decodes");
+        assert_eq!(decoded, frame);
+    });
+}
+
+#[test]
+fn prop_sparse_frames_round_trip_through_codec() {
+    forall("sparse frame round-trip", 40, |g| {
+        let n = g.usize_in(2, 24);
+        let per_row = g.usize_in(1, n.min(5));
+        let a = diag_dominant_sparse(n, per_row, GenSeed(g.seed()));
+        let frame = RequestFrame::SolveSparse(WireSolve::sparse(a, g.vec_f64(n, -5.0, 5.0)));
+        let decoded = decode_request(&encode_request(&frame)).expect("round-trip decodes");
+        assert_eq!(decoded, frame);
+    });
+}
+
+#[test]
+fn prop_fingerprint_is_stable_across_the_wire() {
+    // encode → decode must preserve the content key exactly, or repeat
+    // traffic from a remote client would never coalesce.
+    forall("fingerprint survives transport", 60, |g| {
+        let n = g.usize_in(1, 10);
+        let a = DenseMatrix::from_vec(n, n, g.vec_f64(n * n, -50.0, 50.0)).unwrap();
+        let ws = WireSolve::dense(a, vec![0.0; n]);
+        let sent_key = ws.effective_key();
+        let RequestFrame::Solve(back) =
+            decode_request(&encode_request(&RequestFrame::Solve(ws))).unwrap()
+        else {
+            panic!("expected solve frame")
+        };
+        assert_eq!(back.effective_key(), sent_key);
+    });
+}

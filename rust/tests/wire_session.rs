@@ -1,0 +1,233 @@
+//! Integration: the NDJSON wire protocol end-to-end against a live
+//! solve service — request in, solution + residual + timings out, with
+//! the auto-computed fingerprint driving `FactorCache` hits.
+
+use std::sync::Arc;
+
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::{ServiceHandle, SolverService};
+use ebv_solve::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, rhs, GenSeed};
+use ebv_solve::matrix::io::write_matrix_market;
+use ebv_solve::wire::{
+    decode_response, encode_request, serve_session, serve_session_with, DecodeOptions,
+    RequestFrame, ResponseFrame, SessionOptions, WireSolve,
+};
+
+fn start_service() -> ServiceHandle {
+    SolverService::start(ServiceConfig {
+        lanes: 2,
+        max_batch: 4,
+        batch_window_us: 100,
+        queue_capacity: 64,
+        use_runtime: false,
+        ..ServiceConfig::default()
+    })
+    .unwrap()
+}
+
+/// Run a full session over in-memory pipes and decode every response.
+fn run_session(input: &str) -> Vec<ResponseFrame> {
+    run_session_with(input, SessionOptions::default())
+}
+
+fn run_session_with(input: &str, opts: SessionOptions) -> Vec<ResponseFrame> {
+    let svc = start_service();
+    let mut output = Vec::new();
+    serve_session_with(&svc, input.as_bytes(), &mut output, opts).unwrap();
+    svc.shutdown();
+    String::from_utf8(output)
+        .unwrap()
+        .lines()
+        .map(|l| decode_response(l).expect("server frames decode"))
+        .collect()
+}
+
+fn solution(frame: &ResponseFrame) -> &ebv_solve::wire::WireSolution {
+    match frame {
+        ResponseFrame::Solution(s) => s,
+        other => panic!("expected solution frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn ndjson_session_round_trips_solution_residual_and_timings() {
+    let n = 24;
+    let a = diag_dominant_dense(n, GenSeed(31));
+    let b = rhs(n, GenSeed(32));
+    let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a.clone(), b.clone())));
+    let input = format!("{solve}\n{{\"op\":\"shutdown\"}}\n");
+
+    let frames = run_session(&input);
+    assert_eq!(frames.len(), 2, "{frames:?}");
+
+    let s = solution(&frames[0]);
+    let x = s.result.as_ref().expect("solve succeeds");
+    assert_eq!(x.len(), n);
+    // The wire residual is the service's own measurement; confirm it
+    // against the matrix locally too.
+    assert!(s.residual < 1e-9, "residual {}", s.residual);
+    assert!(a.residual(x, &b) < 1e-9);
+    assert_eq!(s.backend, "native-ebv");
+    assert!(s.batch_size >= 1);
+    assert!(s.timings.exec_secs >= 0.0);
+    assert!(matches!(frames[1], ResponseFrame::Goodbye { served: 1 }));
+}
+
+#[test]
+fn same_matrix_twice_hits_factor_cache_via_fingerprint() {
+    let a = diag_dominant_dense(20, GenSeed(33));
+    // Two solves of the same matrix against different right-hand sides,
+    // no explicit key anywhere — then a metrics probe.
+    let s1 = encode_request(&RequestFrame::Solve(WireSolve::dense(a.clone(), vec![1.0; 20])));
+    let s2 = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![2.0; 20])));
+    let input = format!("{s1}\n{s2}\n{{\"op\":\"metrics\"}}\n{{\"op\":\"shutdown\"}}\n");
+
+    let frames = run_session(&input);
+    assert_eq!(frames.len(), 4, "{frames:?}");
+    let (r1, r2) = (solution(&frames[0]), solution(&frames[1]));
+    assert!(r1.result.is_ok() && r2.result.is_ok());
+    // The auto-fingerprint gave both requests the same matrix_key...
+    assert_eq!(r1.matrix_key, r2.matrix_key);
+    assert!(r1.matrix_key.is_some());
+    // ...so the second solve reused the first's factorization.
+    let ResponseFrame::Metrics(m) = &frames[2] else { panic!("{frames:?}") };
+    assert_eq!(m.factor_misses, 1, "one factorization for two solves");
+    assert!(m.factor_hits >= 1, "second solve must hit the cache: {m:?}");
+    assert_eq!(m.completed, 2);
+}
+
+#[test]
+fn different_matrices_do_not_share_a_key() {
+    let a1 = diag_dominant_dense(16, GenSeed(34));
+    let a2 = diag_dominant_dense(16, GenSeed(35));
+    let s1 = encode_request(&RequestFrame::Solve(WireSolve::dense(a1, vec![1.0; 16])));
+    let s2 = encode_request(&RequestFrame::Solve(WireSolve::dense(a2, vec![1.0; 16])));
+    let input = format!("{s1}\n{s2}\n{{\"op\":\"metrics\"}}\n{{\"op\":\"shutdown\"}}\n");
+
+    let frames = run_session(&input);
+    let (r1, r2) = (solution(&frames[0]), solution(&frames[1]));
+    assert_ne!(r1.matrix_key, r2.matrix_key);
+    let ResponseFrame::Metrics(m) = &frames[2] else { panic!("{frames:?}") };
+    assert_eq!(m.factor_misses, 2);
+    assert_eq!(m.factor_hits, 0);
+}
+
+#[test]
+fn sparse_triplets_and_mtx_path_both_serve() {
+    let a = diag_dominant_sparse(30, 4, GenSeed(36));
+    let b = rhs(30, GenSeed(37));
+
+    // Inline triplets.
+    let triplets = encode_request(&RequestFrame::SolveSparse(WireSolve::sparse(a.clone(), b.clone())));
+
+    // The same system referenced through a MatrixMarket file.
+    let dir = std::env::temp_dir().join("ebv_wire_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("session.mtx");
+    write_matrix_market(&a, &path).unwrap();
+    let b_json: Vec<String> = b.iter().map(|v| format!("{v}")).collect();
+    let by_path = format!(
+        "{{\"op\":\"solve_sparse\",\"mtx_path\":\"{}\",\"b\":[{}]}}",
+        path.display(),
+        b_json.join(",")
+    );
+
+    let input = format!("{triplets}\n{by_path}\n{{\"op\":\"metrics\"}}\n{{\"op\":\"shutdown\"}}\n");
+    let frames = run_session_with(
+        &input,
+        SessionOptions { decode: DecodeOptions { allow_mtx_path: true } },
+    );
+    let (r1, r2) = (solution(&frames[0]), solution(&frames[1]));
+    assert!(r1.result.is_ok(), "{:?}", r1.result);
+    assert!(r2.result.is_ok(), "{:?}", r2.result);
+    assert_eq!(r1.backend, "native-sparse");
+    assert!(r1.residual < 1e-9 && r2.residual < 1e-9);
+    // Same matrix content through two transports → same fingerprint key,
+    // so the mtx_path solve hit the cache primed by the triplet solve.
+    assert_eq!(r1.matrix_key, r2.matrix_key);
+    let ResponseFrame::Metrics(m) = &frames[2] else { panic!("{frames:?}") };
+    assert_eq!(m.factor_misses, 1);
+    assert!(m.factor_hits >= 1);
+}
+
+#[test]
+fn large_payload_streams_through_without_tree() {
+    // ~90k floats inline — small enough for CI, big enough that a
+    // per-element tree would be visible; mostly guards the scan path on
+    // realistically sized frames.
+    let n = 300;
+    let a = diag_dominant_dense(n, GenSeed(38));
+    let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, rhs(n, GenSeed(39)))));
+    assert!(solve.len() > 500_000, "payload should be sizeable: {} bytes", solve.len());
+    let input = format!("{solve}\n{{\"op\":\"shutdown\"}}\n");
+    let frames = run_session(&input);
+    let s = solution(&frames[0]);
+    assert!(s.result.is_ok());
+    assert!(s.residual < 1e-8, "residual {}", s.residual);
+}
+
+#[test]
+fn mtx_path_is_denied_unless_opted_in() {
+    // A wire-supplied local path is a filesystem capability; default
+    // sessions must refuse it rather than read the named file.
+    let input = "{\"op\":\"solve_sparse\",\"mtx_path\":\"/etc/hostname\",\"b\":[1]}\n\
+                 {\"op\":\"shutdown\"}\n";
+    let frames = run_session(input);
+    let ResponseFrame::Error { message } = &frames[0] else { panic!("{frames:?}") };
+    assert!(message.contains("mtx_path"), "{message}");
+    assert!(message.contains("--allow-mtx-path"), "{message}");
+    assert!(matches!(frames[1], ResponseFrame::Goodbye { served: 0 }));
+}
+
+#[test]
+fn failed_solve_reports_error_in_solution_frame() {
+    // Singular 2x2 — decodes fine, fails in the solver.
+    let input = "{\"op\":\"solve\",\"rows\":2,\"values\":[1,1,1,1],\"b\":[1,1]}\n\
+                 {\"op\":\"shutdown\"}\n";
+    let frames = run_session(input);
+    let s = solution(&frames[0]);
+    assert!(s.result.is_err(), "{:?}", s.result);
+    assert!(s.residual.is_nan());
+}
+
+#[test]
+fn no_cache_opts_out_of_fingerprint_keying() {
+    let a = diag_dominant_dense(12, GenSeed(40));
+    let s1 =
+        encode_request(&RequestFrame::Solve(WireSolve::dense(a.clone(), vec![1.0; 12]).without_cache()));
+    let s2 = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 12]).without_cache()));
+    let input = format!("{s1}\n{s2}\n{{\"op\":\"metrics\"}}\n{{\"op\":\"shutdown\"}}\n");
+    let frames = run_session(&input);
+    let ResponseFrame::Metrics(m) = &frames[2] else { panic!("{frames:?}") };
+    assert_eq!(m.factor_hits, 0, "uncached requests must not share factors");
+    assert_eq!(m.factor_misses, 2);
+}
+
+#[test]
+fn wire_layer_shares_service_with_in_process_callers() {
+    // One service, primed in-process, then served over the wire: the
+    // wire request hits the factorization cached by the direct call,
+    // because both derive the same content key.
+    let svc = start_service();
+    let a = diag_dominant_dense(18, GenSeed(41));
+    let key = ebv_solve::wire::fingerprint_dense(18, 18, a.data());
+    let resp = svc
+        .solve_dense_blocking(Arc::new(a.clone()), vec![1.0; 18], Some(key))
+        .unwrap();
+    assert!(resp.is_ok());
+
+    let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![2.0; 18])));
+    let input = format!("{solve}\n{{\"op\":\"metrics\"}}\n{{\"op\":\"shutdown\"}}\n");
+    let mut output = Vec::new();
+    serve_session(&svc, input.as_bytes(), &mut output).unwrap();
+    let frames: Vec<ResponseFrame> = String::from_utf8(output)
+        .unwrap()
+        .lines()
+        .map(|l| decode_response(l).unwrap())
+        .collect();
+    svc.shutdown();
+
+    let ResponseFrame::Metrics(m) = &frames[1] else { panic!("{frames:?}") };
+    assert_eq!(m.factor_misses, 1, "in-process call primed the cache");
+    assert!(m.factor_hits >= 1, "wire call reused it: {m:?}");
+}
