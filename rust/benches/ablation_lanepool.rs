@@ -1,0 +1,246 @@
+//! Lane-pool ablation: spawn-per-solve (the scoped seed behavior) vs
+//! the persistent [`LaneEngine`] on repeat-solve workloads — the wire
+//! traffic profile, where the same small-to-mid system is factored and
+//! solved over and over and per-request thread creation is pure
+//! overhead.
+//!
+//! Two workload families, both on 4 lanes with the paper's fold
+//! distribution:
+//!
+//! * `factor n=…` — one full EBV elimination per iteration;
+//! * `trisolve n=…` — one parallel forward substitution per iteration
+//!   against a cached factorization (the hot path once the factor
+//!   cache is warm).
+//!
+//! The spawned baselines are verbatim ports of the pre-engine scoped
+//! implementations (fresh `std::thread::scope` + `Barrier` per call),
+//! kept here as the measured comparator. Writes the standard bench
+//! report and a repo-level `BENCH_lanepool.json` summary.
+//!
+//! ```sh
+//! cargo bench --bench ablation_lanepool
+//! ```
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use ebv_solve::bench::{Bencher, Report};
+use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
+use ebv_solve::exec::LaneEngine;
+use ebv_solve::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
+use ebv_solve::matrix::DenseMatrix;
+use ebv_solve::solver::trisolve::forward_unit_dense_par;
+use ebv_solve::solver::{EbvLu, LuSolver, SeqLu};
+use ebv_solve::util::json::Json;
+
+/// Raw-pointer wrappers mirroring the seed's scoped kernels.
+struct SharedMatrix {
+    ptr: *mut f64,
+    cols: usize,
+}
+unsafe impl Send for SharedMatrix {}
+unsafe impl Sync for SharedMatrix {}
+
+struct SharedVec(*mut f64);
+unsafe impl Send for SharedVec {}
+unsafe impl Sync for SharedVec {}
+
+/// The seed's `parallel_eliminate`: one scope + one `std::sync::Barrier`
+/// per factorization (spawn-per-solve baseline).
+fn scoped_eliminate(lu: &mut DenseMatrix, schedule: &LaneSchedule) {
+    let n = lu.rows();
+    let lanes = schedule.lanes();
+    let barrier = Barrier::new(lanes);
+    let shared = SharedMatrix { ptr: lu.data_mut().as_mut_ptr(), cols: n };
+    std::thread::scope(|s| {
+        for lane in 0..lanes {
+            let barrier = &barrier;
+            let shared = &shared;
+            s.spawn(move || {
+                for r in 0..n - 1 {
+                    barrier.wait();
+                    let pivot_row = unsafe {
+                        std::slice::from_raw_parts(shared.ptr.add(r * shared.cols), shared.cols)
+                    };
+                    let inv = 1.0 / pivot_row[r];
+                    for &i in schedule.active_rows_of(lane, r) {
+                        let row_i = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                shared.ptr.add(i * shared.cols),
+                                shared.cols,
+                            )
+                        };
+                        let f = row_i[r] * inv;
+                        row_i[r] = f;
+                        if f == 0.0 {
+                            continue;
+                        }
+                        for (t, &p) in row_i[r + 1..].iter_mut().zip(pivot_row[r + 1..].iter()) {
+                            *t -= f * p;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// The seed's scoped parallel forward substitution.
+fn scoped_forward(lu: &DenseMatrix, b: &[f64], schedule: &LaneSchedule) -> Vec<f64> {
+    let n = lu.rows();
+    let lanes = schedule.lanes();
+    let mut y = b.to_vec();
+    let barrier = Barrier::new(lanes);
+    let y_ptr = SharedVec(y.as_mut_ptr());
+    std::thread::scope(|s| {
+        for lane in 0..lanes {
+            let barrier = &barrier;
+            let y_ptr = &y_ptr;
+            s.spawn(move || {
+                for j in 0..n - 1 {
+                    barrier.wait();
+                    let yj = unsafe { *y_ptr.0.add(j) };
+                    for &i in schedule.active_rows_of(lane, j) {
+                        let l_ij = lu.get(i, j);
+                        if l_ij != 0.0 {
+                            unsafe {
+                                *y_ptr.0.add(i) -= l_ij * yj;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    y
+}
+
+fn main() {
+    let lanes = 4;
+    let engine = Arc::new(LaneEngine::new(lanes));
+    let bencher = Bencher {
+        min_iters: 10,
+        max_iters: 60,
+        target_time: Duration::from_millis(700),
+        warmup_iters: 2,
+    };
+
+    let mut report = Report::new("Lane pool — spawn-per-solve vs persistent engine");
+    report.set_headers(&["case", "spawned, s", "pooled, s", "pooled speedup"]);
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+
+    // ---- factor family: full elimination per iteration --------------------
+    for n in [96usize, 160, 256] {
+        let a = diag_dominant_dense(n, GenSeed(1000 + n as u64));
+        let schedule = LaneSchedule::build(n, lanes, RowDist::EbvFold);
+
+        let t_spawn = bencher.run(&format!("factor-spawned n={n}"), || {
+            let mut lu = a.clone();
+            scoped_eliminate(&mut lu, &schedule);
+            lu
+        });
+        let pooled_solver =
+            EbvLu::with_lanes(lanes).seq_threshold(0).with_engine(Arc::clone(&engine));
+        let t_pool = bencher.run(&format!("factor-pooled n={n}"), || {
+            pooled_solver.factor(&a).expect("factor")
+        });
+
+        // Both paths must produce identical bits.
+        let mut lu = a.clone();
+        scoped_eliminate(&mut lu, &schedule);
+        let pooled = pooled_solver.factor(&a).expect("factor");
+        assert_eq!(pooled.packed().max_abs_diff(&lu), 0.0, "n={n}: scoped vs pooled bits");
+        let reference = SeqLu::new().factor(&a).expect("factor");
+        assert_eq!(pooled.packed().max_abs_diff(reference.packed()), 0.0, "n={n}: vs SeqLu");
+
+        push_case(&mut report, &mut results, format!("factor n={n}"), &t_spawn, &t_pool);
+        report.push_stats(t_spawn);
+        report.push_stats(t_pool);
+    }
+
+    // ---- trisolve family: warm-cache repeat solves ------------------------
+    for n in [160usize, 256] {
+        let a = diag_dominant_dense(n, GenSeed(2000 + n as u64));
+        let f = SeqLu::new().factor(&a).expect("factor");
+        let b = rhs(n, GenSeed(3000 + n as u64));
+        let schedule = LaneSchedule::build(n, lanes, RowDist::EbvFold);
+
+        let t_spawn = bencher.run(&format!("trisolve-spawned n={n}"), || {
+            scoped_forward(f.packed(), &b, &schedule)
+        });
+        let t_pool = bencher.run(&format!("trisolve-pooled n={n}"), || {
+            forward_unit_dense_par(f.packed(), &b, &schedule, &engine).expect("solve")
+        });
+
+        let spawned = scoped_forward(f.packed(), &b, &schedule);
+        let pooled = forward_unit_dense_par(f.packed(), &b, &schedule, &engine).expect("solve");
+        assert_eq!(spawned, pooled, "n={n}: scoped vs pooled substitution bits");
+
+        push_case(&mut report, &mut results, format!("trisolve n={n}"), &t_spawn, &t_pool);
+        report.push_stats(t_spawn);
+        report.push_stats(t_pool);
+    }
+
+    println!("{}", report.render());
+    if let Ok(p) = report.write_json() {
+        println!("report: {}", p.display());
+    }
+    println!("engine stats: {:?}", engine.stats());
+
+    // Repo-level summary the docs reference (BENCH_lanepool.json).
+    let doc = Json::obj([
+        ("bench", Json::from("ablation_lanepool")),
+        ("status", Json::from("measured")),
+        ("lanes", Json::from(lanes)),
+        (
+            "cases",
+            Json::arr(results.iter().map(|(name, spawn_s, pool_s)| {
+                Json::obj([
+                    ("name", Json::from(name.clone())),
+                    ("spawned_median_s", Json::from(*spawn_s)),
+                    ("pooled_median_s", Json::from(*pool_s)),
+                    ("speedup_pooled_over_spawned", Json::from(*spawn_s / *pool_s)),
+                ])
+            })),
+        ),
+    ]);
+    // Anchor on the manifest dir: `cargo bench` runs the binary with CWD
+    // at the package root (rust/), but the summary lives at the repo root.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_lanepool.json");
+    if std::fs::write(&out, doc.emit_pretty()).is_ok() {
+        println!("wrote {}", out.display());
+    }
+
+    // Direction check: the persistent engine must be at least as fast as
+    // spawn-per-solve on every repeat-solve case (10% timer-noise slack
+    // per case, strict on the aggregate).
+    let (mut agg_spawn, mut agg_pool) = (0.0f64, 0.0f64);
+    for (name, spawn_s, pool_s) in &results {
+        agg_spawn += spawn_s;
+        agg_pool += pool_s;
+        assert!(
+            *pool_s <= spawn_s * 1.10,
+            "{name}: pooled ({pool_s:.6}s) lost to spawn-per-solve ({spawn_s:.6}s)"
+        );
+    }
+    assert!(
+        agg_pool < agg_spawn,
+        "aggregate: pooled ({agg_pool:.6}s) not faster than spawned ({agg_spawn:.6}s)"
+    );
+}
+
+fn push_case(
+    report: &mut Report,
+    results: &mut Vec<(String, f64, f64)>,
+    name: String,
+    spawn: &ebv_solve::bench::Stats,
+    pool: &ebv_solve::bench::Stats,
+) {
+    report.push_row(vec![
+        name.clone(),
+        format!("{:.6}", spawn.median),
+        format!("{:.6}", pool.median),
+        format!("{:.2}x", spawn.median / pool.median),
+    ]);
+    results.push((name, spawn.median, pool.median));
+}

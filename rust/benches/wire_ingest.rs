@@ -150,8 +150,11 @@ fn main() {
             })),
         ),
     ]);
-    if std::fs::write("BENCH_wire.json", doc.emit_pretty()).is_ok() {
-        println!("wrote BENCH_wire.json");
+    // Anchor on the manifest dir: `cargo bench` runs the binary with CWD
+    // at the package root (rust/), but the summary lives at the repo root.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_wire.json");
+    if std::fs::write(&out, doc.emit_pretty()).is_ok() {
+        println!("wrote {}", out.display());
     }
 
     // Direction check: streaming ingest must not lose to full tree

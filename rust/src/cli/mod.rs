@@ -99,6 +99,10 @@ COMMANDS:
     serve     Serve solves over the NDJSON wire protocol on stdin/stdout
               (see README.md §Wire protocol for the frame format)
               --lanes <k> --batch <k> --window-us <µs> --queue <k>
+              --engine-lanes <k>            (resident lanes in the shared
+                                             execution engine; 0 = all
+                                             cores, see README.md
+                                             §Execution engine)
               --allow-mtx-path              (let frames reference local
                                              .mtx files; trusted peers only)
               --runtime                     (use PJRT artifacts)

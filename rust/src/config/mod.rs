@@ -112,6 +112,11 @@ pub struct ServiceConfig {
     pub batch_window_us: u64,
     /// Bound on the pending-request queue (backpressure threshold).
     pub queue_capacity: usize,
+    /// Resident lanes in the shared execution engine (`0` = size from
+    /// `EBV_ENGINE_LANES` / available parallelism). Distinct from
+    /// `lanes`, which is the schedule *width* the solvers request —
+    /// widths virtualize onto the resident pool.
+    pub engine_lanes: usize,
     /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
     /// Prefer the PJRT runtime for sizes with compiled artifacts.
@@ -128,6 +133,7 @@ impl Default for ServiceConfig {
             max_batch: 16,
             batch_window_us: 200,
             queue_capacity: 1024,
+            engine_lanes: 0,
             artifacts_dir: "artifacts".to_string(),
             use_runtime: false,
             refine: true,
@@ -139,15 +145,11 @@ impl ServiceConfig {
     /// Build from a raw config's `[service]` section (all keys optional).
     pub fn from_raw(raw: &RawConfig) -> Result<ServiceConfig> {
         let d = ServiceConfig::default();
-        let dist = match raw.get("service", "dist").as_deref() {
+        let dist = match raw.get("service", "dist") {
             None => d.dist,
-            Some("block") => RowDist::Block,
-            Some("cyclic") => RowDist::Cyclic,
-            Some("ebv-fold") => RowDist::EbvFold,
-            Some("greedy-lpt") => RowDist::GreedyLpt,
-            Some(other) => {
-                return Err(EbvError::Config(format!("service.dist: unknown strategy `{other}`")))
-            }
+            Some(name) => RowDist::parse(&name).ok_or_else(|| {
+                EbvError::Config(format!("service.dist: unknown strategy `{name}`"))
+            })?,
         };
         let cfg = ServiceConfig {
             lanes: raw.get_parsed("service", "lanes", d.lanes)?,
@@ -155,6 +157,7 @@ impl ServiceConfig {
             max_batch: raw.get_parsed("service", "max_batch", d.max_batch)?,
             batch_window_us: raw.get_parsed("service", "batch_window_us", d.batch_window_us)?,
             queue_capacity: raw.get_parsed("service", "queue_capacity", d.queue_capacity)?,
+            engine_lanes: raw.get_parsed("service", "engine_lanes", d.engine_lanes)?,
             artifacts_dir: raw
                 .get("service", "artifacts_dir")
                 .unwrap_or_else(|| d.artifacts_dir.clone()),
@@ -203,6 +206,16 @@ mod tests {
         assert_eq!(cfg.artifacts_dir, "my/arts");
         // Unspecified keys fall back to defaults.
         assert_eq!(cfg.max_batch, ServiceConfig::default().max_batch);
+        assert_eq!(cfg.engine_lanes, 0, "engine auto-sizes by default");
+    }
+
+    #[test]
+    fn engine_lanes_knob_parses() {
+        let raw = RawConfig::parse("[service]\nengine_lanes = 6\n").unwrap();
+        let cfg = ServiceConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.engine_lanes, 6);
+        let raw = RawConfig::parse("[service]\nengine_lanes = no\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
     }
 
     #[test]

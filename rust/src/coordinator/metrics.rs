@@ -86,6 +86,14 @@ pub struct MetricsSnapshot {
     pub lat_mean_s: f64,
     pub lat_p50_s: f64,
     pub lat_p99_s: f64,
+    /// Lane-engine counters (resident lanes, pooled jobs, barrier-
+    /// separated steps, lane-barrier crossings). Zero until merged by
+    /// [`ServiceHandle::metrics_snapshot`](crate::coordinator::ServiceHandle::metrics_snapshot)
+    /// — `ServiceMetrics` itself has no engine reference.
+    pub engine_lanes: u64,
+    pub engine_jobs: u64,
+    pub engine_steps: u64,
+    pub engine_barrier_waits: u64,
 }
 
 /// All service-level metrics.
@@ -144,7 +152,24 @@ impl ServiceMetrics {
             lat_mean_s: self.latency.mean(),
             lat_p50_s: self.latency.quantile(0.5),
             lat_p99_s: self.latency.quantile(0.99),
+            engine_lanes: 0,
+            engine_jobs: 0,
+            engine_steps: 0,
+            engine_barrier_waits: 0,
         }
+    }
+
+    /// Fold a lane-engine snapshot into a metrics snapshot (the service
+    /// handle does this; standalone `ServiceMetrics` users report zeros).
+    pub fn merge_engine(
+        mut snap: MetricsSnapshot,
+        engine: crate::exec::EngineStatsSnapshot,
+    ) -> MetricsSnapshot {
+        snap.engine_lanes = engine.lanes;
+        snap.engine_jobs = engine.jobs;
+        snap.engine_steps = engine.steps;
+        snap.engine_barrier_waits = engine.barrier_waits;
+        snap
     }
 
     /// One-line human summary for service logs and examples.
@@ -224,6 +249,29 @@ mod tests {
         // does not change the copy.
         m.submitted.store(100, Ordering::Relaxed);
         assert_eq!(s.submitted, 7);
+        // Engine fields are zero until a handle merges them in.
+        assert_eq!(s.engine_lanes, 0);
+        assert_eq!(s.engine_jobs, 0);
+    }
+
+    #[test]
+    fn merge_engine_fills_engine_fields() {
+        let m = ServiceMetrics::default();
+        m.completed.store(3, Ordering::Relaxed);
+        let e = crate::exec::EngineStatsSnapshot {
+            lanes: 4,
+            jobs: 9,
+            inline_jobs: 2,
+            steps: 120,
+            barrier_waits: 480,
+            slow_waits: 1,
+        };
+        let s = ServiceMetrics::merge_engine(m.snapshot(), e);
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.engine_lanes, 4);
+        assert_eq!(s.engine_jobs, 9);
+        assert_eq!(s.engine_steps, 120);
+        assert_eq!(s.engine_barrier_waits, 480);
     }
 
     #[test]

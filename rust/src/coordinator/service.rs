@@ -54,12 +54,21 @@ impl SolverService {
             }
         }
 
+        // One resident lane engine shared by every worker: parallel
+        // factor/substitution jobs serialize on it instead of each
+        // worker spawning its own oversubscribed thread scope per solve.
+        let engine_lanes =
+            if cfg.engine_lanes == 0 { crate::exec::default_lanes() } else { cfg.engine_lanes };
+        let engine = Arc::new(crate::exec::LaneEngine::new(engine_lanes));
+        log::info!(target: "service", "lane engine up: {engine_lanes} resident lanes");
+
         let metrics = Arc::new(ServiceMetrics::default());
         let replies = Mutex::new(HashMap::new());
         let ctx = Arc::new(WorkerCtx {
             router: Router::new(runtime.is_some(), runtime_sizes),
             solve_lanes: cfg.lanes,
             dist: cfg.dist,
+            engine,
             cache: Mutex::new(FactorCache::with_capacity(64)),
             replies,
             metrics: Arc::clone(&metrics),
@@ -258,6 +267,17 @@ impl ServiceHandle {
         &self.metrics
     }
 
+    /// The shared lane engine the workers solve on.
+    pub fn engine(&self) -> &crate::exec::LaneEngine {
+        &self.ctx.engine
+    }
+
+    /// Service counters with the lane-engine stats merged in — what the
+    /// wire `metrics` frame carries.
+    pub fn metrics_snapshot(&self) -> crate::coordinator::metrics::MetricsSnapshot {
+        ServiceMetrics::merge_engine(self.metrics.snapshot(), self.ctx.engine.stats())
+    }
+
     /// Graceful shutdown: stop intake, drain queues, join every thread.
     pub fn shutdown(mut self) {
         // Closing ingress drains the batcher; closing the bypass sender
@@ -394,6 +414,27 @@ mod tests {
         // The drained batch still produced a response.
         let resp = rx.recv().unwrap();
         assert!(resp.result.is_ok());
+    }
+
+    #[test]
+    fn workers_share_one_engine_and_report_its_stats() {
+        let mut cfg = test_cfg();
+        cfg.engine_lanes = 2;
+        let svc = SolverService::start(cfg).unwrap();
+        assert_eq!(svc.engine().lanes(), 2);
+        // Large enough to clear the sequential fall-through (128), so
+        // the factorization is a pooled engine job.
+        let a = Arc::new(diag_dominant_dense(160, GenSeed(98)));
+        for key in [Some(13), Some(13), None] {
+            let resp = svc.solve_dense_blocking(Arc::clone(&a), vec![1.0; 160], key).unwrap();
+            assert!(resp.result.is_ok());
+        }
+        let snap = svc.metrics_snapshot();
+        assert_eq!(snap.engine_lanes, 2);
+        assert!(snap.engine_jobs >= 1, "{snap:?}");
+        assert!(snap.engine_steps >= 159, "{snap:?}");
+        assert_eq!(snap.engine_barrier_waits, snap.engine_steps * 2);
+        svc.shutdown();
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Worker pool: executes batches against the routed backend, with a
-//! shared factorization cache keyed by `matrix_key`.
+//! shared factorization cache keyed by `matrix_key` and one shared
+//! [`LaneEngine`] under every parallel solve (workers don't spawn
+//! per-solve lanes; they submit to the resident pool).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -10,17 +12,35 @@ use crate::coordinator::batcher::Batch;
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::coordinator::request::{Payload, SolveRequest, SolveResponse, Timings};
 use crate::coordinator::router::{Backend, Router};
+use crate::exec::LaneEngine;
 use crate::runtime::{ArtifactKind, RuntimeClient};
 use crate::solver::refine::refine_external_solution;
 use crate::solver::{DenseLuFactors, EbvLu, LuSolver, SparseLu, SparseLuFactors};
 use crate::util::error::Result;
 
-/// Cached factorizations, bounded LRU-ish (evicts oldest insertion).
+/// Kind-tagged cache key: dense and sparse factors live in one cache
+/// with one capacity, but a dense and a sparse entry sharing the same
+/// 53-bit wire key are distinct — evicting one must not drop the other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CacheKey {
+    Dense(u64),
+    Sparse(u64),
+}
+
+/// Cached factorizations: a true bounded LRU. Hits refresh recency;
+/// re-inserting a live key refreshes instead of duplicating; eviction
+/// takes the least-recently-used entry in O(1) off a deque.
+///
+/// The recency scan in [`FactorCache::touch`] is O(cap); with service
+/// caps in the tens of entries that is cheaper than maintaining an
+/// intrusive list, and it replaces the seed's O(n) `Vec::remove(0)` on
+/// the *eviction* hot path with `pop_front`.
 #[derive(Default)]
 pub struct FactorCache {
     dense: HashMap<u64, Arc<DenseLuFactors>>,
     sparse: HashMap<u64, Arc<SparseLuFactors>>,
-    insertion: Vec<u64>,
+    /// Recency order, least-recently-used first; one entry per live key.
+    order: VecDeque<CacheKey>,
     cap: usize,
 }
 
@@ -29,34 +49,49 @@ impl FactorCache {
         FactorCache { cap: cap.max(1), ..Default::default() }
     }
 
+    /// Move `key` to the most-recent position (inserting if absent).
+    fn touch(&mut self, key: CacheKey) {
+        if let Some(pos) = self.order.iter().position(|&k| k == key) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(key);
+    }
+
     fn evict_if_needed(&mut self) {
         while self.dense.len() + self.sparse.len() > self.cap {
-            if self.insertion.is_empty() {
-                break;
+            let Some(victim) = self.order.pop_front() else { break };
+            match victim {
+                CacheKey::Dense(k) => {
+                    self.dense.remove(&k);
+                }
+                CacheKey::Sparse(k) => {
+                    self.sparse.remove(&k);
+                }
             }
-            let k = self.insertion.remove(0);
-            self.dense.remove(&k);
-            self.sparse.remove(&k);
         }
     }
 
-    pub fn get_dense(&self, key: u64) -> Option<Arc<DenseLuFactors>> {
-        self.dense.get(&key).cloned()
+    pub fn get_dense(&mut self, key: u64) -> Option<Arc<DenseLuFactors>> {
+        let f = self.dense.get(&key).cloned()?;
+        self.touch(CacheKey::Dense(key));
+        Some(f)
     }
 
     pub fn put_dense(&mut self, key: u64, f: Arc<DenseLuFactors>) {
         self.dense.insert(key, f);
-        self.insertion.push(key);
+        self.touch(CacheKey::Dense(key));
         self.evict_if_needed();
     }
 
-    pub fn get_sparse(&self, key: u64) -> Option<Arc<SparseLuFactors>> {
-        self.sparse.get(&key).cloned()
+    pub fn get_sparse(&mut self, key: u64) -> Option<Arc<SparseLuFactors>> {
+        let f = self.sparse.get(&key).cloned()?;
+        self.touch(CacheKey::Sparse(key));
+        Some(f)
     }
 
     pub fn put_sparse(&mut self, key: u64, f: Arc<SparseLuFactors>) {
         self.sparse.insert(key, f);
-        self.insertion.push(key);
+        self.touch(CacheKey::Sparse(key));
         self.evict_if_needed();
     }
 
@@ -72,9 +107,13 @@ impl FactorCache {
 /// Shared state handed to every worker.
 pub struct WorkerCtx {
     pub router: Router,
-    /// Lanes used by the native solvers *within* one worker.
+    /// Schedule width for the native solvers (virtual lanes; the
+    /// engine's resident pool executes them).
     pub solve_lanes: usize,
     pub dist: crate::ebv::schedule::RowDist,
+    /// The one resident lane engine every worker's parallel factor and
+    /// substitution work submits to (sized by `engine_lanes` config).
+    pub engine: Arc<LaneEngine>,
     pub cache: Mutex<FactorCache>,
     /// id → reply channel; workers remove entries as they respond.
     pub replies: Mutex<HashMap<u64, mpsc::Sender<SolveResponse>>>,
@@ -190,7 +229,9 @@ fn dense_factors(
         }
     }
     ctx.metrics.factor_misses.fetch_add(1, Ordering::Relaxed);
-    let solver = EbvLu::with_lanes(ctx.solve_lanes).with_dist(ctx.dist);
+    let solver = EbvLu::with_lanes(ctx.solve_lanes)
+        .with_dist(ctx.dist)
+        .with_engine(Arc::clone(&ctx.engine));
     let f = Arc::new(solver.factor(a)?);
     if let Some(key) = req.matrix_key {
         ctx.cache.lock().expect("cache").put_dense(key, Arc::clone(&f));
@@ -209,11 +250,15 @@ fn solve_dense_batch(
             return reqs.iter().map(|r| (r.id, Err(e.to_string()))).collect();
         }
     };
+    // The batch shares the factors by construction (same matrix_key), so
+    // its right-hand sides are exactly a multi-RHS panel: solve them as
+    // one lane-distributed engine job (bit-identical per column), with
+    // per-request outcomes preserved.
+    let rhs: Vec<&[f64]> = reqs.iter().map(|r| r.payload.rhs()).collect();
+    let xs = factors.solve_panel(&rhs, &ctx.engine);
     reqs.iter()
-        .map(|r| {
-            let x = factors.solve(r.payload.rhs()).map_err(|e| e.to_string());
-            (r.id, x)
-        })
+        .zip(xs)
+        .map(|(r, x)| (r.id, x.map_err(|e| e.to_string())))
         .collect()
 }
 
@@ -247,7 +292,9 @@ fn solve_sparse_batch(
     };
     reqs.iter()
         .map(|r| {
-            let x = factors.solve_par(r.payload.rhs(), ctx.solve_lanes).map_err(|e| e.to_string());
+            let x = factors
+                .solve_par_on(r.payload.rhs(), ctx.solve_lanes, &ctx.engine)
+                .map_err(|e| e.to_string());
             (r.id, x)
         })
         .collect()
@@ -280,7 +327,8 @@ fn solve_pjrt_batch(
                         // f32 kernel + f64 refinement = f64-quality answer
                         // with the compiled kernel doing the heavy lifting.
                         if let Ok((xr, _)) = refine_external_solution(
-                            &EbvLu::with_lanes(ctx.solve_lanes),
+                            &EbvLu::with_lanes(ctx.solve_lanes)
+                                .with_engine(Arc::clone(&ctx.engine)),
                             a,
                             r.payload.rhs(),
                             &x,
@@ -321,6 +369,7 @@ mod tests {
             router: Router::new(false, []),
             solve_lanes: 2,
             dist: RowDist::EbvFold,
+            engine: Arc::new(LaneEngine::new(2)),
             cache: Mutex::new(FactorCache::with_capacity(4)),
             replies: Mutex::new(HashMap::new()),
             metrics: Arc::new(ServiceMetrics::default()),
@@ -411,5 +460,68 @@ mod tests {
         assert!(cache.len() <= 2);
         assert!(cache.get_dense(4).is_some(), "most recent survives");
         assert!(cache.get_dense(0).is_none(), "oldest evicted");
+    }
+
+    fn dense_entry() -> Arc<DenseLuFactors> {
+        let a = diag_dominant_dense(8, GenSeed(85));
+        Arc::new(crate::solver::SeqLu::new().factor(&a).unwrap())
+    }
+
+    fn sparse_entry() -> Arc<SparseLuFactors> {
+        let a = diag_dominant_sparse(8, 3, GenSeed(86));
+        Arc::new(SparseLu::new().factor(&a).unwrap())
+    }
+
+    #[test]
+    fn cache_reinsert_refreshes_instead_of_duplicating() {
+        // The seed pushed a duplicate recency entry per re-insert, so a
+        // hot key could evict *itself*. Re-inserting must refresh.
+        let mut cache = FactorCache::with_capacity(2);
+        let f = dense_entry();
+        for _ in 0..10 {
+            cache.put_dense(7, Arc::clone(&f));
+        }
+        assert_eq!(cache.len(), 1);
+        // Key 7 is most-recent: inserting one more key evicts nothing
+        // of it, inserting two evicts 7 only after it becomes LRU.
+        cache.put_dense(8, Arc::clone(&f));
+        assert!(cache.get_dense(7).is_some());
+        assert!(cache.get_dense(8).is_some());
+    }
+
+    #[test]
+    fn cache_hits_refresh_recency() {
+        let mut cache = FactorCache::with_capacity(2);
+        let f = dense_entry();
+        cache.put_dense(1, Arc::clone(&f));
+        cache.put_dense(2, Arc::clone(&f));
+        // Touch 1, then insert 3: the LRU victim must be 2, not 1.
+        assert!(cache.get_dense(1).is_some());
+        cache.put_dense(3, Arc::clone(&f));
+        assert!(cache.get_dense(1).is_some(), "recently used survives");
+        assert!(cache.get_dense(2).is_none(), "LRU entry evicted");
+    }
+
+    #[test]
+    fn cache_dense_and_sparse_keys_do_not_collide() {
+        // The seed shared one keyspace: evicting wire key 7 dropped both
+        // the dense and the sparse factorization under 7. The kinds are
+        // distinct entries now.
+        let mut cache = FactorCache::with_capacity(4);
+        cache.put_dense(7, dense_entry());
+        cache.put_sparse(7, sparse_entry());
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get_dense(7).is_some());
+        assert!(cache.get_sparse(7).is_some());
+
+        // Fill to capacity and beyond; the two kinds under key 7 are
+        // evicted independently, in their own recency order.
+        let mut cache = FactorCache::with_capacity(2);
+        cache.put_dense(7, dense_entry());
+        cache.put_sparse(7, sparse_entry());
+        cache.put_dense(9, dense_entry()); // evicts Dense(7) only
+        assert!(cache.get_dense(7).is_none());
+        assert!(cache.get_sparse(7).is_some(), "sparse twin must survive");
+        assert!(cache.get_dense(9).is_some());
     }
 }

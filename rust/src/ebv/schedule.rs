@@ -41,6 +41,11 @@ impl RowDist {
             RowDist::GreedyLpt => "greedy-lpt",
         }
     }
+
+    /// Parse a config/CLI strategy name (the inverse of [`RowDist::name`]).
+    pub fn parse(name: &str) -> Option<RowDist> {
+        RowDist::ALL.into_iter().find(|d| d.name() == name)
+    }
 }
 
 /// A static assignment of matrix rows to `lanes` worker lanes.
@@ -136,6 +141,14 @@ impl LaneSchedule {
         let rows = &self.rows[l];
         let start = rows.partition_point(|&i| i <= r);
         &rows[start..]
+    }
+
+    /// Rows owned by lane `l` that are strictly above pivot `j`
+    /// (the active set during a backward-substitution column step).
+    pub fn upper_rows_of(&self, l: usize, j: usize) -> &[usize] {
+        let rows = &self.rows[l];
+        let end = rows.partition_point(|&i| i < j);
+        &rows[..end]
     }
 
     /// Total elimination work assigned to each lane.
@@ -251,6 +264,31 @@ mod tests {
         assert_eq!(s.active_rows_of(0, 6), &[] as &[usize]);
         // All rows active before step 0 except row 0 itself.
         assert_eq!(s.active_rows_of(0, 0), &[2, 4, 6]);
+    }
+
+    #[test]
+    fn upper_rows_mirror_active_rows() {
+        let s = LaneSchedule::build(8, 2, RowDist::Cyclic);
+        // Lane 0 owns {0,2,4,6}; strictly above pivot 5 -> {0, 2, 4}.
+        assert_eq!(s.upper_rows_of(0, 5), &[0, 2, 4]);
+        assert_eq!(s.upper_rows_of(0, 0), &[] as &[usize]);
+        // Together, upper + owner-or-below cover the lane's rows.
+        for l in 0..2 {
+            for j in 0..8 {
+                let upper = s.upper_rows_of(l, j).len();
+                let lower = s.active_rows_of(l, j).len();
+                let at_j = usize::from(s.owner(j) == l);
+                assert_eq!(upper + lower + at_j, s.rows_of(l).len(), "l={l} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_names_round_trip() {
+        for dist in RowDist::ALL {
+            assert_eq!(RowDist::parse(dist.name()), Some(dist));
+        }
+        assert_eq!(RowDist::parse("zigzag"), None);
     }
 
     #[test]

@@ -1,0 +1,367 @@
+//! [`LaneEngine`]: the public face of the persistent pool — job
+//! submission, the inline fast path, stats, and the process-global
+//! default engine used by the standalone solver API.
+
+use std::fmt;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::exec::stats::{EngineStats, EngineStatsSnapshot};
+use crate::exec::team::{LaneTeam, RawJob};
+
+/// Per-(vlane, step) verdict of a step closure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepCtl {
+    /// Keep stepping.
+    Continue,
+    /// Finish the current step on every lane, then end the job (no step
+    /// after this one runs anywhere). Any single vlane may break — the
+    /// engine propagates the stop unanimously through the step barrier.
+    Break,
+}
+
+/// A step closure: `(vlane, step) -> StepCtl`, shared by every lane.
+pub type StepFn<'a> = &'a (dyn Fn(usize, usize) -> StepCtl + Sync);
+
+/// A persistent pool of pinned lane workers executing barrier-stepped
+/// jobs (see the [module docs](crate::exec)).
+///
+/// Jobs serialize: `run_steps` from a second thread blocks until the
+/// engine is free. That is the intended sharing model — one engine
+/// sized for the machine, fed by every solve path, instead of each
+/// caller spawning its own oversubscribed lane set.
+///
+/// # Limitations
+/// Submitting from inside a running job of the *same* engine deadlocks
+/// (the resident lanes cannot pick up nested work); none of the solver
+/// paths nest. A panicking step closure is caught on whichever lane it
+/// runs, ends the job at that step, and re-raises on the submitting
+/// thread — the pool itself survives and stays usable.
+pub struct LaneEngine {
+    lanes: usize,
+    /// `None` for single-lane engines — those run every job inline.
+    team: Option<LaneTeam>,
+    /// Serializes jobs; held for the full duration of a pooled job.
+    submit: Mutex<()>,
+    stats: EngineStats,
+}
+
+impl fmt::Debug for LaneEngine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LaneEngine").field("lanes", &self.lanes).finish_non_exhaustive()
+    }
+}
+
+// The auto-impls are lost only to the worker `JoinHandle`s, which expose
+// no engine state; everything observable lives behind mutexes (which
+// poison) and atomics. A panicking step closure is caught per lane and
+// re-raised on the submitter with the pool already joined and
+// consistent (see `team::run_job`), so an unwind boundary sees no
+// broken invariant.
+impl std::panic::UnwindSafe for LaneEngine {}
+impl std::panic::RefUnwindSafe for LaneEngine {}
+
+impl LaneEngine {
+    /// Engine with `lanes` resident lanes (`lanes - 1` worker threads;
+    /// the submitting thread is lane 0). `lanes <= 1` builds an inline
+    /// engine with no threads at all.
+    pub fn new(lanes: usize) -> LaneEngine {
+        let lanes = lanes.max(1);
+        LaneEngine {
+            lanes,
+            team: (lanes > 1).then(|| LaneTeam::spawn(lanes)),
+            submit: Mutex::new(()),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Engine sized like [`default_lanes`].
+    pub fn auto() -> LaneEngine {
+        LaneEngine::new(default_lanes())
+    }
+
+    /// Resident lanes (including the submitting lane).
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run a step-loop job: for each of `steps` barrier-separated steps,
+    /// execute `f(vlane, step)` once for every virtual lane in
+    /// `0..width`. Within a step all vlanes run concurrently (dealt
+    /// round-robin across the resident lanes); across steps the barrier
+    /// guarantees every write of step `s` is visible at step `s + 1`.
+    ///
+    /// Blocks until the job completes; the closure may borrow from the
+    /// caller's stack. Vlanes must write disjoint data within a step
+    /// (the solvers guarantee this by row ownership).
+    pub fn run_steps<F>(&self, width: usize, steps: usize, f: F)
+    where
+        F: Fn(usize, usize) -> StepCtl + Sync,
+    {
+        if width == 0 || steps == 0 {
+            return;
+        }
+        let Some(team) = &self.team else {
+            return self.run_inline(width, steps, &f);
+        };
+        if width == 1 {
+            // One vlane cannot use the pool; skip the hand-off.
+            return self.run_inline(width, steps, &f);
+        }
+        let erased: StepFn<'_> = &f;
+        // SAFETY: the only lie is the lifetime — `team.run` joins every
+        // lane before returning, so no reference to `f` survives this
+        // frame. `F: Sync` makes the shared `&f` sound across lanes.
+        let erased: StepFn<'static> =
+            unsafe { std::mem::transmute::<StepFn<'_>, StepFn<'static>>(erased) };
+        // Poison-tolerant: a previous job's re-raised panic unwound
+        // through this lock, but the pool joined cleanly first — the
+        // engine remains consistent and serviceable.
+        let guard = self.submit.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        team.run(RawJob { f: erased, width, steps });
+        drop(guard);
+        self.stats.record_pooled_job();
+    }
+
+    /// Caller-thread execution preserving pooled semantics exactly: all
+    /// vlanes of a step run (in ascending order) even when one breaks,
+    /// and no later step runs after a break.
+    fn run_inline(&self, width: usize, steps: usize, f: &(dyn Fn(usize, usize) -> StepCtl + Sync)) {
+        self.stats.record_inline_job();
+        for step in 0..steps {
+            let mut stop = false;
+            for vlane in 0..width {
+                if f(vlane, step) == StepCtl::Break {
+                    stop = true;
+                }
+            }
+            if stop {
+                break;
+            }
+        }
+    }
+
+    /// Detached counters for metrics frames and logs.
+    pub fn stats(&self) -> EngineStatsSnapshot {
+        let (steps, barrier_waits, slow_waits) = match &self.team {
+            Some(t) => (t.generations(), t.waits(), t.slow_waits()),
+            None => (0, 0, 0),
+        };
+        EngineStatsSnapshot {
+            lanes: self.lanes as u64,
+            jobs: self.stats.jobs.load(Ordering::Relaxed),
+            inline_jobs: self.stats.inline_jobs.load(Ordering::Relaxed),
+            steps,
+            barrier_waits,
+            slow_waits,
+        }
+    }
+}
+
+/// Lane count for auto-sized engines: `EBV_ENGINE_LANES` if set and
+/// positive, else the machine's available parallelism.
+pub fn default_lanes() -> usize {
+    std::env::var("EBV_ENGINE_LANES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        })
+}
+
+static GLOBAL: OnceLock<LaneEngine> = OnceLock::new();
+
+/// The process-global default engine, built on first use. The
+/// standalone solver API (solvers constructed without an explicit
+/// engine) submits here, so library users get pooled execution without
+/// plumbing; services construct their own sized engine and share it via
+/// [`Arc`].
+pub fn global() -> &'static LaneEngine {
+    GLOBAL.get_or_init(LaneEngine::auto)
+}
+
+/// Convenience for call sites holding an optional engine override.
+pub fn engine_or_global(engine: Option<&Arc<LaneEngine>>) -> &LaneEngine {
+    match engine {
+        Some(e) => e.as_ref(),
+        None => global(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Per-(vlane, step) execution counter grid.
+    fn count_grid(width: usize, steps: usize) -> Vec<Vec<AtomicUsize>> {
+        (0..steps)
+            .map(|_| (0..width).map(|_| AtomicUsize::new(0)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn every_vlane_runs_every_step() {
+        for lanes in [1usize, 2, 4] {
+            let engine = LaneEngine::new(lanes);
+            for width in [1usize, 2, 3, 7] {
+                let steps = 5;
+                let grid = count_grid(width, steps);
+                engine.run_steps(width, steps, |vlane, step| {
+                    grid[step][vlane].fetch_add(1, Ordering::Relaxed);
+                    StepCtl::Continue
+                });
+                for row in &grid {
+                    for cell in row {
+                        assert_eq!(cell.load(Ordering::Relaxed), 1, "lanes={lanes} width={width}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_publishes_nonatomic_writes() {
+        // Ping-pong ring shift through two plain (non-atomic) buffers:
+        // step s reads the buffer written at step s-1, so the values can
+        // only come out right if the step barrier publishes every write.
+        let engine = LaneEngine::new(4);
+        let width = 8;
+        let steps = 50;
+        let mut a = vec![0u64; width];
+        let mut b = vec![0u64; width];
+        let pa = crate::exec::LaneSlots::new(&mut a);
+        let pb = crate::exec::LaneSlots::new(&mut b);
+        engine.run_steps(width, steps, |vlane, step| {
+            let (src, dst) = if step % 2 == 0 { (&pa, &pb) } else { (&pb, &pa) };
+            // SAFETY: each vlane writes only dst[vlane]; each src slot
+            // has exactly one reader, and src was last written a step
+            // ago (published by the barrier).
+            unsafe { *dst.slot(vlane) = *src.slot((vlane + 1) % width) + 1 };
+            StepCtl::Continue
+        });
+        // The final write of step `steps - 1` landed in `a` (odd last
+        // step writes the even-parity buffer).
+        assert!(a.iter().all(|&v| v == steps as u64), "{a:?}");
+    }
+
+    #[test]
+    fn break_finishes_step_and_stops_after() {
+        for lanes in [1usize, 3] {
+            let engine = LaneEngine::new(lanes);
+            let width = 6;
+            let steps = 8;
+            let grid = count_grid(width, steps);
+            engine.run_steps(width, steps, |vlane, step| {
+                grid[step][vlane].fetch_add(1, Ordering::Relaxed);
+                // Only vlane 2 hits the stop condition, at step 3 — the
+                // heterogeneous case (e.g. a zero diagonal seen by one
+                // owner).
+                if vlane == 2 && step == 3 {
+                    StepCtl::Break
+                } else {
+                    StepCtl::Continue
+                }
+            });
+            for (step, row) in grid.iter().enumerate() {
+                for (vlane, cell) in row.iter().enumerate() {
+                    let expected = usize::from(step <= 3);
+                    assert_eq!(
+                        cell.load(Ordering::Relaxed),
+                        expected,
+                        "lanes={lanes} step={step} vlane={vlane}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jobs_serialize_across_threads() {
+        let engine = std::sync::Arc::new(LaneEngine::new(2));
+        let in_job = std::sync::Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let engine = std::sync::Arc::clone(&engine);
+                let in_job = std::sync::Arc::clone(&in_job);
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        engine.run_steps(2, 3, |vlane, _| {
+                            if vlane == 0 {
+                                // Exactly one job may be inside the pool.
+                                let now = in_job.fetch_add(1, Ordering::SeqCst);
+                                assert_eq!(now, 0, "jobs overlapped");
+                                in_job.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            StepCtl::Continue
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("submitter thread");
+        }
+        assert_eq!(engine.stats().jobs, 80);
+    }
+
+    #[test]
+    fn stats_track_inline_and_pooled() {
+        let engine = LaneEngine::new(2);
+        engine.run_steps(1, 4, |_, _| StepCtl::Continue); // width 1 -> inline
+        engine.run_steps(3, 4, |_, _| StepCtl::Continue); // pooled
+        let s = engine.stats();
+        assert_eq!(s.lanes, 2);
+        assert_eq!(s.inline_jobs, 1);
+        assert_eq!(s.jobs, 1);
+        assert_eq!(s.steps, 4);
+        assert_eq!(s.barrier_waits, 8);
+
+        let inline = LaneEngine::new(1);
+        inline.run_steps(5, 5, |_, _| StepCtl::Continue);
+        assert_eq!(inline.stats().inline_jobs, 1);
+        assert_eq!(inline.stats().steps, 0);
+    }
+
+    #[test]
+    fn panicking_closure_propagates_and_pool_survives() {
+        let engine = LaneEngine::new(3);
+        // vlane 4 lives on a *worker* lane (4 % 3 == 1): the panic must
+        // cross back to the submitting thread, not hang the barrier.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.run_steps(6, 4, |vlane, step| {
+                if vlane == 4 && step == 1 {
+                    panic!("boom in a lane");
+                }
+                StepCtl::Continue
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+
+        // The pool is intact: a subsequent job runs every (vlane, step).
+        let grid = count_grid(2, 3);
+        engine.run_steps(2, 3, |vlane, step| {
+            grid[step][vlane].fetch_add(1, Ordering::Relaxed);
+            StepCtl::Continue
+        });
+        assert!(grid.iter().flatten().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_work_is_a_no_op() {
+        let engine = LaneEngine::new(2);
+        engine.run_steps(0, 10, |_, _| panic!("must not run"));
+        engine.run_steps(10, 0, |_, _| panic!("must not run"));
+        assert_eq!(engine.stats().jobs + engine.stats().inline_jobs, 0);
+    }
+
+    #[test]
+    fn global_engine_is_shared_and_sized() {
+        let g1 = global() as *const LaneEngine;
+        let g2 = global() as *const LaneEngine;
+        assert_eq!(g1, g2);
+        assert!(global().lanes() >= 1);
+    }
+}

@@ -1,0 +1,91 @@
+//! Persistent lane engine: one long-lived, barrier-stepped worker pool
+//! under every parallel solve path.
+//!
+//! The paper's execution model is a fixed team of GPU threads marching
+//! through elimination steps separated by `__syncthreads()`. The seed
+//! code reproduced that shape faithfully *per call* — every
+//! factorization and every parallel substitution spun up a fresh
+//! `std::thread::scope` — which made thread creation the dominant fixed
+//! cost once the wire protocol started serving repeat traffic. This
+//! module keeps the team **resident**: lanes are spawned once, parked on
+//! a condvar between jobs, and synchronized per step with a spin-first
+//! [`EpochBarrier`] instead of being created and joined per solve.
+//!
+//! A job is a *step loop*: a closure over `(vlane, step)` executed for
+//! `width` virtual lanes across `steps` barrier-separated steps (see
+//! [`LaneEngine::run_steps`]). Virtual lanes let a schedule built for
+//! any lane count run on a pool of any size with bit-identical results —
+//! the arithmetic each row sees depends only on the row partition, never
+//! on which OS thread executes it.
+//!
+//! See `rust/DESIGN.md` §Execution engine for the architecture notes and
+//! §Substitutions for the GPU→lane mapping this realizes.
+
+pub mod barrier;
+pub mod engine;
+pub mod stats;
+pub mod team;
+
+pub use barrier::EpochBarrier;
+pub use engine::{default_lanes, engine_or_global, global, LaneEngine, StepCtl, StepFn};
+pub use stats::{EngineStats, EngineStatsSnapshot};
+
+/// Shared mutable slot array for engine jobs whose virtual lanes write
+/// disjoint indices — the `SharedMatrix`/`SharedVec` raw-pointer idiom
+/// from the solvers, generalized over the element type.
+pub struct LaneSlots<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for LaneSlots<T> {}
+unsafe impl<T: Send> Sync for LaneSlots<T> {}
+
+impl<T> LaneSlots<T> {
+    /// Wrap a slice whose slots will be written by distinct vlanes.
+    pub fn new(xs: &mut [T]) -> LaneSlots<T> {
+        LaneSlots { ptr: xs.as_mut_ptr(), len: xs.len() }
+    }
+
+    /// Mutable access to slot `i`.
+    ///
+    /// # Safety
+    /// At most one vlane may touch slot `i` during a job, and the
+    /// backing slice must outlive the job (guaranteed when the wrapper
+    /// is created by the submitting frame — `run_steps` joins before
+    /// returning).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slot(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "LaneSlots: index {i} out of {}", self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_slots_disjoint_writes_land() {
+        let mut xs = vec![0usize; 8];
+        let slots = LaneSlots::new(&mut xs);
+        let engine = LaneEngine::new(2);
+        engine.run_steps(8, 1, |vlane, _| {
+            // SAFETY: each vlane writes only its own slot.
+            unsafe { *slots.slot(vlane) = vlane + 1 };
+            StepCtl::Continue
+        });
+        assert_eq!(xs, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn lane_slots_bound_checked() {
+        let mut xs = vec![0u8; 2];
+        let slots = LaneSlots::new(&mut xs);
+        unsafe {
+            *slots.slot(2) = 1;
+        }
+    }
+}

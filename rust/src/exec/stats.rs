@@ -1,0 +1,67 @@
+//! Engine observability: cheap atomic counters plus a detached snapshot
+//! that travels in coordinator metrics and wire `metrics` frames.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live engine counters (lock-free; updated once per job, not per step —
+/// per-step accounting rides on the barrier's generation counter).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// Jobs executed on the resident pool.
+    pub jobs: AtomicU64,
+    /// Jobs short-circuited onto the calling thread (single-lane engine,
+    /// width 1, or zero steps) — these never touch the barrier.
+    pub inline_jobs: AtomicU64,
+}
+
+impl EngineStats {
+    pub fn record_pooled_job(&self) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_inline_job(&self) {
+        self.inline_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of the engine counters, detached from the atomics
+/// so it can be merged into [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot)
+/// and carried in wire frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EngineStatsSnapshot {
+    /// Resident lanes (pool size including the submitting lane).
+    pub lanes: u64,
+    /// Barrier-stepped jobs run on the pool.
+    pub jobs: u64,
+    /// Jobs run inline on the caller.
+    pub inline_jobs: u64,
+    /// Barrier-separated steps across all pooled jobs.
+    pub steps: u64,
+    /// Lane-barrier crossings (`steps × lanes`).
+    pub barrier_waits: u64,
+    /// Barrier waits that fell out of the spin budget into yielding.
+    pub slow_waits: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let s = EngineStats::default();
+        s.record_pooled_job();
+        s.record_pooled_job();
+        s.record_inline_job();
+        assert_eq!(s.jobs.load(Ordering::Relaxed), 2);
+        assert_eq!(s.inline_jobs.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn snapshot_is_plain_data() {
+        let snap = EngineStatsSnapshot { lanes: 4, jobs: 7, ..Default::default() };
+        let copy = snap;
+        assert_eq!(copy, snap);
+        assert_eq!(copy.jobs, 7);
+    }
+}

@@ -1,0 +1,236 @@
+//! The resident worker team behind a [`LaneEngine`](super::LaneEngine).
+//!
+//! A team of `lanes` parties runs every job: `lanes - 1` spawned worker
+//! threads (named `ebv-lane-1 …`) plus the submitting thread, which
+//! participates as lane 0 — the submitter's share of the work runs
+//! without a handoff, and it spins at the step barrier alongside the
+//! workers instead of parking on a completion queue.
+//!
+//! Job hand-off protocol (one mutex + condvar, jobs strictly serialized
+//! by the engine's submit lock):
+//!
+//! 1. The submitter publishes a [`RawJob`] under the slot mutex, bumps
+//!    the epoch, sets `active = lanes - 1` and notifies the workers.
+//! 2. Every party runs the step loop ([`run_job`]): per step, execute
+//!    the closure for each owned virtual lane, cross the barrier, then
+//!    stop if any vlane requested it. All parties therefore cross the
+//!    barrier the same number of times and stop on the same step — the
+//!    invariant that keeps a fixed-party barrier deadlock-free even
+//!    when only one vlane hits the stop condition (e.g. a zero diagonal
+//!    seen only by its owner).
+//! 3. Workers decrement `active`; the submitter waits for zero before
+//!    returning, so the type-erased closure is never dereferenced after
+//!    its real lifetime ends.
+//!
+//! Panics: every closure call is wrapped in `catch_unwind`. A panicking
+//! vlane is treated as a [`StepCtl::Break`] (so all lanes still stop on
+//! the same step and the fixed-party barrier stays sound), the first
+//! payload is stashed, and the submitter re-raises it after the join —
+//! the same observable behavior as the scoped seed, whose panic
+//! propagated at `thread::scope` join, except the pool survives.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+use crate::exec::barrier::EpochBarrier;
+use crate::exec::engine::{StepCtl, StepFn};
+
+/// A published job: the lifetime-erased step closure plus its shape.
+/// `Copy` so workers can lift it out of the slot without holding the
+/// lock during execution.
+#[derive(Clone, Copy)]
+pub(crate) struct RawJob {
+    /// Points at the submitter's closure; valid for the job's duration
+    /// because the submitter joins (`active == 0`) before returning.
+    pub(crate) f: StepFn<'static>,
+    /// Virtual lanes (schedule width); may exceed the pool size.
+    pub(crate) width: usize,
+    /// Barrier-separated steps.
+    pub(crate) steps: usize,
+}
+
+/// Slot + wakeup state shared by the team.
+struct JobSlot {
+    job: Option<RawJob>,
+    /// Bumped once per published job; workers track the last epoch they
+    /// executed, so a slow worker can never miss or double-run a job.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct TeamShared {
+    slot: Mutex<JobSlot>,
+    job_cv: Condvar,
+    barrier: EpochBarrier,
+    /// Any vlane returning [`StepCtl::Break`] (or panicking) sets this;
+    /// every party checks it right after the step barrier, so all stop
+    /// together.
+    stop: AtomicBool,
+    /// Workers still inside the current job's step loop.
+    active: AtomicUsize,
+    /// First panic payload caught in the current job; re-raised on the
+    /// submitting thread after the join.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// Resident pool of `lanes - 1` workers; the submitter is lane 0.
+pub(crate) struct LaneTeam {
+    shared: Arc<TeamShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    lanes: usize,
+}
+
+impl LaneTeam {
+    /// Spawn the team (`lanes >= 2`; single-lane engines run inline and
+    /// never build a team).
+    pub(crate) fn spawn(lanes: usize) -> LaneTeam {
+        assert!(lanes >= 2, "LaneTeam: needs at least two lanes");
+        let shared = Arc::new(TeamShared {
+            slot: Mutex::new(JobSlot { job: None, epoch: 0, shutdown: false }),
+            job_cv: Condvar::new(),
+            barrier: EpochBarrier::new(lanes),
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        });
+        let workers = (1..lanes)
+            .map(|lane| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ebv-lane-{lane}"))
+                    .spawn(move || lane_main(lane, lanes, &shared))
+                    .expect("spawn lane worker")
+            })
+            .collect();
+        LaneTeam { shared, workers, lanes }
+    }
+
+    pub(crate) fn generations(&self) -> u64 {
+        self.shared.barrier.generations()
+    }
+
+    pub(crate) fn waits(&self) -> u64 {
+        self.shared.barrier.waits()
+    }
+
+    pub(crate) fn slow_waits(&self) -> u64 {
+        self.shared.barrier.slow_waits()
+    }
+
+    /// Run one job to completion on the team, participating as lane 0.
+    /// Caller must hold the engine's submit lock (jobs serialize).
+    pub(crate) fn run(&self, job: RawJob) {
+        let shared = &self.shared;
+        // Reset the per-job flags *before* publication; the slot mutex
+        // orders these writes ahead of every worker's pickup.
+        shared.stop.store(false, Ordering::Relaxed);
+        shared.active.store(self.lanes - 1, Ordering::Relaxed);
+        {
+            let mut slot = shared.slot.lock().expect("engine job slot");
+            debug_assert!(slot.job.is_none(), "jobs must serialize");
+            slot.epoch += 1;
+            slot.job = Some(job);
+            shared.job_cv.notify_all();
+        }
+
+        run_job(0, self.lanes, &job, shared);
+
+        // Wait for the workers to leave the step loop before the
+        // borrowed closure goes out of scope. They are at most a few
+        // instructions behind (everyone crossed the same final
+        // barrier), so spin briefly and then yield.
+        let mut spins = 0u32;
+        while shared.active.load(Ordering::Acquire) != 0 {
+            if spins < 1 << 10 {
+                std::hint::spin_loop();
+                spins += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        shared.slot.lock().expect("engine job slot").job = None;
+
+        // Re-raise the first panic any lane caught during this job. The
+        // pool is fully consistent at this point (all lanes joined, the
+        // slot is clear), so the engine stays usable afterwards.
+        let caught = shared.panic.lock().unwrap_or_else(PoisonError::into_inner).take();
+        if let Some(payload) = caught {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for LaneTeam {
+    fn drop(&mut self) {
+        {
+            // `into_inner` (not `expect`): shutting down a team whose
+            // lock was poisoned by a panicking job must not double-panic.
+            let mut slot =
+                self.shared.slot.lock().unwrap_or_else(PoisonError::into_inner);
+            slot.shutdown = true;
+            self.shared.job_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn lane_main(lane: usize, lanes: usize, shared: &TeamShared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().expect("engine job slot");
+            while !slot.shutdown && (slot.job.is_none() || slot.epoch == seen) {
+                slot = shared.job_cv.wait(slot).expect("engine job slot");
+            }
+            if slot.shutdown {
+                return;
+            }
+            seen = slot.epoch;
+            slot.job.expect("checked by wait condition")
+        };
+        run_job(lane, lanes, &job, shared);
+        shared.active.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// One party's step loop. Virtual lanes are dealt round-robin: party
+/// `lane` of `lanes` runs vlanes `lane, lane + lanes, …` each step —
+/// within a step vlane order is irrelevant (vlanes own disjoint rows),
+/// and across steps the barrier provides the dependency ordering.
+///
+/// Stop protocol: a vlane returning [`StepCtl::Break`] publishes the
+/// stop flag but the *current* step still completes on every party
+/// (matching the scoped seed semantics, where each lane detected the
+/// same condition independently); the flag is observed after the step
+/// barrier, which makes the read race-free and unanimous. A panicking
+/// vlane is a Break whose payload is stashed for the submitter — the
+/// lane keeps crossing barriers, so nobody deadlocks.
+fn run_job(lane: usize, lanes: usize, job: &RawJob, shared: &TeamShared) {
+    let f = job.f;
+    for step in 0..job.steps {
+        let mut vlane = lane;
+        while vlane < job.width {
+            match catch_unwind(AssertUnwindSafe(|| f(vlane, step))) {
+                Ok(StepCtl::Continue) => {}
+                Ok(StepCtl::Break) => shared.stop.store(true, Ordering::Release),
+                Err(payload) => {
+                    let mut slot =
+                        shared.panic.lock().unwrap_or_else(PoisonError::into_inner);
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    shared.stop.store(true, Ordering::Release);
+                }
+            }
+            vlane += lanes;
+        }
+        shared.barrier.wait();
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+    }
+}

@@ -13,6 +13,9 @@
 //! * [`matrix`] — dense / CSR / COO / banded storage, generators, I/O;
 //! * [`ebv`] — the paper's contribution: bi-vector extraction,
 //!   equalization pairing, and the dependency-safe lane schedule;
+//! * [`exec`] — the persistent lane engine: a resident, barrier-stepped
+//!   worker pool that every parallel factor/substitution/panel path
+//!   submits to instead of spawning thread scopes per call;
 //! * [`solver`] — sequential, EBV-parallel, blocked, and sparse LU plus
 //!   triangular solves, pivoting and iterative refinement;
 //! * [`gpusim`] — GTX280-calibrated cost model used to regenerate the
@@ -67,6 +70,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod ebv;
+pub mod exec;
 pub mod gpusim;
 pub mod matrix;
 pub mod rng;

@@ -58,10 +58,7 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
     let n = args.opt_parsed("n", 512usize)?;
     let seed = args.opt_parsed("seed", 7u64)?;
     let kind = args.opt("kind").unwrap_or("dense");
-    let lanes = args.opt_parsed(
-        "lanes",
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
-    )?;
+    let lanes = args.opt_parsed("lanes", ebv_solve::exec::default_lanes())?;
     let solver_name = args.opt("solver").unwrap_or("ebv");
 
     match kind {
@@ -123,6 +120,7 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
         max_batch: args.opt_parsed("batch", 16usize)?,
         batch_window_us: args.opt_parsed("window-us", 200u64)?,
         queue_capacity: args.opt_parsed("queue", 1024usize)?,
+        engine_lanes: args.opt_parsed("engine-lanes", 0usize)?,
         use_runtime: args.flag("runtime"),
         ..ServiceConfig::default()
     };
@@ -142,6 +140,11 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
         stats.frames, stats.solves, stats.errors
     );
     eprintln!("metrics: {}", svc.metrics().summary());
+    let e = svc.engine().stats();
+    eprintln!(
+        "engine: lanes={} jobs={} inline_jobs={} steps={} barrier_waits={} slow_waits={}",
+        e.lanes, e.jobs, e.inline_jobs, e.steps, e.barrier_waits, e.slow_waits
+    );
     svc.shutdown();
     Ok(())
 }
@@ -154,6 +157,7 @@ fn cmd_serve_trace(args: &Args) -> ebv_solve::Result<()> {
     let cfg = ServiceConfig {
         lanes,
         max_batch: batch,
+        engine_lanes: args.opt_parsed("engine-lanes", 0usize)?,
         use_runtime: args.flag("runtime"),
         ..ServiceConfig::default()
     };

@@ -3,19 +3,24 @@
 //! Right-looking elimination where the updated rows are statically owned
 //! by worker lanes according to an equalized (fold-paired) distribution
 //! — the GPU thread mapping of the paper realized on CPU lanes (see
-//! DESIGN.md §Substitutions: GTX280 threads → `std::thread` lanes; the
-//! tables' GPU-scale numbers come from `gpusim` fed with this exact
-//! schedule).
+//! `rust/DESIGN.md` §Substitutions: GTX280 threads → resident
+//! [`LaneEngine`] lanes; the tables' GPU-scale numbers come from
+//! `gpusim` fed with this exact schedule).
 //!
-//! Synchronization is one barrier per elimination step: after the barrier
-//! at step `r`, every lane may safely read pivot row `r` (its final
+//! Execution runs on the persistent lane engine (`rust/DESIGN.md`
+//! §Execution engine): the factorization is one step-loop job with one
+//! barrier-separated step per elimination column. After the barrier
+//! into step `r`, every lane may safely read pivot row `r` (its final
 //! update happened at step `r-1`, sequenced before the barrier). Lanes
 //! write only rows they own, so writes are disjoint by construction of
-//! [`LaneSchedule`].
+//! [`LaneSchedule`]. The schedule's lane count is a *virtual* width:
+//! the engine deals virtual lanes across its resident lanes, so the
+//! factors are bit-identical for any pool size.
 
-use std::sync::Barrier;
+use std::sync::{Arc, Mutex};
 
 use crate::ebv::schedule::{LaneSchedule, RowDist};
+use crate::exec::{LaneEngine, StepCtl};
 use crate::matrix::DenseMatrix;
 use crate::solver::pivot::Permutation;
 use crate::solver::{DenseLuFactors, LuSolver};
@@ -30,23 +35,37 @@ pub struct EbvLu {
     /// Below this size the parallel machinery costs more than it saves;
     /// fall through to the sequential kernel.
     seq_threshold: usize,
+    /// Engine override; `None` submits to the process-global engine.
+    engine: Option<Arc<LaneEngine>>,
 }
 
 impl EbvLu {
     /// EBV solver with the paper's fold distribution on `lanes` lanes.
     pub fn with_lanes(lanes: usize) -> Self {
-        EbvLu { lanes: lanes.max(1), dist: RowDist::EbvFold, pivot_tol: 1e-12, seq_threshold: 128 }
+        EbvLu {
+            lanes: lanes.max(1),
+            dist: RowDist::EbvFold,
+            pivot_tol: 1e-12,
+            seq_threshold: 128,
+            engine: None,
+        }
     }
 
     /// Use all available parallelism.
     pub fn auto() -> Self {
-        let lanes = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-        EbvLu::with_lanes(lanes)
+        EbvLu::with_lanes(crate::exec::default_lanes())
     }
 
     /// Override the row-distribution strategy (ablation hook).
     pub fn with_dist(mut self, dist: RowDist) -> Self {
         self.dist = dist;
+        self
+    }
+
+    /// Submit to a specific engine instead of the process-global one
+    /// (the coordinator shares one engine across its workers this way).
+    pub fn with_engine(mut self, engine: Arc<LaneEngine>) -> Self {
+        self.engine = Some(engine);
         self
     }
 
@@ -82,12 +101,13 @@ impl LuSolver for EbvLu {
         }
         let mut lu = a.clone();
         let schedule = LaneSchedule::build(n, self.lanes, self.dist);
-        parallel_eliminate(&mut lu, &schedule, self.pivot_tol)?;
+        let engine = crate::exec::engine_or_global(self.engine.as_ref());
+        parallel_eliminate(&mut lu, &schedule, self.pivot_tol, engine)?;
         Ok(DenseLuFactors::new(lu, Permutation::identity(n)))
     }
 }
 
-/// Shared mutable matrix for the scoped lanes. Writes are restricted to
+/// Shared mutable matrix for the engine lanes. Writes are restricted to
 /// owned rows (disjoint across lanes); reads of the pivot row are
 /// sequenced by the per-step barrier.
 struct SharedMatrix {
@@ -118,53 +138,48 @@ fn parallel_eliminate(
     lu: &mut DenseMatrix,
     schedule: &LaneSchedule,
     pivot_tol: f64,
+    engine: &LaneEngine,
 ) -> Result<()> {
     let n = lu.rows();
-    let lanes = schedule.lanes();
-    let barrier = Barrier::new(lanes);
     let shared = SharedMatrix { ptr: lu.data_mut().as_mut_ptr(), cols: n };
     // First singular pivot seen by any lane (steps are synchronized, so
-    // every lane sees the same pivot value at the same step).
-    let mut first_bad: Vec<Option<(usize, f64)>> = vec![None; lanes];
+    // every lane records the same pivot at the same step; the engine
+    // ends the job on the step where it is detected).
+    let first_bad: Mutex<Option<(usize, f64)>> = Mutex::new(None);
 
-    std::thread::scope(|s| {
-        for (lane, bad_slot) in first_bad.iter_mut().enumerate() {
-            let barrier = &barrier;
-            let shared = &shared;
-            s.spawn(move || {
-                for r in 0..n - 1 {
-                    barrier.wait();
-                    // SAFETY: after the barrier, row r's final update
-                    // (performed at step r-1 by its owner) has completed;
-                    // no lane writes row r during step r because active
-                    // rows are strictly below the pivot.
-                    let pivot_row = unsafe { shared.row(r) };
-                    let piv = pivot_row[r];
-                    if piv.abs() < pivot_tol {
-                        *bad_slot = Some((r, piv));
-                        return;
-                    }
-                    let inv = 1.0 / piv;
-                    for &i in schedule.active_rows_of(lane, r) {
-                        // SAFETY: lane owns row i exclusively.
-                        let row_i = unsafe { shared.row_mut(i) };
-                        let f = row_i[r] * inv;
-                        row_i[r] = f;
-                        if f == 0.0 {
-                            continue;
-                        }
-                        let (head, tail) = row_i.split_at_mut(r + 1);
-                        let _ = head;
-                        for (t, &p) in tail.iter_mut().zip(pivot_row[r + 1..].iter()) {
-                            *t -= f * p;
-                        }
-                    }
-                }
-            });
+    engine.run_steps(schedule.lanes(), n - 1, |lane, r| {
+        // SAFETY: after the barrier into step r, row r's final update
+        // (performed at step r-1 by its owner) has completed; no lane
+        // writes row r during step r because active rows are strictly
+        // below the pivot.
+        let pivot_row = unsafe { shared.row(r) };
+        let piv = pivot_row[r];
+        if piv.abs() < pivot_tol {
+            let mut bad = first_bad.lock().expect("pivot slot");
+            if bad.is_none() {
+                *bad = Some((r, piv));
+            }
+            return StepCtl::Break;
         }
+        let inv = 1.0 / piv;
+        for &i in schedule.active_rows_of(lane, r) {
+            // SAFETY: lane owns row i exclusively.
+            let row_i = unsafe { shared.row_mut(i) };
+            let f = row_i[r] * inv;
+            row_i[r] = f;
+            if f == 0.0 {
+                continue;
+            }
+            let (head, tail) = row_i.split_at_mut(r + 1);
+            let _ = head;
+            for (t, &p) in tail.iter_mut().zip(pivot_row[r + 1..].iter()) {
+                *t -= f * p;
+            }
+        }
+        StepCtl::Continue
     });
 
-    if let Some((step, value)) = first_bad.into_iter().flatten().next() {
+    if let Some((step, value)) = first_bad.into_inner().expect("pivot slot") {
         return Err(EbvError::SingularPivot { step, value, tol: pivot_tol });
     }
     // Check the last pivot too (never used as a divisor during
@@ -204,6 +219,24 @@ mod tests {
                     "{dist:?} lanes={lanes}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn explicit_engine_matches_global_engine_bitwise() {
+        // Schedule width and pool size are independent: a 4-lane
+        // schedule on a 2-lane engine virtualizes without changing a
+        // single bit of the factors.
+        let a = diag_dominant_dense(80, GenSeed(28));
+        let reference = SeqLu::new().factor(&a).unwrap();
+        for engine_lanes in [1usize, 2, 3] {
+            let engine = Arc::new(LaneEngine::new(engine_lanes));
+            let f = par(4, RowDist::EbvFold).with_engine(engine).factor(&a).unwrap();
+            assert_eq!(
+                f.packed().max_abs_diff(reference.packed()),
+                0.0,
+                "engine_lanes={engine_lanes}"
+            );
         }
     }
 

@@ -104,9 +104,48 @@ impl DenseLuFactors {
         trisolve::backward_dense(&self.lu, &y)
     }
 
-    /// Solve for multiple right-hand sides (columns of `B`).
+    /// Solve for multiple right-hand sides (columns of `B`) as a
+    /// lane-distributed panel on the process-global engine.
     pub fn solve_many(&self, bs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        bs.iter().map(|b| self.solve(b)).collect()
+        self.solve_many_on(bs, crate::exec::global())
+    }
+
+    /// Panel solve on a specific engine; first failure (lowest index,
+    /// matching what a sequential map would have returned) aborts.
+    pub fn solve_many_on(
+        &self,
+        bs: &[Vec<f64>],
+        engine: &crate::exec::LaneEngine,
+    ) -> Result<Vec<Vec<f64>>> {
+        let views: Vec<&[f64]> = bs.iter().map(Vec::as_slice).collect();
+        self.solve_panel(&views, engine).into_iter().collect()
+    }
+
+    /// The panel core: one single-step engine job whose virtual lanes
+    /// each run the ordinary sequential substitution on one right-hand
+    /// side, so every column of the answer is bitwise identical to
+    /// [`DenseLuFactors::solve`] on that column. Returns one result per
+    /// panel — the coordinator's batch path needs per-request outcomes
+    /// (a malformed RHS must fail alone, not drag the batch down).
+    pub fn solve_panel(
+        &self,
+        bs: &[&[f64]],
+        engine: &crate::exec::LaneEngine,
+    ) -> Vec<Result<Vec<f64>>> {
+        // Below ~128 unknowns a substitution is sub-microsecond and the
+        // engine hand-off costs more than it parallelizes (the same
+        // crossover EbvLu's seq_threshold encodes) — solve inline.
+        if bs.len() < 2 || engine.lanes() == 1 || self.n() < 128 {
+            return bs.iter().map(|b| self.solve(b)).collect();
+        }
+        let mut panels: Vec<Option<Result<Vec<f64>>>> = (0..bs.len()).map(|_| None).collect();
+        let slots = crate::exec::LaneSlots::new(&mut panels);
+        engine.run_steps(bs.len(), 1, |vlane, _step| {
+            // SAFETY: vlane writes only its own panel slot.
+            unsafe { *slots.slot(vlane) = Some(self.solve(bs[vlane])) };
+            crate::exec::StepCtl::Continue
+        });
+        panels.into_iter().map(|slot| slot.expect("engine ran every panel")).collect()
     }
 }
 
@@ -173,6 +212,37 @@ mod tests {
         let many = f.solve_many(&[b1.clone(), b2.clone()]).unwrap();
         assert_eq!(many[0], f.solve(&b1).unwrap());
         assert_eq!(many[1], f.solve(&b2).unwrap());
+    }
+
+    #[test]
+    fn panel_solve_is_bitwise_for_any_engine_size() {
+        // More panels than lanes: vlanes virtualize, bits don't move.
+        // n >= 128 keeps the multi-lane engines on the pooled path.
+        let n = 144;
+        let a = diag_dominant_dense(n, GenSeed(4));
+        let f = SeqLu::new().factor(&a).unwrap();
+        let bs: Vec<Vec<f64>> =
+            (0..7).map(|k| (0..n).map(|i| (i + k) as f64 * 0.25 - 1.0).collect()).collect();
+        let individually: Vec<Vec<f64>> =
+            bs.iter().map(|b| f.solve(b).unwrap()).collect();
+        for engine_lanes in [1usize, 2, 3] {
+            let engine = crate::exec::LaneEngine::new(engine_lanes);
+            let many = f.solve_many_on(&bs, &engine).unwrap();
+            assert_eq!(many, individually, "engine_lanes={engine_lanes}");
+        }
+    }
+
+    #[test]
+    fn panel_solve_reports_lowest_failing_index() {
+        // A zero diagonal makes every panel fail; the reported error
+        // must be the one a sequential map would have hit first.
+        let mut lu = diag_dominant_dense(8, GenSeed(5));
+        lu.set(3, 3, 0.0);
+        let f = DenseLuFactors::new(lu, Permutation::identity(8));
+        let bs = vec![vec![1.0; 8], vec![2.0; 8], vec![3.0; 8]];
+        let engine = crate::exec::LaneEngine::new(2);
+        let err = f.solve_many_on(&bs, &engine);
+        assert!(err.is_err(), "{err:?}");
     }
 
     #[test]

@@ -61,9 +61,21 @@ impl SparseLuFactors {
         sparse_backward(&self.u, &y)
     }
 
-    /// Parallel solve using the level schedule with `lanes` lanes.
+    /// Parallel solve using the level schedule with `lanes` lanes on
+    /// the process-global lane engine.
     pub fn solve_par(&self, b: &[f64], lanes: usize) -> Result<Vec<f64>> {
-        let y = sparse_forward_unit_levels(&self.l, b, &self.by_level, lanes)?;
+        self.solve_par_on(b, lanes, crate::exec::global())
+    }
+
+    /// Parallel solve on a specific engine (the coordinator's workers
+    /// share one engine this way).
+    pub fn solve_par_on(
+        &self,
+        b: &[f64],
+        lanes: usize,
+        engine: &crate::exec::LaneEngine,
+    ) -> Result<Vec<f64>> {
+        let y = sparse_forward_unit_levels(&self.l, b, &self.by_level, lanes, engine)?;
         sparse_backward(&self.u, &y)
     }
 }

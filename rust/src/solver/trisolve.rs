@@ -5,10 +5,16 @@
 //! literally: applying `A⁻¹` is a sequence of elementary vector updates
 //! (one axpy per pivot), whose lengths shrink `n-1 … 1` — exactly the
 //! unequal bi-vector stream that equalization balances across lanes.
+//!
+//! All parallel variants submit step-loop jobs to a persistent
+//! [`LaneEngine`] (one barrier-separated step per column, or per level
+//! for the sparse solve) instead of spawning thread scopes per call —
+//! see `rust/DESIGN.md` §Execution engine.
 
-use std::sync::Barrier;
+use std::sync::Mutex;
 
 use crate::ebv::schedule::LaneSchedule;
+use crate::exec::{LaneEngine, StepCtl};
 use crate::matrix::{CsrMatrix, DenseMatrix};
 use crate::util::error::{EbvError, Result};
 
@@ -64,7 +70,8 @@ pub fn backward_dense(lu: &DenseMatrix, y: &[f64]) -> Result<Vec<f64>> {
 
 /// Column-oriented (right-looking) parallel forward substitution: after
 /// `y[j]` finalizes, every lane applies the axpy `b[i] -= L[i,j] y[j]`
-/// to its owned rows — the bi-vector apply, equalized by `schedule`.
+/// to its owned rows — the bi-vector apply, equalized by `schedule`,
+/// one engine step per column.
 ///
 /// A per-column barrier makes this profitable only for large `n`; the
 /// benches report the crossover honestly.
@@ -72,6 +79,7 @@ pub fn forward_unit_dense_par(
     lu: &DenseMatrix,
     b: &[f64],
     schedule: &LaneSchedule,
+    engine: &LaneEngine,
 ) -> Result<Vec<f64>> {
     let n = check_dims(lu, b)?;
     if schedule.n() != n {
@@ -82,35 +90,100 @@ pub fn forward_unit_dense_par(
         return forward_unit_dense(lu, b);
     }
     let mut y = b.to_vec();
-    let barrier = Barrier::new(lanes);
     let y_ptr = SharedVec(y.as_mut_ptr());
 
-    std::thread::scope(|s| {
-        for lane in 0..lanes {
-            let barrier = &barrier;
-            let schedule = &schedule;
-            let y_ptr = &y_ptr;
-            s.spawn(move || {
-                for j in 0..n - 1 {
-                    barrier.wait();
-                    // y[j] is final: all updates to it came from columns < j.
-                    let yj = unsafe { *y_ptr.0.add(j) };
-                    for &i in schedule.active_rows_of(lane, j) {
-                        let l_ij = lu.get(i, j);
-                        if l_ij != 0.0 {
-                            unsafe {
-                                *y_ptr.0.add(i) -= l_ij * yj;
-                            }
-                        }
-                    }
+    engine.run_steps(lanes, n - 1, |lane, j| {
+        // y[j] is final: all updates to it came from columns < j,
+        // applied at earlier steps and published by the step barrier.
+        let yj = unsafe { *y_ptr.0.add(j) };
+        for &i in schedule.active_rows_of(lane, j) {
+            let l_ij = lu.get(i, j);
+            if l_ij != 0.0 {
+                unsafe {
+                    *y_ptr.0.add(i) -= l_ij * yj;
                 }
-            });
+            }
         }
+        StepCtl::Continue
     });
     Ok(y)
 }
 
-/// Wrapper making a raw pointer Send+Sync for scoped disjoint-row writes.
+/// Column-oriented parallel backward substitution: solves `U x = y`
+/// (Eq. 4-c, the mirrored bi-vector stream) with two engine sub-steps
+/// per column `j = n-1 … 0`:
+///
+/// 1. the owner of row `j` finalizes `x[j] = x[j] / u_jj` (every update
+///    from columns `> j` landed at earlier steps);
+/// 2. after the barrier publishes `x[j]`, every lane applies
+///    `x[i] -= U[i,j] x[j]` to its owned rows above `j`.
+///
+/// Per-element update order is descending in `j` regardless of the
+/// partition, so results are bitwise identical across lane counts and
+/// distributions (and agree with [`backward_dense`] to rounding, which
+/// accumulates the same terms in the opposite order).
+pub fn backward_dense_par(
+    lu: &DenseMatrix,
+    y: &[f64],
+    schedule: &LaneSchedule,
+    engine: &LaneEngine,
+) -> Result<Vec<f64>> {
+    let n = check_dims(lu, y)?;
+    if schedule.n() != n {
+        return Err(EbvError::Shape("schedule size mismatch".into()));
+    }
+    let lanes = schedule.lanes();
+    if lanes == 1 || n < 2 {
+        return backward_dense(lu, y);
+    }
+    let mut x = y.to_vec();
+    let x_ptr = SharedVec(x.as_mut_ptr());
+    // Zero diagonal found by row j's owner — the heterogeneous stop
+    // case the engine's break protocol exists for: only one lane sees
+    // it, everyone halts on the same sub-step.
+    let bad = Mutex::new(None::<usize>);
+
+    engine.run_steps(lanes, 2 * n, |lane, step| {
+        let j = n - 1 - step / 2;
+        if step % 2 == 0 {
+            // Divide sub-step: single writer, nobody reads x[j] until
+            // the barrier publishes it.
+            if schedule.owner(j) == lane {
+                let d = lu.get(j, j);
+                if d == 0.0 {
+                    let mut slot = bad.lock().expect("diag slot");
+                    if slot.is_none() {
+                        *slot = Some(j);
+                    }
+                    return StepCtl::Break;
+                }
+                unsafe {
+                    *x_ptr.0.add(j) /= d;
+                }
+            }
+            StepCtl::Continue
+        } else {
+            // Axpy sub-step: x[j] is final; update owned rows above j.
+            let xj = unsafe { *x_ptr.0.add(j) };
+            for &i in schedule.upper_rows_of(lane, j) {
+                let u_ij = lu.get(i, j);
+                if u_ij != 0.0 {
+                    unsafe {
+                        *x_ptr.0.add(i) -= u_ij * xj;
+                    }
+                }
+            }
+            StepCtl::Continue
+        }
+    });
+
+    if let Some(step) = bad.into_inner().expect("diag slot") {
+        return Err(EbvError::SingularPivot { step, value: 0.0, tol: 0.0 });
+    }
+    Ok(x)
+}
+
+/// Wrapper making a raw pointer Send+Sync for disjoint-row lane writes.
 struct SharedVec(*mut f64);
 unsafe impl Send for SharedVec {}
 unsafe impl Sync for SharedVec {}
@@ -185,14 +258,30 @@ pub fn levels_of_lower(l: &CsrMatrix) -> (Vec<usize>, Vec<Vec<usize>>) {
     (level, by_level)
 }
 
-/// Level-scheduled parallel sparse forward substitution. Within each
-/// level, rows are split across `lanes` with nnz-equalized chunks
-/// (the EBV balance criterion applied to sparse work).
+/// Per-level work assignment for the engine job.
+enum LevelChunks<'a> {
+    /// Too small to split profitably: lane 0 walks the whole level in
+    /// row order (borrowed — no per-solve copy of the level structure).
+    Single(&'a [usize]),
+    /// nnz-equalized chunks, one per lane.
+    Split(Vec<Vec<usize>>),
+}
+
+/// Level-scheduled parallel sparse forward substitution as one engine
+/// job: one barrier-separated step per level; within a level, rows are
+/// split across `lanes` with nnz-equalized chunks (the EBV balance
+/// criterion applied to sparse work). Small levels keep a single chunk
+/// — lane 0 walks them in row order, so per-row arithmetic matches the
+/// sequential solve exactly — and when *no* level is big enough to
+/// split (long dependency chains), the whole solve keeps the seed's
+/// zero-synchronization sequential path instead of paying a barrier
+/// per level for nothing.
 pub fn sparse_forward_unit_levels(
     l: &CsrMatrix,
     b: &[f64],
     by_level: &[Vec<usize>],
     lanes: usize,
+    engine: &LaneEngine,
 ) -> Result<Vec<f64>> {
     if b.len() != l.rows() {
         return Err(EbvError::Shape("rhs length mismatch".into()));
@@ -200,40 +289,41 @@ pub fn sparse_forward_unit_levels(
     if lanes <= 1 {
         return sparse_forward_unit(l, b);
     }
+    let chunks: Vec<LevelChunks<'_>> = by_level
+        .iter()
+        .map(|rows| {
+            if rows.len() < lanes * 4 {
+                LevelChunks::Single(rows)
+            } else {
+                LevelChunks::Split(equalize_rows_by_nnz(l, rows, lanes))
+            }
+        })
+        .collect();
+    if chunks.iter().all(|c| matches!(c, LevelChunks::Single(_))) {
+        return sparse_forward_unit(l, b);
+    }
     let mut y = b.to_vec();
     let y_ptr = SharedVec(y.as_mut_ptr());
 
-    for rows in by_level {
-        if rows.len() < lanes * 4 {
-            // Small level: not worth spawning.
-            for &i in rows {
+    engine.run_steps(lanes, chunks.len(), |lane, level| {
+        let chunk: Option<&[usize]> = match &chunks[level] {
+            LevelChunks::Single(rows) => (lane == 0).then_some(*rows),
+            LevelChunks::Split(cs) => cs.get(lane).map(Vec::as_slice),
+        };
+        if let Some(chunk) = chunk {
+            for &i in chunk {
                 let (cols, vals) = l.row(i);
+                // Dependencies of row i live in earlier levels, whose
+                // writes the step barrier has published.
                 let mut acc = unsafe { *y_ptr.0.add(i) };
                 for (&j, &v) in cols.iter().zip(vals.iter()) {
                     acc -= v * unsafe { *y_ptr.0.add(j) };
                 }
                 unsafe { *y_ptr.0.add(i) = acc };
             }
-            continue;
         }
-        // Equalize nnz across lane chunks.
-        let chunks = equalize_rows_by_nnz(l, rows, lanes);
-        std::thread::scope(|s| {
-            for chunk in &chunks {
-                let y_ptr = &y_ptr;
-                s.spawn(move || {
-                    for &i in chunk {
-                        let (cols, vals) = l.row(i);
-                        let mut acc = unsafe { *y_ptr.0.add(i) };
-                        for (&j, &v) in cols.iter().zip(vals.iter()) {
-                            acc -= v * unsafe { *y_ptr.0.add(j) };
-                        }
-                        unsafe { *y_ptr.0.add(i) = acc };
-                    }
-                });
-            }
-        });
-    }
+        StepCtl::Continue
+    });
     Ok(y)
 }
 
@@ -267,6 +357,10 @@ mod tests {
     use crate::matrix::norms::diff_inf;
     use crate::solver::sparse_lu::SparseLu;
     use crate::solver::{LuSolver, SeqLu};
+
+    fn engine() -> &'static LaneEngine {
+        crate::exec::global()
+    }
 
     #[test]
     fn forward_backward_on_hand_case() {
@@ -306,13 +400,63 @@ mod tests {
         for dist in RowDist::ALL {
             for lanes in [1usize, 2, 4] {
                 let sched = LaneSchedule::build(64, lanes, dist);
-                let par = forward_unit_dense_par(f.packed(), &b, &sched).unwrap();
+                let par = forward_unit_dense_par(f.packed(), &b, &sched, engine()).unwrap();
                 assert!(
                     diff_inf(&seq, &par) < 1e-12,
                     "{dist:?} lanes={lanes}"
                 );
             }
         }
+    }
+
+    #[test]
+    fn parallel_backward_matches_sequential() {
+        let a = diag_dominant_dense(64, GenSeed(16));
+        let f = SeqLu::new().factor(&a).unwrap();
+        let y: Vec<f64> = (0..64).map(|i| (i as f64 * 0.7).cos()).collect();
+        let seq = backward_dense(f.packed(), &y).unwrap();
+        for dist in RowDist::ALL {
+            for lanes in [1usize, 2, 4] {
+                let sched = LaneSchedule::build(64, lanes, dist);
+                let par = backward_dense_par(f.packed(), &y, &sched, engine()).unwrap();
+                assert!(
+                    diff_inf(&seq, &par) < 1e-11,
+                    "{dist:?} lanes={lanes}: diff {}",
+                    diff_inf(&seq, &par)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_backward_bitwise_stable_across_lane_counts() {
+        // The per-element update order is fixed by the column sweep, not
+        // the partition — any lane count gives identical bits.
+        let a = diag_dominant_dense(48, GenSeed(17));
+        let f = SeqLu::new().factor(&a).unwrap();
+        let y: Vec<f64> = (0..48).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let sched2 = LaneSchedule::build(48, 2, RowDist::EbvFold);
+        let reference = backward_dense_par(f.packed(), &y, &sched2, engine()).unwrap();
+        for lanes in [3usize, 5, 8] {
+            for dist in RowDist::ALL {
+                let sched = LaneSchedule::build(48, lanes, dist);
+                let par = backward_dense_par(f.packed(), &y, &sched, engine()).unwrap();
+                assert_eq!(diff_inf(&reference, &par), 0.0, "{dist:?} lanes={lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_backward_detects_zero_diagonal() {
+        let mut lu = diag_dominant_dense(32, GenSeed(18));
+        lu.set(20, 20, 0.0);
+        let y = vec![1.0; 32];
+        let sched = LaneSchedule::build(32, 4, RowDist::Cyclic);
+        let err = backward_dense_par(&lu, &y, &sched, engine());
+        assert!(
+            matches!(err, Err(EbvError::SingularPivot { step: 20, .. })),
+            "{err:?}"
+        );
     }
 
     #[test]
@@ -366,7 +510,8 @@ mod tests {
         let (_, by_level) = levels_of_lower(f.l());
         let seq = sparse_forward_unit(f.l(), &b).unwrap();
         for lanes in [1usize, 2, 4] {
-            let par = sparse_forward_unit_levels(f.l(), &b, &by_level, lanes).unwrap();
+            let par =
+                sparse_forward_unit_levels(f.l(), &b, &by_level, lanes, engine()).unwrap();
             assert!(diff_inf(&seq, &par) < 1e-12, "lanes={lanes}");
         }
     }

@@ -139,19 +139,14 @@ fn expect_bool<R: BufRead>(sc: &mut Scanner<R>, field: &str) -> Result<bool> {
 }
 
 /// Decode-time policy knobs.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct DecodeOptions {
     /// Permit `mtx_path` references, which make the decoder read a
-    /// server-local file named by the client. Off by default: only
-    /// enable when every session peer is trusted with the server's
-    /// filesystem (the CLI exposes `--allow-mtx-path`).
+    /// server-local file named by the client. Off by default (the
+    /// derived `Default`): only enable when every session peer is
+    /// trusted with the server's filesystem (the CLI exposes
+    /// `--allow-mtx-path`).
     pub allow_mtx_path: bool,
-}
-
-impl Default for DecodeOptions {
-    fn default() -> Self {
-        DecodeOptions { allow_mtx_path: false }
-    }
 }
 
 /// Accumulated request fields; arrays land here directly from the scan.
@@ -435,7 +430,7 @@ pub fn encode_request(frame: &RequestFrame) -> String {
                 &mut out,
                 (0..a.rows()).flat_map(|r| {
                     let count = a.row_ptr()[r + 1] - a.row_ptr()[r];
-                    std::iter::repeat(r).take(count)
+                    std::iter::repeat_n(r, count)
                 }),
             );
             out.push_str(",\"col\":");
@@ -475,6 +470,12 @@ pub fn encode_response(frame: &ResponseFrame) -> String {
                 m.batched_requests,
                 m.factor_hits,
                 m.factor_misses
+            );
+            let _ = write!(
+                out,
+                ",\"engine_lanes\":{},\"engine_jobs\":{},\"engine_steps\":{},\
+                 \"engine_barrier_waits\":{}",
+                m.engine_lanes, m.engine_jobs, m.engine_steps, m.engine_barrier_waits
             );
             out.push_str(",\"mean_batch\":");
             push_num(&mut out, m.mean_batch);
@@ -596,6 +597,12 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                 "factor_hits" => acc.metrics.factor_hits = as_index(expect_num(&mut sc, &k)?, &k)?,
                 "factor_misses" => {
                     acc.metrics.factor_misses = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "engine_lanes" => acc.metrics.engine_lanes = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "engine_jobs" => acc.metrics.engine_jobs = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "engine_steps" => acc.metrics.engine_steps = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "engine_barrier_waits" => {
+                    acc.metrics.engine_barrier_waits = as_index(expect_num(&mut sc, &k)?, &k)?
                 }
                 "mean_batch" => acc.metrics.mean_batch = expect_num(&mut sc, &k)?,
                 "lat_mean_s" => acc.metrics.lat_mean_s = expect_num(&mut sc, &k)?,
@@ -839,6 +846,10 @@ mod tests {
             lat_mean_s: 0.001,
             lat_p50_s: 0.00075,
             lat_p99_s: 0.0042,
+            engine_lanes: 4,
+            engine_jobs: 5,
+            engine_steps: 620,
+            engine_barrier_waits: 2480,
         });
         assert_eq!(decode_response(&encode_response(&m)).unwrap(), m);
 

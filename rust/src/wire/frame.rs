@@ -5,6 +5,12 @@
 //! exactly one [`ResponseFrame`] (`solution`, `metrics`, `error`,
 //! `goodbye`). Encoding/decoding lives in [`super::codec`]; this module
 //! holds the typed shapes and the fingerprint/key policy.
+//!
+//! The `metrics` response carries the full
+//! [`MetricsSnapshot`], including the lane-engine counters
+//! (`engine_lanes`, `engine_jobs`, `engine_steps`,
+//! `engine_barrier_waits`) of the resident pool every parallel solve
+//! runs on — see README.md §Execution engine.
 
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::request::Timings;

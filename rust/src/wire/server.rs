@@ -89,7 +89,7 @@ pub fn serve_session_with<R: BufRead, W: Write>(
                 write_frame(&mut output, &ResponseFrame::Goodbye { served: stats.solves })?;
                 break;
             }
-            Ok(RequestFrame::Metrics) => ResponseFrame::Metrics(svc.metrics().snapshot()),
+            Ok(RequestFrame::Metrics) => ResponseFrame::Metrics(svc.metrics_snapshot()),
             Ok(RequestFrame::Solve(ws)) | Ok(RequestFrame::SolveSparse(ws)) => {
                 let id = ws.id.unwrap_or(next_id);
                 next_id = next_id.max(id) + 1;
@@ -163,6 +163,7 @@ mod tests {
             max_batch: 4,
             batch_window_us: 100,
             queue_capacity: 64,
+            engine_lanes: 2,
             use_runtime: false,
             ..ServiceConfig::default()
         })
@@ -204,6 +205,20 @@ mod tests {
         assert_eq!(stats.errors, 1);
         assert!(matches!(frames[0], ResponseFrame::Error { .. }));
         assert!(matches!(&frames[1], ResponseFrame::Solution(s) if s.result.is_ok()));
+    }
+
+    #[test]
+    fn metrics_frame_carries_engine_stats() {
+        let a = diag_dominant_dense(8, GenSeed(24));
+        let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 8])));
+        let input = format!("{solve}\n{{\"op\":\"metrics\"}}\n{{\"op\":\"shutdown\"}}\n");
+        let (_, frames) = run(&input);
+        let ResponseFrame::Metrics(m) = &frames[1] else { panic!("{frames:?}") };
+        // The test service runs a 2-lane engine; an 8×8 solve stays on
+        // the sequential fall-through, so jobs may be zero — but the
+        // resident pool is always reported.
+        assert_eq!(m.engine_lanes, 2);
+        assert_eq!(m.engine_barrier_waits, m.engine_steps * m.engine_lanes);
     }
 
     #[test]

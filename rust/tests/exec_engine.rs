@@ -1,0 +1,168 @@
+//! Engine-level correctness under concurrency, plus the property suite
+//! pinning pooled execution bitwise to the scoped-seed behavior.
+//!
+//! Two load-bearing guarantees:
+//!
+//! 1. **Bit identity.** The pooled `EbvLu` and the parallel triangular
+//!    solves must produce exactly the bits the pre-engine (scoped)
+//!    implementations produced — i.e. `SeqLu`'s bits for the factors
+//!    (same per-row arithmetic order) and the fixed column-sweep bits
+//!    for the substitutions — across sizes, lane counts, engine sizes
+//!    and every `RowDist`.
+//! 2. **Serialization under contention.** Many threads hammering one
+//!    engine with factor+solve jobs must each get the same bits they'd
+//!    get alone.
+
+use std::sync::Arc;
+
+use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
+use ebv_solve::exec::LaneEngine;
+use ebv_solve::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
+use ebv_solve::matrix::norms::diff_inf;
+use ebv_solve::solver::trisolve::{
+    backward_dense, backward_dense_par, forward_unit_dense, forward_unit_dense_par,
+};
+use ebv_solve::solver::{EbvLu, LuSolver, SeqLu};
+use ebv_solve::testutil::forall;
+
+/// EbvLu forced onto the parallel path, submitting to `engine`.
+fn pooled(lanes: usize, dist: RowDist, engine: &Arc<LaneEngine>) -> EbvLu {
+    EbvLu::with_lanes(lanes).with_dist(dist).seq_threshold(0).with_engine(Arc::clone(engine))
+}
+
+#[test]
+fn concurrent_factor_and_solve_on_one_engine() {
+    let engine = Arc::new(LaneEngine::new(3));
+    let threads = 8;
+    let rounds = 5;
+
+    // Per-thread problem + oracle, precomputed sequentially.
+    let problems: Vec<_> = (0..threads)
+        .map(|t| {
+            let n = 40 + 8 * t;
+            let a = diag_dominant_dense(n, GenSeed(500 + t as u64));
+            let b = rhs(n, GenSeed(900 + t as u64));
+            let reference = SeqLu::new().factor(&a).unwrap();
+            let x = reference.solve(&b).unwrap();
+            (a, b, reference, x)
+        })
+        .collect();
+    let problems = Arc::new(problems);
+
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let engine = Arc::clone(&engine);
+            let problems = Arc::clone(&problems);
+            std::thread::spawn(move || {
+                let (a, b, reference, x_ref) = &problems[t];
+                let n = a.rows();
+                let dist = RowDist::ALL[t % RowDist::ALL.len()];
+                for round in 0..rounds {
+                    let lanes = 2 + (t + round) % 3;
+                    let f = pooled(lanes, dist, &engine).factor(a).unwrap();
+                    assert_eq!(
+                        f.packed().max_abs_diff(reference.packed()),
+                        0.0,
+                        "thread {t} round {round}: factors drifted"
+                    );
+                    // Parallel substitutions on the same shared engine.
+                    let sched = LaneSchedule::build(n, lanes, dist);
+                    let y = forward_unit_dense_par(f.packed(), b, &sched, &engine).unwrap();
+                    let x = backward_dense_par(f.packed(), &y, &sched, &engine).unwrap();
+                    assert!(
+                        diff_inf(&x, x_ref) < 1e-10,
+                        "thread {t} round {round}: solve drifted"
+                    );
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("stress thread");
+    }
+    let stats = engine.stats();
+    // Every factor is one pooled job; substitutions add more.
+    assert!(stats.jobs >= (threads * rounds) as u64, "{stats:?}");
+}
+
+#[test]
+fn prop_pooled_factor_bitwise_matches_seqlu() {
+    // Across sizes, schedule widths, engine sizes and distributions,
+    // the pooled elimination must reproduce SeqLu bit for bit (the
+    // scoped seed's guarantee, preserved by the engine).
+    let engines: Vec<Arc<LaneEngine>> =
+        [1usize, 2, 4].iter().map(|&l| Arc::new(LaneEngine::new(l))).collect();
+    forall("pooled EbvLu ≡ SeqLu bitwise", 40, |g| {
+        let n = g.usize_in(2, 96);
+        let lanes = g.usize_in(1, 8);
+        let dist = *g.choose(&RowDist::ALL);
+        let engine = &engines[g.usize_in(0, 2)];
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let reference = SeqLu::new().factor(&a).unwrap();
+        let f = pooled(lanes, dist, engine).factor(&a).unwrap();
+        assert_eq!(
+            f.packed().max_abs_diff(reference.packed()),
+            0.0,
+            "n={n} lanes={lanes} {dist:?} engine={}",
+            engine.lanes()
+        );
+    });
+}
+
+#[test]
+fn prop_parallel_substitutions_are_partition_invariant() {
+    // The column-sweep order fixes every element's update sequence, so
+    // the parallel substitutions give identical bits for ANY partition
+    // (lane count × distribution × engine size) — and agree with the
+    // sequential row-sweep to rounding.
+    let engines: Vec<Arc<LaneEngine>> =
+        [1usize, 2, 4].iter().map(|&l| Arc::new(LaneEngine::new(l))).collect();
+    forall("parallel trisolve is partition-invariant", 30, |g| {
+        let n = g.usize_in(2, 80);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let f = SeqLu::new().factor(&a).unwrap();
+        let b = rhs(n, GenSeed(g.seed()));
+
+        // Reference partition: 2 fold lanes on the first engine.
+        let sched0 = LaneSchedule::build(n, 2, RowDist::EbvFold);
+        let y0 = forward_unit_dense_par(f.packed(), &b, &sched0, &engines[0]).unwrap();
+        let x0 = backward_dense_par(f.packed(), &y0, &sched0, &engines[0]).unwrap();
+
+        // lanes >= 2 keeps both solves on the column-sweep path (a
+        // single lane falls through to the row-sweep sequential kernels,
+        // which accumulate in a different — equally valid — order).
+        let lanes = g.usize_in(2, 9);
+        let dist = *g.choose(&RowDist::ALL);
+        let engine = &engines[g.usize_in(0, 2)];
+        let sched = LaneSchedule::build(n, lanes, dist);
+        let y = forward_unit_dense_par(f.packed(), &b, &sched, engine).unwrap();
+        let x = backward_dense_par(f.packed(), &y, &sched, engine).unwrap();
+        assert_eq!(diff_inf(&y0, &y), 0.0, "forward: n={n} lanes={lanes} {dist:?}");
+        assert_eq!(diff_inf(&x0, &x), 0.0, "backward: n={n} lanes={lanes} {dist:?}");
+
+        // And both stay within rounding of the sequential sweeps.
+        let y_seq = forward_unit_dense(f.packed(), &b).unwrap();
+        let x_seq = backward_dense(f.packed(), &y_seq).unwrap();
+        assert!(diff_inf(&y_seq, &y) < 1e-11, "n={n}");
+        assert!(diff_inf(&x_seq, &x) < 1e-10, "n={n}");
+    });
+}
+
+#[test]
+fn prop_panel_solve_matches_columnwise_solves() {
+    // Sizes straddle the panel threshold (128), so both the inline and
+    // the pooled path are exercised — bitwise identical either way.
+    let engine = Arc::new(LaneEngine::new(3));
+    forall("panel solve ≡ per-column solve bitwise", 25, |g| {
+        let n = g.usize_in(2, 200);
+        let panels = g.usize_in(1, 9);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let f = SeqLu::new().factor(&a).unwrap();
+        let bs: Vec<Vec<f64>> =
+            (0..panels).map(|k| rhs(n, GenSeed(g.seed() ^ k as u64))).collect();
+        let many = f.solve_many_on(&bs, &engine).unwrap();
+        for (k, b) in bs.iter().enumerate() {
+            assert_eq!(many[k], f.solve(b).unwrap(), "panel {k} of {panels}, n={n}");
+        }
+    });
+}
