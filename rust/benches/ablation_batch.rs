@@ -10,7 +10,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use ebv_solve::bench::Report;
+use ebv_solve::bench::{self, Report};
 use ebv_solve::config::ServiceConfig;
 use ebv_solve::coordinator::SolverService;
 use ebv_solve::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
@@ -61,7 +61,8 @@ fn run_campaign(batched: bool, requests: usize, n: usize) -> Outcome {
 }
 
 fn main() {
-    let requests = 128usize;
+    let smoke = bench::smoke();
+    let requests = if smoke { 16usize } else { 128usize };
     let mut report = Report::new("Ablation A2 — batching policy");
     report.set_headers(&[
         "n",
@@ -73,7 +74,7 @@ fn main() {
     ]);
 
     let mut rows_printed = Vec::new();
-    for n in [128usize, 256, 512] {
+    for n in bench::sizes(&[128, 256, 512], &[64]) {
         let off = run_campaign(false, requests, n);
         let on = run_campaign(true, requests, n);
         for (name, o) in [("unbatched", &off), ("batched+keyed", &on)] {
@@ -105,12 +106,18 @@ fn main() {
         assert_eq!(on.factorizations, 1, "keyed batch must factor once");
         assert!(off.factorizations >= requests as u64 / 2, "unbatched path re-factors");
     }
-    let (_, off, on) = &rows_printed[rows_printed.len() - 1];
+    // The factorization-count checks above are deterministic and ran in
+    // both modes; the wall-clock comparison is noise at smoke sizes.
+    if smoke {
+        println!("smoke mode: skipping wall-clock direction check");
+        return;
+    }
+    let (n_last, off, on) = &rows_printed[rows_printed.len() - 1];
     assert!(
         on.wall < off.wall,
         "batching must win at the largest size: {} vs {}",
         fmt::secs(on.wall),
         fmt::secs(off.wall)
     );
-    println!("claim check: batching + factor cache strictly faster at n=512 ✓");
+    println!("claim check: batching + factor cache strictly faster at n={n_last} ✓");
 }

@@ -12,7 +12,7 @@
 
 use std::time::Duration;
 
-use ebv_solve::bench::{Bencher, Report};
+use ebv_solve::bench::{self, Bencher, Report};
 use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
 use ebv_solve::gpusim::{simulate_gpu_dense, GpuModel};
 use ebv_solve::matrix::generate::{diag_dominant_dense, GenSeed};
@@ -43,9 +43,10 @@ fn main() {
         max_iters: 8,
         target_time: Duration::from_millis(700),
         warmup_iters: 1,
-    };
+    }
+    .or_smoke();
     report.set_headers(&["n", "dist", "lanes", "median factor, s", "vs ebv-fold"]);
-    for n in [512usize, 1024] {
+    for n in bench::sizes(&[512, 1024], &[128]) {
         let a = diag_dominant_dense(n, GenSeed(n as u64));
         let mut fold_time = 0.0;
         for dist in [RowDist::EbvFold, RowDist::Block, RowDist::Cyclic, RowDist::GreedyLpt] {

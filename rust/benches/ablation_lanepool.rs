@@ -24,7 +24,7 @@
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
-use ebv_solve::bench::{Bencher, Report};
+use ebv_solve::bench::{self, Bencher, Report};
 use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
 use ebv_solve::exec::LaneEngine;
 use ebv_solve::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
@@ -117,20 +117,22 @@ fn scoped_forward(lu: &DenseMatrix, b: &[f64], schedule: &LaneSchedule) -> Vec<f
 
 fn main() {
     let lanes = 4;
+    let smoke = bench::smoke();
     let engine = Arc::new(LaneEngine::new(lanes));
     let bencher = Bencher {
         min_iters: 10,
         max_iters: 60,
         target_time: Duration::from_millis(700),
         warmup_iters: 2,
-    };
+    }
+    .or_smoke();
 
     let mut report = Report::new("Lane pool — spawn-per-solve vs persistent engine");
     report.set_headers(&["case", "spawned, s", "pooled, s", "pooled speedup"]);
     let mut results: Vec<(String, f64, f64)> = Vec::new();
 
     // ---- factor family: full elimination per iteration --------------------
-    for n in [96usize, 160, 256] {
+    for n in bench::sizes(&[96, 160, 256], &[64]) {
         let a = diag_dominant_dense(n, GenSeed(1000 + n as u64));
         let schedule = LaneSchedule::build(n, lanes, RowDist::EbvFold);
 
@@ -139,8 +141,13 @@ fn main() {
             scoped_eliminate(&mut lu, &schedule);
             lu
         });
-        let pooled_solver =
-            EbvLu::with_lanes(lanes).seq_threshold(0).with_engine(Arc::clone(&engine));
+        // panel(1): the scoped baseline is the column-at-a-time kernel,
+        // so the pooled comparator must run the same shape (the blocked
+        // default is measured by `ablation_panel` instead).
+        let pooled_solver = EbvLu::with_lanes(lanes)
+            .seq_threshold(0)
+            .panel(1)
+            .with_engine(Arc::clone(&engine));
         let t_pool = bencher.run(&format!("factor-pooled n={n}"), || {
             pooled_solver.factor(&a).expect("factor")
         });
@@ -159,7 +166,7 @@ fn main() {
     }
 
     // ---- trisolve family: warm-cache repeat solves ------------------------
-    for n in [160usize, 256] {
+    for n in bench::sizes(&[160, 256], &[64]) {
         let a = diag_dominant_dense(n, GenSeed(2000 + n as u64));
         let f = SeqLu::new().factor(&a).expect("factor");
         let b = rhs(n, GenSeed(3000 + n as u64));
@@ -207,13 +214,18 @@ fn main() {
     // Anchor on the manifest dir: `cargo bench` runs the binary with CWD
     // at the package root (rust/), but the summary lives at the repo root.
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_lanepool.json");
-    if std::fs::write(&out, doc.emit_pretty()).is_ok() {
+    if bench::write_repo_summary(&out, &doc).unwrap_or(false) {
         println!("wrote {}", out.display());
     }
 
     // Direction check: the persistent engine must be at least as fast as
     // spawn-per-solve on every repeat-solve case (10% timer-noise slack
-    // per case, strict on the aggregate).
+    // per case, strict on the aggregate). Smoke shapes are pure timer
+    // noise, so smoke mode keeps only the bitwise checks above.
+    if smoke {
+        println!("smoke mode: skipping wall-clock direction checks");
+        return;
+    }
     let (mut agg_spawn, mut agg_pool) = (0.0f64, 0.0f64);
     for (name, spawn_s, pool_s) in &results {
         agg_spawn += spawn_s;

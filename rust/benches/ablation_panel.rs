@@ -1,0 +1,151 @@
+//! Panel ablation: column-at-a-time (`nb=1`) vs blocked-panel EBV
+//! factorization on the persistent lane engine.
+//!
+//! The rank-1 trailing update sweeps the whole trailing matrix once per
+//! column; an `nb`-wide panel sweeps it once per panel, trading `nb`
+//! passes for one rank-`nb` GEMM-style pass per row (4 panel columns
+//! fused per inner sweep). Cases run `nb ∈ {1, 8, 64}` at dense sizes
+//! up to 1024 on 4 fold lanes, assert `nb=1` is bit-identical to
+//! `SeqLu` and wider panels agree componentwise, and record the
+//! barrier-step counts from `FactorPlan::dense_blocked` so the
+//! schedule-level story travels with the timings. Writes the standard
+//! bench report and a repo-level `BENCH_panel.json` summary (skipped in
+//! `EBV_BENCH_SMOKE=1` mode — see `bench::write_repo_summary`).
+//!
+//! ```sh
+//! cargo bench --bench ablation_panel
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ebv_solve::bench::{self, Bencher, Report};
+use ebv_solve::ebv::plan::FactorPlan;
+use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
+use ebv_solve::exec::LaneEngine;
+use ebv_solve::matrix::generate::{diag_dominant_dense, GenSeed};
+use ebv_solve::solver::{EbvLu, LuSolver, SeqLu};
+use ebv_solve::util::json::Json;
+
+fn main() {
+    let lanes = 4;
+    let engine = Arc::new(LaneEngine::new(lanes));
+    let smoke = bench::smoke();
+    let sizes = bench::sizes(&[512, 1024], &[96]);
+    let widths = [1usize, 8, 64];
+    let bencher = Bencher {
+        min_iters: 5,
+        max_iters: 30,
+        target_time: Duration::from_millis(900),
+        warmup_iters: 1,
+    }
+    .or_smoke();
+
+    let mut report = Report::new("Panel ablation — column-at-a-time vs blocked EBV factor");
+    report.set_headers(&["case", "barrier steps", "median, s", "vs nb=1"]);
+    // (case name, n, nb, barriers, median seconds)
+    let mut results: Vec<(String, usize, usize, usize, f64)> = Vec::new();
+
+    for &n in &sizes {
+        let a = diag_dominant_dense(n, GenSeed(4000 + n as u64));
+        let reference = SeqLu::new().factor(&a).expect("factor");
+        let schedule = LaneSchedule::build(n, lanes, RowDist::EbvFold);
+        let mut nb1_median = 0.0f64;
+
+        for &nb in &widths {
+            let solver = EbvLu::with_lanes(lanes)
+                .seq_threshold(0)
+                .panel(nb)
+                .with_engine(Arc::clone(&engine));
+            let stats = bencher.run(&format!("factor n={n} nb={nb}"), || {
+                solver.factor(&a).expect("factor")
+            });
+
+            // Correctness rides along with every timing: nb=1 must be
+            // bit-identical to SeqLu, wider panels componentwise-close.
+            // The bound is looser than the property suite's 1e-9 (which
+            // runs n <= 150) because reordering error grows with n and
+            // with the O(n) magnitudes of these dominant systems.
+            let f = solver.factor(&a).expect("factor");
+            let diff = f.packed().max_abs_diff(reference.packed());
+            if nb == 1 {
+                assert_eq!(diff, 0.0, "n={n}: nb=1 must reproduce SeqLu bitwise");
+            } else {
+                assert!(diff < 1e-8, "n={n} nb={nb}: drifted {diff:e} from SeqLu");
+            }
+
+            let barriers = FactorPlan::dense_blocked(n, nb, &schedule).barriers;
+            if nb == 1 {
+                nb1_median = stats.median;
+            }
+            report.push_row(vec![
+                format!("factor n={n} nb={nb}"),
+                barriers.to_string(),
+                format!("{:.6}", stats.median),
+                format!("{:.2}x", nb1_median / stats.median),
+            ]);
+            results.push((format!("factor n={n} nb={nb}"), n, nb, barriers, stats.median));
+            report.push_stats(stats);
+        }
+    }
+
+    println!("{}", report.render());
+    if let Ok(p) = report.write_json() {
+        println!("report: {}", p.display());
+    }
+    println!("engine stats: {:?}", engine.stats());
+
+    // Repo-level summary the docs reference (BENCH_panel.json).
+    let doc = Json::obj([
+        ("bench", Json::from("ablation_panel")),
+        ("status", Json::from("measured")),
+        ("lanes", Json::from(lanes)),
+        ("panel_widths", Json::arr(widths.iter().map(|&w| Json::from(w)))),
+        (
+            "cases",
+            Json::arr(results.iter().map(|(name, n, nb, barriers, median)| {
+                let nb1 = results
+                    .iter()
+                    .find(|(_, n2, nb2, _, _)| n2 == n && *nb2 == 1)
+                    .map(|(_, _, _, _, m)| *m)
+                    .unwrap_or(*median);
+                Json::obj([
+                    ("name", Json::from(name.clone())),
+                    ("n", Json::from(*n)),
+                    ("panel_width", Json::from(*nb)),
+                    ("barrier_steps", Json::from(*barriers)),
+                    ("median_s", Json::from(*median)),
+                    ("speedup_vs_nb1", Json::from(nb1 / *median)),
+                ])
+            })),
+        ),
+    ]);
+    // Anchor on the manifest dir: `cargo bench` runs the binary with CWD
+    // at the package root (rust/), but the summary lives at the repo root.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_panel.json");
+    if bench::write_repo_summary(&out, &doc).unwrap_or(false) {
+        println!("wrote {}", out.display());
+    }
+
+    // Direction check (skipped in smoke mode — tiny shapes are noise):
+    // at the largest size the widest panel must not lose to the rank-1
+    // column path.
+    if !smoke {
+        let n_max = *sizes.iter().max().expect("sizes nonempty");
+        let t1 = results
+            .iter()
+            .find(|(_, n, nb, _, _)| *n == n_max && *nb == 1)
+            .expect("nb=1 case")
+            .4;
+        let t64 = results
+            .iter()
+            .find(|(_, n, nb, _, _)| *n == n_max && *nb == 64)
+            .expect("nb=64 case")
+            .4;
+        assert!(
+            t64 <= t1 * 1.10,
+            "n={n_max}: blocked nb=64 ({t64:.6}s) lost to column-at-a-time ({t1:.6}s)"
+        );
+        println!("claim check: nb=64 ≤ 1.10 × nb=1 at n={n_max} ({:.2}x speedup) ✓", t1 / t64);
+    }
+}

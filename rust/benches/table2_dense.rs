@@ -11,7 +11,7 @@
 
 use std::time::Duration;
 
-use ebv_solve::bench::{Bencher, Report};
+use ebv_solve::bench::{self, Bencher, Report};
 use ebv_solve::ebv::schedule::RowDist;
 use ebv_solve::gpusim::{simulate_cpu_dense, simulate_gpu_dense, CpuModel, GpuModel};
 use ebv_solve::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
@@ -68,10 +68,11 @@ fn main() {
         max_iters: 10,
         target_time: Duration::from_millis(600),
         warmup_iters: 1,
-    };
+    }
+    .or_smoke();
     println!("\nmeasured on this host ({lanes} lanes):");
     let mut rows = Vec::new();
-    for n in [256usize, 512, 1024] {
+    for n in bench::sizes(&[256, 512, 1024], &[96]) {
         let a = diag_dominant_dense(n, GenSeed(n as u64));
         let b = rhs(n, GenSeed(1));
         let seq = SeqLu::new();

@@ -7,7 +7,7 @@
 
 use std::time::Duration;
 
-use ebv_solve::bench::{Bencher, Report};
+use ebv_solve::bench::{self, Bencher, Report};
 use ebv_solve::gpusim::transfer::{csr_payload_elems, transfer_times, PcieModel};
 
 const PAPER: [(usize, f64, f64); 6] = [
@@ -67,11 +67,12 @@ fn main() {
         max_iters: 20,
         target_time: Duration::from_millis(400),
         warmup_iters: 2,
-    };
-    let n = 4000usize;
+    }
+    .or_smoke();
+    let n = if bench::smoke() { 512usize } else { 4000usize };
     let src = vec![1.0f32; n * n];
     let mut dst = vec![0.0f32; n * n];
-    let stats = bencher.run("host memcpy 4000^2 f32", || {
+    let stats = bencher.run(&format!("host memcpy {n}^2 f32"), || {
         dst.copy_from_slice(&src);
         std::hint::black_box(dst[0])
     });

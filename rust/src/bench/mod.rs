@@ -3,11 +3,47 @@
 //! Wall-clock benchmarking with warmup, adaptive iteration counts, and
 //! mean/median/p99/stddev statistics; plus report emission as text
 //! tables and JSON so `EXPERIMENTS.md` entries are regenerable.
+//!
+//! **Smoke mode.** CI runs every bench with `EBV_BENCH_SMOKE=1`, which
+//! benches honor by shrinking problem sizes/iterations ([`smoke`],
+//! [`Bencher::smoke`]) and skipping wall-clock direction assertions
+//! (tiny shapes are all timer noise). Smoke runs never write the
+//! repo-level `BENCH_*.json` summaries — [`write_repo_summary`] refuses
+//! in smoke mode, so a gauntlet run can't clobber real measurements (or
+//! the checked-in schema files) with zeros.
 
 use std::time::{Duration, Instant};
 
 use crate::util::fmt;
 use crate::util::json::Json;
+
+/// True when the CI gauntlet asks benches for a tiny-size smoke run
+/// (`EBV_BENCH_SMOKE` set to anything but `0`/empty).
+pub fn smoke() -> bool {
+    std::env::var("EBV_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Pick the full-size or smoke-size case list by mode.
+pub fn sizes(full: &[usize], tiny: &[usize]) -> Vec<usize> {
+    if smoke() {
+        tiny.to_vec()
+    } else {
+        full.to_vec()
+    }
+}
+
+/// Write a repo-level `BENCH_*.json` summary. In smoke mode nothing is
+/// written (returns `Ok(false)`): smoke shapes produce junk timings,
+/// and the checked-in schema/measured files must survive a CI gauntlet
+/// run byte-for-byte.
+pub fn write_repo_summary(path: &std::path::Path, doc: &Json) -> std::io::Result<bool> {
+    if smoke() {
+        println!("smoke mode: leaving {} untouched", path.display());
+        return Ok(false);
+    }
+    std::fs::write(path, doc.emit_pretty())?;
+    Ok(true)
+}
 
 /// Statistics of one measured case.
 #[derive(Debug, Clone, PartialEq)]
@@ -87,6 +123,27 @@ impl Bencher {
             max_iters: 20,
             target_time: Duration::from_millis(300),
             warmup_iters: 1,
+        }
+    }
+
+    /// Minimal profile for CI smoke runs: prove the bench executes, not
+    /// that the numbers mean anything.
+    pub fn smoke() -> Self {
+        Bencher {
+            min_iters: 1,
+            max_iters: 2,
+            target_time: Duration::from_millis(20),
+            warmup_iters: 0,
+        }
+    }
+
+    /// `self` normally, the [`Bencher::smoke`] profile under
+    /// `EBV_BENCH_SMOKE=1` — the one-liner every bench main uses.
+    pub fn or_smoke(self) -> Self {
+        if smoke() {
+            Bencher::smoke()
+        } else {
+            self
         }
     }
 
@@ -236,6 +293,52 @@ mod tests {
         assert!(text.contains("Table X"));
         assert!(text.contains("500"));
         assert!(text.contains("case"));
+    }
+
+    /// `EBV_BENCH_SMOKE` is process-global: the tests that toggle it
+    /// serialize on this lock so parallel test threads can't race.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn smoke_flag_reads_env() {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        std::env::remove_var("EBV_BENCH_SMOKE");
+        assert!(!smoke());
+        std::env::set_var("EBV_BENCH_SMOKE", "0");
+        assert!(!smoke());
+        std::env::set_var("EBV_BENCH_SMOKE", "1");
+        assert!(smoke());
+        assert_eq!(sizes(&[512, 1024], &[64]), vec![64]);
+        let b = Bencher::default().or_smoke();
+        assert_eq!(b.max_iters, 2);
+        std::env::remove_var("EBV_BENCH_SMOKE");
+        assert_eq!(sizes(&[512, 1024], &[64]), vec![512, 1024]);
+    }
+
+    #[test]
+    fn repo_summary_guard_refuses_smoke_overwrites() {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let dir = std::env::temp_dir().join("ebv_bench_guard");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let measured = Json::obj([
+            ("bench", Json::from("guard")),
+            ("status", Json::from("measured")),
+        ]);
+        std::env::remove_var("EBV_BENCH_SMOKE");
+        assert!(write_repo_summary(&path, &measured).unwrap());
+        let before = std::fs::read_to_string(&path).unwrap();
+
+        std::env::set_var("EBV_BENCH_SMOKE", "1");
+        let zeros = Json::obj([("status", Json::from("smoke"))]);
+        assert!(!write_repo_summary(&path, &zeros).unwrap(), "smoke must not write");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), before);
+        // Smoke refuses even when no file exists yet.
+        let fresh = dir.join("BENCH_fresh.json");
+        let _ = std::fs::remove_file(&fresh);
+        assert!(!write_repo_summary(&fresh, &zeros).unwrap());
+        assert!(!fresh.exists());
+        std::env::remove_var("EBV_BENCH_SMOKE");
     }
 
     #[test]

@@ -95,6 +95,9 @@ COMMANDS:
               --n <size>                    (default 512)
               --solver seq|ebv|blocked|gauss-jordan (default ebv)
               --lanes <k>                   (default #cpus)
+              --panel-width <nb>            (blocked EBV panel width;
+                                             default 64, 1 = exact
+                                             column-at-a-time path)
               --seed <u64>                  (default 7)
     serve     Serve solves over the NDJSON wire protocol on stdin/stdout
               (see README.md §Wire protocol for the frame format)
@@ -103,6 +106,8 @@ COMMANDS:
                                              execution engine; 0 = all
                                              cores, see README.md
                                              §Execution engine)
+              --panel-width <nb>            (blocked factorization panel
+                                             width; default 64)
               --allow-mtx-path              (let frames reference local
                                              .mtx files; trusted peers only)
               --runtime                     (use PJRT artifacts)

@@ -117,6 +117,9 @@ pub struct ServiceConfig {
     /// `lanes`, which is the schedule *width* the solvers request —
     /// widths virtualize onto the resident pool.
     pub engine_lanes: usize,
+    /// Panel width `nb` of the blocked dense factorization the workers
+    /// run (`1` = column-at-a-time, bit-identical to `SeqLu`).
+    pub panel_width: usize,
     /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
     /// Prefer the PJRT runtime for sizes with compiled artifacts.
@@ -134,6 +137,7 @@ impl Default for ServiceConfig {
             batch_window_us: 200,
             queue_capacity: 1024,
             engine_lanes: 0,
+            panel_width: crate::solver::lu_ebv::DEFAULT_PANEL_WIDTH,
             artifacts_dir: "artifacts".to_string(),
             use_runtime: false,
             refine: true,
@@ -158,6 +162,7 @@ impl ServiceConfig {
             batch_window_us: raw.get_parsed("service", "batch_window_us", d.batch_window_us)?,
             queue_capacity: raw.get_parsed("service", "queue_capacity", d.queue_capacity)?,
             engine_lanes: raw.get_parsed("service", "engine_lanes", d.engine_lanes)?,
+            panel_width: raw.get_parsed("service", "panel_width", d.panel_width)?,
             artifacts_dir: raw
                 .get("service", "artifacts_dir")
                 .unwrap_or_else(|| d.artifacts_dir.clone()),
@@ -174,6 +179,9 @@ impl ServiceConfig {
         }
         if self.max_batch == 0 {
             return Err(EbvError::Config("service.max_batch must be >= 1".into()));
+        }
+        if self.panel_width == 0 {
+            return Err(EbvError::Config("service.panel_width must be >= 1".into()));
         }
         if self.queue_capacity < self.max_batch {
             return Err(EbvError::Config(
@@ -215,6 +223,19 @@ mod tests {
         let cfg = ServiceConfig::from_raw(&raw).unwrap();
         assert_eq!(cfg.engine_lanes, 6);
         let raw = RawConfig::parse("[service]\nengine_lanes = no\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn panel_width_knob_parses_and_validates() {
+        assert_eq!(ServiceConfig::default().panel_width, 64);
+        let raw = RawConfig::parse("[service]\npanel_width = 8\n").unwrap();
+        assert_eq!(ServiceConfig::from_raw(&raw).unwrap().panel_width, 8);
+        let raw = RawConfig::parse("[service]\npanel_width = 1\n").unwrap();
+        assert_eq!(ServiceConfig::from_raw(&raw).unwrap().panel_width, 1);
+        let raw = RawConfig::parse("[service]\npanel_width = 0\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[service]\npanel_width = wide\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err());
     }
 

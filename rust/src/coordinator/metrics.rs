@@ -94,6 +94,11 @@ pub struct MetricsSnapshot {
     pub engine_jobs: u64,
     pub engine_steps: u64,
     pub engine_barrier_waits: u64,
+    /// Effective blocked-factorization panel width the workers run
+    /// (`service.panel_width`). Zero until a
+    /// [`ServiceHandle::metrics_snapshot`](crate::coordinator::ServiceHandle::metrics_snapshot)
+    /// fills it in — `ServiceMetrics` itself has no solver config.
+    pub panel_width: u64,
 }
 
 /// All service-level metrics.
@@ -156,6 +161,7 @@ impl ServiceMetrics {
             engine_jobs: 0,
             engine_steps: 0,
             engine_barrier_waits: 0,
+            panel_width: 0,
         }
     }
 
@@ -272,6 +278,9 @@ mod tests {
         assert_eq!(s.engine_jobs, 9);
         assert_eq!(s.engine_steps, 120);
         assert_eq!(s.engine_barrier_waits, 480);
+        // merge_engine only fills engine fields; the panel width comes
+        // from the service handle.
+        assert_eq!(s.panel_width, 0);
     }
 
     #[test]

@@ -68,6 +68,7 @@ impl SolverService {
             router: Router::new(runtime.is_some(), runtime_sizes),
             solve_lanes: cfg.lanes,
             dist: cfg.dist,
+            panel_width: cfg.panel_width.max(1),
             engine,
             cache: Mutex::new(FactorCache::with_capacity(64)),
             replies,
@@ -275,7 +276,10 @@ impl ServiceHandle {
     /// Service counters with the lane-engine stats merged in — what the
     /// wire `metrics` frame carries.
     pub fn metrics_snapshot(&self) -> crate::coordinator::metrics::MetricsSnapshot {
-        ServiceMetrics::merge_engine(self.metrics.snapshot(), self.ctx.engine.stats())
+        let mut snap =
+            ServiceMetrics::merge_engine(self.metrics.snapshot(), self.ctx.engine.stats());
+        snap.panel_width = self.ctx.panel_width as u64;
+        snap
     }
 
     /// Graceful shutdown: stop intake, drain queues, join every thread.
@@ -434,6 +438,22 @@ mod tests {
         assert!(snap.engine_jobs >= 1, "{snap:?}");
         assert!(snap.engine_steps >= 159, "{snap:?}");
         assert_eq!(snap.engine_barrier_waits, snap.engine_steps * 2);
+        assert_eq!(snap.panel_width, 64, "default panel width is reported");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn configured_panel_width_reaches_workers_and_metrics() {
+        let mut cfg = test_cfg();
+        cfg.panel_width = 8;
+        let svc = SolverService::start(cfg).unwrap();
+        // Large enough to clear the sequential fall-through so the
+        // blocked path actually runs with the configured width.
+        let a = Arc::new(diag_dominant_dense(160, GenSeed(99)));
+        let resp = svc.solve_dense_blocking(a, vec![1.0; 160], None).unwrap();
+        assert!(resp.result.is_ok());
+        assert!(resp.residual < 1e-9);
+        assert_eq!(svc.metrics_snapshot().panel_width, 8);
         svc.shutdown();
     }
 

@@ -111,6 +111,9 @@ pub struct WorkerCtx {
     /// engine's resident pool executes them).
     pub solve_lanes: usize,
     pub dist: crate::ebv::schedule::RowDist,
+    /// Panel width `nb` of the blocked dense factorization
+    /// (`service.panel_width`; 1 = the column-at-a-time path).
+    pub panel_width: usize,
     /// The one resident lane engine every worker's parallel factor and
     /// substitution work submits to (sized by `engine_lanes` config).
     pub engine: Arc<LaneEngine>,
@@ -231,6 +234,7 @@ fn dense_factors(
     ctx.metrics.factor_misses.fetch_add(1, Ordering::Relaxed);
     let solver = EbvLu::with_lanes(ctx.solve_lanes)
         .with_dist(ctx.dist)
+        .panel(ctx.panel_width)
         .with_engine(Arc::clone(&ctx.engine));
     let f = Arc::new(solver.factor(a)?);
     if let Some(key) = req.matrix_key {
@@ -328,6 +332,7 @@ fn solve_pjrt_batch(
                         // with the compiled kernel doing the heavy lifting.
                         if let Ok((xr, _)) = refine_external_solution(
                             &EbvLu::with_lanes(ctx.solve_lanes)
+                                .panel(ctx.panel_width)
                                 .with_engine(Arc::clone(&ctx.engine)),
                             a,
                             r.payload.rhs(),
@@ -369,6 +374,7 @@ mod tests {
             router: Router::new(false, []),
             solve_lanes: 2,
             dist: RowDist::EbvFold,
+            panel_width: 64,
             engine: Arc::new(LaneEngine::new(2)),
             cache: Mutex::new(FactorCache::with_capacity(4)),
             replies: Mutex::new(HashMap::new()),

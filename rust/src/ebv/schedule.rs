@@ -143,6 +143,14 @@ impl LaneSchedule {
         &rows[start..]
     }
 
+    /// Rows owned by lane `l` at or below row `start` — the active set
+    /// of a blocked trailing-update step whose panel ends at `start`
+    /// (every row past the panel absorbs the panel's rank-`nb` update).
+    pub fn rows_from(&self, l: usize, start: usize) -> &[usize] {
+        let rows = &self.rows[l];
+        &rows[rows.partition_point(|&i| i < start)..]
+    }
+
     /// Rows owned by lane `l` that are strictly above pivot `j`
     /// (the active set during a backward-substitution column step).
     pub fn upper_rows_of(&self, l: usize, j: usize) -> &[usize] {
@@ -171,6 +179,23 @@ impl LaneSchedule {
             max / mean
         }
     }
+}
+
+/// Panel decomposition of an `n`-column elimination into `nb`-wide
+/// panels: consecutive `(start, end)` column ranges covering `0..n`.
+/// The blocked factorization builds its equalized update vectors per
+/// panel from these ranges instead of per column; `nb = 1` degenerates
+/// to the column-at-a-time decomposition.
+pub fn panels(n: usize, nb: usize) -> Vec<(usize, usize)> {
+    assert!(nb > 0, "panels: panel width must be positive");
+    let mut out = Vec::with_capacity(n.div_ceil(nb));
+    let mut k = 0usize;
+    while k < n {
+        let end = (k + nb).min(n);
+        out.push((k, end));
+        k = end;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -281,6 +306,44 @@ mod tests {
                 assert_eq!(upper + lower + at_j, s.rows_of(l).len(), "l={l} j={j}");
             }
         }
+    }
+
+    #[test]
+    fn rows_from_is_the_at_or_below_set() {
+        let s = LaneSchedule::build(8, 2, RowDist::Cyclic);
+        // Lane 0 owns {0,2,4,6}.
+        assert_eq!(s.rows_from(0, 0), &[0, 2, 4, 6]);
+        assert_eq!(s.rows_from(0, 3), &[4, 6]);
+        assert_eq!(s.rows_from(0, 4), &[4, 6]);
+        assert_eq!(s.rows_from(0, 7), &[] as &[usize]);
+        // rows_from(l, r + 1) == active_rows_of(l, r) for every (l, r).
+        for l in 0..2 {
+            for r in 0..8 {
+                assert_eq!(s.rows_from(l, r + 1), s.active_rows_of(l, r), "l={l} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn panels_cover_all_columns_contiguously() {
+        for (n, nb) in [(1usize, 1usize), (7, 3), (8, 4), (64, 64), (10, 256), (100, 1)] {
+            let ps = panels(n, nb);
+            assert_eq!(ps.len(), n.div_ceil(nb), "n={n} nb={nb}");
+            let mut expect_start = 0usize;
+            for &(k, end) in &ps {
+                assert_eq!(k, expect_start, "n={n} nb={nb}");
+                assert!(end > k && end - k <= nb, "n={n} nb={nb}");
+                expect_start = end;
+            }
+            assert_eq!(expect_start, n, "n={n} nb={nb}");
+        }
+        assert!(panels(0, 8).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "panel width")]
+    fn zero_panel_width_panics() {
+        panels(8, 0);
     }
 
     #[test]

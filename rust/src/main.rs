@@ -59,13 +59,18 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
     let seed = args.opt_parsed("seed", 7u64)?;
     let kind = args.opt("kind").unwrap_or("dense");
     let lanes = args.opt_parsed("lanes", ebv_solve::exec::default_lanes())?;
+    let panel = args.opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?;
+    if panel == 0 {
+        // Same rule the service config enforces — no silent clamping.
+        return Err(ebv_solve::EbvError::Config("--panel-width must be >= 1".into()));
+    }
     let solver_name = args.opt("solver").unwrap_or("ebv");
 
     match kind {
         "dense" => {
             let a = diag_dominant_dense(n, GenSeed(seed));
             let b = rhs(n, GenSeed(seed ^ 1));
-            let solver = solver_by_name(solver_name, lanes).ok_or_else(|| {
+            let solver = solver_by_name(solver_name, lanes, panel).ok_or_else(|| {
                 ebv_solve::EbvError::Config(format!("unknown solver `{solver_name}`"))
             })?;
             let t0 = Instant::now();
@@ -121,6 +126,8 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
         batch_window_us: args.opt_parsed("window-us", 200u64)?,
         queue_capacity: args.opt_parsed("queue", 1024usize)?,
         engine_lanes: args.opt_parsed("engine-lanes", 0usize)?,
+        panel_width: args
+            .opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         use_runtime: args.flag("runtime"),
         ..ServiceConfig::default()
     };
@@ -158,6 +165,8 @@ fn cmd_serve_trace(args: &Args) -> ebv_solve::Result<()> {
         lanes,
         max_batch: batch,
         engine_lanes: args.opt_parsed("engine-lanes", 0usize)?,
+        panel_width: args
+            .opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         use_runtime: args.flag("runtime"),
         ..ServiceConfig::default()
     };

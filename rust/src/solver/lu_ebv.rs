@@ -8,23 +8,42 @@
 //! `gpusim` fed with this exact schedule).
 //!
 //! Execution runs on the persistent lane engine (`rust/DESIGN.md`
-//! §Execution engine): the factorization is one step-loop job with one
-//! barrier-separated step per elimination column. After the barrier
-//! into step `r`, every lane may safely read pivot row `r` (its final
-//! update happened at step `r-1`, sequenced before the barrier). Lanes
-//! write only rows they own, so writes are disjoint by construction of
-//! [`LaneSchedule`]. The schedule's lane count is a *virtual* width:
-//! the engine deals virtual lanes across its resident lanes, so the
-//! factors are bit-identical for any pool size.
+//! §Execution engine). Two elimination shapes share the engine:
+//!
+//! * **Column-at-a-time** (`panel(1)`): one barrier-separated step per
+//!   elimination column, each a lane-distributed rank-1 update. After
+//!   the barrier into step `r`, every lane may safely read pivot row
+//!   `r` (its final update happened at step `r-1`, sequenced before
+//!   the barrier). Bit-identical to [`SeqLu`](crate::solver::SeqLu).
+//! * **Blocked panels** (`panel(nb)`, the default `nb = 64`): columns
+//!   are grouped into `nb`-wide panels (see
+//!   [`panels`](crate::ebv::schedule::panels)). A panel-column step
+//!   updates panel rows full-width (building the `U12` block in place)
+//!   but deeper rows only across the panel's own columns; one trailing
+//!   step per panel then applies the deferred work as lane-distributed
+//!   rank-`nb` GEMM-style row updates, so the trailing matrix is swept
+//!   once per panel instead of once per column. The fused multi-column
+//!   accumulation reorders rounding, so blocked factors agree with
+//!   `SeqLu` componentwise rather than bitwise — but are themselves
+//!   bit-stable across lane counts, distributions and engine sizes
+//!   (each row's arithmetic depends only on the panel decomposition).
+//!
+//! In both shapes lanes write only rows they own, so writes are
+//! disjoint by construction of [`LaneSchedule`]. The schedule's lane
+//! count is a *virtual* width: the engine deals virtual lanes across
+//! its resident lanes, so the factors never depend on the pool size.
 
 use std::sync::{Arc, Mutex};
 
-use crate::ebv::schedule::{LaneSchedule, RowDist};
+use crate::ebv::schedule::{panels, LaneSchedule, RowDist};
 use crate::exec::{LaneEngine, StepCtl};
 use crate::matrix::DenseMatrix;
 use crate::solver::pivot::Permutation;
 use crate::solver::{DenseLuFactors, LuSolver};
 use crate::util::error::{EbvError, Result};
+
+/// Default panel width for the blocked elimination.
+pub const DEFAULT_PANEL_WIDTH: usize = 64;
 
 /// Parallel EBV LU factorization.
 #[derive(Debug, Clone)]
@@ -35,6 +54,9 @@ pub struct EbvLu {
     /// Below this size the parallel machinery costs more than it saves;
     /// fall through to the sequential kernel.
     seq_threshold: usize,
+    /// Panel width `nb` of the blocked elimination; `1` selects the
+    /// column-at-a-time path (bit-identical to `SeqLu`).
+    panel: usize,
     /// Engine override; `None` submits to the process-global engine.
     engine: Option<Arc<LaneEngine>>,
 }
@@ -47,6 +69,7 @@ impl EbvLu {
             dist: RowDist::EbvFold,
             pivot_tol: 1e-12,
             seq_threshold: 128,
+            panel: DEFAULT_PANEL_WIDTH,
             engine: None,
         }
     }
@@ -75,12 +98,26 @@ impl EbvLu {
         self
     }
 
+    /// Set the panel width `nb` of the blocked elimination. `1` keeps
+    /// the column-at-a-time path (bit-identical to `SeqLu`); wider
+    /// panels trade that exactness for rank-`nb` trailing updates.
+    /// Clamped to at least 1.
+    pub fn panel(mut self, nb: usize) -> Self {
+        self.panel = nb.max(1);
+        self
+    }
+
     pub fn lanes(&self) -> usize {
         self.lanes
     }
 
     pub fn dist(&self) -> RowDist {
         self.dist
+    }
+
+    /// Configured panel width `nb`.
+    pub fn panel_width(&self) -> usize {
+        self.panel
     }
 }
 
@@ -102,7 +139,11 @@ impl LuSolver for EbvLu {
         let mut lu = a.clone();
         let schedule = LaneSchedule::build(n, self.lanes, self.dist);
         let engine = crate::exec::engine_or_global(self.engine.as_ref());
-        parallel_eliminate(&mut lu, &schedule, self.pivot_tol, engine)?;
+        if self.panel <= 1 {
+            parallel_eliminate(&mut lu, &schedule, self.pivot_tol, engine)?;
+        } else {
+            parallel_eliminate_blocked(&mut lu, &schedule, self.panel, self.pivot_tol, engine)?;
+        }
         Ok(DenseLuFactors::new(lu, Permutation::identity(n)))
     }
 }
@@ -191,6 +232,136 @@ fn parallel_eliminate(
     Ok(())
 }
 
+/// One barrier-separated step of the blocked elimination.
+#[derive(Debug, Clone, Copy)]
+enum BlockStep {
+    /// Eliminate panel column `r`: rows inside the panel (`i <
+    /// panel_end`) carry their whole trailing row forward (building the
+    /// `U12` block incrementally), rows below the panel compute their
+    /// multiplier and update only columns `r+1..panel_end` — their wide
+    /// update is deferred to the panel's `Update` step.
+    Col { r: usize, panel_end: usize },
+    /// Rank-`(panel_end - panel_start)` trailing update: every owned
+    /// row at or below `panel_end` absorbs the whole panel in one
+    /// GEMM-style pass.
+    Update { panel_start: usize, panel_end: usize },
+}
+
+/// Flatten the panel decomposition into the engine's step sequence.
+fn blocked_steps(n: usize, nb: usize) -> Vec<BlockStep> {
+    let mut steps = Vec::new();
+    for (k, end) in panels(n, nb) {
+        for r in k..end.min(n.saturating_sub(1)) {
+            steps.push(BlockStep::Col { r, panel_end: end });
+        }
+        if end < n {
+            steps.push(BlockStep::Update { panel_start: k, panel_end: end });
+        }
+    }
+    steps
+}
+
+fn parallel_eliminate_blocked(
+    lu: &mut DenseMatrix,
+    schedule: &LaneSchedule,
+    nb: usize,
+    pivot_tol: f64,
+    engine: &LaneEngine,
+) -> Result<()> {
+    let n = lu.rows();
+    let steps = blocked_steps(n, nb);
+    let shared = SharedMatrix { ptr: lu.data_mut().as_mut_ptr(), cols: n };
+    let first_bad: Mutex<Option<(usize, f64)>> = Mutex::new(None);
+
+    engine.run_steps(schedule.lanes(), steps.len(), |lane, s| {
+        match steps[s] {
+            BlockStep::Col { r, panel_end } => {
+                // SAFETY: row r's final write (its owner at the previous
+                // Col step, or the preceding panel's Update step) is
+                // sequenced before the barrier into this step; no lane
+                // writes row r now (active rows are strictly below it).
+                let pivot_row = unsafe { shared.row(r) };
+                let piv = pivot_row[r];
+                if piv.abs() < pivot_tol {
+                    let mut bad = first_bad.lock().expect("pivot slot");
+                    if bad.is_none() {
+                        *bad = Some((r, piv));
+                    }
+                    return StepCtl::Break;
+                }
+                let inv = 1.0 / piv;
+                for &i in schedule.active_rows_of(lane, r) {
+                    // SAFETY: lane owns row i exclusively.
+                    let row_i = unsafe { shared.row_mut(i) };
+                    let f = row_i[r] * inv;
+                    row_i[r] = f;
+                    if f == 0.0 {
+                        continue;
+                    }
+                    let hi = if i < panel_end { n } else { panel_end };
+                    for (t, &p) in
+                        row_i[r + 1..hi].iter_mut().zip(pivot_row[r + 1..hi].iter())
+                    {
+                        *t -= f * p;
+                    }
+                }
+            }
+            BlockStep::Update { panel_start, panel_end } => {
+                let width = panel_end - panel_start;
+                for &i in schedule.rows_from(lane, panel_end) {
+                    // SAFETY: lane owns row i; the panel rows read below
+                    // satisfy panel_start + p < panel_end <= i, so they
+                    // alias no write, and their final updates happened
+                    // at Col steps sequenced before this barrier.
+                    let row_i = unsafe { shared.row_mut(i) };
+                    let (head, tail) = row_i.split_at_mut(panel_end);
+                    let l_i = &head[panel_start..];
+                    // Four panel columns per sweep quarters the write
+                    // traffic on the trailing row — same shape as
+                    // `BlockedLu`'s ikj kernel (EXPERIMENTS.md §Perf,
+                    // L3-D1).
+                    let mut p = 0usize;
+                    while p + 4 <= width {
+                        let (l0, l1, l2, l3) = (l_i[p], l_i[p + 1], l_i[p + 2], l_i[p + 3]);
+                        if l0 == 0.0 && l1 == 0.0 && l2 == 0.0 && l3 == 0.0 {
+                            p += 4;
+                            continue;
+                        }
+                        let u0 = unsafe { &shared.row(panel_start + p)[panel_end..] };
+                        let u1 = unsafe { &shared.row(panel_start + p + 1)[panel_end..] };
+                        let u2 = unsafe { &shared.row(panel_start + p + 2)[panel_end..] };
+                        let u3 = unsafe { &shared.row(panel_start + p + 3)[panel_end..] };
+                        for (j, t) in tail.iter_mut().enumerate() {
+                            *t -= l0 * u0[j] + l1 * u1[j] + l2 * u2[j] + l3 * u3[j];
+                        }
+                        p += 4;
+                    }
+                    while p < width {
+                        let lp = l_i[p];
+                        if lp != 0.0 {
+                            let up = unsafe { &shared.row(panel_start + p)[panel_end..] };
+                            for (t, &u) in tail.iter_mut().zip(up.iter()) {
+                                *t -= lp * u;
+                            }
+                        }
+                        p += 1;
+                    }
+                }
+            }
+        }
+        StepCtl::Continue
+    });
+
+    if let Some((step, value)) = first_bad.into_inner().expect("pivot slot") {
+        return Err(EbvError::SingularPivot { step, value, tol: pivot_tol });
+    }
+    let last = lu.get(n - 1, n - 1);
+    if last.abs() < pivot_tol {
+        return Err(EbvError::SingularPivot { step: n - 1, value: last, tol: pivot_tol });
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,9 +369,15 @@ mod tests {
     use crate::matrix::norms::rel_residual_dense;
     use crate::solver::SeqLu;
 
-    /// Force the parallel path regardless of size.
+    /// Force the parallel *column-at-a-time* path regardless of size
+    /// (`panel(1)` — the bit-identical shape).
     fn par(lanes: usize, dist: RowDist) -> EbvLu {
-        EbvLu::with_lanes(lanes).with_dist(dist).seq_threshold(0)
+        EbvLu::with_lanes(lanes).with_dist(dist).seq_threshold(0).panel(1)
+    }
+
+    /// Force the blocked-panel path regardless of size.
+    fn blocked(lanes: usize, nb: usize) -> EbvLu {
+        EbvLu::with_lanes(lanes).seq_threshold(0).panel(nb)
     }
 
     #[test]
@@ -247,6 +424,118 @@ mod tests {
         let b = rhs(n, GenSeed(23));
         let x = par(4, RowDist::EbvFold).solve(&a, &b).unwrap();
         assert!(rel_residual_dense(&a, &x, &b) < 1e-12);
+        // The default (blocked, nb=64) path solves just as tightly.
+        let x = EbvLu::with_lanes(4).seq_threshold(0).solve(&a, &b).unwrap();
+        assert!(rel_residual_dense(&a, &x, &b) < 1e-12);
+    }
+
+    #[test]
+    fn default_panel_width_is_64() {
+        assert_eq!(EbvLu::with_lanes(4).panel_width(), DEFAULT_PANEL_WIDTH);
+        assert_eq!(DEFAULT_PANEL_WIDTH, 64);
+        // The knob clamps to at least one.
+        assert_eq!(EbvLu::with_lanes(4).panel(0).panel_width(), 1);
+    }
+
+    #[test]
+    fn blocked_panels_match_sequential_within_tolerance() {
+        // Panel widths straddling the matrix size; the fused rank-nb
+        // update reorders rounding, so agreement is componentwise, not
+        // bitwise (see the module docs and DESIGN.md's ledger).
+        let n = 96;
+        let a = diag_dominant_dense(n, GenSeed(31));
+        let reference = SeqLu::new().factor(&a).unwrap();
+        for nb in [2usize, 5, 8, 64, 96, 200] {
+            for lanes in [2usize, 4] {
+                let f = blocked(lanes, nb).factor(&a).unwrap();
+                let diff = f.packed().max_abs_diff(reference.packed());
+                assert!(diff < 1e-9, "nb={nb} lanes={lanes} diff={diff:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_covering_the_matrix_is_bitwise_exact() {
+        // One panel spanning every column makes each Col step full-width
+        // for every row — the exact arithmetic of the column path.
+        let a = diag_dominant_dense(40, GenSeed(32));
+        let reference = SeqLu::new().factor(&a).unwrap();
+        let f = blocked(3, 40).factor(&a).unwrap();
+        assert_eq!(f.packed().max_abs_diff(reference.packed()), 0.0);
+    }
+
+    #[test]
+    fn blocked_bits_are_stable_across_lanes_dists_and_engines() {
+        // For a fixed nb each row's arithmetic depends only on the panel
+        // decomposition, so the blocked factors are bit-identical no
+        // matter how rows are dealt to lanes or how many resident lanes
+        // execute them.
+        let n = 80;
+        let nb = 8;
+        let a = diag_dominant_dense(n, GenSeed(33));
+        let reference = blocked(2, nb).factor(&a).unwrap();
+        for dist in RowDist::ALL {
+            for lanes in [2usize, 3, 5] {
+                for engine_lanes in [1usize, 2, 3] {
+                    let engine = Arc::new(LaneEngine::new(engine_lanes));
+                    let f = blocked(lanes, nb)
+                        .with_dist(dist)
+                        .with_engine(engine)
+                        .factor(&a)
+                        .unwrap();
+                    assert_eq!(
+                        f.packed().max_abs_diff(reference.packed()),
+                        0.0,
+                        "{dist:?} lanes={lanes} engine_lanes={engine_lanes}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_detects_singular_pivot_mid_panel() {
+        let mut a = diag_dominant_dense(64, GenSeed(34));
+        for j in 0..64 {
+            a.set(30, j, 0.0);
+        }
+        // Row 30 sits mid-panel for nb=8 and inside the first panel for
+        // nb=64; both shapes must stop on the bad column.
+        for nb in [8usize, 64] {
+            let err = blocked(4, nb).factor(&a);
+            assert!(
+                matches!(err, Err(EbvError::SingularPivot { .. })),
+                "nb={nb}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_steps_cover_each_column_once() {
+        for (n, nb) in [(8usize, 3usize), (20, 8), (5, 64), (16, 1)] {
+            let steps = blocked_steps(n, nb);
+            let mut cols = vec![0usize; n];
+            let mut updates = 0usize;
+            for s in &steps {
+                match *s {
+                    BlockStep::Col { r, panel_end } => {
+                        cols[r] += 1;
+                        assert!(r < panel_end && panel_end - r <= nb, "n={n} nb={nb}");
+                    }
+                    BlockStep::Update { panel_start, panel_end } => {
+                        updates += 1;
+                        assert!(panel_end > panel_start && panel_end < n);
+                        assert!(panel_end - panel_start <= nb);
+                    }
+                }
+            }
+            // Every column but the last eliminated exactly once; one
+            // trailing update per panel that leaves columns behind it.
+            assert_eq!(&cols[..n - 1], &vec![1usize; n - 1][..], "n={n} nb={nb}");
+            assert_eq!(cols[n - 1], 0, "n={n} nb={nb}");
+            // One trailing update per panel except the last.
+            assert_eq!(updates, n.div_ceil(nb) - 1, "n={n} nb={nb}: updates");
+        }
     }
 
     #[test]

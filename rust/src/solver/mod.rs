@@ -24,7 +24,7 @@ use crate::util::error::Result;
 pub use cholesky::{cholesky_factor, cholesky_solve, CholeskyFactors};
 pub use gauss_jordan::GaussJordan;
 pub use lu_blocked::BlockedLu;
-pub use lu_ebv::EbvLu;
+pub use lu_ebv::{EbvLu, DEFAULT_PANEL_WIDTH};
 pub use lu_seq::SeqLu;
 pub use pivot::Permutation;
 pub use refine::Refined;
@@ -164,12 +164,13 @@ pub trait LuSolver: Send + Sync {
     }
 }
 
-/// Look a solver up by its config name.
-pub fn solver_by_name(name: &str, lanes: usize) -> Option<Box<dyn LuSolver>> {
+/// Look a solver up by its config name. `panel` is the blocked-panel
+/// width the EBV solver runs with (other solvers ignore it).
+pub fn solver_by_name(name: &str, lanes: usize, panel: usize) -> Option<Box<dyn LuSolver>> {
     match name {
         "seq" => Some(Box::new(SeqLu::new())),
         "seq-pivot" => Some(Box::new(SeqLu::with_pivoting())),
-        "ebv" => Some(Box::new(EbvLu::with_lanes(lanes))),
+        "ebv" => Some(Box::new(EbvLu::with_lanes(lanes).panel(panel))),
         "blocked" => Some(Box::new(BlockedLu::new())),
         "gauss-jordan" => Some(Box::new(GaussJordan::new())),
         _ => None,
@@ -248,8 +249,8 @@ mod tests {
     #[test]
     fn solver_registry_resolves_names() {
         for name in ["seq", "seq-pivot", "ebv", "blocked", "gauss-jordan"] {
-            assert!(solver_by_name(name, 2).is_some(), "{name}");
+            assert!(solver_by_name(name, 2, DEFAULT_PANEL_WIDTH).is_some(), "{name}");
         }
-        assert!(solver_by_name("nope", 2).is_none());
+        assert!(solver_by_name("nope", 2, DEFAULT_PANEL_WIDTH).is_none());
     }
 }

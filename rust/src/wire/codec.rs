@@ -474,8 +474,12 @@ pub fn encode_response(frame: &ResponseFrame) -> String {
             let _ = write!(
                 out,
                 ",\"engine_lanes\":{},\"engine_jobs\":{},\"engine_steps\":{},\
-                 \"engine_barrier_waits\":{}",
-                m.engine_lanes, m.engine_jobs, m.engine_steps, m.engine_barrier_waits
+                 \"engine_barrier_waits\":{},\"panel_width\":{}",
+                m.engine_lanes,
+                m.engine_jobs,
+                m.engine_steps,
+                m.engine_barrier_waits,
+                m.panel_width
             );
             out.push_str(",\"mean_batch\":");
             push_num(&mut out, m.mean_batch);
@@ -604,6 +608,7 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                 "engine_barrier_waits" => {
                     acc.metrics.engine_barrier_waits = as_index(expect_num(&mut sc, &k)?, &k)?
                 }
+                "panel_width" => acc.metrics.panel_width = as_index(expect_num(&mut sc, &k)?, &k)?,
                 "mean_batch" => acc.metrics.mean_batch = expect_num(&mut sc, &k)?,
                 "lat_mean_s" => acc.metrics.lat_mean_s = expect_num(&mut sc, &k)?,
                 "lat_p50_s" => acc.metrics.lat_p50_s = expect_num(&mut sc, &k)?,
@@ -850,6 +855,7 @@ mod tests {
             engine_jobs: 5,
             engine_steps: 620,
             engine_barrier_waits: 2480,
+            panel_width: 64,
         });
         assert_eq!(decode_response(&encode_response(&m)).unwrap(), m);
 

@@ -216,9 +216,10 @@ mod tests {
         let ResponseFrame::Metrics(m) = &frames[1] else { panic!("{frames:?}") };
         // The test service runs a 2-lane engine; an 8×8 solve stays on
         // the sequential fall-through, so jobs may be zero — but the
-        // resident pool is always reported.
+        // resident pool and solver config are always reported.
         assert_eq!(m.engine_lanes, 2);
         assert_eq!(m.engine_barrier_waits, m.engine_steps * m.engine_lanes);
+        assert_eq!(m.panel_width, 64, "default panel width travels in the frame");
     }
 
     #[test]

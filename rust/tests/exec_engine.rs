@@ -25,9 +25,15 @@ use ebv_solve::solver::trisolve::{
 use ebv_solve::solver::{EbvLu, LuSolver, SeqLu};
 use ebv_solve::testutil::forall;
 
-/// EbvLu forced onto the parallel path, submitting to `engine`.
+/// EbvLu forced onto the parallel column-at-a-time path (`panel(1)` —
+/// the bitwise-vs-SeqLu shape; blocked panels are pinned in
+/// `prop_panel.rs`), submitting to `engine`.
 fn pooled(lanes: usize, dist: RowDist, engine: &Arc<LaneEngine>) -> EbvLu {
-    EbvLu::with_lanes(lanes).with_dist(dist).seq_threshold(0).with_engine(Arc::clone(engine))
+    EbvLu::with_lanes(lanes)
+        .with_dist(dist)
+        .seq_threshold(0)
+        .panel(1)
+        .with_engine(Arc::clone(engine))
 }
 
 #[test]

@@ -45,13 +45,20 @@ fn prop_solve_residual_small_for_every_solver() {
 
 #[test]
 fn prop_ebv_parallel_equals_sequential_bitwise() {
+    // panel(1) selects the column-at-a-time path — the bitwise shape.
+    // (The blocked default is pinned componentwise in prop_panel.rs.)
     forall("parallel EBV == sequential (bitwise)", 25, |g| {
         let n = g.usize_in(2, 100);
         let lanes = g.usize_in(2, 6);
         let dist = *g.choose(&RowDist::ALL);
         let a = diag_dominant_dense(n, GenSeed(g.seed()));
         let seq = SeqLu::new().factor(&a).unwrap();
-        let par = EbvLu::with_lanes(lanes).with_dist(dist).seq_threshold(0).factor(&a).unwrap();
+        let par = EbvLu::with_lanes(lanes)
+            .with_dist(dist)
+            .seq_threshold(0)
+            .panel(1)
+            .factor(&a)
+            .unwrap();
         assert_eq!(par.packed().max_abs_diff(seq.packed()), 0.0, "n={n} lanes={lanes}");
     });
 }

@@ -1,0 +1,128 @@
+//! Property suite pinning the blocked-panel EBV factorization
+//! (testutil framework — the offline stand-in for proptest).
+//!
+//! The contract (see `rust/DESIGN.md` §Blocked panels and the
+//! bit-identity ledger):
+//!
+//! * `panel(1)` is the column-at-a-time path — **bitwise** equal to
+//!   `SeqLu` for every lane count, distribution and engine size;
+//! * wider panels agree with `SeqLu` **componentwise** (the fused
+//!   rank-`nb` update reorders rounding);
+//! * for a fixed `nb`, the blocked factors are bitwise stable across
+//!   lane counts, distributions and engine sizes — each row's
+//!   arithmetic depends only on the panel decomposition;
+//! * a panel covering the whole matrix degenerates to the exact
+//!   column-path arithmetic.
+
+use std::sync::Arc;
+
+use ebv_solve::ebv::schedule::RowDist;
+use ebv_solve::exec::LaneEngine;
+use ebv_solve::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
+use ebv_solve::matrix::norms::rel_residual_dense;
+use ebv_solve::solver::{EbvLu, LuSolver, SeqLu};
+use ebv_solve::testutil::forall;
+
+/// EbvLu forced onto the parallel path with an explicit panel width.
+fn panelled(lanes: usize, nb: usize) -> EbvLu {
+    EbvLu::with_lanes(lanes).seq_threshold(0).panel(nb)
+}
+
+#[test]
+fn prop_blocked_factors_match_seqlu_componentwise() {
+    forall("blocked EbvLu ≈ SeqLu (componentwise) for nb ∈ {1,2,8,64,n}", 40, |g| {
+        let n = g.usize_in(2, 120);
+        let lanes = g.usize_in(2, 6);
+        let widths = [1usize, 2, 8, 64, n];
+        let nb = *g.choose(&widths);
+        let dist = *g.choose(&RowDist::ALL);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let seq = SeqLu::new().factor(&a).unwrap();
+        let f = panelled(lanes, nb).with_dist(dist).factor(&a).unwrap();
+        let diff = f.packed().max_abs_diff(seq.packed());
+        assert!(diff < 1e-9, "n={n} nb={nb} lanes={lanes} {dist:?} diff={diff:e}");
+    });
+}
+
+#[test]
+fn prop_panel_one_is_bitwise_seqlu_across_lanes() {
+    forall("panel(1) ≡ SeqLu bitwise across lane counts", 30, |g| {
+        let n = g.usize_in(2, 100);
+        let lanes = g.usize_in(2, 8);
+        let dist = *g.choose(&RowDist::ALL);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let seq = SeqLu::new().factor(&a).unwrap();
+        let f = panelled(lanes, 1).with_dist(dist).factor(&a).unwrap();
+        assert_eq!(
+            f.packed().max_abs_diff(seq.packed()),
+            0.0,
+            "n={n} lanes={lanes} {dist:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_blocked_bits_invariant_under_lanes_dists_engines() {
+    let engines: Vec<Arc<LaneEngine>> =
+        [1usize, 2, 4].iter().map(|&l| Arc::new(LaneEngine::new(l))).collect();
+    forall("blocked factors are partition- and pool-invariant", 25, |g| {
+        let n = g.usize_in(2, 100);
+        let nb = *g.choose(&[2usize, 8, 64]);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        // Reference decomposition: 2 fold lanes on the first engine.
+        let reference = panelled(2, nb)
+            .with_engine(Arc::clone(&engines[0]))
+            .factor(&a)
+            .unwrap();
+        let lanes = g.usize_in(2, 9);
+        let dist = *g.choose(&RowDist::ALL);
+        let engine = &engines[g.usize_in(0, 2)];
+        let f = panelled(lanes, nb)
+            .with_dist(dist)
+            .with_engine(Arc::clone(engine))
+            .factor(&a)
+            .unwrap();
+        assert_eq!(
+            f.packed().max_abs_diff(reference.packed()),
+            0.0,
+            "n={n} nb={nb} lanes={lanes} {dist:?} engine={}",
+            engine.lanes()
+        );
+    });
+}
+
+#[test]
+fn prop_blocked_solves_keep_tight_residuals() {
+    forall("blocked factor + solve residual < 1e-10", 25, |g| {
+        let n = g.usize_in(2, 150);
+        let nb = *g.choose(&[2usize, 8, 64, n]);
+        let lanes = g.usize_in(2, 5);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let b = rhs(n, GenSeed(g.seed() ^ 0x5EED));
+        let x = panelled(lanes, nb).solve(&a, &b).unwrap();
+        let r = rel_residual_dense(&a, &x, &b);
+        assert!(r < 1e-10, "n={n} nb={nb} lanes={lanes} r={r:e}");
+    });
+}
+
+/// The acceptance grid, pinned deterministically: every checklist width
+/// at every lane count on one matrix.
+#[test]
+fn panel_width_checklist_grid() {
+    let n = 96;
+    let a = diag_dominant_dense(n, GenSeed(77));
+    let seq = SeqLu::new().factor(&a).unwrap();
+    for lanes in [2usize, 4, 8] {
+        for nb in [1usize, 2, 8, 64, n] {
+            let f = panelled(lanes, nb).factor(&a).unwrap();
+            let diff = f.packed().max_abs_diff(seq.packed());
+            if nb == 1 || nb >= n {
+                // Column path, and the single-panel degenerate case,
+                // are exact.
+                assert_eq!(diff, 0.0, "lanes={lanes} nb={nb}");
+            } else {
+                assert!(diff < 1e-9, "lanes={lanes} nb={nb} diff={diff:e}");
+            }
+        }
+    }
+}

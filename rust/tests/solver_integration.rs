@@ -82,7 +82,9 @@ fn parallel_ebv_scales_and_stays_exact() {
     let b = rhs(n, GenSeed(14));
     let seq = SeqLu::new().factor(&a).unwrap();
     for lanes in [2usize, 4, 8] {
-        let f = EbvLu::with_lanes(lanes).seq_threshold(0).factor(&a).unwrap();
+        // panel(1): the column-at-a-time path carries the bitwise
+        // guarantee; the blocked default stays componentwise-close.
+        let f = EbvLu::with_lanes(lanes).seq_threshold(0).panel(1).factor(&a).unwrap();
         assert_eq!(
             f.packed().max_abs_diff(seq.packed()),
             0.0,
@@ -90,6 +92,9 @@ fn parallel_ebv_scales_and_stays_exact() {
         );
         let x = f.solve(&b).unwrap();
         assert!(rel_residual_dense(&a, &x, &b) < 1e-12);
+
+        let fb = EbvLu::with_lanes(lanes).seq_threshold(0).factor(&a).unwrap();
+        assert!(fb.packed().max_abs_diff(seq.packed()) < 1e-9, "lanes={lanes}: blocked drifted");
     }
 }
 
