@@ -1,0 +1,188 @@
+//! Sparse refactorization ablation: monolithic Gilbert–Peierls
+//! factorization vs the symbolic/numeric split on the persistent lane
+//! engine.
+//!
+//! The serving workload (wire-protocol sessions resending matrices with
+//! a fixed sparsity pattern and changing values) pays the monolithic
+//! `SparseLu::factor` cost on every request. With the split, symbolic
+//! analysis runs once per *pattern* and each request pays only the
+//! level-parallel numeric sweep (`SparseSymbolic::factor_par_on`), so
+//! this bench times four cases per matrix:
+//!
+//! * `full factor` — `SparseLu::factor`, symbolic + numeric every call;
+//! * `symbolic` — `SparseSymbolic::analyze` alone (the one-time cost);
+//! * `numeric lanes=1` — sequential refactorization over the pattern;
+//! * `numeric lanes=4` — the level-parallel engine job.
+//!
+//! Correctness rides along with every timing: all refactorization
+//! outputs must be **bitwise identical** to the monolithic factors,
+//! including a same-pattern/different-values refactor (the cache-reuse
+//! case). The barrier story travels too: `FactorPlan::sparse_levels`
+//! counts one synchronization per DAG level against the row-per-barrier
+//! baseline. Writes the standard bench report and a repo-level
+//! `BENCH_sparse.json` summary (skipped in `EBV_BENCH_SMOKE=1` mode —
+//! see `bench::write_repo_summary`).
+//!
+//! ```sh
+//! cargo bench --bench ablation_sparse_refactor
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ebv_solve::bench::{self, Bencher, Report};
+use ebv_solve::ebv::plan::FactorPlan;
+use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
+use ebv_solve::exec::LaneEngine;
+use ebv_solve::matrix::generate::poisson_2d;
+use ebv_solve::solver::{SparseLu, SparseSymbolic};
+use ebv_solve::testutil::rescale_csr;
+use ebv_solve::util::json::Json;
+
+fn main() {
+    let lanes = 4;
+    let engine = Arc::new(LaneEngine::new(lanes));
+    let smoke = bench::smoke();
+    // Poisson grids: n = g*g with the shallow elimination DAG the
+    // level-parallel sweep exists for.
+    let grids = bench::sizes(&[24, 32, 40], &[8]);
+    let bencher = Bencher {
+        min_iters: 5,
+        max_iters: 30,
+        target_time: Duration::from_millis(900),
+        warmup_iters: 1,
+    }
+    .or_smoke();
+
+    let mut report = Report::new("Sparse refactor ablation — monolithic vs symbolic/numeric split");
+    report.set_headers(&[
+        "case",
+        "n",
+        "nnz(L+U)",
+        "DAG levels",
+        "median, s",
+        "vs full factor",
+    ]);
+    // (case, n, grid, median seconds, full-factor median)
+    let mut results: Vec<(String, usize, usize, f64, f64)> = Vec::new();
+
+    for &g in &grids {
+        let a = poisson_2d(g);
+        let n = a.rows();
+        let reference = SparseLu::new().factor(&a).expect("factor");
+        let sym = SparseSymbolic::analyze(&a).expect("symbolic");
+        let factor_nnz = reference.l().nnz() + reference.u().nnz();
+
+        let full = bencher.run(&format!("full factor n={n}"), || {
+            SparseLu::new().factor(&a).expect("factor")
+        });
+        let symbolic = bencher.run(&format!("symbolic n={n}"), || {
+            SparseSymbolic::analyze(&a).expect("symbolic")
+        });
+        let numeric_seq = bencher.run(&format!("numeric lanes=1 n={n}"), || {
+            sym.factor(&a).expect("numeric")
+        });
+        let numeric_par = bencher.run(&format!("numeric lanes={lanes} n={n}"), || {
+            sym.factor_par_on(&a, lanes, &engine).expect("numeric")
+        });
+
+        // Bitwise contract rides along with every timing run.
+        let f_seq = sym.factor(&a).expect("numeric");
+        let f_par = sym.factor_par_on(&a, lanes, &engine).expect("numeric");
+        assert_eq!(f_seq.l(), reference.l(), "n={n}: sequential numeric drifted");
+        assert_eq!(f_seq.u(), reference.u(), "n={n}: sequential numeric drifted");
+        assert_eq!(f_par.l(), reference.l(), "n={n}: parallel numeric drifted");
+        assert_eq!(f_par.u(), reference.u(), "n={n}: parallel numeric drifted");
+        // Same pattern, new values: the cached-symbolic reuse case.
+        let a2 = rescale_csr(&a, 1.75);
+        let ref2 = SparseLu::new().factor(&a2).expect("factor");
+        let f2 = sym.factor_par_on(&a2, lanes, &engine).expect("refactor");
+        assert_eq!(f2.l(), ref2.l(), "n={n}: refactor with new values drifted");
+        assert_eq!(f2.u(), ref2.u(), "n={n}: refactor with new values drifted");
+
+        // Barrier accounting from the symbolic DAG.
+        let sched = LaneSchedule::build(n, lanes, RowDist::EbvFold);
+        let lvl_plan =
+            FactorPlan::sparse_levels(reference.l(), reference.u(), sym.levels(), &sched);
+        assert_eq!(lvl_plan.barriers, sym.level_count());
+
+        for (case, stats) in [
+            ("full factor", &full),
+            ("symbolic", &symbolic),
+            ("numeric lanes=1", &numeric_seq),
+            ("numeric lanes=4", &numeric_par),
+        ] {
+            report.push_row(vec![
+                format!("{case} n={n}"),
+                n.to_string(),
+                factor_nnz.to_string(),
+                sym.level_count().to_string(),
+                format!("{:.6}", stats.median),
+                format!("{:.2}x", full.median / stats.median),
+            ]);
+            results.push((case.to_string(), n, g, stats.median, full.median));
+        }
+        for stats in [full, symbolic, numeric_seq, numeric_par] {
+            report.push_stats(stats);
+        }
+    }
+
+    println!("{}", report.render());
+    if let Ok(p) = report.write_json() {
+        println!("report: {}", p.display());
+    }
+    println!("engine stats: {:?}", engine.stats());
+
+    // Repo-level summary the docs reference (BENCH_sparse.json).
+    let doc = Json::obj([
+        ("bench", Json::from("ablation_sparse_refactor")),
+        ("status", Json::from("measured")),
+        ("lanes", Json::from(lanes)),
+        ("grids", Json::arr(grids.iter().map(|&g| Json::from(g)))),
+        (
+            "cases",
+            Json::arr(results.iter().map(|(case, n, g, median, full_median)| {
+                Json::obj([
+                    ("name", Json::from(format!("{case} n={n}"))),
+                    ("n", Json::from(*n)),
+                    ("grid", Json::from(*g)),
+                    ("median_s", Json::from(*median)),
+                    ("speedup_vs_full_factor", Json::from(full_median / median)),
+                ])
+            })),
+        ),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sparse.json");
+    if bench::write_repo_summary(&out, &doc).unwrap_or(false) {
+        println!("wrote {}", out.display());
+    }
+
+    // Direction check (skipped in smoke mode — tiny shapes are noise):
+    // at the largest size, the numeric refactorization a repeat
+    // same-pattern request pays must beat re-running the full
+    // factorization; the split exists to win exactly here.
+    if !smoke {
+        let n_max = grids.iter().map(|&g| g * g).max().expect("grids nonempty");
+        let find = |case: &str| {
+            results
+                .iter()
+                .find(|(c, n, _, _, _)| c.as_str() == case && *n == n_max)
+                .unwrap_or_else(|| panic!("case {case} at n={n_max}"))
+                .3
+        };
+        let t_full = find("full factor");
+        let t_par = find("numeric lanes=4");
+        let t_seq = find("numeric lanes=1");
+        assert!(
+            t_par <= t_full * 1.05,
+            "n={n_max}: parallel numeric refactor ({t_par:.6}s) lost to the monolithic \
+             factorization ({t_full:.6}s)"
+        );
+        println!(
+            "claim check: numeric refactor ≤ 1.05 × full factor at n={n_max} \
+             ({:.2}x vs full, {:.2}x vs sequential numeric) ✓",
+            t_full / t_par,
+            t_seq / t_par
+        );
+    }
+}

@@ -98,6 +98,10 @@ COMMANDS:
               --panel-width <nb>            (blocked EBV panel width;
                                              default 64, 1 = exact
                                              column-at-a-time path)
+              --sparse-parallel <bool>      (sparse kinds: symbolic/numeric
+                                             split with level-parallel
+                                             refactorization; default true,
+                                             false = monolithic factor)
               --seed <u64>                  (default 7)
     serve     Serve solves over the NDJSON wire protocol on stdin/stdout
               (see README.md §Wire protocol for the frame format)
@@ -108,6 +112,9 @@ COMMANDS:
                                              §Execution engine)
               --panel-width <nb>            (blocked factorization panel
                                              width; default 64)
+              --sparse-parallel <bool>      (sparse symbolic/numeric split
+                                             with pattern-keyed symbolic
+                                             caching; default true)
               --allow-mtx-path              (let frames reference local
                                              .mtx files; trusted peers only)
               --runtime                     (use PJRT artifacts)

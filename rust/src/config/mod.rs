@@ -120,6 +120,13 @@ pub struct ServiceConfig {
     /// Panel width `nb` of the blocked dense factorization the workers
     /// run (`1` = column-at-a-time, bit-identical to `SeqLu`).
     pub panel_width: usize,
+    /// Sparse symbolic/numeric split: factor sparse systems as a cached
+    /// pattern analysis plus a level-parallel numeric sweep on the
+    /// shared engine (`true`, the default), or the monolithic
+    /// sequential Gilbert–Peierls loop (`false`). Either way the
+    /// factors are bitwise identical; the split is what lets repeat
+    /// same-pattern traffic skip symbolic analysis.
+    pub sparse_parallel: bool,
     /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
     /// Prefer the PJRT runtime for sizes with compiled artifacts.
@@ -138,6 +145,7 @@ impl Default for ServiceConfig {
             queue_capacity: 1024,
             engine_lanes: 0,
             panel_width: crate::solver::lu_ebv::DEFAULT_PANEL_WIDTH,
+            sparse_parallel: true,
             artifacts_dir: "artifacts".to_string(),
             use_runtime: false,
             refine: true,
@@ -163,6 +171,7 @@ impl ServiceConfig {
             queue_capacity: raw.get_parsed("service", "queue_capacity", d.queue_capacity)?,
             engine_lanes: raw.get_parsed("service", "engine_lanes", d.engine_lanes)?,
             panel_width: raw.get_parsed("service", "panel_width", d.panel_width)?,
+            sparse_parallel: raw.get_parsed("service", "sparse_parallel", d.sparse_parallel)?,
             artifacts_dir: raw
                 .get("service", "artifacts_dir")
                 .unwrap_or_else(|| d.artifacts_dir.clone()),
@@ -236,6 +245,15 @@ mod tests {
         let raw = RawConfig::parse("[service]\npanel_width = 0\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err());
         let raw = RawConfig::parse("[service]\npanel_width = wide\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn sparse_parallel_knob_parses() {
+        assert!(ServiceConfig::default().sparse_parallel, "split is the default");
+        let raw = RawConfig::parse("[service]\nsparse_parallel = false\n").unwrap();
+        assert!(!ServiceConfig::from_raw(&raw).unwrap().sparse_parallel);
+        let raw = RawConfig::parse("[service]\nsparse_parallel = maybe\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err());
     }
 

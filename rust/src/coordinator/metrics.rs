@@ -82,6 +82,13 @@ pub struct MetricsSnapshot {
     pub batched_requests: u64,
     pub factor_hits: u64,
     pub factor_misses: u64,
+    /// Sparse solves that skipped symbolic analysis because the request
+    /// pattern matched a cached `SparseSymbolic` (full-factor cache
+    /// missed, structure cache hit).
+    pub symbolic_reuse: u64,
+    /// Sparse factorizations executed as level-parallel numeric sweeps
+    /// over a symbolic analysis (fresh or reused).
+    pub numeric_refactor: u64,
     pub mean_batch: f64,
     pub lat_mean_s: f64,
     pub lat_p50_s: f64,
@@ -114,6 +121,9 @@ pub struct ServiceMetrics {
     /// Factor-cache hits/misses in the workers.
     pub factor_hits: AtomicU64,
     pub factor_misses: AtomicU64,
+    /// Sparse symbolic/numeric split counters (see [`MetricsSnapshot`]).
+    pub symbolic_reuse: AtomicU64,
+    pub numeric_refactor: AtomicU64,
     pub latency: LatencyHistogram,
     /// Per-backend completion counts.
     backend_counts: Mutex<Vec<(&'static str, u64)>>,
@@ -153,6 +163,8 @@ impl ServiceMetrics {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             factor_hits: self.factor_hits.load(Ordering::Relaxed),
             factor_misses: self.factor_misses.load(Ordering::Relaxed),
+            symbolic_reuse: self.symbolic_reuse.load(Ordering::Relaxed),
+            numeric_refactor: self.numeric_refactor.load(Ordering::Relaxed),
             mean_batch: self.mean_batch_size(),
             lat_mean_s: self.latency.mean(),
             lat_p50_s: self.latency.quantile(0.5),
@@ -182,7 +194,8 @@ impl ServiceMetrics {
     pub fn summary(&self) -> String {
         format!(
             "submitted={} rejected={} completed={} failed={} batches={} mean_batch={:.2} \
-             factor_hit_rate={:.0}% lat_mean={:.3}ms lat_p50={:.3}ms lat_p99={:.3}ms",
+             factor_hit_rate={:.0}% symbolic_reuse={} lat_mean={:.3}ms lat_p50={:.3}ms \
+             lat_p99={:.3}ms",
             self.submitted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -194,6 +207,7 @@ impl ServiceMetrics {
                 let m = self.factor_misses.load(Ordering::Relaxed);
                 if h + m == 0 { 0.0 } else { 100.0 * h as f64 / (h + m) as f64 }
             },
+            self.symbolic_reuse.load(Ordering::Relaxed),
             self.latency.mean() * 1e3,
             self.latency.quantile(0.5) * 1e3,
             self.latency.quantile(0.99) * 1e3,
@@ -245,11 +259,15 @@ mod tests {
         m.submitted.store(7, Ordering::Relaxed);
         m.factor_hits.store(3, Ordering::Relaxed);
         m.factor_misses.store(1, Ordering::Relaxed);
+        m.symbolic_reuse.store(2, Ordering::Relaxed);
+        m.numeric_refactor.store(4, Ordering::Relaxed);
         m.latency.observe(1e-3);
         let s = m.snapshot();
         assert_eq!(s.submitted, 7);
         assert_eq!(s.factor_hits, 3);
         assert_eq!(s.factor_misses, 1);
+        assert_eq!(s.symbolic_reuse, 2);
+        assert_eq!(s.numeric_refactor, 4);
         assert!(s.lat_mean_s > 0.0);
         // Snapshots are detached: mutating the live metrics afterwards
         // does not change the copy.

@@ -55,6 +55,14 @@ pub struct SolveRequest {
     /// (see `wire::fingerprint`), so remote repeat traffic coalesces
     /// without clients choosing keys.
     pub matrix_key: Option<u64>,
+    /// Identifies the *sparsity pattern* of a sparse coefficient matrix
+    /// independently of its values (`wire::fingerprint_csr_pattern`).
+    /// When the value-keyed factor cache misses, a matching cached
+    /// symbolic analysis under this key skips straight to the
+    /// level-parallel numeric refactorization. `None` (the default for
+    /// in-process constructors) disables symbolic reuse only — the
+    /// request still solves and still caches its full factors.
+    pub pattern_key: Option<u64>,
     pub submitted_at: Instant,
 }
 
@@ -64,6 +72,7 @@ impl SolveRequest {
             id,
             payload: Payload::Dense { a, b },
             matrix_key,
+            pattern_key: None,
             submitted_at: Instant::now(),
         }
     }
@@ -73,8 +82,16 @@ impl SolveRequest {
             id,
             payload: Payload::Sparse { a, b },
             matrix_key,
+            pattern_key: None,
             submitted_at: Instant::now(),
         }
+    }
+
+    /// Attach a sparsity-pattern key (sparse requests; the wire layer
+    /// populates it from the structure fingerprint).
+    pub fn with_pattern_key(mut self, pattern_key: Option<u64>) -> Self {
+        self.pattern_key = pattern_key;
+        self
     }
 }
 

@@ -69,6 +69,7 @@ impl SolverService {
             solve_lanes: cfg.lanes,
             dist: cfg.dist,
             panel_width: cfg.panel_width.max(1),
+            sparse_parallel: cfg.sparse_parallel,
             engine,
             cache: Mutex::new(FactorCache::with_capacity(64)),
             replies,
@@ -241,6 +242,22 @@ impl ServiceHandle {
         self.submit(SolveRequest::sparse(0, a, b, matrix_key))
     }
 
+    /// Submit a sparse system with a sparsity-pattern key alongside the
+    /// value key: when the factor cache misses but a symbolic analysis
+    /// is cached under `pattern_key`, the worker skips symbolic
+    /// analysis and runs only the level-parallel numeric
+    /// refactorization. The wire layer routes every sparse frame here
+    /// with its structure fingerprint.
+    pub fn submit_sparse_with_pattern(
+        &self,
+        a: Arc<CsrMatrix>,
+        b: Vec<f64>,
+        matrix_key: Option<u64>,
+        pattern_key: Option<u64>,
+    ) -> Result<mpsc::Receiver<SolveResponse>> {
+        self.submit(SolveRequest::sparse(0, a, b, matrix_key).with_pattern_key(pattern_key))
+    }
+
     /// Convenience: submit and wait.
     pub fn solve_dense_blocking(
         &self,
@@ -395,6 +412,28 @@ mod tests {
             svc.metrics().rejected.load(Ordering::Relaxed),
             rejected as u64
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sparse_pattern_key_drives_symbolic_reuse() {
+        let svc = SolverService::start(test_cfg()).unwrap();
+        let a = Arc::new(diag_dominant_sparse(48, 4, GenSeed(89)));
+        let a2 = Arc::new(crate::testutil::rescale_csr(&a, 0.5));
+        // Same pattern, different values -> different value keys, one
+        // pattern key: the second solve reuses the symbolic analysis.
+        for (m, key) in [(a, 21u64), (a2, 22u64)] {
+            let rx = svc
+                .submit_sparse_with_pattern(m, vec![1.0; 48], Some(key), Some(900))
+                .unwrap();
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.is_ok());
+            assert!(resp.residual < 1e-9);
+        }
+        let snap = svc.metrics_snapshot();
+        assert_eq!(snap.factor_misses, 2, "{snap:?}");
+        assert_eq!(snap.symbolic_reuse, 1, "{snap:?}");
+        assert_eq!(snap.numeric_refactor, 2, "{snap:?}");
         svc.shutdown();
     }
 

@@ -15,16 +15,19 @@ use crate::coordinator::router::{Backend, Router};
 use crate::exec::LaneEngine;
 use crate::runtime::{ArtifactKind, RuntimeClient};
 use crate::solver::refine::refine_external_solution;
-use crate::solver::{DenseLuFactors, EbvLu, LuSolver, SparseLu, SparseLuFactors};
+use crate::solver::{DenseLuFactors, EbvLu, LuSolver, SparseLu, SparseLuFactors, SparseSymbolic};
 use crate::util::error::Result;
 
-/// Kind-tagged cache key: dense and sparse factors live in one cache
-/// with one capacity, but a dense and a sparse entry sharing the same
-/// 53-bit wire key are distinct — evicting one must not drop the other.
+/// Kind-tagged cache key: dense factors, sparse factors and sparse
+/// *symbolic analyses* live in one cache with one capacity, but entries
+/// of different kinds sharing the same 53-bit wire key are distinct —
+/// evicting one must not drop the others. Symbolic entries are keyed by
+/// the structure-only pattern fingerprint, not the value fingerprint.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum CacheKey {
     Dense(u64),
     Sparse(u64),
+    Symbolic(u64),
 }
 
 /// Cached factorizations: a true bounded LRU. Hits refresh recency;
@@ -39,6 +42,9 @@ enum CacheKey {
 pub struct FactorCache {
     dense: HashMap<u64, Arc<DenseLuFactors>>,
     sparse: HashMap<u64, Arc<SparseLuFactors>>,
+    /// Pattern-keyed symbolic analyses: reused across every
+    /// same-structure refactorization regardless of values.
+    symbolic: HashMap<u64, Arc<SparseSymbolic>>,
     /// Recency order, least-recently-used first; one entry per live key.
     order: VecDeque<CacheKey>,
     cap: usize,
@@ -58,7 +64,7 @@ impl FactorCache {
     }
 
     fn evict_if_needed(&mut self) {
-        while self.dense.len() + self.sparse.len() > self.cap {
+        while self.dense.len() + self.sparse.len() + self.symbolic.len() > self.cap {
             let Some(victim) = self.order.pop_front() else { break };
             match victim {
                 CacheKey::Dense(k) => {
@@ -66,6 +72,9 @@ impl FactorCache {
                 }
                 CacheKey::Sparse(k) => {
                     self.sparse.remove(&k);
+                }
+                CacheKey::Symbolic(k) => {
+                    self.symbolic.remove(&k);
                 }
             }
         }
@@ -95,8 +104,20 @@ impl FactorCache {
         self.evict_if_needed();
     }
 
+    pub fn get_symbolic(&mut self, pattern_key: u64) -> Option<Arc<SparseSymbolic>> {
+        let s = self.symbolic.get(&pattern_key).cloned()?;
+        self.touch(CacheKey::Symbolic(pattern_key));
+        Some(s)
+    }
+
+    pub fn put_symbolic(&mut self, pattern_key: u64, s: Arc<SparseSymbolic>) {
+        self.symbolic.insert(pattern_key, s);
+        self.touch(CacheKey::Symbolic(pattern_key));
+        self.evict_if_needed();
+    }
+
     pub fn len(&self) -> usize {
-        self.dense.len() + self.sparse.len()
+        self.dense.len() + self.sparse.len() + self.symbolic.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -114,6 +135,11 @@ pub struct WorkerCtx {
     /// Panel width `nb` of the blocked dense factorization
     /// (`service.panel_width`; 1 = the column-at-a-time path).
     pub panel_width: usize,
+    /// Sparse symbolic/numeric split (`service.sparse_parallel`): factor
+    /// sparse systems as a cached symbolic analysis plus a level-parallel
+    /// numeric sweep on the engine, instead of the monolithic sequential
+    /// Gilbert–Peierls loop. Bitwise identical either way.
+    pub sparse_parallel: bool,
     /// The one resident lane engine every worker's parallel factor and
     /// substitution work submits to (sized by `engine_lanes` config).
     pub engine: Arc<LaneEngine>,
@@ -277,7 +303,38 @@ fn sparse_factors(req: &SolveRequest, ctx: &WorkerCtx) -> Result<Arc<SparseLuFac
         }
     }
     ctx.metrics.factor_misses.fetch_add(1, Ordering::Relaxed);
-    let f = Arc::new(SparseLu::new().factor(a)?);
+
+    let f = if ctx.sparse_parallel {
+        // Symbolic/numeric split: look the *pattern* up even though the
+        // value-keyed factor cache missed — same-structure traffic with
+        // fresh values skips symbolic analysis and pays only the
+        // level-parallel numeric sweep (bitwise identical to the
+        // monolithic factorization).
+        let cached = req
+            .pattern_key
+            .and_then(|pk| ctx.cache.lock().expect("cache").get_symbolic(pk));
+        // Revalidate structure *outside* the cache lock: the exact
+        // row_ptr/col_idx comparison is O(nnz) and must not serialize
+        // every worker's cache access behind it. A mismatch (pattern-key
+        // collision) degrades to a recompute, never a wrong reuse.
+        let symbolic = match cached.filter(|s| s.matches_pattern(a)) {
+            Some(s) => {
+                ctx.metrics.symbolic_reuse.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                let s = Arc::new(SparseSymbolic::analyze(a)?);
+                if let Some(pk) = req.pattern_key {
+                    ctx.cache.lock().expect("cache").put_symbolic(pk, Arc::clone(&s));
+                }
+                s
+            }
+        };
+        ctx.metrics.numeric_refactor.fetch_add(1, Ordering::Relaxed);
+        Arc::new(symbolic.factor_par_on(a, ctx.solve_lanes, &ctx.engine)?)
+    } else {
+        Arc::new(SparseLu::new().factor(a)?)
+    };
     if let Some(key) = req.matrix_key {
         ctx.cache.lock().expect("cache").put_sparse(key, Arc::clone(&f));
     }
@@ -375,6 +432,7 @@ mod tests {
             solve_lanes: 2,
             dist: RowDist::EbvFold,
             panel_width: 64,
+            sparse_parallel: true,
             engine: Arc::new(LaneEngine::new(2)),
             cache: Mutex::new(FactorCache::with_capacity(4)),
             replies: Mutex::new(HashMap::new()),
@@ -453,6 +511,78 @@ mod tests {
         assert!(resps[0].result.is_err());
         assert!(resps[0].residual.is_nan());
         assert_eq!(ctx.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn same_pattern_new_values_reuses_symbolic_arc() {
+        // The GLU3.0 serving claim, end to end through a worker: two
+        // requests with the same sparsity pattern but different values
+        // miss the value-keyed factor cache twice, yet share one
+        // symbolic analysis (Arc pointer equality) — the second request
+        // runs only the numeric refactorization.
+        let ctx = ctx();
+        let a = Arc::new(diag_dominant_sparse(48, 4, GenSeed(87)));
+        let a2 = Arc::new(crate::testutil::rescale_csr(&a, 2.0));
+        let pattern = Some(501u64);
+        for (round, (m, key)) in [(Arc::clone(&a), 11u64), (Arc::clone(&a2), 12u64)]
+            .into_iter()
+            .enumerate()
+        {
+            let req = SolveRequest::sparse(round as u64, m, vec![1.0; 48], Some(key))
+                .with_pattern_key(pattern);
+            let batch = Batch { requests: vec![req], opened_at: Instant::now() };
+            let resps = deliver(batch, &ctx);
+            assert!(resps[0].result.is_ok());
+            assert!(resps[0].residual < 1e-9, "round {round}");
+        }
+        assert_eq!(ctx.metrics.factor_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(ctx.metrics.symbolic_reuse.load(Ordering::Relaxed), 1);
+        assert_eq!(ctx.metrics.numeric_refactor.load(Ordering::Relaxed), 2);
+        // One symbolic entry + two factor entries, sharing the analysis.
+        let mut cache = ctx.cache.lock().unwrap();
+        let s1 = cache.get_symbolic(501).expect("symbolic cached");
+        let s2 = cache.get_symbolic(501).expect("symbolic cached");
+        assert!(Arc::ptr_eq(&s1, &s2));
+        assert!(cache.get_sparse(11).is_some());
+        assert!(cache.get_sparse(12).is_some());
+        // The refactored answer is bitwise the monolithic one.
+        let full = SparseLu::new().factor(&a2).unwrap();
+        let cached = cache.get_sparse(12).unwrap();
+        assert_eq!(cached.l(), full.l());
+        assert_eq!(cached.u(), full.u());
+    }
+
+    #[test]
+    fn colliding_pattern_key_is_revalidated_not_trusted() {
+        // A pattern-key hit whose cached analysis does not structurally
+        // match the request is treated as a miss (unlike value keys,
+        // pattern reuse re-checks structure — it is cheap).
+        let ctx = ctx();
+        let a = Arc::new(diag_dominant_sparse(40, 4, GenSeed(88)));
+        let other = diag_dominant_sparse(40, 5, GenSeed(89));
+        ctx.cache
+            .lock()
+            .unwrap()
+            .put_symbolic(777, Arc::new(crate::solver::SparseSymbolic::analyze(&other).unwrap()));
+        let req = SolveRequest::sparse(0, Arc::clone(&a), vec![1.0; 40], Some(31))
+            .with_pattern_key(Some(777));
+        let resps = deliver(Batch { requests: vec![req], opened_at: Instant::now() }, &ctx);
+        assert!(resps[0].result.is_ok(), "{:?}", resps[0].result);
+        assert!(resps[0].residual < 1e-9);
+        assert_eq!(ctx.metrics.symbolic_reuse.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn sparse_parallel_off_keeps_monolithic_path() {
+        let mut base = ctx();
+        Arc::get_mut(&mut base).unwrap().sparse_parallel = false;
+        let a = Arc::new(diag_dominant_sparse(36, 4, GenSeed(90)));
+        let req = SolveRequest::sparse(0, Arc::clone(&a), vec![1.0; 36], Some(5))
+            .with_pattern_key(Some(601));
+        let resps = deliver(Batch { requests: vec![req], opened_at: Instant::now() }, &base);
+        assert!(resps[0].result.is_ok());
+        assert_eq!(base.metrics.numeric_refactor.load(Ordering::Relaxed), 0);
+        assert!(base.cache.lock().unwrap().get_symbolic(601).is_none());
     }
 
     #[test]

@@ -122,6 +122,34 @@ fn greedy_lpt(vectors: &[BiVector], bins: usize) -> Vec<WorkUnit> {
     units
 }
 
+/// Equalize arbitrary per-item weights over `bins` bins (greedy LPT,
+/// deterministic tie-breaking: heavier first, then lower index; ties in
+/// bin load go to the lower bin). Returns one *index* list per bin,
+/// each sorted ascending, always exactly `bins` lists (possibly empty).
+///
+/// This is the paper's balance criterion lifted off the dense
+/// bi-vector stream and applied to irregular work — the sparse
+/// symbolic/numeric split uses it to deal a DAG level's rows to lanes
+/// by estimated refactorization cost (`SparseSymbolic` row costs), the
+/// sparse counterpart of [`equalize`] on [`BiVector`] lengths.
+/// Zero weights count as 1 so empty rows still spread across bins.
+pub fn equalize_weights(weights: &[usize], bins: usize) -> Vec<Vec<usize>> {
+    assert!(bins > 0, "equalize_weights: bins must be positive");
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(weights[i].max(1)), i));
+    let mut out = vec![Vec::new(); bins];
+    let mut load = vec![0usize; bins];
+    for i in order {
+        let b = (0..bins).min_by_key(|&b| load[b]).expect("bins > 0");
+        out[b].push(i);
+        load[b] += weights[i].max(1);
+    }
+    for bin in &mut out {
+        bin.sort_unstable();
+    }
+    out
+}
+
 /// Load imbalance of a unit set: `max(total_len) / mean(total_len)`.
 /// 1.0 is perfect balance; the paper's fold achieves exactly 1.0 for
 /// even `n-1`.
@@ -220,5 +248,47 @@ mod tests {
     #[should_panic(expected = "target_units")]
     fn zero_units_panics() {
         equalize(&bivectorize(4), PairingMode::Block, 0);
+    }
+
+    #[test]
+    fn weights_partition_all_indices() {
+        let weights: Vec<usize> = (0..37).map(|i| (i * 7 + 3) % 11).collect();
+        let bins = equalize_weights(&weights, 4);
+        assert_eq!(bins.len(), 4);
+        let mut all: Vec<usize> = bins.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..37).collect::<Vec<_>>());
+        for bin in &bins {
+            assert!(bin.windows(2).all(|w| w[0] < w[1]), "bins sorted ascending");
+        }
+    }
+
+    #[test]
+    fn weights_balance_is_near_perfect() {
+        let weights: Vec<usize> = (1..=64).collect();
+        let bins = equalize_weights(&weights, 4);
+        let loads: Vec<usize> =
+            bins.iter().map(|b| b.iter().map(|&i| weights[i]).sum()).collect();
+        let max = *loads.iter().max().unwrap() as f64;
+        let mean = loads.iter().sum::<usize>() as f64 / loads.len() as f64;
+        assert!(max / mean < 1.05, "loads={loads:?}");
+    }
+
+    #[test]
+    fn weights_are_deterministic_and_handle_edges() {
+        let weights = vec![5usize, 5, 5, 0, 0];
+        assert_eq!(equalize_weights(&weights, 3), equalize_weights(&weights, 3));
+        // More bins than items leaves trailing bins empty, never drops.
+        let bins = equalize_weights(&[2usize], 4);
+        assert_eq!(bins.len(), 4);
+        assert_eq!(bins[0], vec![0]);
+        assert!(bins[1..].iter().all(Vec::is_empty));
+        assert_eq!(equalize_weights(&[], 2), vec![Vec::new(), Vec::new()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bins")]
+    fn zero_bins_panics() {
+        equalize_weights(&[1, 2], 0);
     }
 }

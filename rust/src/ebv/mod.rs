@@ -22,5 +22,5 @@ pub mod plan;
 pub mod schedule;
 
 pub use bivector::{bivectorize, row_total_work, BiVector, Triangle};
-pub use equalize::{equalize, imbalance, PairingMode, WorkUnit};
+pub use equalize::{equalize, equalize_weights, imbalance, PairingMode, WorkUnit};
 pub use schedule::{LaneSchedule, RowDist};

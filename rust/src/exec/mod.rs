@@ -32,7 +32,10 @@ pub use stats::{EngineStats, EngineStatsSnapshot};
 
 /// Shared mutable slot array for engine jobs whose virtual lanes write
 /// disjoint indices — the `SharedMatrix`/`SharedVec` raw-pointer idiom
-/// from the solvers, generalized over the element type.
+/// from the solvers, generalized over the element type. The multi-RHS
+/// panel solve holds one result slot per vlane; the sparse numeric
+/// refactorization (`SparseSymbolic`) holds one dense accumulator per
+/// vlane the same way.
 pub struct LaneSlots<T> {
     ptr: *mut T,
     len: usize,

@@ -15,6 +15,7 @@ pub mod lu_seq;
 pub mod pivot;
 pub mod refine;
 pub mod sparse_lu;
+pub mod sparse_symbolic;
 pub mod thomas;
 pub mod trisolve;
 
@@ -29,6 +30,7 @@ pub use lu_seq::SeqLu;
 pub use pivot::Permutation;
 pub use refine::Refined;
 pub use sparse_lu::{SparseLu, SparseLuFactors};
+pub use sparse_symbolic::SparseSymbolic;
 pub use thomas::{thomas_factor, thomas_solve, ThomasFactors};
 
 /// Packed dense LU factors (Doolittle): `L` is unit-lower (multipliers

@@ -15,21 +15,36 @@ use std::collections::BinaryHeap;
 
 use crate::matrix::CsrMatrix;
 use crate::solver::trisolve::{
-    levels_of_lower, sparse_backward, sparse_forward_unit, sparse_forward_unit_levels,
+    levels_of_lower, levels_of_upper, sparse_backward, sparse_backward_levels,
+    sparse_forward_unit, sparse_forward_unit_levels,
 };
 use crate::util::error::{EbvError, Result};
 
 /// Sparse LU factors: `L` strictly lower (unit diagonal implicit),
-/// `U` upper including diagonal, plus the forward-solve level schedule.
+/// `U` upper including diagonal, plus the level schedules of both
+/// triangles (forward solves on `L`'s levels, backward on `U`'s).
 #[derive(Debug, Clone)]
 pub struct SparseLuFactors {
     l: CsrMatrix,
     u: CsrMatrix,
-    /// Rows grouped by dependency level of `L` (for parallel solves).
+    /// Rows grouped by dependency level of `L` (parallel forward solve).
     by_level: Vec<Vec<usize>>,
+    /// Rows grouped by dependency level of `U` (parallel backward solve).
+    u_by_level: Vec<Vec<usize>>,
 }
 
 impl SparseLuFactors {
+    /// Assemble factors from finished triangles, computing both level
+    /// schedules — the single construction path shared by
+    /// [`SparseLu::factor`] and the symbolic/numeric split
+    /// (`SparseSymbolic`), so every factor object carries consistent
+    /// solve schedules.
+    pub(crate) fn from_parts(l: CsrMatrix, u: CsrMatrix) -> SparseLuFactors {
+        let (_, by_level) = levels_of_lower(&l);
+        let (_, u_by_level) = levels_of_upper(&u);
+        SparseLuFactors { l, u, by_level, u_by_level }
+    }
+
     #[inline]
     pub fn n(&self) -> usize {
         self.l.rows()
@@ -50,6 +65,11 @@ impl SparseLuFactors {
         self.by_level.len()
     }
 
+    /// Number of dependency levels in the backward solve (`U`'s DAG).
+    pub fn backward_level_count(&self) -> usize {
+        self.u_by_level.len()
+    }
+
     /// Fill-in: factor nnz (L + U) minus original nnz.
     pub fn fill_in(&self, a: &CsrMatrix) -> isize {
         (self.l.nnz() + self.u.nnz()) as isize - a.nnz() as isize
@@ -61,14 +81,16 @@ impl SparseLuFactors {
         sparse_backward(&self.u, &y)
     }
 
-    /// Parallel solve using the level schedule with `lanes` lanes on
+    /// Parallel solve using the level schedules with `lanes` lanes on
     /// the process-global lane engine.
     pub fn solve_par(&self, b: &[f64], lanes: usize) -> Result<Vec<f64>> {
         self.solve_par_on(b, lanes, crate::exec::global())
     }
 
     /// Parallel solve on a specific engine (the coordinator's workers
-    /// share one engine this way).
+    /// share one engine this way): level-scheduled forward substitution
+    /// on `L`'s DAG, then level-scheduled backward substitution on
+    /// `U`'s — both bitwise identical to the sequential solves.
     pub fn solve_par_on(
         &self,
         b: &[f64],
@@ -76,7 +98,7 @@ impl SparseLuFactors {
         engine: &crate::exec::LaneEngine,
     ) -> Result<Vec<f64>> {
         let y = sparse_forward_unit_levels(&self.l, b, &self.by_level, lanes, engine)?;
-        sparse_backward(&self.u, &y)
+        sparse_backward_levels(&self.u, &y, &self.u_by_level, lanes, engine)
     }
 }
 
@@ -219,8 +241,7 @@ impl SparseLu {
 
         let l = CsrMatrix::from_raw(n, n, l_ptr, l_idx, l_val)?;
         let u = CsrMatrix::from_raw(n, n, u_ptr, u_idx, u_val)?;
-        let (_, by_level) = levels_of_lower(&l);
-        Ok(SparseLuFactors { l, u, by_level })
+        Ok(SparseLuFactors::from_parts(l, u))
     }
 
     /// Factor and solve in one call.
@@ -305,11 +326,27 @@ mod tests {
     }
 
     #[test]
+    fn parallel_solve_is_bitwise_sequential() {
+        // Both substitutions are level-scheduled now, and each row's op
+        // sequence matches the sequential sweep exactly — the solve is
+        // bit-identical, not merely close.
+        let a = poisson_2d(11);
+        let (_, b) = manufactured_solution(&a, GenSeed(49));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let seq = f.solve(&b).unwrap();
+        for lanes in [2usize, 3, 8] {
+            assert_eq!(f.solve_par(&b, lanes).unwrap(), seq, "lanes={lanes}");
+        }
+    }
+
+    #[test]
     fn level_count_is_sane() {
         let a = diag_dominant_sparse(60, 3, GenSeed(47));
         let f = SparseLu::new().factor(&a).unwrap();
         assert!(f.level_count() >= 1);
         assert!(f.level_count() <= 60);
+        assert!(f.backward_level_count() >= 1);
+        assert!(f.backward_level_count() <= 60);
     }
 
     #[test]

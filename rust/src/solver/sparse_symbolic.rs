@@ -1,0 +1,626 @@
+//! Sparse LU symbolic/numeric split: one-time pattern analysis, cheap
+//! level-parallel refactorization.
+//!
+//! GLU3.0 (Peng & Tan, arXiv:1908.00204) observes that for the serving
+//! pattern this repo targets — matrices whose *sparsity pattern* is
+//! fixed while the *values* change between solves — almost all of the
+//! Gilbert–Peierls factorization cost is re-derivable structure: the
+//! fill pattern of `L`/`U`, the row-dependency DAG, and the level
+//! schedule. [`SparseSymbolic`] computes that structure once:
+//!
+//! * the **fill pattern** of both factors (pattern-only elimination —
+//!   the same worklist walk as [`SparseLu::factor`] with the values
+//!   stripped out);
+//! * the **row dependency DAG** levels: row `i` depends on row `j` iff
+//!   `j` appears in `L`'s row-`i` pattern, so rows of equal level have
+//!   no mutual dependencies and refactor in parallel;
+//! * per-row **numeric cost estimates** that feed the equalized lane
+//!   assignment (`ebv::equalize::equalize_weights` — the EBV balance
+//!   criterion applied to level row work).
+//!
+//! The **numeric phase** ([`SparseSymbolic::factor_par_on`]) then
+//! refactors values level-by-level as one barrier-stepped job on the
+//! persistent [`LaneEngine`]: one step per DAG level, rows of a level
+//! split across virtual lanes with equalized chunks, each lane
+//! scattering into its own dense accumulator. Per-row arithmetic is the
+//! *identical op sequence* the sequential factorizer performs (the
+//! symbolic pattern is walked in the same ascending order the dynamic
+//! worklist would pop, and entries the dynamic pattern never stored are
+//! skipped by the same zero guards), so the produced factors are
+//! **bitwise identical** to [`SparseLu::factor`] for every lane count
+//! and engine size — see `rust/DESIGN.md` §Sparse symbolic/numeric
+//! split and the bit-identity ledger.
+//!
+//! The coordinator shares one `Arc<SparseSymbolic>` per *pattern
+//! fingerprint* through its `FactorCache`, so a wire request whose
+//! structure matches a cached pattern skips symbolic analysis entirely
+//! and pays only the parallel numeric sweep.
+//!
+//! Scope: the split targets the exact (`drop_tol = 0`) factorization.
+//! The ILU-style [`SparseLu::with_drop_tol`] path prunes its pattern
+//! *by value* and therefore cannot reuse a static symbolic analysis.
+//!
+//! [`SparseLu::factor`]: crate::solver::SparseLu::factor
+//! [`SparseLu::with_drop_tol`]: crate::solver::SparseLu::with_drop_tol
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Mutex;
+
+use crate::ebv::equalize::equalize_weights;
+use crate::exec::{LaneEngine, LaneSlots, StepCtl};
+use crate::matrix::CsrMatrix;
+use crate::solver::sparse_lu::SparseLuFactors;
+use crate::util::error::{EbvError, Result};
+
+/// One-time symbolic analysis of a sparse matrix pattern: fill
+/// structure of `L`/`U`, the factorization dependency DAG grouped into
+/// levels, and per-row numeric cost estimates. Shared (via `Arc`)
+/// across every same-pattern refactorization.
+#[derive(Debug)]
+pub struct SparseSymbolic {
+    n: usize,
+    pivot_tol: f64,
+    /// The analyzed matrix pattern, kept verbatim so a refactorization
+    /// against a structurally different matrix is rejected instead of
+    /// silently corrupting the accumulator walk.
+    a_row_ptr: Vec<usize>,
+    a_col_idx: Vec<usize>,
+    /// `L` fill pattern (strictly lower, rows ascending-sorted).
+    l_ptr: Vec<usize>,
+    l_idx: Vec<usize>,
+    /// `U` fill pattern (upper including the diagonal, ascending).
+    u_ptr: Vec<usize>,
+    u_idx: Vec<usize>,
+    /// Position of row `i`'s diagonal entry inside `u_idx`.
+    u_diag_pos: Vec<usize>,
+    /// Factorization-DAG level of each row.
+    level: Vec<usize>,
+    /// Rows grouped by level (ascending row order within a level).
+    by_level: Vec<Vec<usize>>,
+    /// Per-row numeric flop estimate — the equalization weight.
+    row_cost: Vec<usize>,
+}
+
+impl SparseSymbolic {
+    /// Analyze the fill pattern of `a` (pattern-only Gilbert–Peierls,
+    /// no pivoting — the paper's diagonally dominant setting). Errors
+    /// on non-square input and on rows whose `U` pattern has no
+    /// diagonal (structurally singular: every numeric factorization of
+    /// this pattern would hit a zero pivot).
+    pub fn analyze(a: &CsrMatrix) -> Result<SparseSymbolic> {
+        if a.rows() != a.cols() {
+            return Err(EbvError::Shape("sparse LU needs a square matrix".into()));
+        }
+        let n = a.rows();
+
+        let mut l_ptr = vec![0usize];
+        let mut l_idx: Vec<usize> = Vec::new();
+        let mut u_ptr = vec![0usize];
+        let mut u_idx: Vec<usize> = Vec::new();
+        let mut u_diag_pos = Vec::with_capacity(n);
+
+        // Same worklist structure as the numeric factorizer: membership
+        // bitmap, ascending min-heap for the sub-diagonal pattern,
+        // sorted-once list for the super-diagonal pattern.
+        let mut in_pattern = vec![false; n];
+        let mut lower: BinaryHeap<Reverse<usize>> = BinaryHeap::new();
+        let mut upper: Vec<usize> = Vec::new();
+        // Off-diagonal U row patterns built so far (merge source).
+        let mut u_rows: Vec<Vec<usize>> = Vec::with_capacity(n);
+
+        let mut level = vec![0usize; n];
+        let mut max_level = 0usize;
+        let mut row_cost = vec![0usize; n];
+
+        for i in 0..n {
+            let (cols, _) = a.row(i);
+            for &j in cols {
+                if in_pattern[j] {
+                    continue;
+                }
+                in_pattern[j] = true;
+                if j < i {
+                    lower.push(Reverse(j));
+                } else {
+                    upper.push(j);
+                }
+            }
+
+            // Pattern elimination: every sub-diagonal index becomes an
+            // `L` entry and merges its `U` row's off-diagonal pattern
+            // (fill); popped ascending, fill below `i` re-enters the
+            // heap ahead of its own processing because merged indices
+            // are strictly greater than the row they came from.
+            let mut lv = 0usize;
+            let mut cost = 1usize;
+            while let Some(Reverse(j)) = lower.pop() {
+                in_pattern[j] = false;
+                l_idx.push(j);
+                lv = lv.max(level[j] + 1);
+                cost += 1 + 2 * u_rows[j].len();
+                for &c in &u_rows[j] {
+                    if !in_pattern[c] {
+                        in_pattern[c] = true;
+                        if c < i {
+                            lower.push(Reverse(c));
+                        } else {
+                            upper.push(c);
+                        }
+                    }
+                }
+            }
+            l_ptr.push(l_idx.len());
+            level[i] = lv;
+            max_level = max_level.max(lv);
+            row_cost[i] = cost;
+
+            upper.sort_unstable();
+            let row_start = u_idx.len();
+            let mut diag_pos = None;
+            for &j in &upper {
+                debug_assert!(j >= i);
+                if j == i {
+                    diag_pos = Some(u_idx.len());
+                }
+                u_idx.push(j);
+                in_pattern[j] = false;
+            }
+            upper.clear();
+            let Some(dp) = diag_pos else {
+                // No structural diagonal: the numeric phase would divide
+                // by an exact zero at this row no matter the values.
+                return Err(EbvError::SingularPivot { step: i, value: 0.0, tol: 0.0 });
+            };
+            u_diag_pos.push(dp);
+            u_ptr.push(u_idx.len());
+            u_rows.push(u_idx[row_start..].iter().copied().filter(|&c| c != i).collect());
+        }
+
+        let mut by_level = vec![Vec::new(); max_level + 1];
+        for (i, &lv) in level.iter().enumerate() {
+            by_level[lv].push(i);
+        }
+
+        Ok(SparseSymbolic {
+            n,
+            pivot_tol: 1e-12,
+            a_row_ptr: a.row_ptr().to_vec(),
+            a_col_idx: a.col_idx().to_vec(),
+            l_ptr,
+            l_idx,
+            u_ptr,
+            u_idx,
+            u_diag_pos,
+            level,
+            by_level,
+            row_cost,
+        })
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Symbolic `L` pattern size (strictly lower entries).
+    pub fn l_nnz(&self) -> usize {
+        self.l_idx.len()
+    }
+
+    /// Symbolic `U` pattern size (including diagonals).
+    pub fn u_nnz(&self) -> usize {
+        self.u_idx.len()
+    }
+
+    /// Number of factorization-DAG levels: the barrier count of the
+    /// level-parallel numeric phase.
+    pub fn level_count(&self) -> usize {
+        self.by_level.len()
+    }
+
+    /// Factorization-DAG level of each row.
+    pub fn levels(&self) -> &[usize] {
+        &self.level
+    }
+
+    /// Rows grouped by DAG level.
+    pub fn rows_by_level(&self) -> &[Vec<usize>] {
+        &self.by_level
+    }
+
+    /// Predicted fill-in: symbolic factor nnz minus the matrix nnz.
+    pub fn fill_in(&self, a: &CsrMatrix) -> isize {
+        (self.l_nnz() + self.u_nnz()) as isize - a.nnz() as isize
+    }
+
+    /// Whether `a` has exactly the analyzed pattern (shape, row
+    /// pointers and column indices — values free).
+    pub fn matches_pattern(&self, a: &CsrMatrix) -> bool {
+        a.rows() == self.n
+            && a.cols() == self.n
+            && a.row_ptr() == self.a_row_ptr.as_slice()
+            && a.col_idx() == self.a_col_idx.as_slice()
+    }
+
+    fn check(&self, a: &CsrMatrix) -> Result<()> {
+        if self.matches_pattern(a) {
+            Ok(())
+        } else {
+            Err(EbvError::Shape(
+                "matrix pattern does not match the symbolic analysis \
+                 (refactorization requires the analyzed sparsity structure)"
+                    .into(),
+            ))
+        }
+    }
+
+    /// Numeric sweep for one row over the symbolic pattern: the exact
+    /// per-row op sequence of `SparseLu::factor` (ascending dependency
+    /// walk, same zero guards), reading/writing factor values through
+    /// shared workspaces. Returns the row's `(step, value)` on a pivot
+    /// below `pivot_tol`.
+    ///
+    /// # Safety
+    /// Caller must guarantee (a) exclusive write access to row `i`'s
+    /// `l_val`/`u_val` ranges, (b) that every dependency row's `u_val`
+    /// entries are finalized and published (earlier DAG level + step
+    /// barrier, or sequential order), and (c) `acc` is all-zero on
+    /// entry (this function restores that invariant before returning).
+    unsafe fn numeric_row(
+        &self,
+        i: usize,
+        a: &CsrMatrix,
+        acc: &mut [f64],
+        l_val: *mut f64,
+        u_val: *mut f64,
+    ) -> std::result::Result<(), (usize, f64)> {
+        let (cols, vals) = a.row(i);
+        for (&j, &v) in cols.iter().zip(vals.iter()) {
+            acc[j] = v;
+        }
+        for pos in self.l_ptr[i]..self.l_ptr[i + 1] {
+            let j = self.l_idx[pos];
+            let f = acc[j] / *u_val.add(self.u_diag_pos[j]);
+            acc[j] = 0.0;
+            *l_val.add(pos) = f;
+            // The sequential factorizer applies the update only for
+            // multipliers it keeps (`f != 0` and `|f| > drop_tol = 0`);
+            // symbolic-pattern entries the dynamic pattern never stored
+            // carry an exact zero here and are skipped identically.
+            let f_kept = f != 0.0 && f.abs() > 0.0;
+            if !f_kept {
+                continue;
+            }
+            for q in self.u_ptr[j]..self.u_ptr[j + 1] {
+                let c = self.u_idx[q];
+                if c == j {
+                    continue; // diagonal handled via u_diag_pos
+                }
+                let v = *u_val.add(q);
+                // A zero U entry is one the dynamic pattern dropped at
+                // emission — the sequential sweep never touched it.
+                let v_kept = v != 0.0 && v.abs() > 0.0;
+                if !v_kept {
+                    continue;
+                }
+                acc[c] -= f * v;
+            }
+        }
+        let mut diag = 0.0;
+        for q in self.u_ptr[i]..self.u_ptr[i + 1] {
+            let c = self.u_idx[q];
+            let v = acc[c];
+            *u_val.add(q) = v;
+            acc[c] = 0.0;
+            if c == i {
+                diag = v;
+            }
+        }
+        if diag.abs() < self.pivot_tol {
+            return Err((i, diag));
+        }
+        Ok(())
+    }
+
+    /// Compact the value workspaces into final CSR factors, applying
+    /// the sequential factorizer's emission rule (entries that computed
+    /// to exact zero are dropped), so the assembled factors are
+    /// structurally *and* numerically identical to `SparseLu::factor`.
+    fn assemble(&self, l_val: &[f64], u_val: &[f64]) -> Result<SparseLuFactors> {
+        let n = self.n;
+        let mut lp = Vec::with_capacity(n + 1);
+        lp.push(0usize);
+        let mut li = Vec::with_capacity(l_val.len());
+        let mut lv = Vec::with_capacity(l_val.len());
+        let mut up = Vec::with_capacity(n + 1);
+        up.push(0usize);
+        let mut ui = Vec::with_capacity(u_val.len());
+        let mut uv = Vec::with_capacity(u_val.len());
+        for i in 0..n {
+            for pos in self.l_ptr[i]..self.l_ptr[i + 1] {
+                let f = l_val[pos];
+                if f != 0.0 && f.abs() > 0.0 {
+                    li.push(self.l_idx[pos]);
+                    lv.push(f);
+                }
+            }
+            lp.push(li.len());
+            for q in self.u_ptr[i]..self.u_ptr[i + 1] {
+                let c = self.u_idx[q];
+                let v = u_val[q];
+                if v != 0.0 && (c == i || v.abs() > 0.0) {
+                    ui.push(c);
+                    uv.push(v);
+                }
+            }
+            up.push(ui.len());
+        }
+        let l = CsrMatrix::from_raw(n, n, lp, li, lv)?;
+        let u = CsrMatrix::from_raw(n, n, up, ui, uv)?;
+        Ok(SparseLuFactors::from_parts(l, u))
+    }
+
+    /// Sequential numeric refactorization over the cached pattern.
+    /// Bitwise identical to `SparseLu::factor(a)` (exact mode).
+    pub fn factor(&self, a: &CsrMatrix) -> Result<SparseLuFactors> {
+        self.check(a)?;
+        let mut l_val = vec![0.0f64; self.l_idx.len()];
+        let mut u_val = vec![0.0f64; self.u_idx.len()];
+        let mut acc = vec![0.0f64; self.n];
+        let lp = l_val.as_mut_ptr();
+        let upv = u_val.as_mut_ptr();
+        for i in 0..self.n {
+            // SAFETY: single-threaded sweep in row order — every
+            // dependency row is finalized, writes are exclusive.
+            if let Err((step, value)) = unsafe { self.numeric_row(i, a, &mut acc, lp, upv) } {
+                return Err(EbvError::SingularPivot { step, value, tol: self.pivot_tol });
+            }
+        }
+        self.assemble(&l_val, &u_val)
+    }
+
+    /// Level-parallel numeric refactorization on the process-global
+    /// lane engine.
+    pub fn factor_par(&self, a: &CsrMatrix, lanes: usize) -> Result<SparseLuFactors> {
+        self.factor_par_on(a, lanes, crate::exec::global())
+    }
+
+    /// Level-parallel numeric refactorization: one barrier-stepped
+    /// engine job with a step per DAG level; within a level, rows are
+    /// dealt to `lanes` virtual lanes in cost-equalized chunks. Small
+    /// levels keep a single chunk (lane 0 walks them in row order), and
+    /// when *no* level is big enough to split the whole refactorization
+    /// keeps the zero-synchronization sequential sweep — exactly the
+    /// policy of the level-scheduled triangular solves.
+    ///
+    /// Factors are bitwise identical to [`SparseSymbolic::factor`] and
+    /// to `SparseLu::factor` for every lane count and engine size: each
+    /// row's arithmetic depends only on the symbolic pattern, never on
+    /// which lane executes it.
+    pub fn factor_par_on(
+        &self,
+        a: &CsrMatrix,
+        lanes: usize,
+        engine: &LaneEngine,
+    ) -> Result<SparseLuFactors> {
+        self.check(a)?;
+        if lanes <= 1 {
+            return self.factor(a);
+        }
+
+        enum LevelChunks<'x> {
+            /// Too small to split profitably: lane 0 walks the level.
+            Single(&'x [usize]),
+            /// Cost-equalized chunks, one per lane (possibly empty).
+            Split(Vec<Vec<usize>>),
+        }
+        let chunks: Vec<LevelChunks<'_>> = self
+            .by_level
+            .iter()
+            .map(|rows| {
+                if rows.len() < lanes * 4 {
+                    LevelChunks::Single(rows)
+                } else {
+                    let weights: Vec<usize> =
+                        rows.iter().map(|&i| self.row_cost[i]).collect();
+                    LevelChunks::Split(
+                        equalize_weights(&weights, lanes)
+                            .into_iter()
+                            .map(|bin| bin.into_iter().map(|k| rows[k]).collect())
+                            .collect(),
+                    )
+                }
+            })
+            .collect();
+        if chunks.iter().all(|c| matches!(c, LevelChunks::Single(_))) {
+            return self.factor(a);
+        }
+
+        let mut l_val = vec![0.0f64; self.l_idx.len()];
+        let mut u_val = vec![0.0f64; self.u_idx.len()];
+        let l_shared = SharedF64(l_val.as_mut_ptr());
+        let u_shared = SharedF64(u_val.as_mut_ptr());
+        // One dense accumulator per virtual lane; rows assigned to a
+        // lane within a step run sequentially on its accumulator.
+        let mut accs: Vec<Vec<f64>> = (0..lanes).map(|_| vec![0.0f64; self.n]).collect();
+        let acc_slots = LaneSlots::new(&mut accs);
+        let bad: Mutex<Option<(usize, f64)>> = Mutex::new(None);
+
+        engine.run_steps(lanes, chunks.len(), |vlane, lvl| {
+            let chunk: Option<&[usize]> = match &chunks[lvl] {
+                LevelChunks::Single(rows) => (vlane == 0).then_some(*rows),
+                LevelChunks::Split(cs) => cs.get(vlane).map(Vec::as_slice),
+            };
+            let Some(rows) = chunk else { return StepCtl::Continue };
+            // SAFETY: each vlane touches only its own accumulator slot.
+            let acc = unsafe { acc_slots.slot(vlane) };
+            for &i in rows {
+                // SAFETY: levels partition rows (disjoint l/u ranges);
+                // every dependency of row i sits in an earlier level,
+                // whose writes the step barrier published.
+                let outcome =
+                    unsafe { self.numeric_row(i, a, &mut acc[..], l_shared.0, u_shared.0) };
+                if let Err((step, value)) = outcome {
+                    let mut slot = bad.lock().expect("pivot slot");
+                    if slot.is_none() {
+                        *slot = Some((step, value));
+                    }
+                    return StepCtl::Break;
+                }
+            }
+            StepCtl::Continue
+        });
+
+        if let Some((step, value)) = bad.into_inner().expect("pivot slot") {
+            return Err(EbvError::SingularPivot { step, value, tol: self.pivot_tol });
+        }
+        self.assemble(&l_val, &u_val)
+    }
+}
+
+/// Raw-pointer wrapper making the factor-value workspaces shareable
+/// across lanes (writes are disjoint by row ownership).
+struct SharedF64(*mut f64);
+unsafe impl Send for SharedF64 {}
+unsafe impl Sync for SharedF64 {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{
+        diag_dominant_sparse, manufactured_solution, poisson_2d, GenSeed,
+    };
+    use crate::matrix::norms::diff_inf;
+    use crate::solver::SparseLu;
+    use crate::testutil::rescale_csr;
+
+    #[test]
+    fn symbolic_pattern_matches_numeric_factor() {
+        let a = poisson_2d(10);
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        let f = SparseLu::new().factor(&a).unwrap();
+        // Exact arithmetic produces no accidental zeros here, so the
+        // symbolic pattern equals the factored pattern exactly.
+        assert_eq!(sym.l_nnz(), f.l().nnz());
+        assert_eq!(sym.u_nnz(), f.u().nnz());
+        assert_eq!(sym.fill_in(&a), f.fill_in(&a));
+    }
+
+    #[test]
+    fn sequential_numeric_is_bitwise_sparse_lu() {
+        for seed in [50u64, 51, 52] {
+            let a = diag_dominant_sparse(60, 5, GenSeed(seed));
+            let sym = SparseSymbolic::analyze(&a).unwrap();
+            let reference = SparseLu::new().factor(&a).unwrap();
+            let f = sym.factor(&a).unwrap();
+            assert_eq!(f.l(), reference.l(), "seed={seed}");
+            assert_eq!(f.u(), reference.u(), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn parallel_numeric_is_bitwise_sequential() {
+        let a = poisson_2d(12);
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        let reference = SparseLu::new().factor(&a).unwrap();
+        for lanes in [1usize, 2, 3, 4, 8] {
+            for engine_lanes in [1usize, 2, 4] {
+                let engine = LaneEngine::new(engine_lanes);
+                let f = sym.factor_par_on(&a, lanes, &engine).unwrap();
+                assert_eq!(f.l(), reference.l(), "lanes={lanes} engine={engine_lanes}");
+                assert_eq!(f.u(), reference.u(), "lanes={lanes} engine={engine_lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn refactor_same_pattern_new_values() {
+        let a = poisson_2d(9);
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        let a2 = rescale_csr(&a, -2.5);
+        assert!(sym.matches_pattern(&a2));
+        let reference = SparseLu::new().factor(&a2).unwrap();
+        let f = sym.factor_par(&a2, 4).unwrap();
+        assert_eq!(f.l(), reference.l());
+        assert_eq!(f.u(), reference.u());
+        // And the refactored system still solves.
+        let (x_true, b) = manufactured_solution(&a2, GenSeed(61));
+        let x = f.solve(&b).unwrap();
+        assert!(diff_inf(&x, &x_true) < 1e-8);
+    }
+
+    #[test]
+    fn rejects_mismatched_pattern() {
+        let a = diag_dominant_sparse(30, 4, GenSeed(53));
+        let other = diag_dominant_sparse(30, 4, GenSeed(54));
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        assert!(!sym.matches_pattern(&other));
+        assert!(matches!(sym.factor(&other), Err(EbvError::Shape(_))));
+        assert!(matches!(sym.factor_par(&other, 4), Err(EbvError::Shape(_))));
+    }
+
+    #[test]
+    fn levels_respect_dependencies_and_partition_rows() {
+        let a = poisson_2d(8);
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        let level = sym.levels();
+        // Every L dependency j of row i sits at a strictly lower level.
+        for i in 0..sym.n() {
+            for pos in sym.l_ptr[i]..sym.l_ptr[i + 1] {
+                let j = sym.l_idx[pos];
+                assert!(level[j] < level[i], "row {i} dep {j}");
+            }
+        }
+        let total: usize = sym.rows_by_level().iter().map(Vec::len).sum();
+        assert_eq!(total, sym.n());
+        assert!(sym.level_count() >= 1);
+        assert!(sym.level_count() < sym.n(), "Poisson DAG must be shallow");
+    }
+
+    #[test]
+    fn detects_structurally_singular_diagonal() {
+        // Row 1 has no diagonal and nothing below to fill it.
+        let a = CsrMatrix::from_raw(2, 2, vec![0, 1, 2], vec![0, 0], vec![1.0, 1.0]).unwrap();
+        assert!(matches!(
+            SparseSymbolic::analyze(&a),
+            Err(EbvError::SingularPivot { step: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn detects_numerically_singular_pivot() {
+        // Structurally fine diagonal whose value is zero.
+        let a = CsrMatrix::from_raw(
+            2,
+            2,
+            vec![0, 2, 4],
+            vec![0, 1, 0, 1],
+            vec![1.0, 2.0, 0.5, 1.0],
+        )
+        .unwrap();
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        // a21/a11 * a12 = 0.5 * 2 = 1 -> u22 = 1 - 1 = 0: singular.
+        let err = sym.factor(&a);
+        assert!(matches!(err, Err(EbvError::SingularPivot { step: 1, .. })), "{err:?}");
+        let err = sym.factor_par_on(&a, 4, &LaneEngine::new(2));
+        assert!(matches!(err, Err(EbvError::SingularPivot { step: 1, .. })), "{err:?}");
+    }
+
+    #[test]
+    fn rejects_rectangular() {
+        assert!(SparseSymbolic::analyze(&CsrMatrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn identity_analysis_is_trivial() {
+        let a = CsrMatrix::from_dense(&crate::matrix::DenseMatrix::identity(5), 0.0);
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        assert_eq!(sym.l_nnz(), 0);
+        assert_eq!(sym.u_nnz(), 5);
+        assert_eq!(sym.level_count(), 1, "independent rows share level 0");
+        let f = sym.factor_par(&a, 4).unwrap();
+        let x = f.solve(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+}

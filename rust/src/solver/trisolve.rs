@@ -258,6 +258,29 @@ pub fn levels_of_lower(l: &CsrMatrix) -> (Vec<usize>, Vec<Vec<usize>>) {
     (level, by_level)
 }
 
+/// Level schedule of an upper-triangular CSR matrix (diagonal
+/// included): the backward-substitution mirror of [`levels_of_lower`].
+/// Row `i` depends on every `x[j]` with `j > i` present in its row, so
+/// levels are computed bottom-up (`i = n-1 … 0`); rows within a level
+/// are mutually independent and stored in descending row order (the
+/// sequential sweep direction). Returns `(level_of_row, rows_by_level)`.
+pub fn levels_of_upper(u: &CsrMatrix) -> (Vec<usize>, Vec<Vec<usize>>) {
+    let n = u.rows();
+    let mut level = vec![0usize; n];
+    let mut max_level = 0usize;
+    for i in (0..n).rev() {
+        let (cols, _) = u.row(i);
+        let lv = cols.iter().filter(|&&j| j > i).map(|&j| level[j] + 1).max().unwrap_or(0);
+        level[i] = lv;
+        max_level = max_level.max(lv);
+    }
+    let mut by_level = vec![Vec::new(); max_level + 1];
+    for i in (0..n).rev() {
+        by_level[level[i]].push(i);
+    }
+    (level, by_level)
+}
+
 /// Per-level work assignment for the engine job.
 enum LevelChunks<'a> {
     /// Too small to split profitably: lane 0 walks the whole level in
@@ -325,6 +348,90 @@ pub fn sparse_forward_unit_levels(
         StepCtl::Continue
     });
     Ok(y)
+}
+
+/// Level-scheduled parallel sparse backward substitution `U x = y`,
+/// mirroring [`sparse_forward_unit_levels`]: one barrier-separated step
+/// per level of `by_level` (as computed by [`levels_of_upper`] — deep
+/// rows first), nnz-equalized chunks within a level, single-chunk
+/// fall-through for small levels, and the fully sequential path when no
+/// level is worth splitting. Each row performs the exact op sequence of
+/// [`sparse_backward`], so results are bitwise identical to the
+/// sequential solve for every lane count and engine size.
+///
+/// A zero diagonal ends the job through the engine's break protocol
+/// (only the affected row's lane sees it; everyone halts on the same
+/// level) and reports `SingularPivot` — the step reported is the
+/// lowest-level failing row, which may differ from the sequential
+/// sweep's first-in-descending-order row when several diagonals are
+/// zero.
+pub fn sparse_backward_levels(
+    u: &CsrMatrix,
+    y: &[f64],
+    by_level: &[Vec<usize>],
+    lanes: usize,
+    engine: &LaneEngine,
+) -> Result<Vec<f64>> {
+    if y.len() != u.rows() {
+        return Err(EbvError::Shape("rhs length mismatch".into()));
+    }
+    if lanes <= 1 {
+        return sparse_backward(u, y);
+    }
+    let chunks: Vec<LevelChunks<'_>> = by_level
+        .iter()
+        .map(|rows| {
+            if rows.len() < lanes * 4 {
+                LevelChunks::Single(rows)
+            } else {
+                LevelChunks::Split(equalize_rows_by_nnz(u, rows, lanes))
+            }
+        })
+        .collect();
+    if chunks.iter().all(|c| matches!(c, LevelChunks::Single(_))) {
+        return sparse_backward(u, y);
+    }
+    let mut x = y.to_vec();
+    let x_ptr = SharedVec(x.as_mut_ptr());
+    let bad = Mutex::new(None::<usize>);
+
+    engine.run_steps(lanes, chunks.len(), |lane, level| {
+        let chunk: Option<&[usize]> = match &chunks[level] {
+            LevelChunks::Single(rows) => (lane == 0).then_some(*rows),
+            LevelChunks::Split(cs) => cs.get(lane).map(Vec::as_slice),
+        };
+        if let Some(chunk) = chunk {
+            for &i in chunk {
+                let (cols, vals) = u.row(i);
+                // Dependencies (j > i) live in earlier levels, whose
+                // writes the step barrier has published.
+                let mut acc = unsafe { *x_ptr.0.add(i) };
+                let mut diag = 0.0;
+                for (&j, &v) in cols.iter().zip(vals.iter()) {
+                    if j == i {
+                        diag = v;
+                    } else {
+                        debug_assert!(j > i, "U must be upper triangular");
+                        acc -= v * unsafe { *x_ptr.0.add(j) };
+                    }
+                }
+                if diag == 0.0 {
+                    let mut slot = bad.lock().expect("diag slot");
+                    if slot.is_none() {
+                        *slot = Some(i);
+                    }
+                    return StepCtl::Break;
+                }
+                unsafe { *x_ptr.0.add(i) = acc / diag };
+            }
+        }
+        StepCtl::Continue
+    });
+
+    if let Some(step) = bad.into_inner().expect("diag slot") {
+        return Err(EbvError::SingularPivot { step, value: 0.0, tol: 0.0 });
+    }
+    Ok(x)
 }
 
 /// Split `rows` into `lanes` chunks with near-equal total nnz (greedy,
@@ -514,6 +621,59 @@ mod tests {
                 sparse_forward_unit_levels(f.l(), &b, &by_level, lanes, engine()).unwrap();
             assert!(diff_inf(&seq, &par) < 1e-12, "lanes={lanes}");
         }
+    }
+
+    #[test]
+    fn upper_levels_respect_dependencies() {
+        let a = diag_dominant_sparse(50, 4, GenSeed(19));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let (level, by_level) = levels_of_upper(f.u());
+        // Every dependency j > i of row i satisfies level[j] < level[i].
+        for i in 0..50 {
+            let (cols, _) = f.u().row(i);
+            for &j in cols.iter().filter(|&&j| j > i) {
+                assert!(level[j] < level[i], "row {i} dep {j}");
+            }
+        }
+        // Levels partition rows; the last row has no deps -> level 0.
+        let total: usize = by_level.iter().map(Vec::len).sum();
+        assert_eq!(total, 50);
+        assert_eq!(level[49], 0);
+    }
+
+    #[test]
+    fn level_scheduled_backward_matches_sequential_bitwise() {
+        let a = diag_dominant_sparse(90, 5, GenSeed(20));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let y: Vec<f64> = (0..90).map(|i| (i as f64 * 0.4).sin()).collect();
+        let (_, by_level) = levels_of_upper(f.u());
+        let seq = sparse_backward(f.u(), &y).unwrap();
+        for lanes in [1usize, 2, 4, 7] {
+            for engine_lanes in [1usize, 2, 3] {
+                let engine = LaneEngine::new(engine_lanes);
+                let par =
+                    sparse_backward_levels(f.u(), &y, &by_level, lanes, &engine).unwrap();
+                assert_eq!(par, seq, "lanes={lanes} engine={engine_lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn level_scheduled_backward_detects_zero_diagonal() {
+        // Diagonal U with one zero: no dependencies, so all eight rows
+        // share level 0 — big enough that two lanes split the level and
+        // the zero diagonal is found on the engine path.
+        let mut vals = vec![2.0; 8];
+        vals[5] = 0.0;
+        let u =
+            CsrMatrix::from_raw(8, 8, (0..=8).collect(), (0..8).collect(), vals).unwrap();
+        let (_, by_level) = levels_of_upper(&u);
+        assert_eq!(by_level.len(), 1);
+        let err = sparse_backward_levels(&u, &[1.0; 8], &by_level, 2, engine());
+        assert!(
+            matches!(err, Err(EbvError::SingularPivot { step: 5, .. })),
+            "{err:?}"
+        );
     }
 
     #[test]

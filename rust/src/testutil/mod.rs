@@ -120,6 +120,22 @@ pub fn forall(name: &str, iters: usize, body: impl Fn(&mut Gen) + std::panic::Re
     }
 }
 
+/// Same-pattern value rescale of a CSR matrix: identical structure
+/// (row pointers and column indices), every stored value multiplied by
+/// `s`. The canonical way the suites and benches build the
+/// "same sparsity pattern, different values" refactorization workload
+/// the sparse symbolic/numeric split serves.
+pub fn rescale_csr(a: &crate::matrix::CsrMatrix, s: f64) -> crate::matrix::CsrMatrix {
+    crate::matrix::CsrMatrix::from_raw(
+        a.rows(),
+        a.cols(),
+        a.row_ptr().to_vec(),
+        a.col_idx().to_vec(),
+        a.values().iter().map(|&v| v * s).collect(),
+    )
+    .expect("rescale preserves a valid CSR structure")
+}
+
 /// Assert two f64 slices agree within `tol` (∞-norm), with a helpful diff.
 pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
     assert_eq!(a.len(), b.len(), "{what}: length mismatch");
@@ -135,6 +151,21 @@ pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rescale_preserves_structure_and_scales_values() {
+        let a = crate::matrix::generate::diag_dominant_sparse(
+            12,
+            3,
+            crate::matrix::generate::GenSeed(3),
+        );
+        let b = rescale_csr(&a, -2.0);
+        assert_eq!(a.row_ptr(), b.row_ptr());
+        assert_eq!(a.col_idx(), b.col_idx());
+        for (&va, &vb) in a.values().iter().zip(b.values().iter()) {
+            assert_eq!(vb, va * -2.0);
+        }
+    }
 
     #[test]
     fn forall_passes_trivial_property() {

@@ -31,7 +31,7 @@ use crate::coordinator::request::Timings;
 use crate::matrix::{io as matrix_io, CooMatrix, DenseMatrix};
 use crate::util::error::{EbvError, Result};
 use crate::util::json::emit_str;
-use crate::wire::fingerprint::{combine_dense, fingerprint_csr, Fnv1a};
+use crate::wire::fingerprint::{combine_dense, fingerprint_csr, fingerprint_csr_pattern, Fnv1a};
 use crate::wire::frame::{RequestFrame, ResponseFrame, WireMatrix, WireSolve, WireSolution};
 use crate::wire::scanner::{Event, Scanner};
 
@@ -281,6 +281,7 @@ fn build_dense(acc: ReqAcc) -> Result<WireSolve> {
         key: acc.key,
         no_cache: acc.no_cache,
         fingerprint,
+        pattern_fingerprint: None,
     })
 }
 
@@ -330,8 +331,11 @@ fn build_sparse(acc: ReqAcc, opts: &DecodeOptions) -> Result<WireSolve> {
         )));
     }
     // Hash the assembled CSR so triplet order on the wire cannot split
-    // the cache key for the same matrix.
+    // the cache key for the same matrix; the structure-only pattern key
+    // additionally survives value changes, keying the cached symbolic
+    // analysis for same-pattern refactorizations.
     let fingerprint = fingerprint_csr(&a);
+    let pattern_fingerprint = Some(fingerprint_csr_pattern(&a));
     Ok(WireSolve {
         id: acc.id,
         matrix: WireMatrix::Sparse(a),
@@ -339,6 +343,7 @@ fn build_sparse(acc: ReqAcc, opts: &DecodeOptions) -> Result<WireSolve> {
         key: acc.key,
         no_cache: acc.no_cache,
         fingerprint,
+        pattern_fingerprint,
     })
 }
 
@@ -473,6 +478,11 @@ pub fn encode_response(frame: &ResponseFrame) -> String {
             );
             let _ = write!(
                 out,
+                ",\"symbolic_reuse\":{},\"numeric_refactor\":{}",
+                m.symbolic_reuse, m.numeric_refactor
+            );
+            let _ = write!(
+                out,
                 ",\"engine_lanes\":{},\"engine_jobs\":{},\"engine_steps\":{},\
                  \"engine_barrier_waits\":{},\"panel_width\":{}",
                 m.engine_lanes,
@@ -601,6 +611,12 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                 "factor_hits" => acc.metrics.factor_hits = as_index(expect_num(&mut sc, &k)?, &k)?,
                 "factor_misses" => {
                     acc.metrics.factor_misses = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "symbolic_reuse" => {
+                    acc.metrics.symbolic_reuse = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "numeric_refactor" => {
+                    acc.metrics.numeric_refactor = as_index(expect_num(&mut sc, &k)?, &k)?
                 }
                 "engine_lanes" => acc.metrics.engine_lanes = as_index(expect_num(&mut sc, &k)?, &k)?,
                 "engine_jobs" => acc.metrics.engine_jobs = as_index(expect_num(&mut sc, &k)?, &k)?,
@@ -847,6 +863,8 @@ mod tests {
             batched_requests: 9,
             factor_hits: 6,
             factor_misses: 3,
+            symbolic_reuse: 2,
+            numeric_refactor: 3,
             mean_batch: 1.8,
             lat_mean_s: 0.001,
             lat_p50_s: 0.00075,

@@ -126,6 +126,28 @@ pub fn fingerprint_csr(m: &CsrMatrix) -> u64 {
     h.finish() & KEY_MASK
 }
 
+/// Fingerprint only the *structure* of an assembled CSR matrix: shape,
+/// row pointers and column indices — values excluded. Two same-pattern
+/// matrices with different values share this key while their
+/// [`fingerprint_csr`] value keys differ; that split is what lets the
+/// coordinator cache sparse *symbolic analyses* (fill pattern, level
+/// DAG) across refactorizations where full-factor caching misses. The
+/// domain tag keeps pattern keys from ever aliasing value keys.
+/// Truncated to [`KEY_MASK`] like every wire key.
+pub fn fingerprint_csr_pattern(m: &CsrMatrix) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(b"EBV:csr-pattern");
+    h.write_u64(m.rows() as u64);
+    h.write_u64(m.cols() as u64);
+    for &p in m.row_ptr() {
+        h.write_u64(p as u64);
+    }
+    for &j in m.col_idx() {
+        h.write_u64(j as u64);
+    }
+    h.finish() & KEY_MASK
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,5 +227,31 @@ mod tests {
         let a = diag_dominant_sparse(16, 4, GenSeed(1));
         let b = diag_dominant_sparse(16, 4, GenSeed(2));
         assert_ne!(fingerprint_csr(&a), fingerprint_csr(&b));
+    }
+
+    #[test]
+    fn pattern_key_ignores_values_but_not_structure() {
+        let a = diag_dominant_sparse(16, 4, GenSeed(4));
+        let rescaled = CsrMatrix::from_raw(
+            a.rows(),
+            a.cols(),
+            a.row_ptr().to_vec(),
+            a.col_idx().to_vec(),
+            a.values().iter().map(|&v| v * 3.5).collect(),
+        )
+        .unwrap();
+        // Same structure, different values: pattern keys agree, value
+        // keys split.
+        assert_eq!(fingerprint_csr_pattern(&a), fingerprint_csr_pattern(&rescaled));
+        assert_ne!(fingerprint_csr(&a), fingerprint_csr(&rescaled));
+        // Different structure: pattern keys split too.
+        let other = diag_dominant_sparse(16, 4, GenSeed(5));
+        assert_ne!(fingerprint_csr_pattern(&a), fingerprint_csr_pattern(&other));
+        // Pattern and value domains never alias (distinct tags).
+        assert_ne!(fingerprint_csr_pattern(&a), fingerprint_csr(&a));
+        // 53-bit transport invariant holds for pattern keys too.
+        let k = fingerprint_csr_pattern(&a);
+        assert!(k <= KEY_MASK);
+        assert_eq!(k as f64 as u64, k);
     }
 }

@@ -15,7 +15,7 @@
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::request::Timings;
 use crate::matrix::{CsrMatrix, DenseMatrix};
-use crate::wire::fingerprint::{fingerprint_csr, fingerprint_dense};
+use crate::wire::fingerprint::{fingerprint_csr, fingerprint_csr_pattern, fingerprint_dense};
 
 /// The coefficient matrix carried by a solve frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -54,19 +54,42 @@ pub struct WireSolve {
     pub no_cache: bool,
     /// Content fingerprint of `matrix`.
     pub fingerprint: u64,
+    /// Structure-only fingerprint of `matrix` (sparse frames; `None`
+    /// for dense). Same-pattern/different-values requests share it, so
+    /// the coordinator can reuse the cached *symbolic analysis* and run
+    /// only the level-parallel numeric refactorization even when the
+    /// value-keyed factor cache misses.
+    pub pattern_fingerprint: Option<u64>,
 }
 
 impl WireSolve {
     /// Build a dense solve frame, computing the fingerprint.
     pub fn dense(a: DenseMatrix, b: Vec<f64>) -> WireSolve {
         let fingerprint = fingerprint_dense(a.rows(), a.cols(), a.data());
-        WireSolve { id: None, matrix: WireMatrix::Dense(a), b, key: None, no_cache: false, fingerprint }
+        WireSolve {
+            id: None,
+            matrix: WireMatrix::Dense(a),
+            b,
+            key: None,
+            no_cache: false,
+            fingerprint,
+            pattern_fingerprint: None,
+        }
     }
 
-    /// Build a sparse solve frame, computing the fingerprint.
+    /// Build a sparse solve frame, computing both fingerprints.
     pub fn sparse(a: CsrMatrix, b: Vec<f64>) -> WireSolve {
         let fingerprint = fingerprint_csr(&a);
-        WireSolve { id: None, matrix: WireMatrix::Sparse(a), b, key: None, no_cache: false, fingerprint }
+        let pattern_fingerprint = Some(fingerprint_csr_pattern(&a));
+        WireSolve {
+            id: None,
+            matrix: WireMatrix::Sparse(a),
+            b,
+            key: None,
+            no_cache: false,
+            fingerprint,
+            pattern_fingerprint,
+        }
     }
 
     pub fn with_id(mut self, id: u64) -> WireSolve {
@@ -99,6 +122,18 @@ impl WireSolve {
             None
         } else {
             self.key.or(Some(self.fingerprint))
+        }
+    }
+
+    /// The pattern key this frame submits with (sparse frames only).
+    /// An explicit `key` override does not touch it — the pattern key
+    /// always describes the actual structure — but `no_cache` disables
+    /// it along with everything else.
+    pub fn effective_pattern_key(&self) -> Option<u64> {
+        if self.no_cache {
+            None
+        } else {
+            self.pattern_fingerprint
         }
     }
 }
@@ -173,6 +208,19 @@ mod tests {
         let a = diag_dominant_sparse(8, 3, GenSeed(3));
         let ws = WireSolve::sparse(a.clone(), vec![1.0; 8]);
         assert_eq!(ws.fingerprint, crate::wire::fingerprint::fingerprint_csr(&a));
+        assert_eq!(
+            ws.pattern_fingerprint,
+            Some(crate::wire::fingerprint::fingerprint_csr_pattern(&a))
+        );
+        assert_eq!(ws.effective_pattern_key(), ws.pattern_fingerprint);
         assert_eq!(ws.n(), 8);
+        // An explicit key override leaves the pattern key alone, but
+        // no_cache disables both; dense frames never carry one.
+        let pinned = WireSolve::sparse(a.clone(), vec![1.0; 8]).with_key(7);
+        assert_eq!(pinned.effective_pattern_key(), pinned.pattern_fingerprint);
+        let uncached = WireSolve::sparse(a, vec![1.0; 8]).without_cache();
+        assert_eq!(uncached.effective_pattern_key(), None);
+        let dense = WireSolve::dense(diag_dominant_dense(4, GenSeed(9)), vec![1.0; 4]);
+        assert_eq!(dense.effective_pattern_key(), None);
     }
 }

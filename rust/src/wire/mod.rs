@@ -38,7 +38,9 @@ pub use codec::{
     decode_request, decode_request_with, decode_response, encode_request, encode_response,
     DecodeOptions,
 };
-pub use fingerprint::{fingerprint_csr, fingerprint_dense, Fnv1a, KEY_MASK};
+pub use fingerprint::{
+    fingerprint_csr, fingerprint_csr_pattern, fingerprint_dense, Fnv1a, KEY_MASK,
+};
 pub use frame::{RequestFrame, ResponseFrame, WireMatrix, WireSolution, WireSolve};
 pub use scanner::{parse_via_events, Event, Scanner};
 pub use server::{serve_session, serve_session_with, SessionOptions, SessionStats};

@@ -112,10 +112,13 @@ pub fn serve_session_with<R: BufRead, W: Write>(
 /// Submit one solve and block for its response frame.
 fn run_solve(svc: &ServiceHandle, id: u64, ws: WireSolve) -> ResponseFrame {
     let key = ws.effective_key();
+    let pattern_key = ws.effective_pattern_key();
     let WireSolve { matrix, b, .. } = ws;
     let submitted = match matrix {
         WireMatrix::Dense(a) => svc.submit_dense(Arc::new(a), b, key),
-        WireMatrix::Sparse(a) => svc.submit_sparse(Arc::new(a), b, key),
+        WireMatrix::Sparse(a) => {
+            svc.submit_sparse_with_pattern(Arc::new(a), b, key, pattern_key)
+        }
     };
     let rx = match submitted {
         Ok(rx) => rx,

@@ -1,0 +1,180 @@
+//! Property suite pinning the sparse symbolic/numeric split
+//! (testutil framework — the offline stand-in for proptest).
+//!
+//! The contract (see `rust/DESIGN.md` §Sparse symbolic/numeric split
+//! and the bit-identity ledger):
+//!
+//! * the level-parallel numeric refactorization is **bitwise** equal to
+//!   the monolithic `SparseLu::factor` — structure and values — for
+//!   every lane count and engine size, including refactorizations of
+//!   same-pattern/different-values matrices;
+//! * the fully level-scheduled `solve_par` (forward *and* backward) is
+//!   bitwise equal to the sequential solve;
+//! * `FactorPlan::sparse_levels` conserves the per-lane arithmetic of
+//!   the row-per-barrier plan under every `RowDist` while counting one
+//!   barrier per DAG level;
+//! * same-pattern/different-values requests reuse the cached symbolic
+//!   object (Arc pointer equality) and increment `symbolic_reuse` in
+//!   the wire metrics frame.
+
+use std::sync::Arc;
+
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::worker::FactorCache;
+use ebv_solve::coordinator::SolverService;
+use ebv_solve::ebv::plan::FactorPlan;
+use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
+use ebv_solve::exec::LaneEngine;
+use ebv_solve::matrix::generate::{diag_dominant_sparse, poisson_2d, rhs, GenSeed};
+use ebv_solve::solver::{SparseLu, SparseSymbolic};
+use ebv_solve::testutil::{forall, rescale_csr};
+use ebv_solve::wire::{
+    decode_response, encode_request, serve_session, RequestFrame, ResponseFrame, WireSolve,
+};
+
+#[test]
+fn prop_numeric_refactor_is_bitwise_sparse_lu() {
+    let engines: Vec<Arc<LaneEngine>> =
+        [1usize, 2, 4].iter().map(|&l| Arc::new(LaneEngine::new(l))).collect();
+    forall("level-parallel numeric ≡ SparseLu bitwise across lanes/engines", 30, |g| {
+        let n = g.usize_in(5, 120);
+        let deg = g.usize_in(2, 7);
+        let a = diag_dominant_sparse(n, deg, GenSeed(g.seed()));
+        let reference = SparseLu::new().factor(&a).unwrap();
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        let lanes = g.usize_in(1, 8);
+        let engine = &engines[g.usize_in(0, 2)];
+        let f = sym.factor_par_on(&a, lanes, engine).unwrap();
+        assert_eq!(f.l(), reference.l(), "n={n} lanes={lanes} engine={}", engine.lanes());
+        assert_eq!(f.u(), reference.u(), "n={n} lanes={lanes} engine={}", engine.lanes());
+    });
+}
+
+#[test]
+fn prop_refactor_with_new_values_is_bitwise() {
+    forall("same-pattern refactor ≡ fresh SparseLu on the new values", 25, |g| {
+        let n = g.usize_in(5, 100);
+        let a = diag_dominant_sparse(n, g.usize_in(2, 6), GenSeed(g.seed()));
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        let a2 = rescale_csr(&a, g.f64_in(0.25, 4.0));
+        let reference = SparseLu::new().factor(&a2).unwrap();
+        let lanes = g.usize_in(1, 6);
+        let f = sym.factor_par(&a2, lanes).unwrap();
+        assert_eq!(f.l(), reference.l(), "n={n} lanes={lanes}");
+        assert_eq!(f.u(), reference.u(), "n={n} lanes={lanes}");
+    });
+}
+
+#[test]
+fn prop_level_parallel_solve_is_bitwise_sequential() {
+    let engines: Vec<Arc<LaneEngine>> =
+        [1usize, 2, 3].iter().map(|&l| Arc::new(LaneEngine::new(l))).collect();
+    forall("solve_par (forward + backward levels) ≡ sequential solve", 25, |g| {
+        let n = g.usize_in(5, 120);
+        let a = diag_dominant_sparse(n, g.usize_in(2, 6), GenSeed(g.seed()));
+        let b = rhs(n, GenSeed(g.seed() ^ 0x5EED));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let seq = f.solve(&b).unwrap();
+        let lanes = g.usize_in(1, 8);
+        let engine = &engines[g.usize_in(0, 2)];
+        let par = f.solve_par_on(&b, lanes, engine).unwrap();
+        assert_eq!(par, seq, "n={n} lanes={lanes} engine={}", engine.lanes());
+    });
+}
+
+/// The acceptance grid, pinned deterministically: a Poisson pattern
+/// (real fill, shallow DAG) across every lane count, engine size and —
+/// through the level-aware plan — every `RowDist` variant.
+#[test]
+fn split_checklist_grid() {
+    let a = poisson_2d(10);
+    let n = a.rows();
+    let reference = SparseLu::new().factor(&a).unwrap();
+    let sym = SparseSymbolic::analyze(&a).unwrap();
+    assert!(sym.level_count() < n, "Poisson DAG must be shallow");
+    for lanes in [1usize, 2, 4, 8] {
+        for engine_lanes in [1usize, 2, 4] {
+            let engine = LaneEngine::new(engine_lanes);
+            let f = sym.factor_par_on(&a, lanes, &engine).unwrap();
+            assert_eq!(f.l(), reference.l(), "lanes={lanes} engine={engine_lanes}");
+            assert_eq!(f.u(), reference.u(), "lanes={lanes} engine={engine_lanes}");
+        }
+    }
+    for dist in RowDist::ALL {
+        let sched = LaneSchedule::build(n, 4, dist);
+        let row_plan = FactorPlan::sparse(reference.l(), reference.u(), &sched);
+        let lvl_plan =
+            FactorPlan::sparse_levels(reference.l(), reference.u(), sym.levels(), &sched);
+        assert_eq!(lvl_plan.total_flops(), row_plan.total_flops(), "{dist:?}");
+        assert_eq!(lvl_plan.lane_flops, row_plan.lane_flops, "{dist:?}");
+        assert_eq!(lvl_plan.barriers, sym.level_count(), "{dist:?}");
+        assert!(lvl_plan.barriers < row_plan.barriers, "{dist:?}");
+    }
+}
+
+#[test]
+fn factor_cache_shares_one_symbolic_arc() {
+    let a = diag_dominant_sparse(40, 4, GenSeed(71));
+    let sym = Arc::new(SparseSymbolic::analyze(&a).unwrap());
+    let mut cache = FactorCache::with_capacity(4);
+    cache.put_symbolic(9, Arc::clone(&sym));
+    let first = cache.get_symbolic(9).expect("cached");
+    let second = cache.get_symbolic(9).expect("cached");
+    assert!(Arc::ptr_eq(&first, &second));
+    assert!(Arc::ptr_eq(&first, &sym));
+    // Symbolic entries obey the shared LRU capacity like factors do.
+    let mut tiny = FactorCache::with_capacity(1);
+    tiny.put_symbolic(1, Arc::clone(&sym));
+    tiny.put_symbolic(2, Arc::clone(&sym));
+    assert!(tiny.get_symbolic(1).is_none(), "LRU evicted");
+    assert!(tiny.get_symbolic(2).is_some());
+}
+
+#[test]
+fn wire_session_reports_symbolic_reuse() {
+    // Two solve_sparse frames with the same sparsity pattern but
+    // different values: distinct value fingerprints (factor cache
+    // misses twice) but one pattern fingerprint — the second request
+    // must skip symbolic analysis, and the metrics frame must say so.
+    let svc = SolverService::start(ServiceConfig {
+        lanes: 2,
+        engine_lanes: 2,
+        use_runtime: false,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let a = diag_dominant_sparse(32, 4, GenSeed(72));
+    let a2 = rescale_csr(&a, 3.0);
+    let f1 = encode_request(&RequestFrame::SolveSparse(WireSolve::sparse(
+        a.clone(),
+        vec![1.0; 32],
+    )));
+    let f2 = encode_request(&RequestFrame::SolveSparse(WireSolve::sparse(
+        a2.clone(),
+        vec![2.0; 32],
+    )));
+    let input = format!("{f1}\n{f2}\n{{\"op\":\"metrics\"}}\n{{\"op\":\"shutdown\"}}\n");
+    let mut out = Vec::new();
+    let stats = serve_session(&svc, input.as_bytes(), &mut out).unwrap();
+    svc.shutdown();
+    assert_eq!(stats.solves, 2);
+    assert_eq!(stats.errors, 0);
+
+    let text = String::from_utf8(out).unwrap();
+    let frames: Vec<ResponseFrame> =
+        text.lines().map(|l| decode_response(l).unwrap()).collect();
+    for frame in &frames[..2] {
+        let ResponseFrame::Solution(s) = frame else { panic!("{frame:?}") };
+        assert!(s.result.is_ok());
+        assert!(s.residual < 1e-9);
+        assert_eq!(s.backend, "native-sparse");
+    }
+    let ResponseFrame::Metrics(m) = &frames[2] else { panic!("{frames:?}") };
+    assert_eq!(m.factor_misses, 2, "{m:?}");
+    assert_eq!(m.symbolic_reuse, 1, "{m:?}");
+    assert_eq!(m.numeric_refactor, 2, "{m:?}");
+    // And the answers are the ones the monolithic path would produce.
+    let ResponseFrame::Solution(s2) = &frames[1] else { unreachable!() };
+    let expect = SparseLu::new().factor(&a2).unwrap().solve(&[2.0; 32]).unwrap();
+    assert_eq!(s2.result.as_ref().unwrap(), &expect);
+}
