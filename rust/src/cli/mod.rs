@@ -102,6 +102,11 @@ COMMANDS:
                                              split with level-parallel
                                              refactorization; default true,
                                              false = monolithic factor)
+              --devices <D>                 (two-level device-sharded
+                                             execution; default 1 = flat,
+                                             D > 1 shards rows across D
+                                             device groups — bitwise
+                                             identical results)
               --seed <u64>                  (default 7)
     serve     Serve solves over the NDJSON wire protocol on stdin/stdout
               (see README.md §Wire protocol for the frame format)
@@ -110,6 +115,10 @@ COMMANDS:
                                              execution engine; 0 = all
                                              cores, see README.md
                                              §Execution engine)
+              --devices <D>                 (device shards of the two-level
+                                             runtime; default 1 = flat,
+                                             D > 1 partitions the engine
+                                             lanes into D device groups)
               --panel-width <nb>            (blocked factorization panel
                                              width; default 64)
               --sparse-parallel <bool>      (sparse symbolic/numeric split

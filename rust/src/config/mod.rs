@@ -117,6 +117,14 @@ pub struct ServiceConfig {
     /// `lanes`, which is the schedule *width* the solvers request —
     /// widths virtualize onto the resident pool.
     pub engine_lanes: usize,
+    /// Device shards of the two-level runtime (`exec::DeviceSet`).
+    /// `1` (the default) keeps every solve on the flat shared engine;
+    /// `D > 1` partitions the resolved engine lanes into `D` device
+    /// groups and runs the dense factorization, the sparse numeric
+    /// refactorization and the level-scheduled trisolves
+    /// device-sharded, with the pivot-row broadcast staged between
+    /// steps. Results are bitwise identical for every `D`.
+    pub devices: usize,
     /// Panel width `nb` of the blocked dense factorization the workers
     /// run (`1` = column-at-a-time, bit-identical to `SeqLu`).
     pub panel_width: usize,
@@ -144,6 +152,7 @@ impl Default for ServiceConfig {
             batch_window_us: 200,
             queue_capacity: 1024,
             engine_lanes: 0,
+            devices: 1,
             panel_width: crate::solver::lu_ebv::DEFAULT_PANEL_WIDTH,
             sparse_parallel: true,
             artifacts_dir: "artifacts".to_string(),
@@ -170,6 +179,7 @@ impl ServiceConfig {
             batch_window_us: raw.get_parsed("service", "batch_window_us", d.batch_window_us)?,
             queue_capacity: raw.get_parsed("service", "queue_capacity", d.queue_capacity)?,
             engine_lanes: raw.get_parsed("service", "engine_lanes", d.engine_lanes)?,
+            devices: raw.get_parsed("service", "devices", d.devices)?,
             panel_width: raw.get_parsed("service", "panel_width", d.panel_width)?,
             sparse_parallel: raw.get_parsed("service", "sparse_parallel", d.sparse_parallel)?,
             artifacts_dir: raw
@@ -191,6 +201,9 @@ impl ServiceConfig {
         }
         if self.panel_width == 0 {
             return Err(EbvError::Config("service.panel_width must be >= 1".into()));
+        }
+        if self.devices == 0 {
+            return Err(EbvError::Config("service.devices must be >= 1".into()));
         }
         if self.queue_capacity < self.max_batch {
             return Err(EbvError::Config(
@@ -245,6 +258,17 @@ mod tests {
         let raw = RawConfig::parse("[service]\npanel_width = 0\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err());
         let raw = RawConfig::parse("[service]\npanel_width = wide\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn devices_knob_parses_and_validates() {
+        assert_eq!(ServiceConfig::default().devices, 1, "flat engine is the default");
+        let raw = RawConfig::parse("[service]\ndevices = 4\n").unwrap();
+        assert_eq!(ServiceConfig::from_raw(&raw).unwrap().devices, 4);
+        let raw = RawConfig::parse("[service]\ndevices = 0\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[service]\ndevices = many\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err());
     }
 

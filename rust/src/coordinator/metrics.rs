@@ -106,6 +106,20 @@ pub struct MetricsSnapshot {
     /// [`ServiceHandle::metrics_snapshot`](crate::coordinator::ServiceHandle::metrics_snapshot)
     /// fills it in — `ServiceMetrics` itself has no solver config.
     pub panel_width: u64,
+    /// Device shards of the two-level runtime (`service.devices`;
+    /// 1 = flat engine). Like the engine fields, zero until a
+    /// service handle merges its device-set stats in.
+    pub devices: u64,
+    /// Resident lanes per device engine (0 when running flat).
+    pub device_lanes: u64,
+    /// Device-sharded jobs executed across the set.
+    pub device_jobs: u64,
+    /// Exchange stages executed (one per sharded step).
+    pub exchange_steps: u64,
+    /// `f64` elements broadcast through the staged exchange (×8 for
+    /// bytes) — the measured counterpart of the cost model's
+    /// interconnect term.
+    pub exchange_elems: u64,
 }
 
 /// All service-level metrics.
@@ -174,6 +188,11 @@ impl ServiceMetrics {
             engine_steps: 0,
             engine_barrier_waits: 0,
             panel_width: 0,
+            devices: 0,
+            device_lanes: 0,
+            device_jobs: 0,
+            exchange_steps: 0,
+            exchange_elems: 0,
         }
     }
 
@@ -187,6 +206,21 @@ impl ServiceMetrics {
         snap.engine_jobs = engine.jobs;
         snap.engine_steps = engine.steps;
         snap.engine_barrier_waits = engine.barrier_waits;
+        snap
+    }
+
+    /// Fold a device-set snapshot into a metrics snapshot (the service
+    /// handle does this when `service.devices > 1`; a flat service
+    /// reports `devices = 1` with the per-device fields zero).
+    pub fn merge_devices(
+        mut snap: MetricsSnapshot,
+        devices: crate::exec::DeviceSetSnapshot,
+    ) -> MetricsSnapshot {
+        snap.devices = devices.devices;
+        snap.device_lanes = devices.lanes_per_device;
+        snap.device_jobs = devices.sharded_jobs;
+        snap.exchange_steps = devices.exchange_steps;
+        snap.exchange_elems = devices.exchange_elems;
         snap
     }
 
@@ -299,6 +333,29 @@ mod tests {
         // merge_engine only fills engine fields; the panel width comes
         // from the service handle.
         assert_eq!(s.panel_width, 0);
+        assert_eq!(s.devices, 0, "device fields come from merge_devices");
+    }
+
+    #[test]
+    fn merge_devices_fills_device_fields() {
+        let m = ServiceMetrics::default();
+        m.completed.store(2, Ordering::Relaxed);
+        let d = crate::exec::DeviceSetSnapshot {
+            devices: 4,
+            lanes_per_device: 2,
+            sharded_jobs: 5,
+            exchange_steps: 300,
+            exchange_elems: 12_000,
+        };
+        let s = ServiceMetrics::merge_devices(m.snapshot(), d);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.devices, 4);
+        assert_eq!(s.device_lanes, 2);
+        assert_eq!(s.device_jobs, 5);
+        assert_eq!(s.exchange_steps, 300);
+        assert_eq!(s.exchange_elems, 12_000);
+        // merge_devices leaves the engine fields alone.
+        assert_eq!(s.engine_lanes, 0);
     }
 
     #[test]

@@ -143,6 +143,11 @@ pub struct WorkerCtx {
     /// The one resident lane engine every worker's parallel factor and
     /// substitution work submits to (sized by `engine_lanes` config).
     pub engine: Arc<LaneEngine>,
+    /// Two-level device runtime (`service.devices > 1`): when set, the
+    /// dense factorization, the sparse numeric refactorization and the
+    /// level-scheduled trisolves run device-sharded on it instead of
+    /// flat on `engine`. Bitwise identical results either way.
+    pub device_set: Option<Arc<crate::exec::DeviceSet>>,
     pub cache: Mutex<FactorCache>,
     /// id → reply channel; workers remove entries as they respond.
     pub replies: Mutex<HashMap<u64, mpsc::Sender<SolveResponse>>>,
@@ -258,10 +263,13 @@ fn dense_factors(
         }
     }
     ctx.metrics.factor_misses.fetch_add(1, Ordering::Relaxed);
-    let solver = EbvLu::with_lanes(ctx.solve_lanes)
+    let mut solver = EbvLu::with_lanes(ctx.solve_lanes)
         .with_dist(ctx.dist)
         .panel(ctx.panel_width)
         .with_engine(Arc::clone(&ctx.engine));
+    if let Some(set) = &ctx.device_set {
+        solver = solver.with_devices(Arc::clone(set));
+    }
     let f = Arc::new(solver.factor(a)?);
     if let Some(key) = req.matrix_key {
         ctx.cache.lock().expect("cache").put_dense(key, Arc::clone(&f));
@@ -331,7 +339,10 @@ fn sparse_factors(req: &SolveRequest, ctx: &WorkerCtx) -> Result<Arc<SparseLuFac
             }
         };
         ctx.metrics.numeric_refactor.fetch_add(1, Ordering::Relaxed);
-        Arc::new(symbolic.factor_par_on(a, ctx.solve_lanes, &ctx.engine)?)
+        match &ctx.device_set {
+            Some(set) => Arc::new(symbolic.factor_sharded(a, ctx.solve_lanes, set.as_ref())?),
+            None => Arc::new(symbolic.factor_par_on(a, ctx.solve_lanes, &ctx.engine)?),
+        }
     } else {
         Arc::new(SparseLu::new().factor(a)?)
     };
@@ -353,9 +364,13 @@ fn solve_sparse_batch(
     };
     reqs.iter()
         .map(|r| {
-            let x = factors
-                .solve_par_on(r.payload.rhs(), ctx.solve_lanes, &ctx.engine)
-                .map_err(|e| e.to_string());
+            let x = match &ctx.device_set {
+                Some(set) => {
+                    factors.solve_sharded(r.payload.rhs(), ctx.solve_lanes, set.as_ref())
+                }
+                None => factors.solve_par_on(r.payload.rhs(), ctx.solve_lanes, &ctx.engine),
+            }
+            .map_err(|e| e.to_string());
             (r.id, x)
         })
         .collect()
@@ -427,6 +442,10 @@ mod tests {
     use std::time::Instant;
 
     fn ctx() -> Arc<WorkerCtx> {
+        ctx_with_devices(None)
+    }
+
+    fn ctx_with_devices(device_set: Option<Arc<crate::exec::DeviceSet>>) -> Arc<WorkerCtx> {
         Arc::new(WorkerCtx {
             router: Router::new(false, []),
             solve_lanes: 2,
@@ -434,6 +453,7 @@ mod tests {
             panel_width: 64,
             sparse_parallel: true,
             engine: Arc::new(LaneEngine::new(2)),
+            device_set,
             cache: Mutex::new(FactorCache::with_capacity(4)),
             replies: Mutex::new(HashMap::new()),
             metrics: Arc::new(ServiceMetrics::default()),
@@ -583,6 +603,35 @@ mod tests {
         assert!(resps[0].result.is_ok());
         assert_eq!(base.metrics.numeric_refactor.load(Ordering::Relaxed), 0);
         assert!(base.cache.lock().unwrap().get_symbolic(601).is_none());
+    }
+
+    #[test]
+    fn device_sharded_worker_is_bitwise_flat() {
+        // The same traffic through a flat and a 2-device worker must
+        // produce identical bits, and the sharded worker must actually
+        // run on the set (dense n=160 clears the sequential threshold).
+        let set = Arc::new(crate::exec::DeviceSet::new(2, 1));
+        let flat = ctx();
+        let sharded = ctx_with_devices(Some(Arc::clone(&set)));
+        let a = Arc::new(diag_dominant_dense(160, GenSeed(77)));
+        let sa = Arc::new(diag_dominant_sparse(96, 5, GenSeed(78)));
+        let mut answers = Vec::new();
+        for ctx in [&flat, &sharded] {
+            let reqs = vec![
+                SolveRequest::dense(0, Arc::clone(&a), vec![1.0; 160], None),
+                SolveRequest::sparse(1, Arc::clone(&sa), vec![1.0; 96], None),
+            ];
+            let mut got = Vec::new();
+            for req in reqs {
+                let batch = Batch { requests: vec![req], opened_at: Instant::now() };
+                let resps = deliver(batch, ctx);
+                assert!(resps[0].result.is_ok(), "{:?}", resps[0].result);
+                got.push(resps[0].result.clone().unwrap());
+            }
+            answers.push(got);
+        }
+        assert_eq!(answers[0], answers[1], "sharded answers must be bitwise flat");
+        assert!(set.snapshot().sharded_jobs >= 1, "{:?}", set.snapshot());
     }
 
     #[test]

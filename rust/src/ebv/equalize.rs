@@ -150,21 +150,57 @@ pub fn equalize_weights(weights: &[usize], bins: usize) -> Vec<Vec<usize>> {
     out
 }
 
-/// Load imbalance of a unit set: `max(total_len) / mean(total_len)`.
-/// 1.0 is perfect balance; the paper's fold achieves exactly 1.0 for
-/// even `n-1`.
-pub fn imbalance(units: &[WorkUnit]) -> f64 {
-    if units.is_empty() {
+/// Hierarchical deal for the two-level device runtime: weights go
+/// first to `devices` bins (greedy LPT), then each device's share goes
+/// to `lanes` bins (greedy LPT again) — the EBV balance criterion
+/// applied at cluster scope and then within a device, matching the
+/// paper's "convenient for … multi devices" claim. Returns
+/// `out[device][lane]` index lists, each sorted ascending; always
+/// exactly `devices × lanes` lists (possibly empty). Fully
+/// deterministic (inherits [`equalize_weights`]'s tie-breaking).
+pub fn equalize_hierarchical(
+    weights: &[usize],
+    devices: usize,
+    lanes: usize,
+) -> Vec<Vec<Vec<usize>>> {
+    assert!(devices > 0, "equalize_hierarchical: devices must be positive");
+    assert!(lanes > 0, "equalize_hierarchical: lanes must be positive");
+    equalize_weights(weights, devices)
+        .into_iter()
+        .map(|dev_items| {
+            let dev_weights: Vec<usize> = dev_items.iter().map(|&i| weights[i]).collect();
+            equalize_weights(&dev_weights, lanes)
+                .into_iter()
+                .map(|bin| bin.into_iter().map(|k| dev_items[k]).collect())
+                .collect()
+        })
+        .collect()
+}
+
+/// `max / mean` of a load vector — **the** balance metric of the repo
+/// (1.0 is perfect), shared by the pairing-level [`imbalance`], the
+/// schedule-level `LaneSchedule::work_imbalance`, the per-device stats
+/// of the sharded runtime and the cost-model plans. Empty or all-zero
+/// loads read as perfectly balanced.
+pub fn max_mean_imbalance(loads: &[usize]) -> f64 {
+    if loads.is_empty() {
         return 1.0;
     }
-    let max = units.iter().map(|u| u.total_len).max().unwrap() as f64;
-    let sum: usize = units.iter().map(|u| u.total_len).sum();
-    let mean = sum as f64 / units.len() as f64;
+    let max = *loads.iter().max().expect("non-empty") as f64;
+    let mean = loads.iter().sum::<usize>() as f64 / loads.len() as f64;
     if mean == 0.0 {
         1.0
     } else {
         max / mean
     }
+}
+
+/// Load imbalance of a unit set: `max(total_len) / mean(total_len)`.
+/// 1.0 is perfect balance; the paper's fold achieves exactly 1.0 for
+/// even `n-1`.
+pub fn imbalance(units: &[WorkUnit]) -> f64 {
+    let loads: Vec<usize> = units.iter().map(|u| u.total_len).collect();
+    max_mean_imbalance(&loads)
 }
 
 #[cfg(test)]
@@ -290,5 +326,61 @@ mod tests {
     #[should_panic(expected = "bins")]
     fn zero_bins_panics() {
         equalize_weights(&[1, 2], 0);
+    }
+
+    #[test]
+    fn hierarchical_partitions_all_indices() {
+        let weights: Vec<usize> = (0..53).map(|i| (i * 13 + 5) % 17).collect();
+        let deal = equalize_hierarchical(&weights, 3, 4);
+        assert_eq!(deal.len(), 3);
+        assert!(deal.iter().all(|d| d.len() == 4));
+        let mut all: Vec<usize> = deal.iter().flatten().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..53).collect::<Vec<_>>());
+        for lane in deal.iter().flatten() {
+            assert!(lane.windows(2).all(|w| w[0] < w[1]), "lanes sorted ascending");
+        }
+    }
+
+    #[test]
+    fn hierarchical_balances_both_levels() {
+        let weights: Vec<usize> = (1..=96).collect();
+        let deal = equalize_hierarchical(&weights, 4, 2);
+        let device_loads: Vec<usize> = deal
+            .iter()
+            .map(|d| d.iter().flatten().map(|&i| weights[i]).sum())
+            .collect();
+        assert!(max_mean_imbalance(&device_loads) < 1.05, "{device_loads:?}");
+        let lane_loads: Vec<usize> = deal
+            .iter()
+            .flatten()
+            .map(|lane| lane.iter().map(|&i| weights[i]).sum())
+            .collect();
+        assert!(max_mean_imbalance(&lane_loads) < 1.1, "{lane_loads:?}");
+    }
+
+    #[test]
+    fn hierarchical_is_deterministic_and_degenerates() {
+        let weights = vec![7usize, 7, 3, 3, 1];
+        assert_eq!(
+            equalize_hierarchical(&weights, 2, 3),
+            equalize_hierarchical(&weights, 2, 3)
+        );
+        // One device degenerates to the flat deal.
+        let flat = equalize_weights(&weights, 3);
+        assert_eq!(equalize_hierarchical(&weights, 1, 3), vec![flat]);
+    }
+
+    #[test]
+    fn max_mean_imbalance_matches_unit_imbalance() {
+        let vs = bivectorize(33);
+        for mode in [PairingMode::PaperFold, PairingMode::Block, PairingMode::GreedyLpt] {
+            let units = equalize(&vs, mode, 4);
+            let loads: Vec<usize> = units.iter().map(|u| u.total_len).collect();
+            assert_eq!(imbalance(&units), max_mean_imbalance(&loads), "{mode:?}");
+        }
+        assert_eq!(max_mean_imbalance(&[]), 1.0);
+        assert_eq!(max_mean_imbalance(&[0, 0]), 1.0);
+        assert_eq!(max_mean_imbalance(&[4, 2]), 4.0 / 3.0);
     }
 }

@@ -22,5 +22,8 @@ pub mod plan;
 pub mod schedule;
 
 pub use bivector::{bivectorize, row_total_work, BiVector, Triangle};
-pub use equalize::{equalize, equalize_weights, imbalance, PairingMode, WorkUnit};
+pub use equalize::{
+    equalize, equalize_hierarchical, equalize_weights, imbalance, max_mean_imbalance,
+    PairingMode, WorkUnit,
+};
 pub use schedule::{LaneSchedule, RowDist};

@@ -48,15 +48,72 @@ impl RowDist {
     }
 }
 
-/// A static assignment of matrix rows to `lanes` worker lanes.
+/// A static assignment of matrix rows to `lanes` worker lanes —
+/// optionally a **two-level** assignment where the lanes are grouped
+/// into device shards (see [`LaneSchedule::build_sharded`]): global
+/// lane `g` belongs to device `g / lanes_per_device`.
 #[derive(Debug, Clone)]
 pub struct LaneSchedule {
     n: usize,
     lanes: usize,
-    /// `owner[i]` = lane that owns row `i`.
+    /// Device shards the lanes are grouped into (1 for flat builds).
+    devices: usize,
+    /// Lanes per device shard (= `lanes` for flat builds).
+    lanes_per_device: usize,
+    /// `owner[i]` = (global) lane that owns row `i`.
     owner: Vec<usize>,
     /// `rows[l]` = sorted rows owned by lane `l`.
     rows: Vec<Vec<usize>>,
+}
+
+/// Assign `rows_in` (ascending) to `lanes` local lanes with `dist`,
+/// writing `lane_base + local` into `owner`. The flat build passes the
+/// identity row list; the sharded build passes each device's share, so
+/// the distribution patterns apply *within* a device exactly as they
+/// apply to the whole matrix in the flat case.
+fn deal_rows(rows_in: &[usize], lanes: usize, n: usize, dist: RowDist, lane_base: usize, owner: &mut [usize]) {
+    let m = rows_in.len();
+    match dist {
+        RowDist::Block => {
+            let chunk = m.div_ceil(lanes);
+            for (k, &i) in rows_in.iter().enumerate() {
+                owner[i] = lane_base + (k / chunk.max(1)).min(lanes - 1);
+            }
+        }
+        RowDist::Cyclic => {
+            for (k, &i) in rows_in.iter().enumerate() {
+                owner[i] = lane_base + k % lanes;
+            }
+        }
+        RowDist::EbvFold => {
+            // Deal fold pairs (first, last) round-robin to lanes: pair k
+            // goes to lane k % lanes; both members share the lane.
+            let mut k = 0usize;
+            let (mut lo, mut hi) = (0usize, m.saturating_sub(1));
+            while lo < hi {
+                owner[rows_in[lo]] = lane_base + k % lanes;
+                owner[rows_in[hi]] = lane_base + k % lanes;
+                k += 1;
+                lo += 1;
+                hi -= 1;
+            }
+            if lo == hi && m > 0 {
+                owner[rows_in[lo]] = lane_base + k % lanes;
+            }
+        }
+        RowDist::GreedyLpt => {
+            // Exact per-row elimination work, largest-first, onto the
+            // least-loaded lane.
+            let mut idx: Vec<usize> = rows_in.to_vec();
+            idx.sort_by_key(|&i| std::cmp::Reverse(row_total_work(i, n)));
+            let mut load = vec![0usize; lanes];
+            for i in idx {
+                let lane = (0..lanes).min_by_key(|&l| load[l]).expect("lanes > 0");
+                owner[i] = lane_base + lane;
+                load[lane] += row_total_work(i, n);
+            }
+        }
+    }
 }
 
 impl LaneSchedule {
@@ -64,53 +121,46 @@ impl LaneSchedule {
     pub fn build(n: usize, lanes: usize, dist: RowDist) -> LaneSchedule {
         assert!(lanes > 0, "LaneSchedule: lanes must be positive");
         let mut owner = vec![0usize; n];
-        match dist {
-            RowDist::Block => {
-                let chunk = n.div_ceil(lanes);
-                for (i, o) in owner.iter_mut().enumerate() {
-                    *o = (i / chunk.max(1)).min(lanes - 1);
-                }
-            }
-            RowDist::Cyclic => {
-                for (i, o) in owner.iter_mut().enumerate() {
-                    *o = i % lanes;
-                }
-            }
-            RowDist::EbvFold => {
-                // Deal fold pairs (i, n-1-i) round-robin to lanes: pair k
-                // goes to lane k % lanes; both members share the lane.
-                let mut k = 0usize;
-                let (mut lo, mut hi) = (0usize, n.saturating_sub(1));
-                while lo < hi {
-                    owner[lo] = k % lanes;
-                    owner[hi] = k % lanes;
-                    k += 1;
-                    lo += 1;
-                    hi -= 1;
-                }
-                if lo == hi && n > 0 {
-                    owner[lo] = k % lanes;
-                }
-            }
-            RowDist::GreedyLpt => {
-                // Exact per-row elimination work, largest-first, onto the
-                // least-loaded lane.
-                let mut idx: Vec<usize> = (0..n).collect();
-                idx.sort_by_key(|&i| std::cmp::Reverse(row_total_work(i, n)));
-                let mut load = vec![0usize; lanes];
-                for i in idx {
-                    let lane =
-                        (0..lanes).min_by_key(|&l| load[l]).expect("lanes > 0");
-                    owner[i] = lane;
-                    load[lane] += row_total_work(i, n);
-                }
-            }
-        }
+        let all: Vec<usize> = (0..n).collect();
+        deal_rows(&all, lanes, n, dist, 0, &mut owner);
         let mut rows = vec![Vec::new(); lanes];
         for (i, &o) in owner.iter().enumerate() {
             rows[o].push(i);
         }
-        LaneSchedule { n, lanes, owner, rows }
+        LaneSchedule { n, lanes, devices: 1, lanes_per_device: lanes, owner, rows }
+    }
+
+    /// Build a **two-level** ownership map for the device-sharded
+    /// runtime: rows are first dealt to `devices` shards by greedy LPT
+    /// over exact per-row elimination work (the EBV balance criterion
+    /// at cluster scope — deterministic, heavier rows first), then each
+    /// device's share is dealt to its `lanes_per_device` lanes with
+    /// `dist`, exactly as the flat build deals the whole matrix. Global
+    /// lane ids are device-major: device `d` owns lanes
+    /// `d*lanes_per_device .. (d+1)*lanes_per_device`.
+    ///
+    /// `build_sharded(n, 1, lanes, dist)` is identical to
+    /// `build(n, lanes, dist)` (one device's share is every row).
+    pub fn build_sharded(
+        n: usize,
+        devices: usize,
+        lanes_per_device: usize,
+        dist: RowDist,
+    ) -> LaneSchedule {
+        assert!(devices > 0, "LaneSchedule: devices must be positive");
+        assert!(lanes_per_device > 0, "LaneSchedule: lanes_per_device must be positive");
+        let weights: Vec<usize> = (0..n).map(|i| row_total_work(i, n)).collect();
+        let shards = crate::ebv::equalize::equalize_weights(&weights, devices);
+        let mut owner = vec![0usize; n];
+        for (d, shard) in shards.iter().enumerate() {
+            deal_rows(shard, lanes_per_device, n, dist, d * lanes_per_device, &mut owner);
+        }
+        let lanes = devices * lanes_per_device;
+        let mut rows = vec![Vec::new(); lanes];
+        for (i, &o) in owner.iter().enumerate() {
+            rows[o].push(i);
+        }
+        LaneSchedule { n, lanes, devices, lanes_per_device, owner, rows }
     }
 
     #[inline]
@@ -121,6 +171,30 @@ impl LaneSchedule {
     #[inline]
     pub fn lanes(&self) -> usize {
         self.lanes
+    }
+
+    /// Device shards the lanes are grouped into (1 for flat builds).
+    #[inline]
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Lanes per device shard (= [`LaneSchedule::lanes`] for flat builds).
+    #[inline]
+    pub fn lanes_per_device(&self) -> usize {
+        self.lanes_per_device
+    }
+
+    /// Device owning global lane `l`.
+    #[inline]
+    pub fn device_of_lane(&self, l: usize) -> usize {
+        l / self.lanes_per_device
+    }
+
+    /// Device owning row `i`.
+    #[inline]
+    pub fn device_of_row(&self, i: usize) -> usize {
+        self.device_of_lane(self.owner[i])
     }
 
     /// Lane owning row `i`.
@@ -168,16 +242,28 @@ impl LaneSchedule {
         w
     }
 
-    /// `max / mean` of per-lane work — the schedule-level balance metric.
+    /// `max / mean` of per-lane work — the schedule-level balance
+    /// metric (the shared [`max_mean_imbalance`] formula).
+    ///
+    /// [`max_mean_imbalance`]: crate::ebv::equalize::max_mean_imbalance
     pub fn work_imbalance(&self) -> f64 {
-        let w = self.lane_work();
-        let max = *w.iter().max().unwrap_or(&0) as f64;
-        let mean = w.iter().sum::<usize>() as f64 / w.len() as f64;
-        if mean == 0.0 {
-            1.0
-        } else {
-            max / mean
+        crate::ebv::equalize::max_mean_imbalance(&self.lane_work())
+    }
+
+    /// Total elimination work assigned to each device shard (the
+    /// per-lane totals folded by device).
+    pub fn device_work(&self) -> Vec<usize> {
+        let mut w = vec![0usize; self.devices];
+        for (l, lw) in self.lane_work().into_iter().enumerate() {
+            w[self.device_of_lane(l)] += lw;
         }
+        w
+    }
+
+    /// `max / mean` of per-device work — the cluster-level balance
+    /// metric (same shared formula as [`LaneSchedule::work_imbalance`]).
+    pub fn device_imbalance(&self) -> f64 {
+        crate::ebv::equalize::max_mean_imbalance(&self.device_work())
     }
 }
 
@@ -369,6 +455,58 @@ mod tests {
         for dist in RowDist::ALL {
             let s = LaneSchedule::build(3, 8, dist);
             check_partition(&s);
+        }
+    }
+
+    #[test]
+    fn flat_build_reports_one_device() {
+        let s = LaneSchedule::build(16, 4, RowDist::EbvFold);
+        assert_eq!(s.devices(), 1);
+        assert_eq!(s.lanes_per_device(), 4);
+        assert_eq!(s.device_work(), vec![s.lane_work().iter().sum::<usize>()]);
+        assert_eq!(s.device_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn sharded_build_is_a_valid_partition_with_device_major_lanes() {
+        for dist in RowDist::ALL {
+            for (n, devices, lpd) in [(1usize, 2usize, 2usize), (17, 2, 3), (64, 4, 2), (33, 3, 5)]
+            {
+                let s = LaneSchedule::build_sharded(n, devices, lpd, dist);
+                check_partition(&s);
+                assert_eq!(s.lanes(), devices * lpd, "{dist:?} n={n}");
+                assert_eq!(s.devices(), devices);
+                assert_eq!(s.lanes_per_device(), lpd);
+                // Global lanes are device-major and rows agree with
+                // their owning lane's device.
+                for i in 0..n {
+                    assert_eq!(s.device_of_row(i), s.owner(i) / lpd, "{dist:?} n={n} row={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_one_device_equals_flat_build() {
+        for dist in RowDist::ALL {
+            for (n, lanes) in [(8usize, 2usize), (33, 5), (100, 8)] {
+                let flat = LaneSchedule::build(n, lanes, dist);
+                let sharded = LaneSchedule::build_sharded(n, 1, lanes, dist);
+                assert_eq!(sharded.owner, flat.owner, "{dist:?} n={n} lanes={lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_devices_are_work_balanced() {
+        for devices in [2usize, 4] {
+            let s = LaneSchedule::build_sharded(256, devices, 4, RowDist::EbvFold);
+            let imb = s.device_imbalance();
+            assert!(imb < 1.02, "devices={devices}: device imbalance {imb:.4}");
+            assert_eq!(s.device_work().len(), devices);
+            // Devices partition the total work.
+            let total: usize = (0..256).map(|i| row_total_work(i, 256)).sum();
+            assert_eq!(s.device_work().iter().sum::<usize>(), total);
         }
     }
 }

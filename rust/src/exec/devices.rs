@@ -1,0 +1,533 @@
+//! [`DeviceSet`]: the two-level device-sharded runtime.
+//!
+//! The paper's conclusion claims the EBV scheme "also is convenient for
+//! other parallelism method and multi devices". Until this layer the
+//! repo only *simulated* that claim (`gpusim::cluster` prices a
+//! pivot-row broadcast over an [`Interconnect`] cost model). A
+//! `DeviceSet` makes it real: the machine is partitioned into `D`
+//! device groups, each backed by its own resident [`LaneEngine`], and a
+//! sharded job runs barrier-separated steps on **all** devices
+//! concurrently with a staged exchange phase between steps — the
+//! pivot-row broadcast the cost model prices, executed.
+//!
+//! One sharded step is a three-phase protocol:
+//!
+//! 1. **Exchange** — the host of device 0 runs the job's exchange
+//!    closure once: stage the data every device will need this step
+//!    (the pivot row) into an [`ExchangeBuffer`] and account the
+//!    broadcast traffic. Single-writer by construction.
+//! 2. **Cross-device barrier** — all `D` hosts cross an
+//!    [`EpochBarrier`]; the staged writes (and every compute write of
+//!    the previous step) are published to every device.
+//! 3. **Compute** — each host submits a one-step job to its own
+//!    engine: the step closure runs for every virtual lane of every
+//!    device. A second barrier crossing closes the step and makes the
+//!    devices' writes mutually visible before the next exchange.
+//!
+//! The stop protocol mirrors the engine's: any vlane (or the exchange
+//! closure) returning [`StepCtl::Break`] sets a shared flag that every
+//! host reads immediately after a barrier crossing, so all devices end
+//! the job on the same step and the fixed-party barrier stays sound.
+//!
+//! **Bit identity.** Sharding changes *where* rows execute, never what
+//! they compute: each row's arithmetic depends only on the schedule
+//! decomposition (column order, panel decomposition, symbolic
+//! pattern), and the staged pivot row is a bit-exact copy. A job
+//! therefore produces identical bits for every device count — and
+//! `devices = 1` never even enters this module: every solver path
+//! falls through to its flat single-engine code. See `rust/DESIGN.md`
+//! §Device layer and the bit-identity ledger.
+//!
+//! [`Interconnect`]: crate::gpusim::cluster::Interconnect
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::exec::barrier::EpochBarrier;
+use crate::exec::engine::{LaneEngine, StepCtl};
+
+/// Detached copy of the device-set counters, merged into
+/// [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) and carried
+/// in wire `metrics` frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DeviceSetSnapshot {
+    /// Device groups in the set.
+    pub devices: u64,
+    /// Resident lanes per device engine.
+    pub lanes_per_device: u64,
+    /// Sharded jobs executed across the set.
+    pub sharded_jobs: u64,
+    /// Exchange stages executed (one per sharded step).
+    pub exchange_steps: u64,
+    /// `f64` elements staged or accounted through the exchange — the
+    /// measured counterpart of the cost model's broadcast bytes
+    /// (multiply by 8 for bytes).
+    pub exchange_elems: u64,
+}
+
+/// A partition of the machine into `D` device groups, each a resident
+/// [`LaneEngine`], plus the cross-device step barrier and exchange
+/// accounting. Shared by the coordinator workers via [`Arc`], exactly
+/// like a single engine.
+pub struct DeviceSet {
+    engines: Vec<Arc<LaneEngine>>,
+    lanes_per_device: usize,
+    sharded_jobs: AtomicU64,
+    exchange_steps: AtomicU64,
+    exchange_elems: AtomicU64,
+}
+
+impl std::fmt::Debug for DeviceSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceSet")
+            .field("devices", &self.engines.len())
+            .field("lanes_per_device", &self.lanes_per_device)
+            .finish_non_exhaustive()
+    }
+}
+
+impl DeviceSet {
+    /// Build `devices` device groups with `lanes_per_device` resident
+    /// lanes each (both clamped to at least 1).
+    pub fn new(devices: usize, lanes_per_device: usize) -> DeviceSet {
+        let devices = devices.max(1);
+        let lanes_per_device = lanes_per_device.max(1);
+        DeviceSet {
+            engines: (0..devices).map(|_| Arc::new(LaneEngine::new(lanes_per_device))).collect(),
+            lanes_per_device,
+            sharded_jobs: AtomicU64::new(0),
+            exchange_steps: AtomicU64::new(0),
+            exchange_elems: AtomicU64::new(0),
+        }
+    }
+
+    /// Wrap an existing engine as a single-device set, for callers
+    /// holding only an engine who want to feed a `&DeviceSet`-shaped
+    /// API (every sharded entry point falls through to flat execution
+    /// on `engine(0)` when the set has one device). The solver paths
+    /// themselves never need this — with `devices = 1` they keep
+    /// their flat engine code directly.
+    pub fn single(engine: Arc<LaneEngine>) -> DeviceSet {
+        let lanes_per_device = engine.lanes();
+        DeviceSet {
+            engines: vec![engine],
+            lanes_per_device,
+            sharded_jobs: AtomicU64::new(0),
+            exchange_steps: AtomicU64::new(0),
+            exchange_elems: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of device groups.
+    #[inline]
+    pub fn devices(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Resident lanes per device engine.
+    #[inline]
+    pub fn lanes_per_device(&self) -> usize {
+        self.lanes_per_device
+    }
+
+    /// The engine backing device `d`.
+    #[inline]
+    pub fn engine(&self, d: usize) -> &Arc<LaneEngine> {
+        &self.engines[d]
+    }
+
+    /// Account `elems` f64 elements of exchange traffic (staged pivot
+    /// rows, broadcast panel blocks, level results). Called from
+    /// exchange closures.
+    #[inline]
+    pub fn record_exchange(&self, elems: usize) {
+        self.exchange_elems.fetch_add(elems as u64, Ordering::Relaxed);
+    }
+
+    /// Detached counters for metrics frames and logs.
+    pub fn snapshot(&self) -> DeviceSetSnapshot {
+        DeviceSetSnapshot {
+            devices: self.engines.len() as u64,
+            lanes_per_device: self.lanes_per_device as u64,
+            sharded_jobs: self.sharded_jobs.load(Ordering::Relaxed),
+            exchange_steps: self.exchange_steps.load(Ordering::Relaxed),
+            exchange_elems: self.exchange_elems.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run a device-sharded step-loop job: for each of `steps` steps,
+    /// the `exchange` closure runs once (on device 0's host, between
+    /// cross-device barriers — the staged broadcast), then
+    /// `f(device, vlane, step)` runs for every virtual lane in
+    /// `0..width` on every device concurrently (each device's engine
+    /// executes its own vlanes as a one-step engine job).
+    ///
+    /// Either closure returning [`StepCtl::Break`] ends the job for
+    /// every device: an exchange break skips the step's compute phase
+    /// entirely, a compute break finishes the current step everywhere
+    /// first — both are observed unanimously through the cross-device
+    /// barrier. Blocks until the job completes; closures may borrow
+    /// from the caller's stack (the scoped hosts join before
+    /// returning). Vlanes must write disjoint data within a step, and
+    /// exchange must only touch data no device reads or writes during
+    /// compute (the solvers guarantee both by row ownership).
+    pub fn run_sharded<E, F>(&self, width: usize, steps: usize, exchange: E, f: F)
+    where
+        E: Fn(usize) -> StepCtl + Sync,
+        F: Fn(usize, usize, usize) -> StepCtl + Sync,
+    {
+        if width == 0 || steps == 0 {
+            return;
+        }
+        let d = self.engines.len();
+        self.sharded_jobs.fetch_add(1, Ordering::Relaxed);
+        let xbar = EpochBarrier::new(d);
+        let stop = AtomicBool::new(false);
+        let steps_done = AtomicU64::new(0);
+
+        let host = |dev: usize| {
+            for step in 0..steps {
+                // A panicking exchange closure must not skip the
+                // barrier (the peers would spin on it forever): catch,
+                // publish a unanimous stop, cross, then re-raise.
+                let mut exchange_panic = None;
+                if dev == 0 {
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        exchange(step)
+                    })) {
+                        // Counted only on Continue: a breaking exchange
+                        // (singular pivot) staged nothing, and the
+                        // snapshot's steps must pair with its elems.
+                        Ok(StepCtl::Continue) => {
+                            steps_done.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(StepCtl::Break) => stop.store(true, Ordering::Release),
+                        Err(payload) => {
+                            exchange_panic = Some(payload);
+                            stop.store(true, Ordering::Release);
+                        }
+                    }
+                }
+                // Publishes the staged exchange (and the previous
+                // step's compute writes) to every host; each host's
+                // engine-job submission republishes to its lanes.
+                xbar.wait();
+                if let Some(payload) = exchange_panic {
+                    std::panic::resume_unwind(payload);
+                }
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                // A panicking step closure is caught per lane by the
+                // device's own engine and re-raised on this host; catch
+                // it here so the host still crosses the closing barrier
+                // (the peers would spin on it forever otherwise), turn
+                // it into a unanimous stop, and re-raise after.
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.engines[dev].run_steps(width, 1, |vlane, _| {
+                        let ctl = f(dev, vlane, step);
+                        if ctl == StepCtl::Break {
+                            stop.store(true, Ordering::Release);
+                        }
+                        ctl
+                    });
+                }));
+                if caught.is_err() {
+                    stop.store(true, Ordering::Release);
+                }
+                // Closes the step: every device's writes become visible
+                // before the next exchange, and a compute break (or
+                // panic) is observed by all hosts at the same point.
+                xbar.wait();
+                if let Err(payload) = caught {
+                    std::panic::resume_unwind(payload);
+                }
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+            }
+        };
+
+        if d == 1 {
+            host(0);
+        } else {
+            std::thread::scope(|scope| {
+                let host = &host;
+                let handles: Vec<_> =
+                    (1..d).map(|dev| scope.spawn(move || host(dev))).collect();
+                // Run device 0 on the submitting thread; a panic here
+                // unwinds into the scope, which joins the peers first
+                // (they all saw the stop flag and exited their loops).
+                host(0);
+                // Re-raise the first peer panic on the submitter, like
+                // the engine's own panic protocol.
+                for h in handles {
+                    if let Err(payload) = h.join() {
+                        std::panic::resume_unwind(payload);
+                    }
+                }
+            });
+        }
+        self.exchange_steps.fetch_add(steps_done.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// Staging buffer for the per-step device exchange: written only by
+/// the exchange closure (single host, between cross-device barriers),
+/// read by every device during the following compute phase — the
+/// broadcast payload of the step, realized as a bit-exact copy so
+/// staging never perturbs the arithmetic.
+pub struct ExchangeBuffer {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for ExchangeBuffer {}
+unsafe impl Sync for ExchangeBuffer {}
+
+impl ExchangeBuffer {
+    /// Wrap the backing storage (owned by the submitting frame, which
+    /// outlives the sharded job — `run_sharded` joins before
+    /// returning).
+    pub fn new(buf: &mut [f64]) -> ExchangeBuffer {
+        ExchangeBuffer { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// Copy `src` into the buffer at `offset`.
+    ///
+    /// # Safety
+    /// Must only be called from an exchange closure (no device is
+    /// reading or writing the buffer between the surrounding barriers).
+    pub unsafe fn stage(&self, offset: usize, src: &[f64]) {
+        assert!(
+            offset + src.len() <= self.len,
+            "ExchangeBuffer: stage of {} at {offset} exceeds {}",
+            src.len(),
+            self.len
+        );
+        std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(offset), src.len());
+    }
+
+    /// Read the staged contents.
+    ///
+    /// # Safety
+    /// Must only be called from a compute closure (the exchange writer
+    /// is quiescent between the surrounding barriers).
+    #[inline]
+    pub unsafe fn staged(&self) -> &[f64] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_device_and_vlane_runs_every_step() {
+        for devices in [1usize, 2, 3] {
+            let set = DeviceSet::new(devices, 2);
+            let width = 3;
+            let steps = 4;
+            let grid: Vec<Vec<Vec<AtomicUsize>>> = (0..steps)
+                .map(|_| {
+                    (0..devices)
+                        .map(|_| (0..width).map(|_| AtomicUsize::new(0)).collect())
+                        .collect()
+                })
+                .collect();
+            let exchanges = AtomicUsize::new(0);
+            set.run_sharded(
+                width,
+                steps,
+                |_| {
+                    exchanges.fetch_add(1, Ordering::Relaxed);
+                    StepCtl::Continue
+                },
+                |dev, vlane, step| {
+                    grid[step][dev][vlane].fetch_add(1, Ordering::Relaxed);
+                    StepCtl::Continue
+                },
+            );
+            assert_eq!(exchanges.load(Ordering::Relaxed), steps, "devices={devices}");
+            for (step, per_dev) in grid.iter().enumerate() {
+                for (dev, cells) in per_dev.iter().enumerate() {
+                    for (vlane, cell) in cells.iter().enumerate() {
+                        assert_eq!(
+                            cell.load(Ordering::Relaxed),
+                            1,
+                            "devices={devices} step={step} dev={dev} vlane={vlane}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_publishes_across_devices() {
+        // Device 1 reads, each step, a value staged by the exchange and
+        // derived from what *device 0* wrote the previous step — only
+        // correct if the double barrier publishes both directions.
+        let set = DeviceSet::new(2, 1);
+        let steps = 32;
+        let mut produced = vec![0u64; steps + 1];
+        let mut staged = vec![0.0f64; 1];
+        let mut echoed = vec![0u64; steps];
+        let produced_slots = crate::exec::LaneSlots::new(&mut produced);
+        let stage = ExchangeBuffer::new(&mut staged);
+        let echo_slots = crate::exec::LaneSlots::new(&mut echoed);
+        set.run_sharded(
+            1,
+            steps,
+            |step| {
+                // SAFETY: exchange phase — sole accessor of the buffer;
+                // produced[step] was written by device 0 a step ago.
+                unsafe {
+                    let prev = *produced_slots.slot(step);
+                    stage.stage(0, &[prev as f64 + 1.0]);
+                }
+                StepCtl::Continue
+            },
+            |dev, _vlane, step| {
+                if dev == 0 {
+                    // SAFETY: single writer of produced[step + 1].
+                    unsafe { *produced_slots.slot(step + 1) = step as u64 + 1 };
+                } else {
+                    // SAFETY: compute phase — the stage is read-only.
+                    unsafe { *echo_slots.slot(step) = stage.staged()[0] as u64 };
+                }
+                StepCtl::Continue
+            },
+        );
+        // produced[0] = 0 initially; device 0 wrote produced[s] = s at
+        // step s-1 — so the exchange at step s staged s + 1.
+        for (s, &e) in echoed.iter().enumerate() {
+            assert_eq!(e, s as u64 + 1, "step {s}");
+        }
+    }
+
+    #[test]
+    fn break_stops_all_devices_on_the_same_step() {
+        for devices in [1usize, 2, 4] {
+            let set = DeviceSet::new(devices, 2);
+            let steps = 6;
+            let ran = AtomicUsize::new(0);
+            set.run_sharded(
+                2,
+                steps,
+                |_| StepCtl::Continue,
+                |dev, vlane, step| {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                    // One vlane on the last device sees the stop.
+                    if dev == devices - 1 && vlane == 1 && step == 2 {
+                        StepCtl::Break
+                    } else {
+                        StepCtl::Continue
+                    }
+                },
+            );
+            // Steps 0..=2 ran everywhere (the breaking step completes),
+            // nothing after.
+            assert_eq!(ran.load(Ordering::Relaxed), devices * 2 * 3, "devices={devices}");
+        }
+    }
+
+    #[test]
+    fn exchange_break_skips_the_step_compute() {
+        let set = DeviceSet::new(2, 1);
+        let ran = AtomicUsize::new(0);
+        set.run_sharded(
+            1,
+            5,
+            |step| if step == 3 { StepCtl::Break } else { StepCtl::Continue },
+            |_, _, _| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                StepCtl::Continue
+            },
+        );
+        // Steps 0, 1, 2 computed on both devices; step 3's exchange
+        // broke before compute.
+        assert_eq!(ran.load(Ordering::Relaxed), 2 * 3);
+    }
+
+    #[test]
+    fn snapshot_counts_jobs_steps_and_traffic() {
+        let set = DeviceSet::new(2, 1);
+        set.run_sharded(
+            1,
+            4,
+            |_| {
+                set.record_exchange(10);
+                StepCtl::Continue
+            },
+            |_, _, _| StepCtl::Continue,
+        );
+        let s = set.snapshot();
+        assert_eq!(s.devices, 2);
+        assert_eq!(s.lanes_per_device, 1);
+        assert_eq!(s.sharded_jobs, 1);
+        assert_eq!(s.exchange_steps, 4);
+        assert_eq!(s.exchange_elems, 40);
+    }
+
+    #[test]
+    fn panicking_compute_propagates_and_set_survives() {
+        let set = DeviceSet::new(2, 2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            set.run_sharded(
+                2,
+                4,
+                |_| StepCtl::Continue,
+                |dev, vlane, step| {
+                    // The panic lands on a *peer* device's lane: it must
+                    // cross back to the submitting thread, not hang the
+                    // cross-device barrier.
+                    if dev == 1 && vlane == 1 && step == 1 {
+                        panic!("boom on a device");
+                    }
+                    StepCtl::Continue
+                },
+            );
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // The set is intact: a subsequent job runs on every device.
+        let ran = AtomicUsize::new(0);
+        set.run_sharded(
+            1,
+            2,
+            |_| StepCtl::Continue,
+            |_, _, _| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                StepCtl::Continue
+            },
+        );
+        assert_eq!(ran.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn zero_work_is_a_no_op() {
+        let set = DeviceSet::new(2, 2);
+        set.run_sharded(0, 5, |_| panic!("no exchange"), |_, _, _| panic!("no compute"));
+        set.run_sharded(5, 0, |_| panic!("no exchange"), |_, _, _| panic!("no compute"));
+        assert_eq!(set.snapshot().sharded_jobs, 0);
+    }
+
+    #[test]
+    fn single_wraps_an_existing_engine() {
+        let engine = Arc::new(LaneEngine::new(3));
+        let set = DeviceSet::single(Arc::clone(&engine));
+        assert_eq!(set.devices(), 1);
+        assert_eq!(set.lanes_per_device(), 3);
+        assert!(Arc::ptr_eq(set.engine(0), &engine));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn exchange_buffer_bounds_checked() {
+        let mut buf = vec![0.0f64; 2];
+        let stage = ExchangeBuffer::new(&mut buf);
+        unsafe { stage.stage(1, &[1.0, 2.0]) };
+    }
+}

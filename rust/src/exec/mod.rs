@@ -18,15 +18,24 @@
 //! the arithmetic each row sees depends only on the row partition, never
 //! on which OS thread executes it.
 //!
-//! See `rust/DESIGN.md` §Execution engine for the architecture notes and
-//! §Substitutions for the GPU→lane mapping this realizes.
+//! The [`devices`] module lifts the same model one level up: a
+//! [`DeviceSet`] partitions the machine into device groups (one engine
+//! each) and runs device-sharded jobs with a staged exchange phase
+//! between steps — the multi-device execution the paper's conclusion
+//! claims, promoted from the `gpusim::cluster` cost model to a runtime.
+//!
+//! See `rust/DESIGN.md` §Execution engine and §Device layer for the
+//! architecture notes and §Substitutions for the GPU→lane mapping this
+//! realizes.
 
 pub mod barrier;
+pub mod devices;
 pub mod engine;
 pub mod stats;
 pub mod team;
 
 pub use barrier::EpochBarrier;
+pub use devices::{DeviceSet, DeviceSetSnapshot, ExchangeBuffer};
 pub use engine::{default_lanes, engine_or_global, global, LaneEngine, StepCtl, StepFn};
 pub use stats::{EngineStats, EngineStatsSnapshot};
 

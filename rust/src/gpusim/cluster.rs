@@ -9,6 +9,14 @@
 //! paying once `n³/devices` compute shrinks to the `n² · log(devices)`
 //! broadcast term — the strong-scaling knee the `ablation_multidevice`
 //! bench sweeps.
+//!
+//! Since the device layer landed this is no longer the only home of
+//! the claim: `exec::DeviceSet` *executes* the same schedule
+//! device-sharded, staging the pivot-row broadcast per step, and the
+//! bench reports this model and the measured runtime side by side
+//! (the measured exchange traffic is pinned against
+//! `FactorPlan::multi_device`, which prices exactly the broadcast
+//! this module integrates over time).
 
 use crate::ebv::schedule::{LaneSchedule, RowDist};
 use crate::gpusim::costmodel::KernelCost;

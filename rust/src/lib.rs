@@ -15,7 +15,9 @@
 //!   equalization pairing, and the dependency-safe lane schedule;
 //! * [`exec`] — the persistent lane engine: a resident, barrier-stepped
 //!   worker pool that every parallel factor/substitution/panel path
-//!   submits to instead of spawning thread scopes per call;
+//!   submits to instead of spawning thread scopes per call — plus the
+//!   two-level device-sharded runtime (`exec::DeviceSet`) realizing the
+//!   paper's multi-device claim with a staged pivot-row exchange;
 //! * [`solver`] — sequential, EBV-parallel, blocked, and sparse LU plus
 //!   triangular solves, pivoting and iterative refinement;
 //! * [`gpusim`] — GTX280-calibrated cost model used to regenerate the

@@ -18,8 +18,9 @@ use ebv_solve::gpusim::{
 use ebv_solve::matrix::generate::{
     diag_dominant_dense, diag_dominant_sparse, poisson_2d, rhs, GenSeed,
 };
+use ebv_solve::exec::DeviceSet;
 use ebv_solve::runtime::Manifest;
-use ebv_solve::solver::{solver_by_name, SparseLu, SparseSymbolic};
+use ebv_solve::solver::{solver_by_name, EbvLu, LuSolver, SparseLu, SparseSymbolic};
 use ebv_solve::util::fmt;
 use ebv_solve::wire::{serve_session_with, DecodeOptions, SessionOptions};
 use ebv_solve::workload::{generate_trace, SystemKind, TraceSpec};
@@ -64,24 +65,58 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
         // Same rule the service config enforces — no silent clamping.
         return Err(ebv_solve::EbvError::Config("--panel-width must be >= 1".into()));
     }
+    let devices = args.opt_parsed("devices", 1usize)?;
+    if devices == 0 {
+        return Err(ebv_solve::EbvError::Config("--devices must be >= 1".into()));
+    }
+    // Two-level sharded runtime: split the lane budget across devices.
+    let device_set = (devices > 1)
+        .then(|| Arc::new(DeviceSet::new(devices, lanes.div_ceil(devices).max(1))));
     let solver_name = args.opt("solver").unwrap_or("ebv");
 
     match kind {
         "dense" => {
             let a = diag_dominant_dense(n, GenSeed(seed));
             let b = rhs(n, GenSeed(seed ^ 1));
-            let solver = solver_by_name(solver_name, lanes, panel).ok_or_else(|| {
-                ebv_solve::EbvError::Config(format!("unknown solver `{solver_name}`"))
-            })?;
-            let t0 = Instant::now();
-            let x = solver.solve(&a, &b)?;
-            let dt = t0.elapsed().as_secs_f64();
-            println!(
-                "dense n={n} solver={} lanes={lanes}: {} (residual {:.3e})",
-                solver.name(),
-                fmt::secs(dt),
-                a.residual(&x, &b)
-            );
+            if let Some(set) = &device_set {
+                if solver_name != "ebv" {
+                    return Err(ebv_solve::EbvError::Config(
+                        "--devices > 1 requires --solver ebv (the sharded path)".into(),
+                    ));
+                }
+                // Asking for devices forces the sharded path even below
+                // the sequential crossover, so the exchange summary
+                // printed below always reflects a real sharded run.
+                let solver = EbvLu::with_lanes(lanes)
+                    .panel(panel)
+                    .seq_threshold(0)
+                    .with_devices(Arc::clone(set));
+                let t0 = Instant::now();
+                let x = solver.solve(&a, &b)?;
+                let dt = t0.elapsed().as_secs_f64();
+                let snap = set.snapshot();
+                println!(
+                    "dense n={n} solver=ebv lanes={lanes} devices={devices}: {} \
+                     (residual {:.3e}; exchange {} elems over {} steps)",
+                    fmt::secs(dt),
+                    a.residual(&x, &b),
+                    snap.exchange_elems,
+                    snap.exchange_steps
+                );
+            } else {
+                let solver = solver_by_name(solver_name, lanes, panel).ok_or_else(|| {
+                    ebv_solve::EbvError::Config(format!("unknown solver `{solver_name}`"))
+                })?;
+                let t0 = Instant::now();
+                let x = solver.solve(&a, &b)?;
+                let dt = t0.elapsed().as_secs_f64();
+                println!(
+                    "dense n={n} solver={} lanes={lanes}: {} (residual {:.3e})",
+                    solver.name(),
+                    fmt::secs(dt),
+                    a.residual(&x, &b)
+                );
+            }
         }
         "sparse" | "poisson" => {
             let a = if kind == "sparse" {
@@ -99,10 +134,16 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
                 let sym = SparseSymbolic::analyze(&a)?;
                 let t_sym = t0.elapsed().as_secs_f64();
                 let t1 = Instant::now();
-                let f = sym.factor_par(&a, lanes)?;
+                let f = match &device_set {
+                    Some(set) => sym.factor_sharded(&a, lanes, set.as_ref())?,
+                    None => sym.factor_par(&a, lanes)?,
+                };
                 let t_num = t1.elapsed().as_secs_f64();
                 let t2 = Instant::now();
-                let x = f.solve_par(&b, lanes)?;
+                let x = match &device_set {
+                    Some(set) => f.solve_sharded(&b, lanes, set.as_ref())?,
+                    None => f.solve_par(&b, lanes)?,
+                };
                 let t_solve = t2.elapsed().as_secs_f64();
                 println!(
                     "{kind} n={} nnz={} factor-levels={}: symbolic {} + numeric {} + \
@@ -152,6 +193,7 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
         batch_window_us: args.opt_parsed("window-us", 200u64)?,
         queue_capacity: args.opt_parsed("queue", 1024usize)?,
         engine_lanes: args.opt_parsed("engine-lanes", 0usize)?,
+        devices: args.opt_parsed("devices", 1usize)?,
         panel_width: args
             .opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
@@ -179,6 +221,13 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
         "engine: lanes={} jobs={} inline_jobs={} steps={} barrier_waits={} slow_waits={}",
         e.lanes, e.jobs, e.inline_jobs, e.steps, e.barrier_waits, e.slow_waits
     );
+    if let Some(set) = svc.device_set() {
+        let d = set.snapshot();
+        eprintln!(
+            "devices: {}x{} lanes, sharded_jobs={} exchange_steps={} exchange_elems={}",
+            d.devices, d.lanes_per_device, d.sharded_jobs, d.exchange_steps, d.exchange_elems
+        );
+    }
     svc.shutdown();
     Ok(())
 }
@@ -192,6 +241,7 @@ fn cmd_serve_trace(args: &Args) -> ebv_solve::Result<()> {
         lanes,
         max_batch: batch,
         engine_lanes: args.opt_parsed("engine-lanes", 0usize)?,
+        devices: args.opt_parsed("devices", 1usize)?,
         panel_width: args
             .opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,

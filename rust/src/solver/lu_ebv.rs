@@ -36,7 +36,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::ebv::schedule::{panels, LaneSchedule, RowDist};
-use crate::exec::{LaneEngine, StepCtl};
+use crate::exec::{DeviceSet, ExchangeBuffer, LaneEngine, StepCtl};
 use crate::matrix::DenseMatrix;
 use crate::solver::pivot::Permutation;
 use crate::solver::{DenseLuFactors, LuSolver};
@@ -59,6 +59,13 @@ pub struct EbvLu {
     panel: usize,
     /// Engine override; `None` submits to the process-global engine.
     engine: Option<Arc<LaneEngine>>,
+    /// Device-sharded execution: when set with more than one device,
+    /// the elimination runs as a two-level job on the set (rows dealt
+    /// to devices by greedy LPT, then to vlanes within a device by
+    /// `dist`), with the pivot row broadcast through the staged
+    /// exchange each step. Bitwise identical to the flat path for
+    /// every device count.
+    devices: Option<Arc<DeviceSet>>,
 }
 
 impl EbvLu {
@@ -71,6 +78,7 @@ impl EbvLu {
             seq_threshold: 128,
             panel: DEFAULT_PANEL_WIDTH,
             engine: None,
+            devices: None,
         }
     }
 
@@ -89,6 +97,17 @@ impl EbvLu {
     /// (the coordinator shares one engine across its workers this way).
     pub fn with_engine(mut self, engine: Arc<LaneEngine>) -> Self {
         self.engine = Some(engine);
+        self
+    }
+
+    /// Execute device-sharded on a [`DeviceSet`] (the coordinator
+    /// shares one set across its workers when `service.devices > 1`).
+    /// The configured lane count is split across the set's devices
+    /// (`ceil(lanes / devices)` vlanes per device); a single-device
+    /// set keeps the flat path. Factors are bitwise identical either
+    /// way.
+    pub fn with_devices(mut self, devices: Arc<DeviceSet>) -> Self {
+        self.devices = Some(devices);
         self
     }
 
@@ -137,6 +156,22 @@ impl LuSolver for EbvLu {
             return crate::solver::SeqLu::new().pivot_tol(self.pivot_tol).factor(a);
         }
         let mut lu = a.clone();
+        if let Some(set) = self.devices.as_ref().filter(|s| s.devices() > 1) {
+            let lpd = self.lanes.div_ceil(set.devices()).max(1);
+            let schedule = LaneSchedule::build_sharded(n, set.devices(), lpd, self.dist);
+            if self.panel <= 1 {
+                parallel_eliminate_sharded(&mut lu, &schedule, self.pivot_tol, set.as_ref())?;
+            } else {
+                parallel_eliminate_blocked_sharded(
+                    &mut lu,
+                    &schedule,
+                    self.panel,
+                    self.pivot_tol,
+                    set.as_ref(),
+                )?;
+            }
+            return Ok(DenseLuFactors::new(lu, Permutation::identity(n)));
+        }
         let schedule = LaneSchedule::build(n, self.lanes, self.dist);
         let engine = crate::exec::engine_or_global(self.engine.as_ref());
         if self.panel <= 1 {
@@ -225,6 +260,80 @@ fn parallel_eliminate(
     }
     // Check the last pivot too (never used as a divisor during
     // elimination but required for the solve).
+    let last = lu.get(n - 1, n - 1);
+    if last.abs() < pivot_tol {
+        return Err(EbvError::SingularPivot { step: n - 1, value: last, tol: pivot_tol });
+    }
+    Ok(())
+}
+
+/// Device-sharded column-at-a-time elimination: the same arithmetic as
+/// [`parallel_eliminate`] executed as a two-level [`DeviceSet`] job.
+/// Each step the exchange phase (device 0's host) validates the pivot
+/// and broadcasts the trailing pivot row through the staged
+/// [`ExchangeBuffer`] (a bit-exact copy — the realized counterpart of
+/// the `gpusim::cluster` broadcast term); every device then updates its
+/// owned rows reading the staged row. Factors are bitwise identical to
+/// the flat path for every device count, lane count and distribution.
+fn parallel_eliminate_sharded(
+    lu: &mut DenseMatrix,
+    schedule: &LaneSchedule,
+    pivot_tol: f64,
+    set: &DeviceSet,
+) -> Result<()> {
+    let n = lu.rows();
+    let lpd = schedule.lanes_per_device();
+    let shared = SharedMatrix { ptr: lu.data_mut().as_mut_ptr(), cols: n };
+    let mut staged = vec![0.0f64; n];
+    let stage = ExchangeBuffer::new(&mut staged);
+    let first_bad: Mutex<Option<(usize, f64)>> = Mutex::new(None);
+
+    set.run_sharded(
+        lpd,
+        n - 1,
+        |r| {
+            // SAFETY: row r's final update (performed at step r-1 by its
+            // owner) was published by the closing cross-device barrier;
+            // no device computes while the exchange runs.
+            let pivot_row = unsafe { shared.row(r) };
+            let piv = pivot_row[r];
+            if piv.abs() < pivot_tol {
+                let mut bad = first_bad.lock().expect("pivot slot");
+                if bad.is_none() {
+                    *bad = Some((r, piv));
+                }
+                return StepCtl::Break;
+            }
+            // SAFETY: exchange phase — sole accessor of the stage.
+            unsafe { stage.stage(r, &pivot_row[r..]) };
+            set.record_exchange(n - r);
+            StepCtl::Continue
+        },
+        |dev, vlane, r| {
+            // SAFETY: compute phase — the stage is read-only everywhere.
+            let pivot_row = unsafe { stage.staged() };
+            let inv = 1.0 / pivot_row[r];
+            for &i in schedule.active_rows_of(dev * lpd + vlane, r) {
+                // SAFETY: this (device, vlane) owns row i exclusively.
+                let row_i = unsafe { shared.row_mut(i) };
+                let f = row_i[r] * inv;
+                row_i[r] = f;
+                if f == 0.0 {
+                    continue;
+                }
+                let (head, tail) = row_i.split_at_mut(r + 1);
+                let _ = head;
+                for (t, &p) in tail.iter_mut().zip(pivot_row[r + 1..].iter()) {
+                    *t -= f * p;
+                }
+            }
+            StepCtl::Continue
+        },
+    );
+
+    if let Some((step, value)) = first_bad.into_inner().expect("pivot slot") {
+        return Err(EbvError::SingularPivot { step, value, tol: pivot_tol });
+    }
     let last = lu.get(n - 1, n - 1);
     if last.abs() < pivot_tol {
         return Err(EbvError::SingularPivot { step: n - 1, value: last, tol: pivot_tol });
@@ -351,6 +460,140 @@ fn parallel_eliminate_blocked(
         }
         StepCtl::Continue
     });
+
+    if let Some((step, value)) = first_bad.into_inner().expect("pivot slot") {
+        return Err(EbvError::SingularPivot { step, value, tol: pivot_tol });
+    }
+    let last = lu.get(n - 1, n - 1);
+    if last.abs() < pivot_tol {
+        return Err(EbvError::SingularPivot { step: n - 1, value: last, tol: pivot_tol });
+    }
+    Ok(())
+}
+
+/// Device-sharded blocked-panel elimination: the step sequence of
+/// [`parallel_eliminate_blocked`] on a [`DeviceSet`]. Col steps
+/// broadcast the trailing pivot row through the staged exchange (and
+/// validate the pivot centrally); Update steps read the finalized
+/// panel rows in place — published by the closing barrier of their Col
+/// steps — and only account the `U12` broadcast the cost model prices.
+/// Per-row arithmetic depends solely on the panel decomposition, so
+/// for fixed `nb` the factors are bitwise identical to the flat
+/// blocked path for every device count.
+fn parallel_eliminate_blocked_sharded(
+    lu: &mut DenseMatrix,
+    schedule: &LaneSchedule,
+    nb: usize,
+    pivot_tol: f64,
+    set: &DeviceSet,
+) -> Result<()> {
+    let n = lu.rows();
+    let lpd = schedule.lanes_per_device();
+    let steps = blocked_steps(n, nb);
+    let shared = SharedMatrix { ptr: lu.data_mut().as_mut_ptr(), cols: n };
+    let mut staged = vec![0.0f64; n];
+    let stage = ExchangeBuffer::new(&mut staged);
+    let first_bad: Mutex<Option<(usize, f64)>> = Mutex::new(None);
+
+    set.run_sharded(
+        lpd,
+        steps.len(),
+        |s| match steps[s] {
+            BlockStep::Col { r, panel_end: _ } => {
+                // SAFETY: row r's final write (its owner at the previous
+                // Col step, or the preceding panel's Update step) was
+                // published by the closing cross-device barrier.
+                let pivot_row = unsafe { shared.row(r) };
+                let piv = pivot_row[r];
+                if piv.abs() < pivot_tol {
+                    let mut bad = first_bad.lock().expect("pivot slot");
+                    if bad.is_none() {
+                        *bad = Some((r, piv));
+                    }
+                    return StepCtl::Break;
+                }
+                // SAFETY: exchange phase — sole accessor of the stage.
+                unsafe { stage.stage(r, &pivot_row[r..]) };
+                set.record_exchange(n - r);
+                StepCtl::Continue
+            }
+            BlockStep::Update { panel_start, panel_end } => {
+                // The panel's U12 block travels to every device; it is
+                // read in place (finalized before the barrier), so the
+                // broadcast is accounted, not copied.
+                set.record_exchange((panel_end - panel_start) * (n - panel_end));
+                StepCtl::Continue
+            }
+        },
+        |dev, vlane, s| {
+            let lane = dev * lpd + vlane;
+            match steps[s] {
+                BlockStep::Col { r, panel_end } => {
+                    // SAFETY: compute phase — the stage is read-only.
+                    let pivot_row = unsafe { stage.staged() };
+                    let inv = 1.0 / pivot_row[r];
+                    for &i in schedule.active_rows_of(lane, r) {
+                        // SAFETY: this (device, vlane) owns row i.
+                        let row_i = unsafe { shared.row_mut(i) };
+                        let f = row_i[r] * inv;
+                        row_i[r] = f;
+                        if f == 0.0 {
+                            continue;
+                        }
+                        let hi = if i < panel_end { n } else { panel_end };
+                        for (t, &p) in
+                            row_i[r + 1..hi].iter_mut().zip(pivot_row[r + 1..hi].iter())
+                        {
+                            *t -= f * p;
+                        }
+                    }
+                }
+                BlockStep::Update { panel_start, panel_end } => {
+                    let width = panel_end - panel_start;
+                    for &i in schedule.rows_from(lane, panel_end) {
+                        // SAFETY: same argument as the flat Update step;
+                        // the panel rows' final Col-step writes were
+                        // published by the closing cross-device barrier.
+                        let row_i = unsafe { shared.row_mut(i) };
+                        let (head, tail) = row_i.split_at_mut(panel_end);
+                        let l_i = &head[panel_start..];
+                        let mut p = 0usize;
+                        while p + 4 <= width {
+                            let (l0, l1, l2, l3) =
+                                (l_i[p], l_i[p + 1], l_i[p + 2], l_i[p + 3]);
+                            if l0 == 0.0 && l1 == 0.0 && l2 == 0.0 && l3 == 0.0 {
+                                p += 4;
+                                continue;
+                            }
+                            let u0 = unsafe { &shared.row(panel_start + p)[panel_end..] };
+                            let u1 =
+                                unsafe { &shared.row(panel_start + p + 1)[panel_end..] };
+                            let u2 =
+                                unsafe { &shared.row(panel_start + p + 2)[panel_end..] };
+                            let u3 =
+                                unsafe { &shared.row(panel_start + p + 3)[panel_end..] };
+                            for (j, t) in tail.iter_mut().enumerate() {
+                                *t -= l0 * u0[j] + l1 * u1[j] + l2 * u2[j] + l3 * u3[j];
+                            }
+                            p += 4;
+                        }
+                        while p < width {
+                            let lp = l_i[p];
+                            if lp != 0.0 {
+                                let up =
+                                    unsafe { &shared.row(panel_start + p)[panel_end..] };
+                                for (t, &u) in tail.iter_mut().zip(up.iter()) {
+                                    *t -= lp * u;
+                                }
+                            }
+                            p += 1;
+                        }
+                    }
+                }
+            }
+            StepCtl::Continue
+        },
+    );
 
     if let Some((step, value)) = first_bad.into_inner().expect("pivot slot") {
         return Err(EbvError::SingularPivot { step, value, tol: pivot_tol });
@@ -584,5 +827,83 @@ mod tests {
     #[test]
     fn rejects_non_square() {
         assert!(par(2, RowDist::EbvFold).factor(&DenseMatrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn device_sharded_column_path_is_bitwise_flat() {
+        let a = diag_dominant_dense(72, GenSeed(41));
+        let reference = SeqLu::new().factor(&a).unwrap();
+        for devices in [1usize, 2, 4] {
+            let set = Arc::new(DeviceSet::new(devices, 2));
+            let f = par(4, RowDist::EbvFold).with_devices(set).factor(&a).unwrap();
+            assert_eq!(
+                f.packed().max_abs_diff(reference.packed()),
+                0.0,
+                "devices={devices}"
+            );
+        }
+    }
+
+    #[test]
+    fn device_sharded_blocked_path_is_bitwise_flat() {
+        let n = 80;
+        let nb = 8;
+        let a = diag_dominant_dense(n, GenSeed(42));
+        let reference = blocked(3, nb).factor(&a).unwrap();
+        for devices in [2usize, 3] {
+            for dist in [RowDist::EbvFold, RowDist::Cyclic] {
+                let set = Arc::new(DeviceSet::new(devices, 2));
+                let f = blocked(6, nb).with_dist(dist).with_devices(set).factor(&a).unwrap();
+                assert_eq!(
+                    f.packed().max_abs_diff(reference.packed()),
+                    0.0,
+                    "devices={devices} {dist:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn device_sharded_counts_the_pivot_broadcast() {
+        // The measured exchange of the column path must equal what the
+        // cost-model plan prices: the trailing pivot row, once per step.
+        let n = 64;
+        let a = diag_dominant_dense(n, GenSeed(43));
+        let set = Arc::new(DeviceSet::new(2, 2));
+        par(4, RowDist::EbvFold).with_devices(Arc::clone(&set)).factor(&a).unwrap();
+        let snap = set.snapshot();
+        let expect: u64 = (0..n - 1).map(|r| (n - r) as u64).sum();
+        assert_eq!(snap.exchange_elems, expect);
+        assert_eq!(snap.sharded_jobs, 1);
+        assert_eq!(snap.exchange_steps, (n - 1) as u64);
+    }
+
+    #[test]
+    fn device_sharded_detects_singular_pivot() {
+        let mut a = diag_dominant_dense(64, GenSeed(44));
+        for j in 0..64 {
+            a.set(30, j, 0.0);
+        }
+        for nb in [1usize, 8] {
+            let set = Arc::new(DeviceSet::new(2, 2));
+            let err =
+                EbvLu::with_lanes(4).seq_threshold(0).panel(nb).with_devices(set).factor(&a);
+            assert!(
+                matches!(err, Err(EbvError::SingularPivot { step: 30, .. })),
+                "nb={nb}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_device_set_keeps_the_flat_engine_path() {
+        // A one-device set never enters the sharded runtime: no sharded
+        // jobs are recorded and the factors stay bitwise SeqLu.
+        let a = diag_dominant_dense(48, GenSeed(45));
+        let set = Arc::new(DeviceSet::new(1, 2));
+        let f = par(4, RowDist::EbvFold).with_devices(Arc::clone(&set)).factor(&a).unwrap();
+        let reference = SeqLu::new().factor(&a).unwrap();
+        assert_eq!(f.packed().max_abs_diff(reference.packed()), 0.0);
+        assert_eq!(set.snapshot().sharded_jobs, 0);
     }
 }

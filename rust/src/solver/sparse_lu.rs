@@ -100,6 +100,36 @@ impl SparseLuFactors {
         let y = sparse_forward_unit_levels(&self.l, b, &self.by_level, lanes, engine)?;
         sparse_backward_levels(&self.u, &y, &self.u_by_level, lanes, engine)
     }
+
+    /// Device-sharded parallel solve on a
+    /// [`DeviceSet`](crate::exec::DeviceSet): both level-scheduled
+    /// substitutions run sharded (levels dealt devices-first), bitwise
+    /// identical to [`SparseLuFactors::solve`] for every device count.
+    /// A single-device set falls through to [`solve_par_on`] on its
+    /// engine.
+    ///
+    /// [`solve_par_on`]: SparseLuFactors::solve_par_on
+    pub fn solve_sharded(
+        &self,
+        b: &[f64],
+        lanes: usize,
+        set: &crate::exec::DeviceSet,
+    ) -> Result<Vec<f64>> {
+        let y = crate::solver::trisolve::sparse_forward_unit_levels_sharded(
+            &self.l,
+            b,
+            &self.by_level,
+            lanes,
+            set,
+        )?;
+        crate::solver::trisolve::sparse_backward_levels_sharded(
+            &self.u,
+            &y,
+            &self.u_by_level,
+            lanes,
+            set,
+        )
+    }
 }
 
 /// Sparse LU factorizer.

@@ -47,8 +47,8 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::Mutex;
 
-use crate::ebv::equalize::equalize_weights;
-use crate::exec::{LaneEngine, LaneSlots, StepCtl};
+use crate::ebv::equalize::{equalize_hierarchical, equalize_weights};
+use crate::exec::{DeviceSet, LaneEngine, LaneSlots, StepCtl};
 use crate::matrix::CsrMatrix;
 use crate::solver::sparse_lu::SparseLuFactors;
 use crate::util::error::{EbvError, Result};
@@ -477,6 +477,133 @@ impl SparseSymbolic {
         }
         self.assemble(&l_val, &u_val)
     }
+
+    /// Device-sharded level-parallel numeric refactorization: one
+    /// sharded step per DAG level on a [`DeviceSet`], rows of a level
+    /// dealt **devices-first** by the hierarchical equalizer
+    /// ([`equalize_hierarchical`] over the symbolic row costs — the
+    /// two-level EBV deal), each (device, vlane) scattering into its
+    /// own dense accumulator. The exchange phase accounts the previous
+    /// level's finalized `U` values as the per-step broadcast — the
+    /// traffic the inter-partition exchange of a real multi-device
+    /// triangular factorization is dominated by.
+    ///
+    /// Factors are bitwise identical to [`SparseSymbolic::factor`] and
+    /// [`SparseSymbolic::factor_par_on`] for every device count, lane
+    /// count and engine size (per-row arithmetic depends only on the
+    /// symbolic pattern). A single-device set falls through to
+    /// [`SparseSymbolic::factor_par_on`] on its engine; `lanes` is the
+    /// total vlane budget, split `ceil(lanes / devices)` per device.
+    pub fn factor_sharded(
+        &self,
+        a: &CsrMatrix,
+        lanes: usize,
+        set: &DeviceSet,
+    ) -> Result<SparseLuFactors> {
+        self.check(a)?;
+        let d = set.devices();
+        if d <= 1 {
+            return self.factor_par_on(a, lanes, set.engine(0).as_ref());
+        }
+        let lpd = lanes.div_ceil(d).max(1);
+        let total = d * lpd;
+
+        enum LevelChunks<'x> {
+            /// Too small to shard: device 0's vlane 0 walks the level.
+            Single(&'x [usize]),
+            /// `chunks[device][vlane]` row lists (cost-equalized).
+            Split(Vec<Vec<Vec<usize>>>),
+        }
+        let chunks: Vec<LevelChunks<'_>> = self
+            .by_level
+            .iter()
+            .map(|rows| {
+                if rows.len() < total * 4 {
+                    LevelChunks::Single(rows)
+                } else {
+                    let weights: Vec<usize> =
+                        rows.iter().map(|&i| self.row_cost[i]).collect();
+                    LevelChunks::Split(
+                        equalize_hierarchical(&weights, d, lpd)
+                            .into_iter()
+                            .map(|dev| {
+                                dev.into_iter()
+                                    .map(|bin| {
+                                        bin.into_iter().map(|k| rows[k]).collect()
+                                    })
+                                    .collect()
+                            })
+                            .collect(),
+                    )
+                }
+            })
+            .collect();
+        if chunks.iter().all(|c| matches!(c, LevelChunks::Single(_))) {
+            return self.factor(a);
+        }
+        // Exchange accounting: a level's refactorization reads the `U`
+        // rows its dependencies finalized at the previous level.
+        let level_u_elems: Vec<usize> = self
+            .by_level
+            .iter()
+            .map(|rows| rows.iter().map(|&i| self.u_ptr[i + 1] - self.u_ptr[i]).sum())
+            .collect();
+
+        let mut l_val = vec![0.0f64; self.l_idx.len()];
+        let mut u_val = vec![0.0f64; self.u_idx.len()];
+        let l_shared = SharedF64(l_val.as_mut_ptr());
+        let u_shared = SharedF64(u_val.as_mut_ptr());
+        // One dense accumulator per (device, vlane), device-major.
+        let mut accs: Vec<Vec<f64>> = (0..total).map(|_| vec![0.0f64; self.n]).collect();
+        let acc_slots = LaneSlots::new(&mut accs);
+        let bad: Mutex<Option<(usize, f64)>> = Mutex::new(None);
+
+        set.run_sharded(
+            lpd,
+            chunks.len(),
+            |lvl| {
+                if lvl > 0 {
+                    set.record_exchange(level_u_elems[lvl - 1]);
+                }
+                StepCtl::Continue
+            },
+            |dev, vlane, lvl| {
+                let rows: Option<&[usize]> = match &chunks[lvl] {
+                    LevelChunks::Single(rows) => {
+                        (dev == 0 && vlane == 0).then_some(*rows)
+                    }
+                    LevelChunks::Split(cs) => {
+                        cs.get(dev).and_then(|c| c.get(vlane)).map(Vec::as_slice)
+                    }
+                };
+                let Some(rows) = rows else { return StepCtl::Continue };
+                // SAFETY: each (device, vlane) touches only its own slot.
+                let acc = unsafe { acc_slots.slot(dev * lpd + vlane) };
+                for &i in rows {
+                    // SAFETY: levels partition rows (disjoint l/u
+                    // ranges); every dependency of row i sits in an
+                    // earlier level, published by the cross-device
+                    // step barrier.
+                    let outcome = unsafe {
+                        self.numeric_row(i, a, &mut acc[..], l_shared.0, u_shared.0)
+                    };
+                    if let Err((step, value)) = outcome {
+                        let mut slot = bad.lock().expect("pivot slot");
+                        if slot.is_none() {
+                            *slot = Some((step, value));
+                        }
+                        return StepCtl::Break;
+                    }
+                }
+                StepCtl::Continue
+            },
+        );
+
+        if let Some((step, value)) = bad.into_inner().expect("pivot slot") {
+            return Err(EbvError::SingularPivot { step, value, tol: self.pivot_tol });
+        }
+        self.assemble(&l_val, &u_val)
+    }
 }
 
 /// Raw-pointer wrapper making the factor-value workspaces shareable
@@ -605,6 +732,66 @@ mod tests {
         assert!(matches!(err, Err(EbvError::SingularPivot { step: 1, .. })), "{err:?}");
         let err = sym.factor_par_on(&a, 4, &LaneEngine::new(2));
         assert!(matches!(err, Err(EbvError::SingularPivot { step: 1, .. })), "{err:?}");
+    }
+
+    #[test]
+    fn sharded_numeric_is_bitwise_sequential() {
+        let a = poisson_2d(12);
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        let reference = SparseLu::new().factor(&a).unwrap();
+        for devices in [1usize, 2, 4] {
+            let set = DeviceSet::new(devices, 2);
+            let f = sym.factor_sharded(&a, 4, &set).unwrap();
+            assert_eq!(f.l(), reference.l(), "devices={devices}");
+            assert_eq!(f.u(), reference.u(), "devices={devices}");
+        }
+    }
+
+    #[test]
+    fn sharded_wide_levels_run_sharded_and_account_exchange() {
+        // Two wide DAG levels by construction: rows 0..20 are diagonal
+        // (level 0), rows 20..40 each depend on one level-0 row.
+        let n = 40;
+        let mut ptr = vec![0usize];
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..n {
+            if i >= 20 {
+                idx.push(i - 20);
+                val.push(1.0);
+            }
+            idx.push(i);
+            val.push(2.0);
+            ptr.push(idx.len());
+        }
+        let a = CsrMatrix::from_raw(n, n, ptr, idx, val).unwrap();
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        assert_eq!(sym.level_count(), 2);
+        let reference = SparseLu::new().factor(&a).unwrap();
+        let set = DeviceSet::new(2, 2);
+        let f = sym.factor_sharded(&a, 4, &set).unwrap();
+        assert_eq!(f.l(), reference.l());
+        assert_eq!(f.u(), reference.u());
+        let snap = set.snapshot();
+        assert_eq!(snap.sharded_jobs, 1, "{snap:?}");
+        // Level 1's exchange broadcasts level 0's 20 finalized U rows
+        // (one diagonal entry each).
+        assert_eq!(snap.exchange_elems, 20, "{snap:?}");
+        assert_eq!(snap.exchange_steps, 2, "{snap:?}");
+    }
+
+    #[test]
+    fn sharded_detects_numerically_singular_pivot() {
+        // Identity pattern with one zero diagonal: every row is level 0,
+        // so the sharded path engages (16 rows >= total * 4).
+        let n = 16;
+        let mut vals = vec![3.0; n];
+        vals[9] = 0.0;
+        let a = CsrMatrix::from_raw(n, n, (0..=n).collect(), (0..n).collect(), vals).unwrap();
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        let set = DeviceSet::new(2, 2);
+        let err = sym.factor_sharded(&a, 2, &set);
+        assert!(matches!(err, Err(EbvError::SingularPivot { step: 9, .. })), "{err:?}");
     }
 
     #[test]

@@ -14,7 +14,7 @@
 use std::sync::Mutex;
 
 use crate::ebv::schedule::LaneSchedule;
-use crate::exec::{LaneEngine, StepCtl};
+use crate::exec::{DeviceSet, LaneEngine, StepCtl};
 use crate::matrix::{CsrMatrix, DenseMatrix};
 use crate::util::error::{EbvError, Result};
 
@@ -434,6 +434,189 @@ pub fn sparse_backward_levels(
     Ok(x)
 }
 
+/// Per-level work assignment of a device-sharded solve: rows of a
+/// level go first to devices, then to vlanes within a device — both
+/// splits nnz-equalized and order-preserving, so each row's op
+/// sequence (and therefore every bit of the result) is unchanged.
+enum ShardedChunks<'a> {
+    /// Too small to shard: device 0's vlane 0 walks the level in row
+    /// order (bitwise the sequential sweep).
+    Single(&'a [usize]),
+    /// `chunks[device][vlane]` row lists.
+    Split(Vec<Vec<Vec<usize>>>),
+}
+
+/// Build the per-level sharded chunking shared by the forward and
+/// backward device solves: a level splits only when it has at least
+/// `4` rows per virtual lane (the flat policy lifted to the total
+/// vlane count). Returns `None` when *no* level is worth sharding —
+/// the caller keeps the zero-synchronization sequential path.
+fn sharded_level_chunks<'a>(
+    m: &CsrMatrix,
+    by_level: &'a [Vec<usize>],
+    devices: usize,
+    lanes_per_device: usize,
+) -> Option<Vec<ShardedChunks<'a>>> {
+    let total = devices * lanes_per_device;
+    let chunks: Vec<ShardedChunks<'a>> = by_level
+        .iter()
+        .map(|rows| {
+            if rows.len() < total * 4 {
+                ShardedChunks::Single(rows)
+            } else {
+                ShardedChunks::Split(
+                    equalize_rows_by_nnz(m, rows, devices)
+                        .into_iter()
+                        .map(|dev_rows| equalize_rows_by_nnz(m, &dev_rows, lanes_per_device))
+                        .collect(),
+                )
+            }
+        })
+        .collect();
+    chunks.iter().any(|c| matches!(c, ShardedChunks::Split(_))).then_some(chunks)
+}
+
+impl ShardedChunks<'_> {
+    /// Rows a given (device, vlane) walks at this level.
+    fn rows_of(&self, dev: usize, vlane: usize) -> Option<&[usize]> {
+        match self {
+            ShardedChunks::Single(rows) => (dev == 0 && vlane == 0).then_some(*rows),
+            ShardedChunks::Split(cs) => {
+                cs.get(dev).and_then(|d| d.get(vlane)).map(Vec::as_slice)
+            }
+        }
+    }
+}
+
+/// Device-sharded level-scheduled sparse forward substitution: one
+/// sharded step per level on a [`DeviceSet`], rows dealt devices-first
+/// with nnz-equalized chunks, the previous level's results accounted as
+/// the per-step exchange broadcast. Bitwise identical to
+/// [`sparse_forward_unit`] — each row performs the exact sequential op
+/// sequence — for every device count, lane count and engine size. A
+/// single-device set falls through to the flat engine path.
+pub fn sparse_forward_unit_levels_sharded(
+    l: &CsrMatrix,
+    b: &[f64],
+    by_level: &[Vec<usize>],
+    lanes: usize,
+    set: &DeviceSet,
+) -> Result<Vec<f64>> {
+    if b.len() != l.rows() {
+        return Err(EbvError::Shape("rhs length mismatch".into()));
+    }
+    let d = set.devices();
+    if d <= 1 {
+        return sparse_forward_unit_levels(l, b, by_level, lanes, set.engine(0).as_ref());
+    }
+    let lpd = lanes.div_ceil(d).max(1);
+    let Some(chunks) = sharded_level_chunks(l, by_level, d, lpd) else {
+        return sparse_forward_unit(l, b);
+    };
+    let mut y = b.to_vec();
+    let y_ptr = SharedVec(y.as_mut_ptr());
+
+    set.run_sharded(
+        lpd,
+        chunks.len(),
+        |level| {
+            if level > 0 {
+                // The previous level's solved entries travel to every
+                // device before this level reads them.
+                set.record_exchange(by_level[level - 1].len());
+            }
+            StepCtl::Continue
+        },
+        |dev, vlane, level| {
+            if let Some(chunk) = chunks[level].rows_of(dev, vlane) {
+                for &i in chunk {
+                    let (cols, vals) = l.row(i);
+                    // Dependencies live in earlier levels, published by
+                    // the cross-device step barrier.
+                    let mut acc = unsafe { *y_ptr.0.add(i) };
+                    for (&j, &v) in cols.iter().zip(vals.iter()) {
+                        acc -= v * unsafe { *y_ptr.0.add(j) };
+                    }
+                    unsafe { *y_ptr.0.add(i) = acc };
+                }
+            }
+            StepCtl::Continue
+        },
+    );
+    Ok(y)
+}
+
+/// Device-sharded level-scheduled sparse backward substitution, the
+/// mirror of [`sparse_forward_unit_levels_sharded`] over `U`'s levels
+/// (as computed by [`levels_of_upper`]). Bitwise identical to
+/// [`sparse_backward`] for every device count; a zero diagonal ends
+/// the job through the sharded break protocol (all devices stop on the
+/// same level) and reports `SingularPivot`.
+pub fn sparse_backward_levels_sharded(
+    u: &CsrMatrix,
+    y: &[f64],
+    by_level: &[Vec<usize>],
+    lanes: usize,
+    set: &DeviceSet,
+) -> Result<Vec<f64>> {
+    if y.len() != u.rows() {
+        return Err(EbvError::Shape("rhs length mismatch".into()));
+    }
+    let d = set.devices();
+    if d <= 1 {
+        return sparse_backward_levels(u, y, by_level, lanes, set.engine(0).as_ref());
+    }
+    let lpd = lanes.div_ceil(d).max(1);
+    let Some(chunks) = sharded_level_chunks(u, by_level, d, lpd) else {
+        return sparse_backward(u, y);
+    };
+    let mut x = y.to_vec();
+    let x_ptr = SharedVec(x.as_mut_ptr());
+    let bad = Mutex::new(None::<usize>);
+
+    set.run_sharded(
+        lpd,
+        chunks.len(),
+        |level| {
+            if level > 0 {
+                set.record_exchange(by_level[level - 1].len());
+            }
+            StepCtl::Continue
+        },
+        |dev, vlane, level| {
+            if let Some(chunk) = chunks[level].rows_of(dev, vlane) {
+                for &i in chunk {
+                    let (cols, vals) = u.row(i);
+                    let mut acc = unsafe { *x_ptr.0.add(i) };
+                    let mut diag = 0.0;
+                    for (&j, &v) in cols.iter().zip(vals.iter()) {
+                        if j == i {
+                            diag = v;
+                        } else {
+                            debug_assert!(j > i, "U must be upper triangular");
+                            acc -= v * unsafe { *x_ptr.0.add(j) };
+                        }
+                    }
+                    if diag == 0.0 {
+                        let mut slot = bad.lock().expect("diag slot");
+                        if slot.is_none() {
+                            *slot = Some(i);
+                        }
+                        return StepCtl::Break;
+                    }
+                    unsafe { *x_ptr.0.add(i) = acc / diag };
+                }
+            }
+            StepCtl::Continue
+        },
+    );
+
+    if let Some(step) = bad.into_inner().expect("diag slot") {
+        return Err(EbvError::SingularPivot { step, value: 0.0, tol: 0.0 });
+    }
+    Ok(x)
+}
+
 /// Split `rows` into `lanes` chunks with near-equal total nnz (greedy,
 /// preserving order within a chunk).
 fn equalize_rows_by_nnz(m: &CsrMatrix, rows: &[usize], lanes: usize) -> Vec<Vec<usize>> {
@@ -672,6 +855,44 @@ mod tests {
         let err = sparse_backward_levels(&u, &[1.0; 8], &by_level, 2, engine());
         assert!(
             matches!(err, Err(EbvError::SingularPivot { step: 5, .. })),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn sharded_level_solves_are_bitwise_sequential() {
+        let a = diag_dominant_sparse(120, 5, GenSeed(21));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let b: Vec<f64> = (0..120).map(|i| (i as f64 * 0.6).sin()).collect();
+        let (_, fwd_levels) = levels_of_lower(f.l());
+        let (_, bwd_levels) = levels_of_upper(f.u());
+        let seq_y = sparse_forward_unit(f.l(), &b).unwrap();
+        let seq_x = sparse_backward(f.u(), &seq_y).unwrap();
+        for devices in [1usize, 2, 4] {
+            let set = DeviceSet::new(devices, 2);
+            let y =
+                sparse_forward_unit_levels_sharded(f.l(), &b, &fwd_levels, 4, &set).unwrap();
+            assert_eq!(y, seq_y, "forward devices={devices}");
+            let x =
+                sparse_backward_levels_sharded(f.u(), &y, &bwd_levels, 4, &set).unwrap();
+            assert_eq!(x, seq_x, "backward devices={devices}");
+        }
+    }
+
+    #[test]
+    fn sharded_backward_detects_zero_diagonal() {
+        // Diagonal U with one zero: all rows share level 0, large
+        // enough (16 >= 2*2*4) that the sharded path engages.
+        let n = 16;
+        let mut vals = vec![2.0; n];
+        vals[11] = 0.0;
+        let u = CsrMatrix::from_raw(n, n, (0..=n).collect(), (0..n).collect(), vals).unwrap();
+        let (_, by_level) = levels_of_upper(&u);
+        assert_eq!(by_level.len(), 1);
+        let set = DeviceSet::new(2, 2);
+        let err = sparse_backward_levels_sharded(&u, &vec![1.0; n], &by_level, 2, &set);
+        assert!(
+            matches!(err, Err(EbvError::SingularPivot { step: 11, .. })),
             "{err:?}"
         );
     }

@@ -491,6 +491,16 @@ pub fn encode_response(frame: &ResponseFrame) -> String {
                 m.engine_barrier_waits,
                 m.panel_width
             );
+            let _ = write!(
+                out,
+                ",\"devices\":{},\"device_lanes\":{},\"device_jobs\":{},\
+                 \"exchange_steps\":{},\"exchange_elems\":{}",
+                m.devices,
+                m.device_lanes,
+                m.device_jobs,
+                m.exchange_steps,
+                m.exchange_elems
+            );
             out.push_str(",\"mean_batch\":");
             push_num(&mut out, m.mean_batch);
             out.push_str(",\"lat_mean_s\":");
@@ -625,6 +635,19 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                     acc.metrics.engine_barrier_waits = as_index(expect_num(&mut sc, &k)?, &k)?
                 }
                 "panel_width" => acc.metrics.panel_width = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "devices" => acc.metrics.devices = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "device_lanes" => {
+                    acc.metrics.device_lanes = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "device_jobs" => {
+                    acc.metrics.device_jobs = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "exchange_steps" => {
+                    acc.metrics.exchange_steps = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "exchange_elems" => {
+                    acc.metrics.exchange_elems = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
                 "mean_batch" => acc.metrics.mean_batch = expect_num(&mut sc, &k)?,
                 "lat_mean_s" => acc.metrics.lat_mean_s = expect_num(&mut sc, &k)?,
                 "lat_p50_s" => acc.metrics.lat_p50_s = expect_num(&mut sc, &k)?,
@@ -874,6 +897,11 @@ mod tests {
             engine_steps: 620,
             engine_barrier_waits: 2480,
             panel_width: 64,
+            devices: 2,
+            device_lanes: 2,
+            device_jobs: 7,
+            exchange_steps: 310,
+            exchange_elems: 52_000,
         });
         assert_eq!(decode_response(&encode_response(&m)).unwrap(), m);
 

@@ -1,0 +1,207 @@
+//! Property suite pinning the two-level device-sharded runtime
+//! (testutil framework — the offline stand-in for proptest).
+//!
+//! The contract (see `rust/DESIGN.md` §Device layer and the
+//! bit-identity ledger):
+//!
+//! * `devices = 1` never enters the sharded runtime — every path is
+//!   the pre-existing flat code, so it is **bitwise** the flat result
+//!   by construction (pinned here anyway, against `EbvLu::panel`,
+//!   `SparseSymbolic` and the level trisolves);
+//! * for `D ∈ {1, 2, 4}` × lane counts × `RowDist`s, the sharded
+//!   dense factors, sparse refactorizations and triangular solves are
+//!   **bit-stable**: identical bits for every device count, because
+//!   each row's arithmetic depends only on the schedule decomposition,
+//!   never on which device executes it;
+//! * the measured exchange of the sharded column path equals what
+//!   `FactorPlan::multi_device` prices, and the per-device flop split
+//!   conserves the flat total for every `RowDist`.
+
+use std::sync::Arc;
+
+use ebv_solve::ebv::plan::FactorPlan;
+use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
+use ebv_solve::exec::DeviceSet;
+use ebv_solve::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+use ebv_solve::solver::trisolve::{
+    levels_of_lower, levels_of_upper, sparse_backward, sparse_backward_levels_sharded,
+    sparse_forward_unit, sparse_forward_unit_levels_sharded,
+};
+use ebv_solve::solver::{EbvLu, LuSolver, SeqLu, SparseLu, SparseSymbolic};
+use ebv_solve::testutil::forall;
+
+/// EbvLu forced onto the parallel path with an explicit panel width.
+fn panelled(lanes: usize, nb: usize) -> EbvLu {
+    EbvLu::with_lanes(lanes).seq_threshold(0).panel(nb)
+}
+
+#[test]
+fn prop_dense_sharded_bits_invariant_under_device_count() {
+    let sets: Vec<Arc<DeviceSet>> =
+        [1usize, 2, 4].iter().map(|&d| Arc::new(DeviceSet::new(d, 2))).collect();
+    forall("dense factors are device-count invariant", 25, |g| {
+        let n = g.usize_in(2, 100);
+        let nb = *g.choose(&[1usize, 2, 8, 64]);
+        let lanes = g.usize_in(2, 8);
+        let dist = *g.choose(&RowDist::ALL);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        // Flat reference (no device set at all).
+        let reference = panelled(lanes, nb).with_dist(dist).factor(&a).unwrap();
+        for set in &sets {
+            let f = panelled(lanes, nb)
+                .with_dist(dist)
+                .with_devices(Arc::clone(set))
+                .factor(&a)
+                .unwrap();
+            assert_eq!(
+                f.packed().max_abs_diff(reference.packed()),
+                0.0,
+                "n={n} nb={nb} lanes={lanes} {dist:?} devices={}",
+                set.devices()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_panel_one_is_bitwise_seqlu() {
+    forall("sharded panel(1) ≡ SeqLu bitwise", 20, |g| {
+        let n = g.usize_in(2, 90);
+        let devices = *g.choose(&[2usize, 3, 4]);
+        let lanes = g.usize_in(2, 6);
+        let dist = *g.choose(&RowDist::ALL);
+        let a = diag_dominant_dense(n, GenSeed(g.seed()));
+        let seq = SeqLu::new().factor(&a).unwrap();
+        let set = Arc::new(DeviceSet::new(devices, 2));
+        let f = panelled(lanes, 1).with_dist(dist).with_devices(set).factor(&a).unwrap();
+        assert_eq!(
+            f.packed().max_abs_diff(seq.packed()),
+            0.0,
+            "n={n} lanes={lanes} devices={devices} {dist:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_sparse_refactor_sharded_is_bitwise_monolithic() {
+    forall("sharded sparse refactor ≡ SparseLu::factor bitwise", 20, |g| {
+        let n = g.usize_in(10, 90);
+        let devices = *g.choose(&[1usize, 2, 4]);
+        let lanes = g.usize_in(2, 6);
+        let a = diag_dominant_sparse(n, g.usize_in(2, 6), GenSeed(g.seed()));
+        let reference = SparseLu::new().factor(&a).unwrap();
+        let sym = SparseSymbolic::analyze(&a).unwrap();
+        let set = DeviceSet::new(devices, 2);
+        let f = sym.factor_sharded(&a, lanes, &set).unwrap();
+        assert_eq!(f.l(), reference.l(), "n={n} lanes={lanes} devices={devices}");
+        assert_eq!(f.u(), reference.u(), "n={n} lanes={lanes} devices={devices}");
+    });
+}
+
+#[test]
+fn prop_sharded_trisolves_are_bitwise_sequential() {
+    forall("sharded level trisolves ≡ sequential bitwise", 20, |g| {
+        let n = g.usize_in(10, 110);
+        let devices = *g.choose(&[1usize, 2, 4]);
+        let lanes = g.usize_in(2, 6);
+        let a = diag_dominant_sparse(n, g.usize_in(2, 5), GenSeed(g.seed()));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let (_, fwd) = levels_of_lower(f.l());
+        let (_, bwd) = levels_of_upper(f.u());
+        let seq_y = sparse_forward_unit(f.l(), &b).unwrap();
+        let seq_x = sparse_backward(f.u(), &seq_y).unwrap();
+        let set = DeviceSet::new(devices, 2);
+        let y = sparse_forward_unit_levels_sharded(f.l(), &b, &fwd, lanes, &set).unwrap();
+        assert_eq!(y, seq_y, "forward n={n} devices={devices} lanes={lanes}");
+        let x = sparse_backward_levels_sharded(f.u(), &y, &bwd, lanes, &set).unwrap();
+        assert_eq!(x, seq_x, "backward n={n} devices={devices} lanes={lanes}");
+        // End-to-end through the factor object too.
+        let x2 = f.solve_sharded(&b, lanes, &set).unwrap();
+        assert_eq!(x2, f.solve(&b).unwrap(), "solve_sharded n={n} devices={devices}");
+    });
+}
+
+#[test]
+fn prop_multi_device_plan_conserves_flops() {
+    forall("per-device flops conserve the flat total for all RowDists", 25, |g| {
+        let n = g.usize_in(2, 160);
+        let devices = *g.choose(&[1usize, 2, 4]);
+        let lpd = g.usize_in(1, 6);
+        let dist = *g.choose(&RowDist::ALL);
+        let flat = FactorPlan::dense(n, &LaneSchedule::build(n, 4, RowDist::EbvFold));
+        let flat_total: usize = flat.lane_flops.iter().sum();
+        let sched = LaneSchedule::build_sharded(n, devices, lpd, dist);
+        let plan = FactorPlan::multi_device(n, &sched);
+        assert_eq!(plan.device_flops.len(), devices, "n={n} {dist:?}");
+        assert_eq!(plan.total_flops(), flat_total, "n={n} {dist:?} devices={devices}");
+        // The schedule's own device-work fold agrees with the plan's
+        // shape: both partition the same total.
+        assert_eq!(
+            sched.device_work().iter().sum::<usize>(),
+            LaneSchedule::build(n, 4, dist).lane_work().iter().sum::<usize>(),
+            "n={n} {dist:?}"
+        );
+    });
+}
+
+/// The measured exchange of the real sharded run equals what the
+/// cost-model plan prices — the "cost model and runtime in one report"
+/// acceptance criterion, pinned as a test.
+#[test]
+fn measured_exchange_matches_the_plan() {
+    let n = 72;
+    let a = diag_dominant_dense(n, GenSeed(91));
+    for devices in [2usize, 4] {
+        let lanes = 4;
+        let lpd = lanes.div_ceil(devices).max(1);
+        let set = Arc::new(DeviceSet::new(devices, 2));
+        panelled(lanes, 1).with_devices(Arc::clone(&set)).factor(&a).unwrap();
+        let plan =
+            FactorPlan::multi_device(n, &LaneSchedule::build_sharded(n, devices, lpd, RowDist::EbvFold));
+        let snap = set.snapshot();
+        assert_eq!(
+            snap.exchange_elems, plan.exchange_elems as u64,
+            "devices={devices}: runtime vs plan"
+        );
+        assert_eq!(snap.exchange_steps, (n - 1) as u64, "devices={devices}");
+        assert_eq!(snap.sharded_jobs, 1, "devices={devices}");
+    }
+}
+
+/// The acceptance grid, pinned deterministically: D ∈ {1, 2, 4} ×
+/// lane counts × RowDists on one dense matrix, one sparse pattern and
+/// one trisolve, all bitwise against their flat references.
+#[test]
+fn device_checklist_grid() {
+    let n = 96;
+    let a = diag_dominant_dense(n, GenSeed(92));
+    let seq = SeqLu::new().factor(&a).unwrap();
+    let sa = diag_dominant_sparse(n, 4, GenSeed(93));
+    let sparse_ref = SparseLu::new().factor(&sa).unwrap();
+    let sym = SparseSymbolic::analyze(&sa).unwrap();
+    let b: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect();
+    let x_ref = sparse_ref.solve(&b).unwrap();
+    for devices in [1usize, 2, 4] {
+        let set = Arc::new(DeviceSet::new(devices, 2));
+        for lanes in [2usize, 4, 8] {
+            for dist in RowDist::ALL {
+                let f = panelled(lanes, 1)
+                    .with_dist(dist)
+                    .with_devices(Arc::clone(&set))
+                    .factor(&a)
+                    .unwrap();
+                assert_eq!(
+                    f.packed().max_abs_diff(seq.packed()),
+                    0.0,
+                    "dense D={devices} lanes={lanes} {dist:?}"
+                );
+            }
+            let f = sym.factor_sharded(&sa, lanes, &set).unwrap();
+            assert_eq!(f.l(), sparse_ref.l(), "sparse D={devices} lanes={lanes}");
+            assert_eq!(f.u(), sparse_ref.u(), "sparse D={devices} lanes={lanes}");
+            let x = f.solve_sharded(&b, lanes, &set).unwrap();
+            assert_eq!(x, x_ref, "trisolve D={devices} lanes={lanes}");
+        }
+    }
+}
