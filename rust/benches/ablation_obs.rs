@@ -1,0 +1,144 @@
+//! Observability ablation: the zero-overhead contract of the `obs`
+//! subsystem, pinned on the dense hot path.
+//!
+//! With profiling disabled (the default) every obs hook must compile
+//! down to a branch on one relaxed atomic load per job — so the dense
+//! blocked EBV factorization with the hooks present but off must run
+//! within 2% of the same factorization with the hooks on (the off path
+//! can only be *cheaper*; the assert catches hidden costs leaking into
+//! the disabled branch). Structure checks ride along in every mode:
+//! spans and lane-profile counters appear iff profiling is enabled, and
+//! the factors are bitwise identical with profiling on or off.
+//!
+//! The wall-clock assert is skipped under `EBV_BENCH_SMOKE=1` (tiny
+//! shapes are timer noise); the structure checks always run. Writes
+//! `BENCH_obs.json` in measured mode (see `bench::write_repo_summary`).
+//!
+//! ```sh
+//! cargo bench --bench ablation_obs
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ebv_solve::bench::{self, Bencher, Report};
+use ebv_solve::exec::LaneEngine;
+use ebv_solve::matrix::generate::{diag_dominant_dense, GenSeed};
+use ebv_solve::obs::{self, Phase};
+use ebv_solve::solver::{EbvLu, LuSolver};
+use ebv_solve::util::json::Json;
+
+fn main() {
+    let lanes = 4;
+    let engine = Arc::new(LaneEngine::new(lanes));
+    let smoke = bench::smoke();
+    let sizes = bench::sizes(&[512, 1024], &[96]);
+    let bencher = Bencher {
+        min_iters: 5,
+        max_iters: 30,
+        target_time: Duration::from_millis(900),
+        warmup_iters: 1,
+    }
+    .or_smoke();
+
+    let mut report = Report::new("Obs ablation — dense factor with profiling off vs on");
+    report.set_headers(&["case", "median off, s", "median on, s", "off/on"]);
+    // (n, median off, median on)
+    let mut results: Vec<(usize, f64, f64)> = Vec::new();
+
+    for &n in &sizes {
+        let a = diag_dominant_dense(n, GenSeed(6000 + n as u64));
+        let solver = EbvLu::with_lanes(lanes).seq_threshold(0).with_engine(Arc::clone(&engine));
+
+        // Profiling off: the default state every non-profiled run pays.
+        obs::set_enabled(false);
+        let _ = obs::take_thread_spans();
+        let off = bencher.run(&format!("factor n={n} obs=off"), || {
+            solver.factor(&a).expect("factor")
+        });
+        let f_off = solver.factor(&a).expect("factor");
+        assert!(
+            obs::take_thread_spans().is_empty(),
+            "n={n}: spans recorded with profiling disabled"
+        );
+
+        // Profiling on: spans + lane profile accumulate.
+        obs::set_enabled(true);
+        let _ = obs::take_thread_spans();
+        let on = bencher.run(&format!("factor n={n} obs=on"), || {
+            solver.factor(&a).expect("factor")
+        });
+        let f_on = solver.factor(&a).expect("factor");
+        let spans = obs::take_thread_spans();
+        assert!(
+            spans.iter().any(|s| s.phase == Phase::NumericFactor),
+            "n={n}: profiled factor must record a numeric_factor span"
+        );
+        obs::set_enabled(false);
+
+        // Bitwise invariance: profiling must observe, never perturb.
+        assert_eq!(
+            f_off.packed().max_abs_diff(f_on.packed()),
+            0.0,
+            "n={n}: factors differ with profiling on vs off"
+        );
+
+        report.push_row(vec![
+            format!("factor n={n}"),
+            format!("{:.6}", off.median),
+            format!("{:.6}", on.median),
+            format!("{:.3}", off.median / on.median),
+        ]);
+        results.push((n, off.median, on.median));
+        report.push_stats(off);
+        report.push_stats(on);
+    }
+
+    // The lane profile saw the enabled jobs (pooled or inline).
+    let stats = engine.stats();
+    assert!(stats.profiled_jobs > 0, "enabled runs must land in the lane profile");
+    assert!(stats.busy_ns > 0, "profiled jobs must accumulate busy time");
+
+    println!("{}", report.render());
+    if let Ok(p) = report.write_json() {
+        println!("report: {}", p.display());
+    }
+    println!("engine stats: {stats:?}");
+
+    let doc = Json::obj([
+        ("bench", Json::from("ablation_obs")),
+        ("status", Json::from("measured")),
+        ("lanes", Json::from(lanes)),
+        ("overhead_bound", Json::from(1.02)),
+        (
+            "cases",
+            Json::arr(results.iter().map(|(n, off, on)| {
+                Json::obj([
+                    ("n", Json::from(*n)),
+                    ("median_off_s", Json::from(*off)),
+                    ("median_on_s", Json::from(*on)),
+                    ("off_over_on", Json::from(off / on)),
+                ])
+            })),
+        ),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_obs.json");
+    if bench::write_repo_summary(&out, &doc).unwrap_or(false) {
+        println!("wrote {}", out.display());
+    }
+
+    // The zero-overhead contract (skipped in smoke mode): at every
+    // size, the disabled path must not run slower than 1.02x the
+    // enabled path — all the clocks and accumulators live behind the
+    // enabled branch, so "off" can only shed cost.
+    if !smoke {
+        for (n, off, on) in &results {
+            assert!(
+                off <= &(on * 1.02),
+                "n={n}: profiling-off path ({off:.6}s) exceeded 1.02x the \
+                 profiling-on path ({on:.6}s) — overhead leaked into the disabled branch"
+            );
+        }
+        println!("claim check: obs-off ≤ 1.02 × obs-on at every size ✓");
+    }
+}

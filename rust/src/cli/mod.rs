@@ -108,6 +108,14 @@ COMMANDS:
                                              device groups — bitwise
                                              identical results)
               --seed <u64>                  (default 7)
+              --profile                     (run through an in-process
+                                             profiled service: print the
+                                             span timeline and measured
+                                             vs planned lane/device
+                                             imbalance)
+              --events <path>               (with --profile: append the
+                                             solve trace to a JSONL
+                                             event log)
     serve     Serve solves over the NDJSON wire protocol on stdin/stdout
               (see README.md §Wire protocol for the frame format)
               --lanes <k> --batch <k> --window-us <µs> --queue <k>
@@ -130,6 +138,18 @@ COMMANDS:
               --trace                       (replay a synthetic trace
                                              instead of serving stdio)
               --requests <k> --rate <r/s>   (trace mode volume)
+              --profile                     (enable solve tracing and the
+                                             lane/device profiler; prints
+                                             an obs summary on stderr)
+    metrics   Run probe solves on an in-process profiled service and
+              print a Prometheus-style text exposition on stdout
+              --n <size> --probes <k>       (probe volume; default 192/2)
+              --lanes <k> --devices <D> --panel-width <nb>
+              --no-profile                  (leave the obs subsystem off:
+                                             counters only, no measured
+                                             imbalance)
+              --events <path>               (append a metrics event to a
+                                             JSONL event log)
     tables    Regenerate the paper's tables via the cost model
               --table 1|2|3|all             (default all)
     schedule  Print equalization diagnostics for a size

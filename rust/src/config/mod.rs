@@ -141,6 +141,12 @@ pub struct ServiceConfig {
     pub use_runtime: bool,
     /// Refine runtime (f32) solutions to f64 accuracy.
     pub refine: bool,
+    /// Span-structured solve tracing and lane/device profiling
+    /// (`obs::set_enabled`). Off by default — the observability hooks
+    /// then cost one relaxed atomic load per job. Turning it on makes
+    /// workers attach a `SolveTrace` to every response and the engine
+    /// accumulate per-lane busy/wait nanoseconds.
+    pub profiling: bool,
 }
 
 impl Default for ServiceConfig {
@@ -158,6 +164,7 @@ impl Default for ServiceConfig {
             artifacts_dir: "artifacts".to_string(),
             use_runtime: false,
             refine: true,
+            profiling: false,
         }
     }
 }
@@ -187,6 +194,7 @@ impl ServiceConfig {
                 .unwrap_or_else(|| d.artifacts_dir.clone()),
             use_runtime: raw.get_parsed("service", "use_runtime", d.use_runtime)?,
             refine: raw.get_parsed("service", "refine", d.refine)?,
+            profiling: raw.get_parsed("service", "profiling", d.profiling)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -278,6 +286,15 @@ mod tests {
         let raw = RawConfig::parse("[service]\nsparse_parallel = false\n").unwrap();
         assert!(!ServiceConfig::from_raw(&raw).unwrap().sparse_parallel);
         let raw = RawConfig::parse("[service]\nsparse_parallel = maybe\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn profiling_knob_parses() {
+        assert!(!ServiceConfig::default().profiling, "profiling is opt-in");
+        let raw = RawConfig::parse("[service]\nprofiling = true\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).unwrap().profiling);
+        let raw = RawConfig::parse("[service]\nprofiling = sometimes\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err());
     }
 

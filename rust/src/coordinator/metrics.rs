@@ -120,6 +120,36 @@ pub struct MetricsSnapshot {
     /// bytes) — the measured counterpart of the cost model's
     /// interconnect term.
     pub exchange_elems: u64,
+    /// Dense solves observed by the per-frame-class latency histogram.
+    pub dense_solves: u64,
+    /// Sparse solves observed by the per-frame-class latency histogram.
+    pub sparse_solves: u64,
+    pub dense_lat_mean_s: f64,
+    pub dense_lat_p99_s: f64,
+    pub sparse_lat_mean_s: f64,
+    pub sparse_lat_p99_s: f64,
+    /// Measured lane profiler accumulators (`obs` subsystem): summed
+    /// per-lane compute ns and barrier-wait ns of the flat engine, and
+    /// the number of jobs profiled into them. Zero unless the service
+    /// ran with profiling on (`service.profiling` / `--profile`).
+    pub busy_ns: u64,
+    pub wait_ns: u64,
+    pub profiled_jobs: u64,
+    /// Measured max/mean imbalance of per-lane busy time — the runtime
+    /// counterpart of the `FactorPlan` predicted imbalance, computed by
+    /// the same `max_mean_imbalance` statistic. `1.0` when nothing was
+    /// profiled.
+    pub measured_imbalance: f64,
+    /// Summed per-device compute ns of the sharded runtime (profiling
+    /// on and `devices > 1` only).
+    pub device_busy_ns: u64,
+    /// Nanoseconds spent in the exchange phase of sharded jobs
+    /// (profiling on only).
+    pub exchange_ns: u64,
+    /// Measured max/mean imbalance of per-device busy time — the
+    /// runtime counterpart of `DevicePlan::device_imbalance`. `1.0`
+    /// when nothing was profiled.
+    pub device_measured_imbalance: f64,
 }
 
 /// All service-level metrics.
@@ -139,6 +169,11 @@ pub struct ServiceMetrics {
     pub symbolic_reuse: AtomicU64,
     pub numeric_refactor: AtomicU64,
     pub latency: LatencyHistogram,
+    /// Per-frame-class latency histograms (dense vs sparse solves) —
+    /// the all-traffic `latency` histogram stays authoritative for the
+    /// headline quantiles.
+    pub dense_latency: LatencyHistogram,
+    pub sparse_latency: LatencyHistogram,
     /// Per-backend completion counts.
     backend_counts: Mutex<Vec<(&'static str, u64)>>,
 }
@@ -193,6 +228,19 @@ impl ServiceMetrics {
             device_jobs: 0,
             exchange_steps: 0,
             exchange_elems: 0,
+            dense_solves: self.dense_latency.count(),
+            sparse_solves: self.sparse_latency.count(),
+            dense_lat_mean_s: self.dense_latency.mean(),
+            dense_lat_p99_s: self.dense_latency.quantile(0.99),
+            sparse_lat_mean_s: self.sparse_latency.mean(),
+            sparse_lat_p99_s: self.sparse_latency.quantile(0.99),
+            busy_ns: 0,
+            wait_ns: 0,
+            profiled_jobs: 0,
+            measured_imbalance: 0.0,
+            device_busy_ns: 0,
+            exchange_ns: 0,
+            device_measured_imbalance: 0.0,
         }
     }
 
@@ -206,6 +254,21 @@ impl ServiceMetrics {
         snap.engine_jobs = engine.jobs;
         snap.engine_steps = engine.steps;
         snap.engine_barrier_waits = engine.barrier_waits;
+        snap.busy_ns = engine.busy_ns;
+        snap.wait_ns = engine.wait_ns;
+        snap.profiled_jobs = engine.profiled_jobs;
+        snap
+    }
+
+    /// Fold the measured lane-profile imbalance in (the service handle
+    /// does this from the engine's [`LaneProfile`](crate::obs::LaneProfile)
+    /// snapshot — the per-lane vector never travels in the scalar-only
+    /// engine snapshot).
+    pub fn merge_lane_profile(
+        mut snap: MetricsSnapshot,
+        profile: &crate::obs::LaneProfileSnapshot,
+    ) -> MetricsSnapshot {
+        snap.measured_imbalance = profile.measured_imbalance();
         snap
     }
 
@@ -221,6 +284,8 @@ impl ServiceMetrics {
         snap.device_jobs = devices.sharded_jobs;
         snap.exchange_steps = devices.exchange_steps;
         snap.exchange_elems = devices.exchange_elems;
+        snap.device_busy_ns = devices.busy_ns;
+        snap.exchange_ns = devices.exchange_ns;
         snap
     }
 
@@ -323,6 +388,9 @@ mod tests {
             steps: 120,
             barrier_waits: 480,
             slow_waits: 1,
+            busy_ns: 7_000,
+            wait_ns: 300,
+            profiled_jobs: 6,
         };
         let s = ServiceMetrics::merge_engine(m.snapshot(), e);
         assert_eq!(s.completed, 3);
@@ -330,6 +398,9 @@ mod tests {
         assert_eq!(s.engine_jobs, 9);
         assert_eq!(s.engine_steps, 120);
         assert_eq!(s.engine_barrier_waits, 480);
+        assert_eq!(s.busy_ns, 7_000);
+        assert_eq!(s.wait_ns, 300);
+        assert_eq!(s.profiled_jobs, 6);
         // merge_engine only fills engine fields; the panel width comes
         // from the service handle.
         assert_eq!(s.panel_width, 0);
@@ -346,6 +417,8 @@ mod tests {
             sharded_jobs: 5,
             exchange_steps: 300,
             exchange_elems: 12_000,
+            busy_ns: 9_000,
+            exchange_ns: 450,
         };
         let s = ServiceMetrics::merge_devices(m.snapshot(), d);
         assert_eq!(s.completed, 2);
@@ -354,8 +427,112 @@ mod tests {
         assert_eq!(s.device_jobs, 5);
         assert_eq!(s.exchange_steps, 300);
         assert_eq!(s.exchange_elems, 12_000);
+        assert_eq!(s.device_busy_ns, 9_000);
+        assert_eq!(s.exchange_ns, 450);
         // merge_devices leaves the engine fields alone.
         assert_eq!(s.engine_lanes, 0);
+    }
+
+    #[test]
+    fn single_observation_pins_every_quantile() {
+        let h = LatencyHistogram::default();
+        h.observe(2e-3);
+        // One sample: every quantile resolves to that sample's bucket
+        // bound (the half-decade above 1e-3).
+        let bucket = h.quantile(0.5);
+        assert!(bucket >= 2e-3 && bucket <= 1e-2, "{bucket}");
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), bucket, "q={q}");
+        }
+        assert!((h.mean() - 2e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_q() {
+        let h = LatencyHistogram::default();
+        for i in 1..=200u32 {
+            h.observe(i as f64 * 1e-4); // 0.1ms .. 20ms
+        }
+        let mut prev = 0.0;
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= prev, "q={q}: {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn bucket_edge_observations_land_in_their_bound() {
+        let h = LatencyHistogram::default();
+        // Exactly on a bucket bound: partition_point(|b| b < secs)
+        // keeps the observation in the bucket whose bound equals it.
+        h.observe(1e-3);
+        assert_eq!(h.quantile(0.5), 1e-3);
+        // Below the first bound and beyond the last both stay finite /
+        // infinite as documented.
+        let lo = LatencyHistogram::default();
+        lo.observe(1e-9);
+        assert_eq!(lo.quantile(0.5), 1e-6, "underflow clamps to the first bound");
+        let hi = LatencyHistogram::default();
+        hi.observe(1e4);
+        assert_eq!(hi.quantile(0.5), f64::INFINITY, "overflow bucket has no bound");
+    }
+
+    #[test]
+    fn mean_survives_concurrent_observes() {
+        let h = std::sync::Arc::new(LatencyHistogram::default());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for _ in 0..250 {
+                        h.observe(1e-3);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 1000);
+        // All observations identical: the mean must be exact up to the
+        // ns quantization of sum_ns, no lost updates.
+        assert!((h.mean() - 1e-3).abs() < 1e-9, "{}", h.mean());
+    }
+
+    #[test]
+    fn per_class_histograms_split_dense_and_sparse() {
+        let m = ServiceMetrics::default();
+        m.dense_latency.observe(1e-3);
+        m.dense_latency.observe(1e-3);
+        m.sparse_latency.observe(1e-2);
+        let s = m.snapshot();
+        assert_eq!(s.dense_solves, 2);
+        assert_eq!(s.sparse_solves, 1);
+        assert!((s.dense_lat_mean_s - 1e-3).abs() < 1e-9);
+        assert!((s.sparse_lat_mean_s - 1e-2).abs() < 1e-9);
+        assert!(s.dense_lat_p99_s > 0.0 && s.sparse_lat_p99_s > 0.0);
+        // The headline histogram is separate: untouched here.
+        assert_eq!(s.lat_mean_s, 0.0);
+    }
+
+    #[test]
+    fn merge_lane_profile_fills_measured_imbalance() {
+        let m = ServiceMetrics::default();
+        let profile = crate::obs::LaneProfileSnapshot {
+            busy_ns: vec![300, 100],
+            wait_ns: vec![5, 205],
+            jobs: 2,
+        };
+        let s = ServiceMetrics::merge_lane_profile(m.snapshot(), &profile);
+        assert!((s.measured_imbalance - 1.5).abs() < 1e-12);
+        // An unprofiled service reports the vacuous 1.0, mirroring the
+        // FactorPlan convention for empty schedules.
+        let s = ServiceMetrics::merge_lane_profile(
+            m.snapshot(),
+            &crate::obs::LaneProfileSnapshot::default(),
+        );
+        assert_eq!(s.measured_imbalance, 1.0);
     }
 
     #[test]

@@ -125,6 +125,10 @@ pub struct SolveResponse {
     /// Requests that shared the factorization with this one.
     pub batch_size: usize,
     pub timings: Timings,
+    /// Span timeline of the worker execution that served this request
+    /// (`None` unless the service ran with profiling on). Batched
+    /// requests share the batch's timeline.
+    pub trace: Option<crate::obs::SolveTrace>,
 }
 
 impl SolveResponse {
@@ -141,6 +145,7 @@ impl SolveResponse {
             backend,
             batch_size: 1,
             timings: Timings::default(),
+            trace: None,
         }
     }
 }

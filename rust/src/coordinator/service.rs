@@ -32,6 +32,12 @@ impl SolverService {
     pub fn start(cfg: ServiceConfig) -> Result<ServiceHandle> {
         cfg.validate()?;
         crate::util::logging::init();
+        if cfg.profiling {
+            // Process-global: once a profiled service starts, the obs
+            // hooks are live for the rest of the process (the flag is
+            // never flipped back — services may share engines).
+            crate::obs::set_enabled(true);
+        }
 
         // Optional PJRT runtime.
         let mut runtime = None;
@@ -320,10 +326,17 @@ impl ServiceHandle {
     pub fn metrics_snapshot(&self) -> crate::coordinator::metrics::MetricsSnapshot {
         let mut snap =
             ServiceMetrics::merge_engine(self.metrics.snapshot(), self.ctx.engine.stats());
+        snap = ServiceMetrics::merge_lane_profile(snap, &self.ctx.engine.lane_profile());
         snap.panel_width = self.ctx.panel_width as u64;
         match &self.ctx.device_set {
-            Some(set) => snap = ServiceMetrics::merge_devices(snap, set.snapshot()),
-            None => snap.devices = 1,
+            Some(set) => {
+                snap = ServiceMetrics::merge_devices(snap, set.snapshot());
+                snap.device_measured_imbalance = set.measured_imbalance();
+            }
+            None => {
+                snap.devices = 1;
+                snap.device_measured_imbalance = 1.0;
+            }
         }
         snap
     }

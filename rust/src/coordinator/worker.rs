@@ -200,6 +200,12 @@ pub fn execute_batch(batch: Batch, ctx: &WorkerCtx) {
     }
     let backend = ctx.router.route(&batch.requests[0].payload);
     let batch_size = batch.len();
+    let profiling = crate::obs::enabled();
+    if profiling {
+        // Start the batch with a clean per-thread span sink so the
+        // timeline below belongs to this batch alone.
+        let _ = crate::obs::take_thread_spans();
+    }
     let exec_start = Instant::now();
 
     // Dispatch. The whole batch shares one factorization (it shares
@@ -210,6 +216,12 @@ pub fn execute_batch(batch: Batch, ctx: &WorkerCtx) {
         Backend::Pjrt => solve_pjrt_batch(&batch.requests, ctx),
     };
     let exec_secs = exec_start.elapsed().as_secs_f64();
+    let trace = if profiling {
+        let t = crate::obs::SolveTrace::from_thread();
+        (!t.is_empty()).then_some(t)
+    } else {
+        None
+    };
 
     ctx.metrics.batches.fetch_add(1, Ordering::Relaxed);
     ctx.metrics.batched_requests.fetch_add(batch_size as u64, Ordering::Relaxed);
@@ -232,9 +244,16 @@ pub fn execute_batch(batch: Batch, ctx: &WorkerCtx) {
             backend: backend.as_str(),
             batch_size,
             timings: Timings { queue_secs, batch_secs, exec_secs },
+            trace: trace.clone(),
         };
         let total = req.submitted_at.elapsed().as_secs_f64();
         ctx.metrics.latency.observe(total);
+        // Per-frame-class histogram alongside the headline one.
+        if req.payload.is_dense() {
+            ctx.metrics.dense_latency.observe(total);
+        } else {
+            ctx.metrics.sparse_latency.observe(total);
+        }
         if ok {
             ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -257,7 +276,11 @@ fn dense_factors(
         unreachable!("routed as dense")
     };
     if let Some(key) = req.matrix_key {
-        if let Some(f) = ctx.cache.lock().expect("cache").get_dense(key) {
+        let hit = {
+            let _t = crate::obs::SpanTimer::start(crate::obs::Phase::CacheLookup);
+            ctx.cache.lock().expect("cache").get_dense(key)
+        };
+        if let Some(f) = hit {
             ctx.metrics.factor_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(f);
         }
@@ -293,6 +316,9 @@ fn solve_dense_batch(
     // one lane-distributed engine job (bit-identical per column), with
     // per-request outcomes preserved.
     let rhs: Vec<&[f64]> = reqs.iter().map(|r| r.payload.rhs()).collect();
+    // Dense substitution doesn't record internally: the whole panel
+    // solve is this batch's Trisolve span.
+    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Trisolve);
     let xs = factors.solve_panel(&rhs, &ctx.engine);
     reqs.iter()
         .zip(xs)
@@ -305,7 +331,11 @@ fn sparse_factors(req: &SolveRequest, ctx: &WorkerCtx) -> Result<Arc<SparseLuFac
         unreachable!("routed as sparse")
     };
     if let Some(key) = req.matrix_key {
-        if let Some(f) = ctx.cache.lock().expect("cache").get_sparse(key) {
+        let hit = {
+            let _t = crate::obs::SpanTimer::start(crate::obs::Phase::CacheLookup);
+            ctx.cache.lock().expect("cache").get_sparse(key)
+        };
+        if let Some(f) = hit {
             ctx.metrics.factor_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(f);
         }
@@ -318,9 +348,11 @@ fn sparse_factors(req: &SolveRequest, ctx: &WorkerCtx) -> Result<Arc<SparseLuFac
         // fresh values skips symbolic analysis and pays only the
         // level-parallel numeric sweep (bitwise identical to the
         // monolithic factorization).
-        let cached = req
-            .pattern_key
-            .and_then(|pk| ctx.cache.lock().expect("cache").get_symbolic(pk));
+        let cached = {
+            let _t = crate::obs::SpanTimer::start(crate::obs::Phase::CacheLookup);
+            req.pattern_key
+                .and_then(|pk| ctx.cache.lock().expect("cache").get_symbolic(pk))
+        };
         // Revalidate structure *outside* the cache lock: the exact
         // row_ptr/col_idx comparison is O(nnz) and must not serialize
         // every worker's cache access behind it. A mismatch (pattern-key
@@ -632,6 +664,43 @@ mod tests {
         }
         assert_eq!(answers[0], answers[1], "sharded answers must be bitwise flat");
         assert!(set.snapshot().sharded_jobs >= 1, "{:?}", set.snapshot());
+    }
+
+    #[test]
+    fn profiled_batch_attaches_a_trace_and_class_histograms() {
+        let _on = crate::obs::testhooks::Enabled::new();
+        let ctx = ctx();
+        // n=160 clears the sequential threshold: the parallel dense
+        // path records Symbolic + NumericFactor, the panel solve
+        // records Trisolve.
+        let a = Arc::new(diag_dominant_dense(160, GenSeed(95)));
+        let req = SolveRequest::dense(0, Arc::clone(&a), vec![1.0; 160], Some(41));
+        let resps = deliver(Batch { requests: vec![req], opened_at: Instant::now() }, &ctx);
+        assert!(resps[0].result.is_ok());
+        let trace = resps[0].trace.as_ref().expect("profiled run carries a trace");
+        let phases = trace.phases_present();
+        use crate::obs::Phase;
+        for p in [Phase::CacheLookup, Phase::Symbolic, Phase::NumericFactor, Phase::Trisolve] {
+            assert!(phases.contains(&p), "missing {p:?} in {phases:?}");
+        }
+        let snap = ctx.metrics.snapshot();
+        assert_eq!(snap.dense_solves, 1);
+        assert_eq!(snap.sparse_solves, 0);
+        assert!(snap.dense_lat_mean_s > 0.0);
+    }
+
+    #[test]
+    fn unprofiled_batch_carries_no_trace() {
+        let _g = crate::obs::testhooks::OBS_LOCK
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        crate::obs::set_enabled(false);
+        let ctx = ctx();
+        let a = Arc::new(diag_dominant_dense(24, GenSeed(96)));
+        let req = SolveRequest::dense(0, Arc::clone(&a), vec![1.0; 24], None);
+        let resps = deliver(Batch { requests: vec![req], opened_at: Instant::now() }, &ctx);
+        assert!(resps[0].result.is_ok());
+        assert!(resps[0].trace.is_none());
     }
 
     #[test]

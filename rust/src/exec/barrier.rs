@@ -103,6 +103,16 @@ impl EpochBarrier {
             }
         }
     }
+
+    /// [`wait`](EpochBarrier::wait), returning the nanoseconds this
+    /// lane spent inside the crossing. Used by the obs profiler's
+    /// busy/wait split; the untimed `wait` stays clock-free so the
+    /// profiling-off hot path pays nothing.
+    pub fn wait_timed(&self) -> u64 {
+        let t0 = std::time::Instant::now();
+        self.wait();
+        t0.elapsed().as_nanos() as u64
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +161,15 @@ mod tests {
         }
         assert_eq!(counter.load(Ordering::Relaxed), parties * steps);
         assert_eq!(barrier.generations(), 2 * steps as u64);
+    }
+
+    #[test]
+    fn wait_timed_advances_the_generation() {
+        let b = EpochBarrier::new(1);
+        let ns = b.wait_timed();
+        assert_eq!(b.generations(), 1);
+        // Duration is whatever the clock says; only sanity-bound it.
+        assert!(ns < 1_000_000_000, "{ns}");
     }
 
     #[test]

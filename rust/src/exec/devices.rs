@@ -63,6 +63,11 @@ pub struct DeviceSetSnapshot {
     /// measured counterpart of the cost model's broadcast bytes
     /// (multiply by 8 for bytes).
     pub exchange_elems: u64,
+    /// Summed busy nanoseconds across every device engine's lane
+    /// profile (zero unless the process ran with profiling on).
+    pub busy_ns: u64,
+    /// Nanoseconds spent inside exchange closures (profiling on only).
+    pub exchange_ns: u64,
 }
 
 /// A partition of the machine into `D` device groups, each a resident
@@ -75,6 +80,9 @@ pub struct DeviceSet {
     sharded_jobs: AtomicU64,
     exchange_steps: AtomicU64,
     exchange_elems: AtomicU64,
+    /// Time spent inside exchange closures; written only while the obs
+    /// profiling flag is on.
+    exchange_ns: AtomicU64,
 }
 
 impl std::fmt::Debug for DeviceSet {
@@ -98,6 +106,7 @@ impl DeviceSet {
             sharded_jobs: AtomicU64::new(0),
             exchange_steps: AtomicU64::new(0),
             exchange_elems: AtomicU64::new(0),
+            exchange_ns: AtomicU64::new(0),
         }
     }
 
@@ -115,6 +124,7 @@ impl DeviceSet {
             sharded_jobs: AtomicU64::new(0),
             exchange_steps: AtomicU64::new(0),
             exchange_elems: AtomicU64::new(0),
+            exchange_ns: AtomicU64::new(0),
         }
     }
 
@@ -152,7 +162,27 @@ impl DeviceSet {
             sharded_jobs: self.sharded_jobs.load(Ordering::Relaxed),
             exchange_steps: self.exchange_steps.load(Ordering::Relaxed),
             exchange_elems: self.exchange_elems.load(Ordering::Relaxed),
+            busy_ns: self
+                .engines
+                .iter()
+                .map(|e| e.lane_profile().total_busy_ns())
+                .sum(),
+            exchange_ns: self.exchange_ns.load(Ordering::Relaxed),
         }
+    }
+
+    /// Measured max/mean imbalance of per-device busy time — the
+    /// runtime counterpart of
+    /// [`DevicePlan::device_imbalance`](crate::ebv::plan::DevicePlan),
+    /// computed by the same statistic over the device engines' lane
+    /// profiles. `1.0` when nothing was profiled.
+    pub fn measured_imbalance(&self) -> f64 {
+        let loads: Vec<usize> = self
+            .engines
+            .iter()
+            .map(|e| e.lane_profile().total_busy_ns() as usize)
+            .collect();
+        crate::ebv::equalize::max_mean_imbalance(&loads)
     }
 
     /// Run a device-sharded step-loop job: for each of `steps` steps,
@@ -184,6 +214,10 @@ impl DeviceSet {
         let xbar = EpochBarrier::new(d);
         let stop = AtomicBool::new(false);
         let steps_done = AtomicU64::new(0);
+        // Obs profiling: sampled once per sharded job; with it off the
+        // exchange phase stays clock-free.
+        let profiling = crate::obs::enabled();
+        let exchange_ns = AtomicU64::new(0);
 
         let host = |dev: usize| {
             for step in 0..steps {
@@ -192,6 +226,7 @@ impl DeviceSet {
                 // publish a unanimous stop, cross, then re-raise.
                 let mut exchange_panic = None;
                 if dev == 0 {
+                    let t0 = profiling.then(std::time::Instant::now);
                     match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         exchange(step)
                     })) {
@@ -206,6 +241,10 @@ impl DeviceSet {
                             exchange_panic = Some(payload);
                             stop.store(true, Ordering::Release);
                         }
+                    }
+                    if let Some(t0) = t0 {
+                        exchange_ns
+                            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     }
                 }
                 // Publishes the staged exchange (and the previous
@@ -269,6 +308,10 @@ impl DeviceSet {
             });
         }
         self.exchange_steps.fetch_add(steps_done.load(Ordering::Relaxed), Ordering::Relaxed);
+        if profiling {
+            self.exchange_ns
+                .fetch_add(exchange_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
     }
 }
 
@@ -470,6 +513,41 @@ mod tests {
         assert_eq!(s.sharded_jobs, 1);
         assert_eq!(s.exchange_steps, 4);
         assert_eq!(s.exchange_elems, 40);
+    }
+
+    #[test]
+    fn profiling_times_the_exchange_and_device_busy() {
+        let _on = crate::obs::testhooks::Enabled::new();
+        let set = DeviceSet::new(2, 2);
+        set.run_sharded(
+            2,
+            8,
+            |_| {
+                // Make the exchange long enough to register on any clock.
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                StepCtl::Continue
+            },
+            |_, _, _| StepCtl::Continue,
+        );
+        let s = set.snapshot();
+        assert!(s.exchange_ns > 0, "timed exchange phases: {s:?}");
+        // The device engines profiled their one-step compute jobs.
+        assert!(set.engine(0).lane_profile().jobs >= 1);
+        assert!(set.measured_imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn disabled_profiling_leaves_device_timers_zero() {
+        let _g = crate::obs::testhooks::OBS_LOCK
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        crate::obs::set_enabled(false);
+        let set = DeviceSet::new(2, 1);
+        set.run_sharded(1, 3, |_| StepCtl::Continue, |_, _, _| StepCtl::Continue);
+        let s = set.snapshot();
+        assert_eq!(s.exchange_ns, 0);
+        assert_eq!(s.busy_ns, 0);
+        assert_eq!(set.measured_imbalance(), 1.0, "vacuous balance when unprofiled");
     }
 
     #[test]

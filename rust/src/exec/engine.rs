@@ -8,6 +8,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::exec::stats::{EngineStats, EngineStatsSnapshot};
 use crate::exec::team::{LaneTeam, RawJob};
+use crate::obs::{LaneProfile, LaneProfileSnapshot};
 
 /// Per-(vlane, step) verdict of a step closure.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +45,9 @@ pub struct LaneEngine {
     /// Serializes jobs; held for the full duration of a pooled job.
     submit: Mutex<()>,
     stats: EngineStats,
+    /// Measured per-lane busy/wait accumulators (obs profiler); shared
+    /// with the team's workers, written only while profiling is on.
+    profile: Arc<LaneProfile>,
 }
 
 impl fmt::Debug for LaneEngine {
@@ -67,11 +71,13 @@ impl LaneEngine {
     /// engine with no threads at all.
     pub fn new(lanes: usize) -> LaneEngine {
         let lanes = lanes.max(1);
+        let profile = Arc::new(LaneProfile::new(lanes));
         LaneEngine {
             lanes,
-            team: (lanes > 1).then(|| LaneTeam::spawn(lanes)),
+            team: (lanes > 1).then(|| LaneTeam::spawn(lanes, Arc::clone(&profile))),
             submit: Mutex::new(()),
             stats: EngineStats::default(),
+            profile,
         }
     }
 
@@ -122,6 +128,9 @@ impl LaneEngine {
         team.run(RawJob { f: erased, width, steps });
         drop(guard);
         self.stats.record_pooled_job();
+        if crate::obs::enabled() {
+            self.profile.record_job();
+        }
     }
 
     /// Caller-thread execution preserving pooled semantics exactly: all
@@ -129,6 +138,8 @@ impl LaneEngine {
     /// and no later step runs after a break.
     fn run_inline(&self, width: usize, steps: usize, f: &(dyn Fn(usize, usize) -> StepCtl + Sync)) {
         self.stats.record_inline_job();
+        // Inline jobs have no barrier: all time is lane-0 busy time.
+        let t0 = crate::obs::enabled().then(std::time::Instant::now);
         for step in 0..steps {
             let mut stop = false;
             for vlane in 0..width {
@@ -140,6 +151,10 @@ impl LaneEngine {
                 break;
             }
         }
+        if let Some(t0) = t0 {
+            self.profile.record(0, t0.elapsed().as_nanos() as u64, 0);
+            self.profile.record_job();
+        }
     }
 
     /// Detached counters for metrics frames and logs.
@@ -148,6 +163,7 @@ impl LaneEngine {
             Some(t) => (t.generations(), t.waits(), t.slow_waits()),
             None => (0, 0, 0),
         };
+        let profile = self.profile.snapshot();
         EngineStatsSnapshot {
             lanes: self.lanes as u64,
             jobs: self.stats.jobs.load(Ordering::Relaxed),
@@ -155,7 +171,16 @@ impl LaneEngine {
             steps,
             barrier_waits,
             slow_waits,
+            busy_ns: profile.total_busy_ns(),
+            wait_ns: profile.total_wait_ns(),
+            profiled_jobs: profile.jobs,
         }
+    }
+
+    /// Point-in-time copy of the measured per-lane busy/wait profile
+    /// (all zeros unless the process ran with profiling on).
+    pub fn lane_profile(&self) -> LaneProfileSnapshot {
+        self.profile.snapshot()
     }
 }
 
@@ -355,6 +380,35 @@ mod tests {
         engine.run_steps(0, 10, |_, _| panic!("must not run"));
         engine.run_steps(10, 0, |_, _| panic!("must not run"));
         assert_eq!(engine.stats().jobs + engine.stats().inline_jobs, 0);
+    }
+
+    #[test]
+    fn profiling_fills_the_lane_profile() {
+        let _on = crate::obs::testhooks::Enabled::new();
+        let engine = LaneEngine::new(2);
+        engine.run_steps(4, 6, |_, _| StepCtl::Continue); // pooled
+        engine.run_steps(1, 3, |_, _| StepCtl::Continue); // width 1 -> inline
+        let p = engine.lane_profile();
+        assert_eq!(p.busy_ns.len(), 2);
+        assert_eq!(p.jobs, 2, "pooled + inline both profiled");
+        let s = engine.stats();
+        assert_eq!(s.profiled_jobs, 2);
+        assert_eq!(s.busy_ns, p.total_busy_ns());
+        assert_eq!(s.wait_ns, p.total_wait_ns());
+    }
+
+    #[test]
+    fn disabled_profiling_records_nothing() {
+        let _g = crate::obs::testhooks::OBS_LOCK
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        crate::obs::set_enabled(false);
+        let engine = LaneEngine::new(2);
+        engine.run_steps(4, 5, |_, _| StepCtl::Continue);
+        let p = engine.lane_profile();
+        assert_eq!(p.total_busy_ns(), 0);
+        assert_eq!(p.total_wait_ns(), 0);
+        assert_eq!(p.jobs, 0);
     }
 
     #[test]

@@ -41,6 +41,13 @@ pub struct EngineStatsSnapshot {
     pub barrier_waits: u64,
     /// Barrier waits that fell out of the spin budget into yielding.
     pub slow_waits: u64,
+    /// Summed per-lane compute nanoseconds from the obs profiler
+    /// (zero unless the process ran with profiling on).
+    pub busy_ns: u64,
+    /// Summed per-lane barrier-wait nanoseconds from the obs profiler.
+    pub wait_ns: u64,
+    /// Jobs profiled into the busy/wait accumulators.
+    pub profiled_jobs: u64,
 }
 
 #[cfg(test)]

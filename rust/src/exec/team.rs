@@ -33,9 +33,11 @@ use std::any::Any;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::Instant;
 
 use crate::exec::barrier::EpochBarrier;
 use crate::exec::engine::{StepCtl, StepFn};
+use crate::obs::LaneProfile;
 
 /// A published job: the lifetime-erased step closure plus its shape.
 /// `Copy` so workers can lift it out of the slot without holding the
@@ -73,6 +75,9 @@ struct TeamShared {
     /// First panic payload caught in the current job; re-raised on the
     /// submitting thread after the join.
     panic: Mutex<Option<Box<dyn Any + Send>>>,
+    /// Per-lane busy/wait accumulators, shared with the owning engine.
+    /// Written only while `obs::enabled()` — one flush per lane per job.
+    profile: Arc<LaneProfile>,
 }
 
 /// Resident pool of `lanes - 1` workers; the submitter is lane 0.
@@ -85,7 +90,7 @@ pub(crate) struct LaneTeam {
 impl LaneTeam {
     /// Spawn the team (`lanes >= 2`; single-lane engines run inline and
     /// never build a team).
-    pub(crate) fn spawn(lanes: usize) -> LaneTeam {
+    pub(crate) fn spawn(lanes: usize, profile: Arc<LaneProfile>) -> LaneTeam {
         assert!(lanes >= 2, "LaneTeam: needs at least two lanes");
         let shared = Arc::new(TeamShared {
             slot: Mutex::new(JobSlot { job: None, epoch: 0, shutdown: false }),
@@ -94,6 +99,7 @@ impl LaneTeam {
             stop: AtomicBool::new(false),
             active: AtomicUsize::new(0),
             panic: Mutex::new(None),
+            profile,
         });
         let workers = (1..lanes)
             .map(|lane| {
@@ -211,7 +217,15 @@ fn lane_main(lane: usize, lanes: usize, shared: &TeamShared) {
 /// lane keeps crossing barriers, so nobody deadlocks.
 fn run_job(lane: usize, lanes: usize, job: &RawJob, shared: &TeamShared) {
     let f = job.f;
+    // Zero-overhead contract: the profiling flag is one relaxed load
+    // per *job*; with it off the loop below is clock-free and the
+    // profile is never touched. With it on, busy/wait accumulate in
+    // locals and flush once at job end (see obs::profiler).
+    let profiling = crate::obs::enabled();
+    let mut busy_ns = 0u64;
+    let mut wait_ns = 0u64;
     for step in 0..job.steps {
+        let t0 = profiling.then(Instant::now);
         let mut vlane = lane;
         while vlane < job.width {
             match catch_unwind(AssertUnwindSafe(|| f(vlane, step))) {
@@ -228,9 +242,17 @@ fn run_job(lane: usize, lanes: usize, job: &RawJob, shared: &TeamShared) {
             }
             vlane += lanes;
         }
-        shared.barrier.wait();
+        if let Some(t0) = t0 {
+            busy_ns += t0.elapsed().as_nanos() as u64;
+            wait_ns += shared.barrier.wait_timed();
+        } else {
+            shared.barrier.wait();
+        }
         if shared.stop.load(Ordering::Acquire) {
             break;
         }
+    }
+    if profiling {
+        shared.profile.record(lane, busy_ns, wait_ns);
     }
 }

@@ -26,6 +26,9 @@
 //!   artifacts (`artifacts/*.hlo.txt`);
 //! * [`coordinator`] — the L3 solve service: routing, dynamic batching,
 //!   leader/worker lanes, backpressure and metrics;
+//! * [`obs`] — span-structured solve tracing plus the measured
+//!   lane/device imbalance profiler and its exporters (Prometheus
+//!   text, JSONL event log), gated by a zero-overhead profiling flag;
 //! * [`wire`] — the L4 serving surface: a streaming NDJSON solve
 //!   protocol (`ebv-solve serve`) whose zero-tree scanner ingests
 //!   million-float matrix payloads straight into solver buffers and
@@ -75,6 +78,7 @@ pub mod ebv;
 pub mod exec;
 pub mod gpusim;
 pub mod matrix;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod solver;

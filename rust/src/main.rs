@@ -1,7 +1,7 @@
 //! `ebv-solve` binary: CLI front-end over the library.
 //!
-//! Subcommands: `solve`, `serve`, `tables`, `schedule`, `info` — see
-//! `ebv_solve::cli::USAGE`.
+//! Subcommands: `solve`, `serve`, `metrics`, `tables`, `schedule`,
+//! `info` — see `ebv_solve::cli::USAGE`.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -37,6 +37,7 @@ fn main() {
     let result = match args.command.as_str() {
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
+        "metrics" => cmd_metrics(&args),
         "tables" => cmd_tables(&args),
         "schedule" => cmd_schedule(&args),
         "info" => cmd_info(&args),
@@ -56,6 +57,9 @@ fn main() {
 }
 
 fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
+    if args.flag("profile") {
+        return cmd_solve_profiled(args);
+    }
     let n = args.opt_parsed("n", 512usize)?;
     let seed = args.opt_parsed("seed", 7u64)?;
     let kind = args.opt("kind").unwrap_or("dense");
@@ -181,6 +185,176 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
     Ok(())
 }
 
+/// `solve --profile`: run the solve through an in-process service with
+/// the obs subsystem on, then print the span timeline and the measured
+/// imbalance next to the plan's predicted imbalance. The main thread
+/// contributes the `ingest` (system build) and `encode` (report
+/// formatting) spans; the worker thread contributes the solve phases
+/// via the response trace.
+fn cmd_solve_profiled(args: &Args) -> ebv_solve::Result<()> {
+    use ebv_solve::ebv::plan::FactorPlan;
+    use ebv_solve::obs::{self, Phase, SpanTimer};
+
+    let n = args.opt_parsed("n", 512usize)?;
+    let seed = args.opt_parsed("seed", 7u64)?;
+    let kind = args.opt("kind").unwrap_or("dense");
+    let lanes = args.opt_parsed("lanes", ebv_solve::exec::default_lanes())?;
+    let panel = args.opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?;
+    let devices = args.opt_parsed("devices", 1usize)?;
+    let cfg = ServiceConfig {
+        lanes,
+        engine_lanes: lanes,
+        devices,
+        panel_width: panel,
+        sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
+        profiling: true,
+        ..ServiceConfig::default()
+    };
+    let dist = cfg.dist;
+    let svc = SolverService::start(cfg)?;
+    let _ = obs::take_thread_spans();
+    let t0 = Instant::now();
+
+    let (resp, rows, predicted) = match kind {
+        "dense" => {
+            let (a, b) = {
+                let _t = SpanTimer::start(Phase::Ingest);
+                (diag_dominant_dense(n, GenSeed(seed)), rhs(n, GenSeed(seed ^ 1)))
+            };
+            let schedule = LaneSchedule::build(n, lanes, dist);
+            let predicted = FactorPlan::dense_blocked(n, panel, &schedule).lane_imbalance();
+            (svc.solve_dense_blocking(Arc::new(a), b, Some(seed))?, n, predicted)
+        }
+        "sparse" | "poisson" => {
+            let (a, b) = {
+                let _t = SpanTimer::start(Phase::Ingest);
+                let a = if kind == "sparse" {
+                    diag_dominant_sparse(n, 5, GenSeed(seed))
+                } else {
+                    let g = (n as f64).sqrt().round().max(2.0) as usize;
+                    poisson_2d(g)
+                };
+                let b = rhs(a.rows(), GenSeed(seed ^ 1));
+                (a, b)
+            };
+            let rows = a.rows();
+            // Sparse elimination has no dense FactorPlan; the planned
+            // split is the schedule's lane-work statistic (same
+            // max/mean formula).
+            let predicted = LaneSchedule::build(rows, lanes, dist).work_imbalance();
+            (svc.solve_sparse_blocking(Arc::new(a), b, Some(seed))?, rows, predicted)
+        }
+        other => {
+            return Err(ebv_solve::EbvError::Config(format!("unknown kind `{other}`")));
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    if let Err(e) = &resp.result {
+        return Err(ebv_solve::EbvError::Runtime(format!("profiled solve failed: {e}")));
+    }
+
+    let report = {
+        let _t = SpanTimer::start(Phase::Encode);
+        format!(
+            "{kind} n={rows} lanes={lanes} devices={devices} backend={}: {} (residual {:.3e})",
+            resp.backend,
+            fmt::secs(wall),
+            resp.residual
+        )
+    };
+    let mut trace = resp.trace.clone().unwrap_or_default();
+    trace.merge(obs::take_thread_spans());
+    println!("{report}");
+    print!("{}", trace.render_timeline());
+    let traced = trace.total_ns() as f64 / 1e9;
+    println!(
+        "spans cover {} of {} wall ({:.0}%)",
+        fmt::secs(traced),
+        fmt::secs(wall),
+        100.0 * traced / wall.max(1e-12)
+    );
+
+    let snap = svc.metrics_snapshot();
+    println!(
+        "lane imbalance: predicted {predicted:.4} (plan) vs measured {:.4} \
+         (busy {:.2} ms, barrier wait {:.2} ms, {} profiled jobs)",
+        snap.measured_imbalance,
+        snap.busy_ns as f64 / 1e6,
+        snap.wait_ns as f64 / 1e6,
+        snap.profiled_jobs
+    );
+    if devices > 1 {
+        let sched =
+            LaneSchedule::build_sharded(rows, devices, lanes.div_ceil(devices).max(1), dist);
+        let dplan = FactorPlan::multi_device(rows, &sched);
+        println!(
+            "device imbalance: predicted {:.4} (DevicePlan) vs measured {:.4} \
+             (device busy {:.2} ms, exchange {:.2} ms)",
+            dplan.device_imbalance(),
+            snap.device_measured_imbalance,
+            snap.device_busy_ns as f64 / 1e6,
+            snap.exchange_ns as f64 / 1e6
+        );
+    }
+    if let Some(path) = args.opt("events") {
+        let log = obs::EventLog::open(std::path::Path::new(path))?;
+        log.append(&trace.to_json())?;
+        println!("trace appended to {path}");
+    }
+    eprintln!("{}", obs::summary_line(&snap));
+    svc.shutdown();
+    Ok(())
+}
+
+/// `ebv-solve metrics`: run probe solves on an in-process profiled
+/// service and print the Prometheus-style text exposition on stdout.
+fn cmd_metrics(args: &Args) -> ebv_solve::Result<()> {
+    let n = args.opt_parsed("n", 192usize)?;
+    let seed = args.opt_parsed("seed", 7u64)?;
+    let lanes = args.opt_parsed("lanes", ebv_solve::exec::default_lanes())?;
+    let cfg = ServiceConfig {
+        lanes,
+        engine_lanes: lanes,
+        devices: args.opt_parsed("devices", 1usize)?,
+        panel_width: args.opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
+        sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
+        profiling: !args.flag("no-profile"),
+        ..ServiceConfig::default()
+    };
+    let svc = SolverService::start(cfg)?;
+    let probes = args.opt_parsed("probes", 2usize)?;
+    for i in 0..probes as u64 {
+        let a = diag_dominant_dense(n, GenSeed(seed + i));
+        let b = rhs(n, GenSeed(seed ^ 1));
+        svc.solve_dense_blocking(Arc::new(a), b, Some(i))?;
+        let s = diag_dominant_sparse(n, 5, GenSeed(seed + i));
+        let b = rhs(s.rows(), GenSeed(seed ^ 2));
+        svc.solve_sparse_blocking(Arc::new(s), b, Some(1000 + i))?;
+    }
+    let snap = svc.metrics_snapshot();
+    print!("{}", ebv_solve::obs::prometheus(&snap));
+    if let Some(path) = args.opt("events") {
+        use ebv_solve::util::json::Json;
+        let log = ebv_solve::obs::EventLog::open(std::path::Path::new(path))?;
+        log.append(&Json::obj([
+            ("event", Json::Str("metrics".into())),
+            ("completed", Json::Num(snap.completed as f64)),
+            ("failed", Json::Num(snap.failed as f64)),
+            ("dense_solves", Json::Num(snap.dense_solves as f64)),
+            ("sparse_solves", Json::Num(snap.sparse_solves as f64)),
+            ("busy_ns", Json::Num(snap.busy_ns as f64)),
+            ("wait_ns", Json::Num(snap.wait_ns as f64)),
+            ("exchange_ns", Json::Num(snap.exchange_ns as f64)),
+            ("measured_imbalance", Json::Num(snap.measured_imbalance)),
+            ("device_measured_imbalance", Json::Num(snap.device_measured_imbalance)),
+        ]))?;
+        eprintln!("metrics event appended to {path}");
+    }
+    eprintln!("{}", ebv_solve::obs::summary_line(&snap));
+    svc.shutdown();
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
     if args.flag("trace") {
         return cmd_serve_trace(args);
@@ -198,6 +372,7 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
             .opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         use_runtime: args.flag("runtime"),
+        profiling: args.flag("profile"),
         ..ServiceConfig::default()
     };
     let svc = SolverService::start(cfg)?;
@@ -246,6 +421,7 @@ fn cmd_serve_trace(args: &Args) -> ebv_solve::Result<()> {
             .opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         use_runtime: args.flag("runtime"),
+        profiling: args.flag("profile"),
         ..ServiceConfig::default()
     };
     let svc = SolverService::start(cfg)?;
@@ -293,6 +469,9 @@ fn cmd_serve_trace(args: &Args) -> ebv_solve::Result<()> {
     println!("completed {ok}/{requests} in {}", fmt::secs(wall));
     println!("throughput: {}", fmt::rate(ok as f64 / wall, "req"));
     println!("metrics: {}", svc.metrics().summary());
+    if ebv_solve::obs::enabled() {
+        eprintln!("{}", ebv_solve::obs::summary_line(&svc.metrics_snapshot()));
+    }
     svc.shutdown();
     Ok(())
 }

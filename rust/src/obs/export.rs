@@ -1,0 +1,254 @@
+//! Exporters for the observability registry.
+//!
+//! Three sinks over the same [`MetricsSnapshot`]:
+//!
+//! * [`prometheus`] — Prometheus text exposition (`# TYPE` headers +
+//!   one sample per line), served by the `ebv-solve metrics`
+//!   subcommand for scrape-style integration;
+//! * [`EventLog`] — append-only JSONL writer (one [`Json`] document
+//!   per line) for span timelines and per-request events, reusing the
+//!   repo's own `util/json` emitter;
+//! * [`summary_line`] — the single-line stderr digest printed at the
+//!   end of a profiled session.
+//!
+//! All exporters are pull-side: they format data that was already
+//! collected, so none of them is on the zero-overhead hot path.
+
+use std::fmt::Write as _;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::coordinator::MetricsSnapshot;
+use crate::util::error::{EbvError, Result};
+use crate::util::json::Json;
+
+/// Render a snapshot as Prometheus text exposition format. Counter
+/// vs gauge classification follows the semantics of each field:
+/// monotone totals are counters, ratios and means are gauges.
+pub fn prometheus(m: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let mut counter = |name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP ebv_{name} {help}");
+        let _ = writeln!(out, "# TYPE ebv_{name} counter");
+        let _ = writeln!(out, "ebv_{name} {v}");
+    };
+    counter("submitted_total", "Requests accepted into the ingress queue.", m.submitted);
+    counter("rejected_total", "Requests refused by admission control.", m.rejected);
+    counter("completed_total", "Requests answered successfully.", m.completed);
+    counter("failed_total", "Requests answered with an error.", m.failed);
+    counter("batches_total", "Coalesced batches executed.", m.batches);
+    counter("batched_requests_total", "Requests that rode in a batch.", m.batched_requests);
+    counter("factor_hits_total", "Factor-cache hits.", m.factor_hits);
+    counter("factor_misses_total", "Factor-cache misses.", m.factor_misses);
+    counter("symbolic_reuse_total", "Sparse solves that reused a cached symbolic analysis.", m.symbolic_reuse);
+    counter("numeric_refactor_total", "Level-parallel numeric refactorizations.", m.numeric_refactor);
+    counter("dense_solves_total", "Dense solves observed by the class histogram.", m.dense_solves);
+    counter("sparse_solves_total", "Sparse solves observed by the class histogram.", m.sparse_solves);
+    counter("engine_lanes", "Resident lanes of the shared engine.", m.engine_lanes);
+    counter("engine_jobs_total", "Pooled jobs executed by the engine.", m.engine_jobs);
+    counter("engine_steps_total", "Barrier-separated steps executed.", m.engine_steps);
+    counter("engine_barrier_waits_total", "Lane barrier crossings.", m.engine_barrier_waits);
+    counter("panel_width", "Effective blocked-factorization panel width.", m.panel_width);
+    counter("devices", "Device shards of the two-level runtime.", m.devices);
+    counter("device_lanes", "Resident lanes per device engine.", m.device_lanes);
+    counter("device_jobs_total", "Device-sharded jobs executed.", m.device_jobs);
+    counter("exchange_steps_total", "Staged exchange phases executed.", m.exchange_steps);
+    counter("exchange_elems_total", "f64 elements broadcast through the exchange.", m.exchange_elems);
+    counter("lane_busy_ns_total", "Profiled per-lane compute nanoseconds (summed).", m.busy_ns);
+    counter("lane_wait_ns_total", "Profiled per-lane barrier-wait nanoseconds (summed).", m.wait_ns);
+    counter("profiled_jobs_total", "Jobs profiled into the lane accumulators.", m.profiled_jobs);
+    counter("device_busy_ns_total", "Profiled per-device compute nanoseconds (summed).", m.device_busy_ns);
+    counter("exchange_ns_total", "Profiled nanoseconds inside sharded exchanges.", m.exchange_ns);
+    let mut gauge = |name: &str, help: &str, v: f64| {
+        let _ = writeln!(out, "# HELP ebv_{name} {help}");
+        let _ = writeln!(out, "# TYPE ebv_{name} gauge");
+        let _ = writeln!(out, "ebv_{name} {v}");
+    };
+    gauge("mean_batch", "Mean requests per executed batch.", m.mean_batch);
+    gauge("latency_mean_seconds", "Mean solve latency.", m.lat_mean_s);
+    gauge("latency_p50_seconds", "Median solve latency (histogram bound).", m.lat_p50_s);
+    gauge("latency_p99_seconds", "p99 solve latency (histogram bound).", m.lat_p99_s);
+    gauge("dense_latency_mean_seconds", "Mean dense solve latency.", m.dense_lat_mean_s);
+    gauge("dense_latency_p99_seconds", "p99 dense solve latency.", m.dense_lat_p99_s);
+    gauge("sparse_latency_mean_seconds", "Mean sparse solve latency.", m.sparse_lat_mean_s);
+    gauge("sparse_latency_p99_seconds", "p99 sparse solve latency.", m.sparse_lat_p99_s);
+    gauge(
+        "measured_lane_imbalance",
+        "Measured max/mean per-lane busy time (FactorPlan counterpart).",
+        m.measured_imbalance,
+    );
+    gauge(
+        "measured_device_imbalance",
+        "Measured max/mean per-device busy time (DevicePlan counterpart).",
+        m.device_measured_imbalance,
+    );
+    out
+}
+
+/// The single-line digest a profiled session prints to stderr on
+/// shutdown: traffic, engine, and measured-balance headline numbers.
+pub fn summary_line(m: &MetricsSnapshot) -> String {
+    format!(
+        "obs: completed={} failed={} dense={} sparse={} engine_jobs={} \
+         busy_ms={:.1} wait_ms={:.1} exchange_ms={:.1} \
+         lane_imbalance={:.3} device_imbalance={:.3}",
+        m.completed,
+        m.failed,
+        m.dense_solves,
+        m.sparse_solves,
+        m.engine_jobs,
+        m.busy_ns as f64 / 1e6,
+        m.wait_ns as f64 / 1e6,
+        m.exchange_ns as f64 / 1e6,
+        m.measured_imbalance,
+        m.device_measured_imbalance,
+    )
+}
+
+/// Append-only JSONL event log: one compact JSON document per line.
+/// Writes go through a mutex-guarded `BufWriter`, so one log can be
+/// shared across worker threads; every append ends with a newline and
+/// [`EventLog::flush`] (called on drop) pushes the tail to disk.
+#[derive(Debug)]
+pub struct EventLog {
+    writer: Mutex<BufWriter<File>>,
+}
+
+impl EventLog {
+    /// Open `path` for appending, creating it if absent.
+    pub fn open(path: &Path) -> Result<EventLog> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| EbvError::io(format!("open event log {}", path.display()), e))?;
+        Ok(EventLog { writer: Mutex::new(BufWriter::new(file)) })
+    }
+
+    /// Append one event as a single compact JSON line.
+    pub fn append(&self, event: &Json) -> Result<()> {
+        let mut line = event.emit();
+        line.push('\n');
+        let mut w = self.writer.lock().expect("event log poisoned");
+        w.write_all(line.as_bytes())
+            .map_err(|e| EbvError::io("append event log", e))
+    }
+
+    /// Flush buffered lines to disk.
+    pub fn flush(&self) -> Result<()> {
+        let mut w = self.writer.lock().expect("event log poisoned");
+        w.flush().map_err(|e| EbvError::io("flush event log", e))
+    }
+}
+
+impl Drop for EventLog {
+    fn drop(&mut self) {
+        if let Ok(mut w) = self.writer.lock() {
+            let _ = w.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn distinct_snapshot() -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: 1,
+            rejected: 2,
+            completed: 3,
+            failed: 4,
+            batches: 5,
+            batched_requests: 6,
+            factor_hits: 7,
+            factor_misses: 8,
+            symbolic_reuse: 9,
+            numeric_refactor: 10,
+            mean_batch: 11.5,
+            lat_mean_s: 12.5,
+            lat_p50_s: 13.5,
+            lat_p99_s: 14.5,
+            engine_lanes: 15,
+            engine_jobs: 16,
+            engine_steps: 17,
+            engine_barrier_waits: 18,
+            panel_width: 19,
+            devices: 20,
+            device_lanes: 21,
+            device_jobs: 22,
+            exchange_steps: 23,
+            exchange_elems: 24,
+            dense_solves: 25,
+            sparse_solves: 26,
+            dense_lat_mean_s: 27.5,
+            dense_lat_p99_s: 28.5,
+            sparse_lat_mean_s: 29.5,
+            sparse_lat_p99_s: 30.5,
+            busy_ns: 31,
+            wait_ns: 32,
+            profiled_jobs: 33,
+            measured_imbalance: 34.5,
+            device_busy_ns: 35,
+            exchange_ns: 36,
+            device_measured_imbalance: 37.5,
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_has_headers_and_samples() {
+        let text = prometheus(&distinct_snapshot());
+        for needle in [
+            "# TYPE ebv_submitted_total counter",
+            "ebv_submitted_total 1",
+            "ebv_factor_misses_total 8",
+            "# TYPE ebv_measured_lane_imbalance gauge",
+            "ebv_measured_lane_imbalance 34.5",
+            "ebv_exchange_ns_total 36",
+            "ebv_sparse_latency_p99_seconds 30.5",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Every line is a comment or a `name value` sample.
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# ") || line.splitn(2, ' ').count() == 2,
+                "malformed line {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn summary_line_carries_the_headline_numbers() {
+        let s = summary_line(&distinct_snapshot());
+        assert!(s.starts_with("obs: "), "{s}");
+        assert!(s.contains("completed=3"), "{s}");
+        assert!(s.contains("lane_imbalance=34.500"), "{s}");
+        assert!(s.contains("device_imbalance=37.500"), "{s}");
+    }
+
+    #[test]
+    fn event_log_appends_parseable_jsonl() {
+        let path = std::env::temp_dir()
+            .join(format!("ebv_obs_eventlog_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let log = EventLog::open(&path).unwrap();
+            log.append(&Json::obj([("event", Json::from("start")), ("n", Json::from(64.0))]))
+                .unwrap();
+            log.append(&Json::obj([("event", Json::from("stop"))])).unwrap();
+            log.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text:?}");
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").and_then(Json::as_str), Some("start"));
+        assert_eq!(first.get("n").and_then(Json::as_f64), Some(64.0));
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("event").and_then(Json::as_str), Some("stop"));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,64 @@
+//! Observability: span-structured solve tracing and the measured
+//! lane/device imbalance profiler.
+//!
+//! The paper argues EBV wins by *equalizing* lane work; PRs 1–5 only
+//! ever predicted that balance (`FactorPlan::lane_imbalance`,
+//! `DevicePlan::device_imbalance`). This subsystem measures it:
+//!
+//! * [`span`] — a typed six-phase solve timeline (ingest → cache
+//!   lookup → symbolic → numeric factor → trisolve → encode) recorded
+//!   via RAII [`SpanTimer`]s into a per-thread sink and carried as a
+//!   [`SolveTrace`];
+//! * [`profiler`] — per-lane busy vs barrier-wait nanoseconds
+//!   accumulated by the lane team while profiling is on, folded into
+//!   the same `max_mean_imbalance` statistic the planner uses so
+//!   predicted and measured imbalance are directly comparable;
+//! * [`export`] — Prometheus text exposition, a JSONL [`EventLog`],
+//!   and the stderr [`summary_line`] digest.
+//!
+//! **Zero-overhead contract**: everything is gated on one
+//! process-global relaxed [`AtomicBool`](std::sync::atomic::AtomicBool)
+//! ([`enabled`]). With profiling off (the default) every hook is a
+//! single relaxed load and an untaken branch — no clocks, no
+//! allocation, no shared-memory traffic — pinned by the
+//! `ablation_obs` bench. Recording never changes arithmetic, so
+//! results are bitwise identical with profiling on or off (pinned in
+//! `tests/prop_devices.rs` and `tests/obs_profile.rs`).
+
+pub mod export;
+pub mod profiler;
+pub mod span;
+
+pub use export::{prometheus, summary_line, EventLog};
+pub use profiler::{LaneProfile, LaneProfileSnapshot};
+pub use span::{
+    enabled, now_ns, record, set_enabled, take_thread_spans, Phase, SolveTrace, Span, SpanTimer,
+};
+
+/// Shared helpers for unit tests that toggle the process-global
+/// profiling flag: they all serialize on one mutex so parallel test
+/// threads can't observe each other's state.
+#[cfg(test)]
+pub(crate) mod testhooks {
+    /// Serializes every test that flips [`super::set_enabled`].
+    pub(crate) static OBS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    /// Enable profiling for one scope, restoring `false` on drop. Holds
+    /// [`OBS_LOCK`] for its lifetime and drains the thread sink on both
+    /// edges so spans can't leak across tests.
+    pub(crate) struct Enabled(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+    impl Enabled {
+        pub(crate) fn new() -> Enabled {
+            let g = OBS_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let _ = super::take_thread_spans();
+            super::set_enabled(true);
+            Enabled(g)
+        }
+    }
+    impl Drop for Enabled {
+        fn drop(&mut self) {
+            super::set_enabled(false);
+            let _ = super::take_thread_spans();
+        }
+    }
+}

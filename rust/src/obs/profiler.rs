@@ -1,0 +1,149 @@
+//! Measured lane/device load profiler.
+//!
+//! The paper's claim is *predicted* by `FactorPlan::lane_imbalance` /
+//! `DevicePlan::device_imbalance` (max/mean of scheduled flops). This
+//! module measures the realized counterpart: per-lane busy nanoseconds
+//! (compute inside a step) vs barrier-wait nanoseconds, accumulated by
+//! the [`LaneTeam`](crate::exec) workers while profiling is on, and
+//! folded into the same max/mean statistic
+//! ([`crate::ebv::equalize::max_mean_imbalance`]) so predicted and
+//! measured imbalance are directly comparable numbers.
+//!
+//! Recording is batched: each lane accumulates into locals for a whole
+//! job and flushes once (two relaxed `fetch_add`s per lane per job), so
+//! the profiler never adds per-step shared-memory traffic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::ebv::equalize::max_mean_imbalance;
+
+/// Per-lane busy/wait accumulators of one engine. Lives alongside the
+/// engine's [`EngineStats`](crate::exec::EngineStats); written only
+/// while profiling is on.
+#[derive(Debug)]
+pub struct LaneProfile {
+    busy: Vec<AtomicU64>,
+    wait: Vec<AtomicU64>,
+    jobs: AtomicU64,
+}
+
+impl LaneProfile {
+    pub fn new(lanes: usize) -> LaneProfile {
+        LaneProfile {
+            busy: (0..lanes.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            wait: (0..lanes.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            jobs: AtomicU64::new(0),
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.busy.len()
+    }
+
+    /// Flush one lane's job-local accumulators.
+    #[inline]
+    pub fn record(&self, lane: usize, busy_ns: u64, wait_ns: u64) {
+        self.busy[lane].fetch_add(busy_ns, Ordering::Relaxed);
+        self.wait[lane].fetch_add(wait_ns, Ordering::Relaxed);
+    }
+
+    /// Count one profiled job (pooled or inline).
+    pub fn record_job(&self) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LaneProfileSnapshot {
+        LaneProfileSnapshot {
+            busy_ns: self.busy.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            wait_ns: self.wait.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            jobs: self.jobs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`LaneProfile`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LaneProfileSnapshot {
+    /// Per-lane compute nanoseconds (inside barrier-stepped jobs).
+    pub busy_ns: Vec<u64>,
+    /// Per-lane barrier-wait nanoseconds.
+    pub wait_ns: Vec<u64>,
+    /// Jobs profiled into these accumulators.
+    pub jobs: u64,
+}
+
+impl LaneProfileSnapshot {
+    pub fn total_busy_ns(&self) -> u64 {
+        self.busy_ns.iter().sum()
+    }
+
+    pub fn total_wait_ns(&self) -> u64 {
+        self.wait_ns.iter().sum()
+    }
+
+    /// Measured max/mean imbalance of per-lane busy time — the runtime
+    /// counterpart of `FactorPlan::lane_imbalance()`, computed by the
+    /// same statistic. `1.0` when nothing was profiled (perfect
+    /// balance, vacuously).
+    pub fn measured_imbalance(&self) -> f64 {
+        let loads: Vec<usize> = self.busy_ns.iter().map(|&ns| ns as usize).collect();
+        max_mean_imbalance(&loads)
+    }
+
+    /// Barrier-wait share of total lane time, in `[0, 1]`.
+    pub fn wait_fraction(&self) -> f64 {
+        let busy = self.total_busy_ns() as f64;
+        let wait = self.total_wait_ns() as f64;
+        if busy + wait == 0.0 {
+            0.0
+        } else {
+            wait / (busy + wait)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates_per_lane() {
+        let p = LaneProfile::new(3);
+        p.record(0, 100, 10);
+        p.record(1, 50, 60);
+        p.record(0, 100, 10);
+        p.record_job();
+        let s = p.snapshot();
+        assert_eq!(s.busy_ns, vec![200, 50, 0]);
+        assert_eq!(s.wait_ns, vec![20, 60, 0]);
+        assert_eq!(s.jobs, 1);
+        assert_eq!(s.total_busy_ns(), 250);
+        assert_eq!(s.total_wait_ns(), 80);
+    }
+
+    #[test]
+    fn measured_imbalance_reuses_the_plan_statistic() {
+        // Perfectly balanced lanes -> 1.0 (the FactorPlan convention).
+        let s = LaneProfileSnapshot { busy_ns: vec![100, 100], wait_ns: vec![0, 0], jobs: 1 };
+        assert_eq!(s.measured_imbalance(), 1.0);
+        // One hot lane: max/mean = 300 / 200 = 1.5.
+        let s = LaneProfileSnapshot { busy_ns: vec![300, 100], wait_ns: vec![0, 0], jobs: 1 };
+        assert!((s.measured_imbalance() - 1.5).abs() < 1e-12);
+        // Untouched profile: vacuously balanced, matching
+        // max_mean_imbalance's zero-mean convention.
+        let s = LaneProfileSnapshot::default();
+        assert_eq!(s.measured_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn wait_fraction_is_bounded() {
+        let s = LaneProfileSnapshot { busy_ns: vec![75], wait_ns: vec![25], jobs: 1 };
+        assert!((s.wait_fraction() - 0.25).abs() < 1e-12);
+        assert_eq!(LaneProfileSnapshot::default().wait_fraction(), 0.0);
+    }
+
+    #[test]
+    fn zero_lane_profile_clamps_to_one() {
+        assert_eq!(LaneProfile::new(0).lanes(), 1);
+    }
+}

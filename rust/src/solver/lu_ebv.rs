@@ -153,12 +153,19 @@ impl LuSolver for EbvLu {
         if self.lanes == 1 || n <= self.seq_threshold {
             // The parallel path is bitwise-identical in arithmetic order
             // per row, so falling through is exact, not approximate.
+            let _t = crate::obs::SpanTimer::start(crate::obs::Phase::NumericFactor);
             return crate::solver::SeqLu::new().pivot_tol(self.pivot_tol).factor(a);
         }
         let mut lu = a.clone();
         if let Some(set) = self.devices.as_ref().filter(|s| s.devices() > 1) {
             let lpd = self.lanes.div_ceil(set.devices()).max(1);
-            let schedule = LaneSchedule::build_sharded(n, set.devices(), lpd, self.dist);
+            // The dense "symbolic" phase is schedule construction: the
+            // equalized vlane decomposition the paper's method plans.
+            let schedule = {
+                let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Symbolic);
+                LaneSchedule::build_sharded(n, set.devices(), lpd, self.dist)
+            };
+            let _t = crate::obs::SpanTimer::start(crate::obs::Phase::NumericFactor);
             if self.panel <= 1 {
                 parallel_eliminate_sharded(&mut lu, &schedule, self.pivot_tol, set.as_ref())?;
             } else {
@@ -172,8 +179,12 @@ impl LuSolver for EbvLu {
             }
             return Ok(DenseLuFactors::new(lu, Permutation::identity(n)));
         }
-        let schedule = LaneSchedule::build(n, self.lanes, self.dist);
+        let schedule = {
+            let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Symbolic);
+            LaneSchedule::build(n, self.lanes, self.dist)
+        };
         let engine = crate::exec::engine_or_global(self.engine.as_ref());
+        let _t = crate::obs::SpanTimer::start(crate::obs::Phase::NumericFactor);
         if self.panel <= 1 {
             parallel_eliminate(&mut lu, &schedule, self.pivot_tol, engine)?;
         } else {

@@ -92,6 +92,7 @@ impl SparseSymbolic {
         if a.rows() != a.cols() {
             return Err(EbvError::Shape("sparse LU needs a square matrix".into()));
         }
+        let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Symbolic);
         let n = a.rows();
 
         let mut l_ptr = vec![0usize];
@@ -365,6 +366,7 @@ impl SparseSymbolic {
     /// Bitwise identical to `SparseLu::factor(a)` (exact mode).
     pub fn factor(&self, a: &CsrMatrix) -> Result<SparseLuFactors> {
         self.check(a)?;
+        let _t = crate::obs::SpanTimer::start(crate::obs::Phase::NumericFactor);
         let mut l_val = vec![0.0f64; self.l_idx.len()];
         let mut u_val = vec![0.0f64; self.u_idx.len()];
         let mut acc = vec![0.0f64; self.n];
@@ -436,6 +438,9 @@ impl SparseSymbolic {
         if chunks.iter().all(|c| matches!(c, LevelChunks::Single(_))) {
             return self.factor(a);
         }
+        // After the fall-throughs: they delegate to `factor`, which
+        // records its own NumericFactor span — no double counting.
+        let _t = crate::obs::SpanTimer::start(crate::obs::Phase::NumericFactor);
 
         let mut l_val = vec![0.0f64; self.l_idx.len()];
         let mut u_val = vec![0.0f64; self.u_idx.len()];
@@ -541,6 +546,9 @@ impl SparseSymbolic {
         if chunks.iter().all(|c| matches!(c, LevelChunks::Single(_))) {
             return self.factor(a);
         }
+        // After the fall-throughs (`factor`, `factor_par_on` record
+        // their own spans — no double counting).
+        let _t = crate::obs::SpanTimer::start(crate::obs::Phase::NumericFactor);
         // Exchange accounting: a level's refactorization reads the `U`
         // rows its dependencies finalized at the previous level.
         let level_u_elems: Vec<usize> = self

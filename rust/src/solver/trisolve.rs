@@ -309,6 +309,9 @@ pub fn sparse_forward_unit_levels(
     if b.len() != l.rows() {
         return Err(EbvError::Shape("rhs length mismatch".into()));
     }
+    // Covers the sequential fall-throughs too (those record no span of
+    // their own).
+    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Trisolve);
     if lanes <= 1 {
         return sparse_forward_unit(l, b);
     }
@@ -375,6 +378,9 @@ pub fn sparse_backward_levels(
     if y.len() != u.rows() {
         return Err(EbvError::Shape("rhs length mismatch".into()));
     }
+    // Covers the sequential fall-throughs too (those record no span of
+    // their own).
+    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Trisolve);
     if lanes <= 1 {
         return sparse_backward(u, y);
     }
@@ -507,8 +513,11 @@ pub fn sparse_forward_unit_levels_sharded(
     }
     let d = set.devices();
     if d <= 1 {
+        // Falls through to the flat levels solve, which records its own
+        // Trisolve span — so this timer starts after the branch.
         return sparse_forward_unit_levels(l, b, by_level, lanes, set.engine(0).as_ref());
     }
+    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Trisolve);
     let lpd = lanes.div_ceil(d).max(1);
     let Some(chunks) = sharded_level_chunks(l, by_level, d, lpd) else {
         return sparse_forward_unit(l, b);
@@ -564,8 +573,10 @@ pub fn sparse_backward_levels_sharded(
     }
     let d = set.devices();
     if d <= 1 {
+        // The flat levels solve records its own Trisolve span.
         return sparse_backward_levels(u, y, by_level, lanes, set.engine(0).as_ref());
     }
+    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Trisolve);
     let lpd = lanes.div_ceil(d).max(1);
     let Some(chunks) = sharded_level_chunks(u, by_level, d, lpd) else {
         return sparse_backward(u, y);

@@ -53,13 +53,26 @@ pub fn init() {
 }
 
 fn level_from_env() -> LevelFilter {
-    match std::env::var("EBV_LOG").unwrap_or_default().to_ascii_lowercase().as_str() {
+    let raw = std::env::var("EBV_LOG").unwrap_or_default();
+    match raw.to_ascii_lowercase().as_str() {
         "error" => LevelFilter::Error,
         "warn" => LevelFilter::Warn,
+        "info" | "" => LevelFilter::Info,
         "debug" => LevelFilter::Debug,
         "trace" => LevelFilter::Trace,
         "off" => LevelFilter::Off,
-        _ => LevelFilter::Info,
+        other => {
+            // A typo'd level must not fall back silently — warn once
+            // (straight to stderr: the logger isn't installed yet).
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                eprintln!(
+                    "EBV_LOG: unrecognized level `{other}` \
+                     (expected error|warn|info|debug|trace|off); using info"
+                );
+            });
+            LevelFilter::Info
+        }
     }
 }
 
@@ -72,5 +85,21 @@ mod tests {
         init();
         init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn unrecognized_level_falls_back_to_info_with_a_warning() {
+        // `level_from_env` reads the process environment; exercise the
+        // fallback (and the warn-once guard — the second call must not
+        // print again, which we can at least execute for coverage).
+        std::env::set_var("EBV_LOG", "verbose");
+        assert_eq!(level_from_env(), LevelFilter::Info);
+        assert_eq!(level_from_env(), LevelFilter::Info);
+        std::env::set_var("EBV_LOG", "INFO");
+        assert_eq!(level_from_env(), LevelFilter::Info, "explicit info is accepted");
+        std::env::set_var("EBV_LOG", "off");
+        assert_eq!(level_from_env(), LevelFilter::Off);
+        std::env::remove_var("EBV_LOG");
+        assert_eq!(level_from_env(), LevelFilter::Info, "unset defaults to info");
     }
 }

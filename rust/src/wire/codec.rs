@@ -509,6 +509,33 @@ pub fn encode_response(frame: &ResponseFrame) -> String {
             push_num(&mut out, m.lat_p50_s);
             out.push_str(",\"lat_p99_s\":");
             push_num(&mut out, m.lat_p99_s);
+            let _ = write!(
+                out,
+                ",\"dense_solves\":{},\"sparse_solves\":{}",
+                m.dense_solves, m.sparse_solves
+            );
+            out.push_str(",\"dense_lat_mean_s\":");
+            push_num(&mut out, m.dense_lat_mean_s);
+            out.push_str(",\"dense_lat_p99_s\":");
+            push_num(&mut out, m.dense_lat_p99_s);
+            out.push_str(",\"sparse_lat_mean_s\":");
+            push_num(&mut out, m.sparse_lat_mean_s);
+            out.push_str(",\"sparse_lat_p99_s\":");
+            push_num(&mut out, m.sparse_lat_p99_s);
+            let _ = write!(
+                out,
+                ",\"busy_ns\":{},\"wait_ns\":{},\"profiled_jobs\":{}",
+                m.busy_ns, m.wait_ns, m.profiled_jobs
+            );
+            out.push_str(",\"measured_imbalance\":");
+            push_num(&mut out, m.measured_imbalance);
+            let _ = write!(
+                out,
+                ",\"device_busy_ns\":{},\"exchange_ns\":{}",
+                m.device_busy_ns, m.exchange_ns
+            );
+            out.push_str(",\"device_measured_imbalance\":");
+            push_num(&mut out, m.device_measured_imbalance);
             out.push('}');
         }
         ResponseFrame::Solution(s) => {
@@ -652,6 +679,27 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                 "lat_mean_s" => acc.metrics.lat_mean_s = expect_num(&mut sc, &k)?,
                 "lat_p50_s" => acc.metrics.lat_p50_s = expect_num(&mut sc, &k)?,
                 "lat_p99_s" => acc.metrics.lat_p99_s = expect_num(&mut sc, &k)?,
+                "dense_solves" => acc.metrics.dense_solves = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "sparse_solves" => {
+                    acc.metrics.sparse_solves = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "dense_lat_mean_s" => acc.metrics.dense_lat_mean_s = expect_num(&mut sc, &k)?,
+                "dense_lat_p99_s" => acc.metrics.dense_lat_p99_s = expect_num(&mut sc, &k)?,
+                "sparse_lat_mean_s" => acc.metrics.sparse_lat_mean_s = expect_num(&mut sc, &k)?,
+                "sparse_lat_p99_s" => acc.metrics.sparse_lat_p99_s = expect_num(&mut sc, &k)?,
+                "busy_ns" => acc.metrics.busy_ns = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "wait_ns" => acc.metrics.wait_ns = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "profiled_jobs" => {
+                    acc.metrics.profiled_jobs = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "measured_imbalance" => acc.metrics.measured_imbalance = expect_num(&mut sc, &k)?,
+                "device_busy_ns" => {
+                    acc.metrics.device_busy_ns = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "exchange_ns" => acc.metrics.exchange_ns = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "device_measured_imbalance" => {
+                    acc.metrics.device_measured_imbalance = expect_num(&mut sc, &k)?
+                }
                 _ => skip_value(&mut sc)?,
             },
             other => return Err(jerr(format!("malformed response frame: {other:?}"))),
@@ -902,6 +950,7 @@ mod tests {
             device_jobs: 7,
             exchange_steps: 310,
             exchange_elems: 52_000,
+            ..MetricsSnapshot::default()
         });
         assert_eq!(decode_response(&encode_response(&m)).unwrap(), m);
 
@@ -910,6 +959,56 @@ mod tests {
 
         let g = ResponseFrame::Goodbye { served: 17 };
         assert_eq!(decode_response(&encode_response(&g)).unwrap(), g);
+    }
+
+    /// Field-drift guard: every `MetricsSnapshot` field distinct, exact
+    /// equality after the wire round trip. Adding a snapshot field
+    /// without teaching both `encode_response` and `decode_response`
+    /// about it fails this test (the missing field decodes as its
+    /// default, which never equals its distinct value here).
+    #[test]
+    fn every_metrics_field_survives_the_wire() {
+        let m = MetricsSnapshot {
+            submitted: 1,
+            rejected: 2,
+            completed: 3,
+            failed: 4,
+            batches: 5,
+            batched_requests: 6,
+            factor_hits: 7,
+            factor_misses: 8,
+            symbolic_reuse: 9,
+            numeric_refactor: 10,
+            mean_batch: 11.5,
+            lat_mean_s: 12.5,
+            lat_p50_s: 13.5,
+            lat_p99_s: 14.5,
+            engine_lanes: 15,
+            engine_jobs: 16,
+            engine_steps: 17,
+            engine_barrier_waits: 18,
+            panel_width: 19,
+            devices: 20,
+            device_lanes: 21,
+            device_jobs: 22,
+            exchange_steps: 23,
+            exchange_elems: 24,
+            dense_solves: 25,
+            sparse_solves: 26,
+            dense_lat_mean_s: 27.5,
+            dense_lat_p99_s: 28.5,
+            sparse_lat_mean_s: 29.5,
+            sparse_lat_p99_s: 30.5,
+            busy_ns: 31,
+            wait_ns: 32,
+            profiled_jobs: 33,
+            measured_imbalance: 34.5,
+            device_busy_ns: 35,
+            exchange_ns: 36,
+            device_measured_imbalance: 37.5,
+        };
+        let frame = ResponseFrame::Metrics(m);
+        assert_eq!(decode_response(&encode_response(&frame)).unwrap(), frame);
     }
 
     #[test]

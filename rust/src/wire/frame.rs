@@ -10,7 +10,12 @@
 //! [`MetricsSnapshot`], including the lane-engine counters
 //! (`engine_lanes`, `engine_jobs`, `engine_steps`,
 //! `engine_barrier_waits`) of the resident pool every parallel solve
-//! runs on — see README.md §Execution engine.
+//! runs on — see README.md §Execution engine — plus, when the service
+//! runs with profiling on, the measured observability fields
+//! (per-frame-class latency histograms, `busy_ns`/`wait_ns` lane
+//! accumulators, `measured_imbalance` and their device-level
+//! counterparts). Unknown fields are skipped on decode, so old clients
+//! interoperate with new servers and vice versa.
 
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::request::Timings;

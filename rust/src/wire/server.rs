@@ -11,6 +11,11 @@
 //! the session continues — one bad request in a long-lived pipe must
 //! not tear down the connection. Only I/O failure (peer gone) or a
 //! `shutdown` frame ends the loop.
+//!
+//! With profiling on (`service.profiling` / `serve --profile`) the loop
+//! contributes the wire-side spans to the solve timeline — `ingest`
+//! around request decode and `encode` around response write — and
+//! prints an `obs` summary line to stderr when the session ends.
 
 use std::io::{BufRead, Write};
 use std::sync::Arc;
@@ -79,7 +84,11 @@ pub fn serve_session_with<R: BufRead, W: Write>(
         }
         stats.frames += 1;
 
-        let response = match decode_request_with(text, &opts.decode) {
+        let decoded = {
+            let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Ingest);
+            decode_request_with(text, &opts.decode)
+        };
+        let response = match decoded {
             Err(e) => {
                 stats.errors += 1;
                 ResponseFrame::Error { message: e.to_string() }
@@ -105,6 +114,15 @@ pub fn serve_session_with<R: BufRead, W: Write>(
             }
         };
         write_frame(&mut output, &response)?;
+        if crate::obs::enabled() {
+            // Drain the session thread's span sink every frame — the
+            // wire-side ingest/encode spans are per-request scratch,
+            // and a long-lived pipe must not accumulate them forever.
+            let _ = crate::obs::take_thread_spans();
+        }
+    }
+    if crate::obs::enabled() {
+        eprintln!("{}", crate::obs::summary_line(&svc.metrics_snapshot()));
     }
     Ok(stats)
 }
@@ -143,6 +161,7 @@ fn run_solve(svc: &ServiceHandle, id: u64, ws: WireSolve) -> ResponseFrame {
 }
 
 fn write_frame<W: Write>(output: &mut W, frame: &ResponseFrame) -> Result<()> {
+    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Encode);
     let mut line = encode_response(frame);
     line.push('\n');
     output

@@ -1,0 +1,248 @@
+//! Integration suite for the observability subsystem: span-structured
+//! solve traces and the measured lane/device imbalance profiler,
+//! exercised end to end through the public service API and the
+//! `ebv-solve` binary.
+//!
+//! The obs enable flag is process-global, so every test that toggles it
+//! serializes on [`OBS_LOCK`] and restores the disabled default before
+//! releasing it (the `testhooks` guard used by unit tests is
+//! crate-private; an integration binary needs its own lock).
+
+use std::sync::{Arc, Mutex};
+
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::SolverService;
+use ebv_solve::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+use ebv_solve::obs::{self, Phase};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold the lock, run with profiling on, restore the disabled default.
+fn with_profiling<T>(f: impl FnOnce() -> T) -> T {
+    let _g = OBS_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _ = obs::take_thread_spans();
+    let out = f();
+    obs::set_enabled(false);
+    let _ = obs::take_thread_spans();
+    out
+}
+
+fn profiled_cfg(devices: usize) -> ServiceConfig {
+    ServiceConfig {
+        lanes: 2,
+        engine_lanes: 2,
+        devices,
+        max_batch: 4,
+        batch_window_us: 100,
+        queue_capacity: 64,
+        use_runtime: false,
+        profiling: true,
+        ..ServiceConfig::default()
+    }
+}
+
+#[test]
+fn profiled_dense_solve_carries_a_timed_trace() {
+    with_profiling(|| {
+        let svc = SolverService::start(profiled_cfg(1)).unwrap();
+        let n = 160;
+        let a = Arc::new(diag_dominant_dense(n, GenSeed(31)));
+        let resp = svc.solve_dense_blocking(a, vec![1.0; n], Some(7)).unwrap();
+        assert!(resp.result.is_ok());
+        let trace = resp.trace.expect("profiled service must attach a trace");
+        for phase in [Phase::CacheLookup, Phase::Symbolic, Phase::NumericFactor, Phase::Trisolve] {
+            assert!(
+                trace.phases_present().contains(&phase),
+                "dense trace missing {phase:?}: {:?}",
+                trace.phases_present()
+            );
+        }
+        // Worker-side spans are bounded by the measured exec time.
+        assert!(trace.total_ns() > 0);
+        let exec_ns = (resp.timings.exec_secs * 1e9) as u64;
+        assert!(
+            trace.total_ns() <= exec_ns.saturating_mul(2).max(1_000_000),
+            "spans ({}) wildly exceed exec time ({})",
+            trace.total_ns(),
+            exec_ns
+        );
+
+        let snap = svc.metrics_snapshot();
+        assert!(snap.profiled_jobs >= 1, "lane profile saw the job");
+        assert!(snap.busy_ns > 0);
+        assert!(snap.measured_imbalance >= 1.0);
+        assert_eq!(snap.dense_solves, 1);
+        assert!(snap.dense_lat_mean_s > 0.0);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn profiled_sparse_refactor_traces_symbolic_and_numeric() {
+    with_profiling(|| {
+        let svc = SolverService::start(profiled_cfg(1)).unwrap();
+        let n = 96;
+        let a = Arc::new(diag_dominant_sparse(n, 4, GenSeed(33)));
+        let resp = svc.solve_sparse_blocking(a, vec![1.0; n], Some(9)).unwrap();
+        assert!(resp.result.is_ok());
+        let trace = resp.trace.expect("profiled sparse solve must attach a trace");
+        for phase in [Phase::CacheLookup, Phase::Symbolic, Phase::NumericFactor, Phase::Trisolve] {
+            assert!(
+                trace.phases_present().contains(&phase),
+                "sparse trace missing {phase:?}: {:?}",
+                trace.phases_present()
+            );
+        }
+        let snap = svc.metrics_snapshot();
+        assert_eq!(snap.sparse_solves, 1);
+        assert!(snap.sparse_lat_mean_s > 0.0);
+        assert_eq!(snap.numeric_refactor, 1, "split path runs the numeric sweep");
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn profiled_device_sharded_service_measures_devices() {
+    with_profiling(|| {
+        let svc = SolverService::start(profiled_cfg(2)).unwrap();
+        let n = 160;
+        let a = Arc::new(diag_dominant_dense(n, GenSeed(35)));
+        let resp = svc.solve_dense_blocking(a, vec![1.0; n], Some(11)).unwrap();
+        assert!(resp.result.is_ok());
+        assert!(resp.trace.is_some());
+        let snap = svc.metrics_snapshot();
+        assert_eq!(snap.devices, 2);
+        assert!(snap.exchange_steps > 0, "sharded path ran");
+        assert!(snap.device_busy_ns > 0, "device engines accumulated busy time");
+        assert!(snap.exchange_ns > 0, "exchange phase was timed");
+        assert!(snap.device_measured_imbalance >= 1.0);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn unprofiled_service_attaches_nothing_and_measures_nothing() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    obs::set_enabled(false);
+    let svc = SolverService::start(ServiceConfig {
+        lanes: 2,
+        engine_lanes: 2,
+        use_runtime: false,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let n = 96;
+    let a = Arc::new(diag_dominant_dense(n, GenSeed(37)));
+    let resp = svc.solve_dense_blocking(a, vec![1.0; n], Some(13)).unwrap();
+    assert!(resp.result.is_ok());
+    assert!(resp.trace.is_none(), "no profiling, no trace");
+    let snap = svc.metrics_snapshot();
+    assert_eq!(snap.profiled_jobs, 0);
+    assert_eq!(snap.busy_ns, 0);
+    assert_eq!(snap.measured_imbalance, 1.0, "vacuous balance when unprofiled");
+    // The class histograms still run — they are counters, not profiling.
+    assert_eq!(snap.dense_solves, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn profiled_metrics_survive_the_wire() {
+    with_profiling(|| {
+        use ebv_solve::wire::{serve_session, ResponseFrame};
+        let svc = SolverService::start(profiled_cfg(1)).unwrap();
+        let n = 128;
+        let a = diag_dominant_dense(n, GenSeed(39));
+        let solve = ebv_solve::wire::encode_request(&ebv_solve::wire::RequestFrame::Solve(
+            ebv_solve::wire::WireSolve::dense(a, vec![1.0; n]),
+        ));
+        let input = format!("{solve}\n{{\"op\":\"metrics\"}}\n{{\"op\":\"shutdown\"}}\n");
+        let mut out = Vec::new();
+        serve_session(&svc, input.as_bytes(), &mut out).unwrap();
+        svc.shutdown();
+        let text = String::from_utf8(out).unwrap();
+        let frames: Vec<ResponseFrame> =
+            text.lines().map(|l| ebv_solve::wire::decode_response(l).unwrap()).collect();
+        let ResponseFrame::Metrics(m) = &frames[1] else { panic!("{frames:?}") };
+        assert!(m.profiled_jobs >= 1, "measured profile crossed the wire");
+        assert!(m.busy_ns > 0);
+        assert!(m.measured_imbalance >= 1.0);
+        assert_eq!(m.dense_solves, 1);
+    });
+}
+
+// ---- binary-level checks (the CLI owns ingest/encode spans) ----------------
+
+fn run_binary(args: &[&str]) -> (String, String, bool) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_ebv-solve"))
+        .args(args)
+        .output()
+        .expect("run ebv-solve");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn solve_profile_emits_all_six_phases_and_both_imbalances() {
+    // Separate process — no shared obs state, no lock needed.
+    let (stdout, stderr, ok) =
+        run_binary(&["solve", "--profile", "--n", "160", "--lanes", "2", "--devices", "2"]);
+    assert!(ok, "solve --profile failed:\n{stdout}\n{stderr}");
+    for phase in ["ingest", "cache_lookup", "symbolic", "numeric_factor", "trisolve", "encode"] {
+        assert!(stdout.contains(phase), "timeline missing `{phase}`:\n{stdout}");
+    }
+    assert!(stdout.contains("lane imbalance: predicted"), "{stdout}");
+    assert!(stdout.contains("vs measured"), "{stdout}");
+    assert!(stdout.contains("device imbalance: predicted"), "{stdout}");
+    assert!(stdout.contains("spans cover"), "{stdout}");
+    assert!(stderr.contains("obs:"), "stderr summary line missing:\n{stderr}");
+}
+
+#[test]
+fn solve_profile_covers_the_sparse_refactor_path() {
+    let (stdout, stderr, ok) =
+        run_binary(&["solve", "--profile", "--kind", "sparse", "--n", "96", "--lanes", "2"]);
+    assert!(ok, "sparse solve --profile failed:\n{stdout}\n{stderr}");
+    for phase in ["ingest", "cache_lookup", "symbolic", "numeric_factor", "trisolve", "encode"] {
+        assert!(stdout.contains(phase), "timeline missing `{phase}`:\n{stdout}");
+    }
+    assert!(stdout.contains("lane imbalance: predicted"), "{stdout}");
+}
+
+#[test]
+fn metrics_subcommand_exposes_prometheus_text() {
+    let (stdout, stderr, ok) =
+        run_binary(&["metrics", "--n", "64", "--probes", "1", "--lanes", "2"]);
+    assert!(ok, "metrics subcommand failed:\n{stdout}\n{stderr}");
+    for needle in [
+        "# HELP ebv_completed_total",
+        "# TYPE ebv_completed_total counter",
+        "# TYPE ebv_measured_lane_imbalance gauge",
+        "ebv_dense_solves_total 1",
+        "ebv_sparse_solves_total 1",
+    ] {
+        assert!(stdout.contains(needle), "exposition missing `{needle}`:\n{stdout}");
+    }
+    assert!(stderr.contains("obs:"), "stderr summary line missing:\n{stderr}");
+}
+
+#[test]
+fn solve_profile_appends_a_jsonl_event() {
+    let dir = std::env::temp_dir().join(format!("ebv_obs_events_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("events.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let path_s = path.to_str().unwrap();
+    let (stdout, stderr, ok) =
+        run_binary(&["solve", "--profile", "--n", "96", "--lanes", "2", "--events", path_s]);
+    assert!(ok, "solve --profile --events failed:\n{stdout}\n{stderr}");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1, "one solve, one event line: {text:?}");
+    let v = ebv_solve::util::json::Json::parse(lines[0]).unwrap();
+    let trace = ebv_solve::obs::SolveTrace::from_json(&v).unwrap();
+    assert!(!trace.is_empty(), "event log carries the solve trace");
+    let _ = std::fs::remove_file(&path);
+}

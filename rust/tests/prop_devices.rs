@@ -169,6 +169,45 @@ fn measured_exchange_matches_the_plan() {
     }
 }
 
+/// Profiling observes, never perturbs: with the obs subsystem on, the
+/// dense sharded factor, the sparse refactorization and the sharded
+/// trisolve are bitwise what they are with it off, for every device
+/// count. (The obs flag is process-global; this is the only test in
+/// this binary that flips it, and it restores the disabled default.)
+#[test]
+fn profiling_does_not_perturb_sharded_bits() {
+    let n = 88;
+    let lanes = 4;
+    let a = diag_dominant_dense(n, GenSeed(94));
+    let sa = diag_dominant_sparse(n, 4, GenSeed(95));
+    let sym = SparseSymbolic::analyze(&sa).unwrap();
+    let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.61).cos()).collect();
+    for devices in [1usize, 2, 4] {
+        let set = Arc::new(DeviceSet::new(devices, 2));
+
+        ebv_solve::obs::set_enabled(false);
+        let f_off = panelled(lanes, 1).with_devices(Arc::clone(&set)).factor(&a).unwrap();
+        let sf_off = sym.factor_sharded(&sa, lanes, &set).unwrap();
+        let x_off = sf_off.solve_sharded(&b, lanes, &set).unwrap();
+
+        ebv_solve::obs::set_enabled(true);
+        let f_on = panelled(lanes, 1).with_devices(Arc::clone(&set)).factor(&a).unwrap();
+        let sf_on = sym.factor_sharded(&sa, lanes, &set).unwrap();
+        let x_on = sf_on.solve_sharded(&b, lanes, &set).unwrap();
+        ebv_solve::obs::set_enabled(false);
+        let _ = ebv_solve::obs::take_thread_spans();
+
+        assert_eq!(
+            f_on.packed().max_abs_diff(f_off.packed()),
+            0.0,
+            "dense factor D={devices}: profiling changed bits"
+        );
+        assert_eq!(sf_on.l(), sf_off.l(), "sparse L D={devices}");
+        assert_eq!(sf_on.u(), sf_off.u(), "sparse U D={devices}");
+        assert_eq!(x_on, x_off, "sharded trisolve D={devices}");
+    }
+}
+
 /// The acceptance grid, pinned deterministically: D ∈ {1, 2, 4} ×
 /// lane counts × RowDists on one dense matrix, one sparse pattern and
 /// one trisolve, all bitwise against their flat references.
