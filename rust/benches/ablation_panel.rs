@@ -1,19 +1,24 @@
 //! Panel ablation: column-at-a-time (`nb=1`) vs blocked-panel EBV
-//! factorization on the persistent lane engine.
+//! factorization on the persistent lane engine, across the
+//! trailing-update microkernel variants.
 //!
 //! The rank-1 trailing update sweeps the whole trailing matrix once per
 //! column; an `nb`-wide panel sweeps it once per panel, trading `nb`
-//! passes for one rank-`nb` GEMM-style pass per row (4 panel columns
-//! fused per inner sweep). Cases run `nb ∈ {1, 8, 64}` at dense sizes
-//! up to 1024 on 4 fold lanes, assert `nb=1` is bit-identical to
-//! `SeqLu` and wider panels agree componentwise, and record the
-//! barrier-step counts from `FactorPlan::dense_blocked` so the
-//! schedule-level story travels with the timings. Writes the standard
-//! bench report and a repo-level `BENCH_panel.json` summary (skipped in
-//! `EBV_BENCH_SMOKE=1` mode — see `bench::write_repo_summary`).
+//! passes for one rank-`nb` GEMM-style pass per row. How that pass is
+//! executed is the second ablation axis: the `unroll4`/`unroll8`
+//! register kernels vs the `tiled` L1/L2 cache-blocked kernel (see
+//! DESIGN.md §Microkernel). Cases run kernel × `nb ∈ {1, 8, 64}` at
+//! dense sizes up to 1024 on 4 fold lanes, assert `nb=1` is
+//! bit-identical to `SeqLu` and wider panels agree componentwise, and
+//! record the barrier-step counts from `FactorPlan::dense_blocked` so
+//! the schedule-level story travels with the timings. Writes the
+//! standard bench report and a repo-level `BENCH_panel.json` summary
+//! (skipped in `EBV_BENCH_SMOKE=1` mode — see
+//! `bench::write_repo_summary`).
 //!
 //! ```sh
 //! cargo bench --bench ablation_panel
+//! EBV_KERNEL=unroll8 cargo bench --bench ablation_panel  # auto-path override
 //! ```
 
 use std::sync::Arc;
@@ -24,7 +29,7 @@ use ebv_solve::ebv::plan::FactorPlan;
 use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
 use ebv_solve::exec::LaneEngine;
 use ebv_solve::matrix::generate::{diag_dominant_dense, GenSeed};
-use ebv_solve::solver::{EbvLu, LuSolver, SeqLu};
+use ebv_solve::solver::{EbvLu, Kernel, LuSolver, SeqLu};
 use ebv_solve::util::json::Json;
 
 fn main() {
@@ -33,6 +38,9 @@ fn main() {
     let smoke = bench::smoke();
     let sizes = bench::sizes(&[512, 1024], &[96]);
     let widths = [1usize, 8, 64];
+    // Concrete kernels only: `auto` is a selection rule, not a fourth
+    // arithmetic; its resolution is covered by the property suites.
+    let kernels = [Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled];
     let bencher = Bencher {
         min_iters: 5,
         max_iters: 30,
@@ -41,52 +49,89 @@ fn main() {
     }
     .or_smoke();
 
-    let mut report = Report::new("Panel ablation — column-at-a-time vs blocked EBV factor");
+    let mut report = Report::new("Panel ablation — kernel × panel width on the blocked EBV factor");
     report.set_headers(&["case", "barrier steps", "median, s", "vs nb=1"]);
-    // (case name, n, nb, barriers, median seconds)
-    let mut results: Vec<(String, usize, usize, usize, f64)> = Vec::new();
+    // (case name, kernel, n, nb, barriers, median seconds)
+    let mut results: Vec<(String, Kernel, usize, usize, usize, f64)> = Vec::new();
 
     for &n in &sizes {
         let a = diag_dominant_dense(n, GenSeed(4000 + n as u64));
         let reference = SeqLu::new().factor(&a).expect("factor");
         let schedule = LaneSchedule::build(n, lanes, RowDist::EbvFold);
-        let mut nb1_median = 0.0f64;
 
-        for &nb in &widths {
-            let solver = EbvLu::with_lanes(lanes)
-                .seq_threshold(0)
-                .panel(nb)
-                .with_engine(Arc::clone(&engine));
-            let stats = bencher.run(&format!("factor n={n} nb={nb}"), || {
-                solver.factor(&a).expect("factor")
-            });
+        for &kernel in &kernels {
+            // Per-kernel baseline, measured under identical conditions
+            // (the nb=1 column path itself never runs the microkernel).
+            let mut nb1_median = 0.0f64;
 
-            // Correctness rides along with every timing: nb=1 must be
-            // bit-identical to SeqLu, wider panels componentwise-close.
-            // The bound is looser than the property suite's 1e-9 (which
-            // runs n <= 150) because reordering error grows with n and
-            // with the O(n) magnitudes of these dominant systems.
-            let f = solver.factor(&a).expect("factor");
-            let diff = f.packed().max_abs_diff(reference.packed());
-            if nb == 1 {
-                assert_eq!(diff, 0.0, "n={n}: nb=1 must reproduce SeqLu bitwise");
-            } else {
-                assert!(diff < 1e-8, "n={n} nb={nb}: drifted {diff:e} from SeqLu");
+            for &nb in &widths {
+                let solver = EbvLu::with_lanes(lanes)
+                    .seq_threshold(0)
+                    .panel(nb)
+                    .kernel(kernel)
+                    .with_engine(Arc::clone(&engine));
+                let case = format!("factor n={n} nb={nb} kern={}", kernel.name());
+                let stats = bencher.run(&case, || solver.factor(&a).expect("factor"));
+
+                // Correctness rides along with every timing: nb=1 must
+                // be bit-identical to SeqLu for every kernel, wider
+                // panels componentwise-close. The bound is looser than
+                // the property suite's 1e-9 (which runs n <= 150)
+                // because reordering error grows with n and with the
+                // O(n) magnitudes of these dominant systems.
+                let f = solver.factor(&a).expect("factor");
+                let diff = f.packed().max_abs_diff(reference.packed());
+                if nb == 1 {
+                    assert_eq!(
+                        diff, 0.0,
+                        "n={n} kern={}: nb=1 must reproduce SeqLu bitwise",
+                        kernel.name()
+                    );
+                } else {
+                    assert!(
+                        diff < 1e-8,
+                        "n={n} nb={nb} kern={}: drifted {diff:e} from SeqLu",
+                        kernel.name()
+                    );
+                }
+
+                let barriers = FactorPlan::dense_blocked(n, nb, &schedule).barriers;
+                if nb == 1 {
+                    nb1_median = stats.median;
+                }
+                report.push_row(vec![
+                    case.clone(),
+                    barriers.to_string(),
+                    format!("{:.6}", stats.median),
+                    format!("{:.2}x", nb1_median / stats.median),
+                ]);
+                results.push((case, kernel, n, nb, barriers, stats.median));
+                report.push_stats(stats);
             }
-
-            let barriers = FactorPlan::dense_blocked(n, nb, &schedule).barriers;
-            if nb == 1 {
-                nb1_median = stats.median;
-            }
-            report.push_row(vec![
-                format!("factor n={n} nb={nb}"),
-                barriers.to_string(),
-                format!("{:.6}", stats.median),
-                format!("{:.2}x", nb1_median / stats.median),
-            ]);
-            results.push((format!("factor n={n} nb={nb}"), n, nb, barriers, stats.median));
-            report.push_stats(stats);
         }
+
+        // The cache tiling is a pure reorder of the unroll4 arithmetic:
+        // byte-identical factors (the KC tile splits every dot product
+        // at fuse-group boundaries), only the traversal changes.
+        let u4 = EbvLu::with_lanes(lanes)
+            .seq_threshold(0)
+            .panel(64)
+            .kernel(Kernel::Unroll4)
+            .with_engine(Arc::clone(&engine))
+            .factor(&a)
+            .expect("factor");
+        let tiled = EbvLu::with_lanes(lanes)
+            .seq_threshold(0)
+            .panel(64)
+            .kernel(Kernel::Tiled)
+            .with_engine(Arc::clone(&engine))
+            .factor(&a)
+            .expect("factor");
+        assert_eq!(
+            u4.packed().data(),
+            tiled.packed().data(),
+            "n={n}: tiled must be bitwise unroll4"
+        );
     }
 
     println!("{}", report.render());
@@ -101,16 +146,19 @@ fn main() {
         ("status", Json::from("measured")),
         ("lanes", Json::from(lanes)),
         ("panel_widths", Json::arr(widths.iter().map(|&w| Json::from(w)))),
+        ("kernels", Json::arr(kernels.iter().map(|k| Json::from(k.name())))),
         (
             "cases",
-            Json::arr(results.iter().map(|(name, n, nb, barriers, median)| {
+            Json::arr(results.iter().map(|(name, kernel, n, nb, barriers, median)| {
+                // Speedup baseline: the same kernel's nb=1 run.
                 let nb1 = results
                     .iter()
-                    .find(|(_, n2, nb2, _, _)| n2 == n && *nb2 == 1)
-                    .map(|(_, _, _, _, m)| *m)
+                    .find(|(_, k2, n2, nb2, _, _)| k2 == kernel && n2 == n && *nb2 == 1)
+                    .map(|(_, _, _, _, _, m)| *m)
                     .unwrap_or(*median);
                 Json::obj([
                     ("name", Json::from(name.clone())),
+                    ("kernel", Json::from(kernel.name())),
                     ("n", Json::from(*n)),
                     ("panel_width", Json::from(*nb)),
                     ("barrier_steps", Json::from(*barriers)),
@@ -128,24 +176,32 @@ fn main() {
     }
 
     // Direction check (skipped in smoke mode — tiny shapes are noise):
-    // at the largest size the widest panel must not lose to the rank-1
-    // column path.
+    // at the largest size, for every kernel, the widest panel must not
+    // lose to the rank-1 column path.
     if !smoke {
         let n_max = *sizes.iter().max().expect("sizes nonempty");
-        let t1 = results
-            .iter()
-            .find(|(_, n, nb, _, _)| *n == n_max && *nb == 1)
-            .expect("nb=1 case")
-            .4;
-        let t64 = results
-            .iter()
-            .find(|(_, n, nb, _, _)| *n == n_max && *nb == 64)
-            .expect("nb=64 case")
-            .4;
-        assert!(
-            t64 <= t1 * 1.10,
-            "n={n_max}: blocked nb=64 ({t64:.6}s) lost to column-at-a-time ({t1:.6}s)"
-        );
-        println!("claim check: nb=64 ≤ 1.10 × nb=1 at n={n_max} ({:.2}x speedup) ✓", t1 / t64);
+        for &kernel in &kernels {
+            let t1 = results
+                .iter()
+                .find(|(_, k, n, nb, _, _)| *k == kernel && *n == n_max && *nb == 1)
+                .expect("nb=1 case")
+                .5;
+            let t64 = results
+                .iter()
+                .find(|(_, k, n, nb, _, _)| *k == kernel && *n == n_max && *nb == 64)
+                .expect("nb=64 case")
+                .5;
+            assert!(
+                t64 <= t1 * 1.10,
+                "n={n_max} kern={}: blocked nb=64 ({t64:.6}s) lost to \
+                 column-at-a-time ({t1:.6}s)",
+                kernel.name()
+            );
+            println!(
+                "claim check: kern={} nb=64 ≤ 1.10 × nb=1 at n={n_max} ({:.2}x speedup) ✓",
+                kernel.name(),
+                t1 / t64
+            );
+        }
     }
 }

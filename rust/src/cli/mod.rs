@@ -66,6 +66,19 @@ impl Args {
         }
     }
 
+    /// Positive (`>= 1`) count option with default. Rejects an
+    /// *explicit* zero at parse time — `--panel-width 0` has no
+    /// meaning and used to surface as a late solver error. Callers
+    /// whose internal default is a zero sentinel (`--engine-lanes`
+    /// auto) still get it by omitting the flag.
+    pub fn opt_positive(&self, name: &str, default: usize) -> Result<usize> {
+        let v = self.opt_parsed(name, default)?;
+        if self.opts.contains_key(name) && v == 0 {
+            return Err(EbvError::Config(format!("--{name} must be >= 1")));
+        }
+        Ok(v)
+    }
+
     /// Comma-separated list option.
     pub fn opt_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.opts.get(name) {
@@ -98,6 +111,10 @@ COMMANDS:
               --panel-width <nb>            (blocked EBV panel width;
                                              default 64, 1 = exact
                                              column-at-a-time path)
+              --kernel <k>                  (trailing-update microkernel:
+                                             auto|unroll4|unroll8|tiled;
+                                             default auto — EBV_KERNEL
+                                             env or tiled)
               --sparse-parallel <bool>      (sparse kinds: symbolic/numeric
                                              split with level-parallel
                                              refactorization; default true,
@@ -120,8 +137,8 @@ COMMANDS:
               (see README.md §Wire protocol for the frame format)
               --lanes <k> --batch <k> --window-us <µs> --queue <k>
               --engine-lanes <k>            (resident lanes in the shared
-                                             execution engine; 0 = all
-                                             cores, see README.md
+                                             execution engine; omit for
+                                             all cores, see README.md
                                              §Execution engine)
               --devices <D>                 (device shards of the two-level
                                              runtime; default 1 = flat,
@@ -129,6 +146,8 @@ COMMANDS:
                                              lanes into D device groups)
               --panel-width <nb>            (blocked factorization panel
                                              width; default 64)
+              --kernel <k>                  (trailing-update microkernel:
+                                             auto|unroll4|unroll8|tiled)
               --sparse-parallel <bool>      (sparse symbolic/numeric split
                                              with pattern-keyed symbolic
                                              caching; default true)
@@ -144,7 +163,7 @@ COMMANDS:
     metrics   Run probe solves on an in-process profiled service and
               print a Prometheus-style text exposition on stdout
               --n <size> --probes <k>       (probe volume; default 192/2)
-              --lanes <k> --devices <D> --panel-width <nb>
+              --lanes <k> --devices <D> --panel-width <nb> --kernel <k>
               --no-profile                  (leave the obs subsystem off:
                                              counters only, no measured
                                              imbalance)
@@ -192,6 +211,30 @@ mod tests {
         let a = parse("tables --sizes 500,1000,2000");
         assert_eq!(a.opt_list("sizes", &[1]).unwrap(), vec![500, 1000, 2000]);
         assert_eq!(a.opt_list("other", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn positive_options_reject_explicit_zero() {
+        // An explicit zero is a parse-time error with the flag named...
+        for flag in ["panel-width", "engine-lanes", "devices"] {
+            let a = parse(&format!("serve --{flag} 0"));
+            let err = a.opt_positive(flag, 64).unwrap_err();
+            assert_eq!(err.to_string(), format!("config: --{flag} must be >= 1"));
+        }
+        // ...while an omitted flag still yields the caller's default,
+        // including a zero sentinel (`--engine-lanes` auto).
+        let a = parse("serve");
+        assert_eq!(a.opt_positive("panel-width", 64).unwrap(), 64);
+        assert_eq!(a.opt_positive("engine-lanes", 0).unwrap(), 0);
+        // Unparseable values keep the opt_parsed message.
+        let err = parse("serve --devices two").opt_positive("devices", 1).unwrap_err();
+        assert_eq!(err.to_string(), "config: --devices: cannot parse `two`");
+    }
+
+    #[test]
+    fn usage_documents_the_kernel_knob() {
+        assert!(USAGE.contains("--kernel"), "solve/serve/metrics should list --kernel");
+        assert!(USAGE.contains("auto|unroll4|unroll8|tiled"));
     }
 
     #[test]

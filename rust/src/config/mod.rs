@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::ebv::schedule::RowDist;
+use crate::solver::kernel::Kernel;
 use crate::util::error::{EbvError, Result};
 
 /// Raw parsed config: `section -> key -> value-as-string`.
@@ -128,6 +129,12 @@ pub struct ServiceConfig {
     /// Panel width `nb` of the blocked dense factorization the workers
     /// run (`1` = column-at-a-time, bit-identical to `SeqLu`).
     pub panel_width: usize,
+    /// Trailing-update microkernel of the blocked factorization
+    /// (`solver::kernel`): `auto` (the default — `EBV_KERNEL` or
+    /// tiled), `unroll4`, `unroll8` or `tiled`. `tiled` and `unroll4`
+    /// are bitwise identical; `unroll8` agrees componentwise. The
+    /// sparse numeric sweep is bitwise-invariant under every choice.
+    pub kernel: Kernel,
     /// Sparse symbolic/numeric split: factor sparse systems as a cached
     /// pattern analysis plus a level-parallel numeric sweep on the
     /// shared engine (`true`, the default), or the monolithic
@@ -160,6 +167,7 @@ impl Default for ServiceConfig {
             engine_lanes: 0,
             devices: 1,
             panel_width: crate::solver::lu_ebv::DEFAULT_PANEL_WIDTH,
+            kernel: Kernel::Auto,
             sparse_parallel: true,
             artifacts_dir: "artifacts".to_string(),
             use_runtime: false,
@@ -179,6 +187,12 @@ impl ServiceConfig {
                 EbvError::Config(format!("service.dist: unknown strategy `{name}`"))
             })?,
         };
+        let kernel = match raw.get("service", "kernel") {
+            None => d.kernel,
+            Some(name) => Kernel::parse(&name).ok_or_else(|| {
+                EbvError::Config(format!("service.kernel: unknown kernel `{name}`"))
+            })?,
+        };
         let cfg = ServiceConfig {
             lanes: raw.get_parsed("service", "lanes", d.lanes)?,
             dist,
@@ -188,6 +202,7 @@ impl ServiceConfig {
             engine_lanes: raw.get_parsed("service", "engine_lanes", d.engine_lanes)?,
             devices: raw.get_parsed("service", "devices", d.devices)?,
             panel_width: raw.get_parsed("service", "panel_width", d.panel_width)?,
+            kernel,
             sparse_parallel: raw.get_parsed("service", "sparse_parallel", d.sparse_parallel)?,
             artifacts_dir: raw
                 .get("service", "artifacts_dir")
@@ -278,6 +293,26 @@ mod tests {
         assert!(ServiceConfig::from_raw(&raw).is_err());
         let raw = RawConfig::parse("[service]\ndevices = many\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn kernel_knob_parses() {
+        assert_eq!(ServiceConfig::default().kernel, Kernel::Auto);
+        for (name, want) in [
+            ("auto", Kernel::Auto),
+            ("unroll4", Kernel::Unroll4),
+            ("unroll8", Kernel::Unroll8),
+            ("tiled", Kernel::Tiled),
+        ] {
+            let raw = RawConfig::parse(&format!("[service]\nkernel = \"{name}\"\n")).unwrap();
+            assert_eq!(ServiceConfig::from_raw(&raw).unwrap().kernel, want, "{name}");
+        }
+        let raw = RawConfig::parse("[service]\nkernel = \"simd512\"\n").unwrap();
+        let err = ServiceConfig::from_raw(&raw).unwrap_err();
+        assert!(
+            err.to_string().contains("service.kernel: unknown kernel `simd512`"),
+            "{err}"
+        );
     }
 
     #[test]

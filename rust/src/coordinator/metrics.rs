@@ -106,6 +106,11 @@ pub struct MetricsSnapshot {
     /// [`ServiceHandle::metrics_snapshot`](crate::coordinator::ServiceHandle::metrics_snapshot)
     /// fills it in — `ServiceMetrics` itself has no solver config.
     pub panel_width: u64,
+    /// Resolved trailing-update microkernel the workers dispatch
+    /// (`service.kernel` with `auto` collapsed — never `Auto` once a
+    /// service handle fills it in; `Auto` until then, like
+    /// `panel_width`'s zero).
+    pub kernel: crate::solver::Kernel,
     /// Device shards of the two-level runtime (`service.devices`;
     /// 1 = flat engine). Like the engine fields, zero until a
     /// service handle merges its device-set stats in.
@@ -223,6 +228,7 @@ impl ServiceMetrics {
             engine_steps: 0,
             engine_barrier_waits: 0,
             panel_width: 0,
+            kernel: crate::solver::Kernel::Auto,
             devices: 0,
             device_lanes: 0,
             device_jobs: 0,
@@ -401,9 +407,10 @@ mod tests {
         assert_eq!(s.busy_ns, 7_000);
         assert_eq!(s.wait_ns, 300);
         assert_eq!(s.profiled_jobs, 6);
-        // merge_engine only fills engine fields; the panel width comes
-        // from the service handle.
+        // merge_engine only fills engine fields; the panel width and
+        // kernel come from the service handle.
         assert_eq!(s.panel_width, 0);
+        assert_eq!(s.kernel, crate::solver::Kernel::Auto);
         assert_eq!(s.devices, 0, "device fields come from merge_devices");
     }
 

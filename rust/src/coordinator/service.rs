@@ -93,6 +93,7 @@ impl SolverService {
             solve_lanes: cfg.lanes,
             dist: cfg.dist,
             panel_width: cfg.panel_width.max(1),
+            kernel: cfg.kernel,
             sparse_parallel: cfg.sparse_parallel,
             engine,
             device_set,
@@ -328,6 +329,9 @@ impl ServiceHandle {
             ServiceMetrics::merge_engine(self.metrics.snapshot(), self.ctx.engine.stats());
         snap = ServiceMetrics::merge_lane_profile(snap, &self.ctx.engine.lane_profile());
         snap.panel_width = self.ctx.panel_width as u64;
+        // Report the *resolved* kernel (never `auto`): what the workers
+        // actually dispatch, including an `EBV_KERNEL` override.
+        snap.kernel = self.ctx.kernel.resolve();
         match &self.ctx.device_set {
             Some(set) => {
                 snap = ServiceMetrics::merge_devices(snap, set.snapshot());
@@ -535,6 +539,21 @@ mod tests {
         assert!(resp.result.is_ok());
         assert!(resp.residual < 1e-9);
         assert_eq!(svc.metrics_snapshot().panel_width, 8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn configured_kernel_reaches_workers_and_metrics() {
+        let mut cfg = test_cfg();
+        cfg.kernel = crate::solver::Kernel::Unroll8;
+        let svc = SolverService::start(cfg).unwrap();
+        let a = Arc::new(diag_dominant_dense(160, GenSeed(97)));
+        let resp = svc.solve_dense_blocking(a, vec![1.0; 160], None).unwrap();
+        assert!(resp.result.is_ok());
+        assert!(resp.residual < 1e-9);
+        // An explicit kernel is reported verbatim; only `auto` is
+        // collapsed (to the env override or the tiled default).
+        assert_eq!(svc.metrics_snapshot().kernel, crate::solver::Kernel::Unroll8);
         svc.shutdown();
     }
 

@@ -135,6 +135,11 @@ pub struct WorkerCtx {
     /// Panel width `nb` of the blocked dense factorization
     /// (`service.panel_width`; 1 = the column-at-a-time path).
     pub panel_width: usize,
+    /// Trailing-update microkernel (`service.kernel`) the blocked
+    /// dense factorization dispatches to; the sparse numeric sweep is
+    /// bitwise-invariant under it. Possibly `Auto` here — resolved per
+    /// factorization (and once for the metrics snapshot).
+    pub kernel: crate::solver::Kernel,
     /// Sparse symbolic/numeric split (`service.sparse_parallel`): factor
     /// sparse systems as a cached symbolic analysis plus a level-parallel
     /// numeric sweep on the engine, instead of the monolithic sequential
@@ -289,6 +294,7 @@ fn dense_factors(
     let mut solver = EbvLu::with_lanes(ctx.solve_lanes)
         .with_dist(ctx.dist)
         .panel(ctx.panel_width)
+        .kernel(ctx.kernel)
         .with_engine(Arc::clone(&ctx.engine));
     if let Some(set) = &ctx.device_set {
         solver = solver.with_devices(Arc::clone(set));
@@ -363,7 +369,7 @@ fn sparse_factors(req: &SolveRequest, ctx: &WorkerCtx) -> Result<Arc<SparseLuFac
                 s
             }
             None => {
-                let s = Arc::new(SparseSymbolic::analyze(a)?);
+                let s = Arc::new(SparseSymbolic::analyze(a)?.with_kernel(ctx.kernel));
                 if let Some(pk) = req.pattern_key {
                     ctx.cache.lock().expect("cache").put_symbolic(pk, Arc::clone(&s));
                 }
@@ -437,6 +443,7 @@ fn solve_pjrt_batch(
                         if let Ok((xr, _)) = refine_external_solution(
                             &EbvLu::with_lanes(ctx.solve_lanes)
                                 .panel(ctx.panel_width)
+                                .kernel(ctx.kernel)
                                 .with_engine(Arc::clone(&ctx.engine)),
                             a,
                             r.payload.rhs(),
@@ -483,6 +490,7 @@ mod tests {
             solve_lanes: 2,
             dist: RowDist::EbvFold,
             panel_width: 64,
+            kernel: crate::solver::Kernel::Auto,
             sparse_parallel: true,
             engine: Arc::new(LaneEngine::new(2)),
             device_set,

@@ -20,7 +20,7 @@ use ebv_solve::matrix::generate::{
 };
 use ebv_solve::exec::DeviceSet;
 use ebv_solve::runtime::Manifest;
-use ebv_solve::solver::{solver_by_name, EbvLu, LuSolver, SparseLu, SparseSymbolic};
+use ebv_solve::solver::{solver_by_name, EbvLu, Kernel, LuSolver, SparseLu, SparseSymbolic};
 use ebv_solve::util::fmt;
 use ebv_solve::wire::{serve_session_with, DecodeOptions, SessionOptions};
 use ebv_solve::workload::{generate_trace, SystemKind, TraceSpec};
@@ -56,6 +56,19 @@ fn main() {
     }
 }
 
+/// Parse `--kernel` into a [`Kernel`] (absent = `auto`: the
+/// `EBV_KERNEL` env override or the tiled default at dispatch time).
+fn kernel_arg(args: &Args) -> ebv_solve::Result<Kernel> {
+    match args.opt("kernel") {
+        None => Ok(Kernel::Auto),
+        Some(name) => Kernel::parse(name).ok_or_else(|| {
+            ebv_solve::EbvError::Config(format!(
+                "--kernel: unknown kernel `{name}` (expected auto|unroll4|unroll8|tiled)"
+            ))
+        }),
+    }
+}
+
 fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
     if args.flag("profile") {
         return cmd_solve_profiled(args);
@@ -63,16 +76,10 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
     let n = args.opt_parsed("n", 512usize)?;
     let seed = args.opt_parsed("seed", 7u64)?;
     let kind = args.opt("kind").unwrap_or("dense");
-    let lanes = args.opt_parsed("lanes", ebv_solve::exec::default_lanes())?;
-    let panel = args.opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?;
-    if panel == 0 {
-        // Same rule the service config enforces — no silent clamping.
-        return Err(ebv_solve::EbvError::Config("--panel-width must be >= 1".into()));
-    }
-    let devices = args.opt_parsed("devices", 1usize)?;
-    if devices == 0 {
-        return Err(ebv_solve::EbvError::Config("--devices must be >= 1".into()));
-    }
+    let lanes = args.opt_positive("lanes", ebv_solve::exec::default_lanes())?;
+    let panel = args.opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?;
+    let devices = args.opt_positive("devices", 1usize)?;
+    let kernel = kernel_arg(args)?;
     // Two-level sharded runtime: split the lane budget across devices.
     let device_set = (devices > 1)
         .then(|| Arc::new(DeviceSet::new(devices, lanes.div_ceil(devices).max(1))));
@@ -93,6 +100,7 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
                 // printed below always reflects a real sharded run.
                 let solver = EbvLu::with_lanes(lanes)
                     .panel(panel)
+                    .kernel(kernel)
                     .seq_threshold(0)
                     .with_devices(Arc::clone(set));
                 let t0 = Instant::now();
@@ -108,7 +116,7 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
                     snap.exchange_steps
                 );
             } else {
-                let solver = solver_by_name(solver_name, lanes, panel).ok_or_else(|| {
+                let solver = solver_by_name(solver_name, lanes, panel, kernel).ok_or_else(|| {
                     ebv_solve::EbvError::Config(format!("unknown solver `{solver_name}`"))
                 })?;
                 let t0 = Instant::now();
@@ -135,7 +143,7 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
                 // and the per-values refactorization are separate costs
                 // — the second is what repeat same-pattern traffic pays.
                 let t0 = Instant::now();
-                let sym = SparseSymbolic::analyze(&a)?;
+                let sym = SparseSymbolic::analyze(&a)?.with_kernel(kernel);
                 let t_sym = t0.elapsed().as_secs_f64();
                 let t1 = Instant::now();
                 let f = match &device_set {
@@ -198,14 +206,15 @@ fn cmd_solve_profiled(args: &Args) -> ebv_solve::Result<()> {
     let n = args.opt_parsed("n", 512usize)?;
     let seed = args.opt_parsed("seed", 7u64)?;
     let kind = args.opt("kind").unwrap_or("dense");
-    let lanes = args.opt_parsed("lanes", ebv_solve::exec::default_lanes())?;
-    let panel = args.opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?;
-    let devices = args.opt_parsed("devices", 1usize)?;
+    let lanes = args.opt_positive("lanes", ebv_solve::exec::default_lanes())?;
+    let panel = args.opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?;
+    let devices = args.opt_positive("devices", 1usize)?;
     let cfg = ServiceConfig {
         lanes,
         engine_lanes: lanes,
         devices,
         panel_width: panel,
+        kernel: kernel_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         profiling: true,
         ..ServiceConfig::default()
@@ -311,12 +320,13 @@ fn cmd_solve_profiled(args: &Args) -> ebv_solve::Result<()> {
 fn cmd_metrics(args: &Args) -> ebv_solve::Result<()> {
     let n = args.opt_parsed("n", 192usize)?;
     let seed = args.opt_parsed("seed", 7u64)?;
-    let lanes = args.opt_parsed("lanes", ebv_solve::exec::default_lanes())?;
+    let lanes = args.opt_positive("lanes", ebv_solve::exec::default_lanes())?;
     let cfg = ServiceConfig {
         lanes,
         engine_lanes: lanes,
-        devices: args.opt_parsed("devices", 1usize)?,
-        panel_width: args.opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
+        devices: args.opt_positive("devices", 1usize)?,
+        panel_width: args.opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
+        kernel: kernel_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         profiling: !args.flag("no-profile"),
         ..ServiceConfig::default()
@@ -362,14 +372,17 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
     // Default: the NDJSON wire session on stdin/stdout. Diagnostics go
     // to stderr so stdout stays a clean frame stream.
     let cfg = ServiceConfig {
-        lanes: args.opt_parsed("lanes", 4usize)?,
+        lanes: args.opt_positive("lanes", 4usize)?,
         max_batch: args.opt_parsed("batch", 16usize)?,
         batch_window_us: args.opt_parsed("window-us", 200u64)?,
         queue_capacity: args.opt_parsed("queue", 1024usize)?,
-        engine_lanes: args.opt_parsed("engine-lanes", 0usize)?,
-        devices: args.opt_parsed("devices", 1usize)?,
+        // Explicit `--engine-lanes 0` is rejected; omitting the flag
+        // keeps the zero sentinel (auto = all cores).
+        engine_lanes: args.opt_positive("engine-lanes", 0usize)?,
+        devices: args.opt_positive("devices", 1usize)?,
         panel_width: args
-            .opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
+            .opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
+        kernel: kernel_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         use_runtime: args.flag("runtime"),
         profiling: args.flag("profile"),
@@ -410,15 +423,16 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
 fn cmd_serve_trace(args: &Args) -> ebv_solve::Result<()> {
     let requests = args.opt_parsed("requests", 200usize)?;
     let rate = args.opt_parsed("rate", 500.0f64)?;
-    let lanes = args.opt_parsed("lanes", 4usize)?;
+    let lanes = args.opt_positive("lanes", 4usize)?;
     let batch = args.opt_parsed("batch", 8usize)?;
     let cfg = ServiceConfig {
         lanes,
         max_batch: batch,
-        engine_lanes: args.opt_parsed("engine-lanes", 0usize)?,
-        devices: args.opt_parsed("devices", 1usize)?,
+        engine_lanes: args.opt_positive("engine-lanes", 0usize)?,
+        devices: args.opt_positive("devices", 1usize)?,
         panel_width: args
-            .opt_parsed("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
+            .opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
+        kernel: kernel_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         use_runtime: args.flag("runtime"),
         profiling: args.flag("profile"),

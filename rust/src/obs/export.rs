@@ -84,6 +84,11 @@ pub fn prometheus(m: &MetricsSnapshot) -> String {
         "Measured max/mean per-device busy time (DevicePlan counterpart).",
         m.device_measured_imbalance,
     );
+    // Info-style gauge: the kernel name rides in a label so the value
+    // stays a constant 1 (Prometheus has no string samples).
+    let _ = writeln!(out, "# HELP ebv_kernel Resolved trailing-update microkernel.");
+    let _ = writeln!(out, "# TYPE ebv_kernel gauge");
+    let _ = writeln!(out, "ebv_kernel{{kernel=\"{}\"}} 1", m.kernel.name());
     out
 }
 
@@ -176,6 +181,7 @@ mod tests {
             engine_steps: 17,
             engine_barrier_waits: 18,
             panel_width: 19,
+            kernel: crate::solver::Kernel::Tiled,
             devices: 20,
             device_lanes: 21,
             device_jobs: 22,
@@ -208,6 +214,7 @@ mod tests {
             "ebv_measured_lane_imbalance 34.5",
             "ebv_exchange_ns_total 36",
             "ebv_sparse_latency_p99_seconds 30.5",
+            "ebv_kernel{kernel=\"tiled\"} 1",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

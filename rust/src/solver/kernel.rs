@@ -1,0 +1,662 @@
+//! Shared f64 trailing-update microkernel.
+//!
+//! One module owns the hot inner loop of every factorization in the
+//! crate: the rank-`nb` trailing update `A22 -= L21 · U12` that PR 3
+//! made the dominant cost of blocked elimination, plus the guarded
+//! scatter-AXPY at the heart of the sparse numeric refactorization.
+//! `EbvLu`'s flat and device-sharded blocked paths, `BlockedLu`'s GEMM
+//! step and `SparseSymbolic::numeric_row` all call in here — the
+//! previously duplicated hand-fused loops in `lu_ebv.rs` and
+//! `lu_blocked.rs` are gone.
+//!
+//! ## Kernel variants
+//!
+//! [`Kernel`] selects the dense update shape (`--kernel`,
+//! `service.kernel`, or the `EBV_KERNEL` environment variable through
+//! [`Kernel::resolve`]):
+//!
+//! * **`unroll4`** — the historical kernel, byte-for-byte: four panel
+//!   columns fused per sweep of the trailing row (quarters the write
+//!   traffic; EXPERIMENTS.md §Perf, L3-D1), all-zero multiplier groups
+//!   skipped, scalar remainder skipping zero multipliers. Plain
+//!   indexed loops over `f64` slices with no data-dependent exits
+//!   inside the j-loop — the pattern LLVM's loop vectorizer provably
+//!   turns into SIMD.
+//! * **`unroll8`** — the same shape fused eight wide. Fusing more
+//!   terms re-associates the per-element sum, so `unroll8` factors
+//!   agree with `unroll4` (and `SeqLu`) componentwise, not bitwise.
+//! * **`tiled`** (the `auto` default) — `unroll4` arithmetic under an
+//!   `MC × KC × NR` cache tiling of the `ikj` sweep (see the cache
+//!   model below). Because [`KC`] is a multiple of the fuse width and
+//!   k ascends within every `(i, j)` element, tiling only *partitions*
+//!   the `unroll4` iteration space — tiled factors are **bitwise
+//!   identical** to `unroll4` for every matrix and every tile size
+//!   satisfying those two constraints (pinned in the tests here and in
+//!   `rust/tests/prop_panel.rs`).
+//!
+//! Every variant is deterministic: for a fixed kernel choice the
+//! factors are bit-stable across lane counts, row distributions,
+//! engine sizes and device counts, because the caller's row set only
+//! partitions the **M dimension** — see [`trailing_update`].
+//!
+//! ## Cache model
+//!
+//! Tile sizes come from a small compile-time model in the spirit of
+//! the fixed VMEM tile shapes of the Pallas kernels
+//! (`python/` pipeline; a Pallas grid step stages an `(bm, bk)×(bk,
+//! bn)` block pair into VMEM exactly like the KC×NR panel block here
+//! stays L1-resident):
+//!
+//! * The `KC × NR` slab of `U12` is the block every row of the tile
+//!   re-reads; budget half of L1 for it → `NR = (L1/2) / (KC · 8)`.
+//! * The `MC`-row working set (`MC × (KC + NR)` elements: multipliers
+//!   plus updated trailing columns) should sit in half of L2 →
+//!   `MC = (L2/2) / ((KC + NR) · 8)`.
+//! * `KC` is fixed at 32 — deep enough to amortize the per-tile loop
+//!   overhead, shallow enough that `NR` stays a useful 64 columns —
+//!   and **must** stay a multiple of 8 (a multiple of both fuse
+//!   widths) or the bitwise tiling guarantee above breaks; a const
+//!   assertion enforces it.
+//!
+//! The constants assume 32 KiB L1d / 512 KiB L2 per core — the
+//! conservative end of current x86/ARM server cores. They are
+//! deliberately compile-time: runtime cache probing would make factor
+//! bits host-dependent, which the bit-identity ledger forbids.
+
+/// L1 data cache budget assumed by the tile model (bytes).
+pub const L1_BYTES: usize = 32 * 1024;
+/// L2 cache budget assumed by the tile model (bytes).
+pub const L2_BYTES: usize = 512 * 1024;
+const F64_BYTES: usize = std::mem::size_of::<f64>();
+
+/// Panel-depth tile: columns of `L21` / rows of `U12` per sweep.
+pub const KC: usize = 32;
+/// Trailing-column tile: `KC × NR × 8` bytes is half of L1.
+pub const NR: usize = (L1_BYTES / 2) / (KC * F64_BYTES);
+/// Row tile: `MC × (KC + NR) × 8` bytes is half of L2.
+pub const MC: usize = (L2_BYTES / 2) / ((KC + NR) * F64_BYTES);
+
+// The bitwise tiled≡unroll4 guarantee needs every interior k-tile
+// boundary to land on a fuse-group boundary: KC must be a multiple of
+// both fuse widths (4 and 8). The others just guard against a future
+// cache-budget edit degenerating the tiling.
+const _: () = assert!(KC % 8 == 0, "KC must be a multiple of the fuse widths");
+const _: () = assert!(NR > 0 && MC > 0, "degenerate tile sizes");
+
+/// Dense trailing-update kernel selection.
+///
+/// Follows the [`RowDist`](crate::ebv::schedule::RowDist) idiom:
+/// [`Kernel::ALL`] + [`Kernel::name`] + [`Kernel::parse`] keep the
+/// CLI, config file and wire codec spelling in one place.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Kernel {
+    /// Defer the choice to [`Kernel::resolve`]: the `EBV_KERNEL`
+    /// environment variable if set to a concrete kernel, else
+    /// [`Kernel::Tiled`].
+    #[default]
+    Auto,
+    /// The historical 4-wide fused kernel, byte-for-byte.
+    Unroll4,
+    /// 8-wide fusion: halves write traffic again, re-associates the
+    /// per-element sum (componentwise contract, not bitwise).
+    Unroll8,
+    /// `unroll4` arithmetic under MC×KC×NR cache tiling — bitwise
+    /// identical to [`Kernel::Unroll4`].
+    Tiled,
+}
+
+impl Kernel {
+    /// Every variant, in presentation order.
+    pub const ALL: [Kernel; 4] = [Kernel::Auto, Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled];
+
+    /// Config/CLI/wire spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Auto => "auto",
+            Kernel::Unroll4 => "unroll4",
+            Kernel::Unroll8 => "unroll8",
+            Kernel::Tiled => "tiled",
+        }
+    }
+
+    /// Inverse of [`Kernel::name`].
+    pub fn parse(name: &str) -> Option<Kernel> {
+        Kernel::ALL.into_iter().find(|k| k.name() == name)
+    }
+
+    /// Collapse [`Kernel::Auto`] to a concrete kernel: a concrete
+    /// `EBV_KERNEL` environment value wins (the CI smoke matrix drives
+    /// default-configured benches this way), anything else — unset,
+    /// `auto`, or unparseable — falls back to [`Kernel::Tiled`].
+    /// Concrete variants return themselves without touching the
+    /// environment, so callers may resolve once per factorization and
+    /// pass the result down.
+    pub fn resolve(self) -> Kernel {
+        match self {
+            Kernel::Auto => match std::env::var("EBV_KERNEL") {
+                Ok(v) => match Kernel::parse(v.trim()) {
+                    Some(Kernel::Auto) | None => Kernel::Tiled,
+                    Some(k) => k,
+                },
+                Err(_) => Kernel::Tiled,
+            },
+            k => k,
+        }
+    }
+}
+
+/// Raw row-major matrix view the kernel reads panel rows from and
+/// writes trailing rows through. A thin, `Copy` cousin of the solver
+/// paths' `SharedMatrix`: the callers' safety argument (disjoint row
+/// ownership, barrier-sequenced panel reads) is exactly the one they
+/// already make; this type just carries the pointer across the call.
+#[derive(Clone, Copy)]
+pub struct MatView {
+    ptr: *mut f64,
+    stride: usize,
+}
+
+impl MatView {
+    /// View over a row-major buffer with `stride` columns per row.
+    ///
+    /// The returned view is only as valid as `ptr`: every row index
+    /// later passed to [`trailing_update`] must lie inside the
+    /// allocation, and the caller keeps the aliasing obligations
+    /// documented there.
+    pub fn from_raw(ptr: *mut f64, stride: usize) -> MatView {
+        MatView { ptr, stride }
+    }
+
+    /// Columns `[lo, hi)` of row `r`, immutable.
+    ///
+    /// # Safety
+    /// No concurrent write may overlap the range (panel rows are
+    /// finalized before the kernel runs).
+    #[inline]
+    unsafe fn row(&self, r: usize, lo: usize, hi: usize) -> &[f64] {
+        std::slice::from_raw_parts(self.ptr.add(r * self.stride + lo), hi - lo)
+    }
+
+    /// Columns `[lo, hi)` of row `i`, mutable.
+    ///
+    /// # Safety
+    /// The caller must have exclusive access to the range.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row_mut(&self, i: usize, lo: usize, hi: usize) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.stride + lo), hi - lo)
+    }
+}
+
+/// Rank-`nb` trailing update over an explicit row set:
+///
+/// ```text
+/// for i in rows:  A[i, panel_end..cols_end] -= A[i, panel_start..panel_end] · U12
+/// where U12 = A[panel_start..panel_end, panel_end..cols_end]
+/// ```
+///
+/// `rows` is the caller's ownership set and forms the **outer M
+/// partition** of the tiling: the EBV paths pass each lane's
+/// `LaneSchedule::rows_from` range, `BlockedLu` passes the whole
+/// trailing range. Kernel choice and tile sizes only subdivide the
+/// iteration space *within* that set — no kernel ever moves a row
+/// across lanes, which is why factors are bit-stable across lane
+/// counts, distributions and device counts for a fixed kernel.
+///
+/// [`Kernel::Auto`] is resolved here (cheap for concrete variants),
+/// so callers may pass the configured choice straight through.
+///
+/// # Safety
+/// * Every index in `rows`, and every row in
+///   `[panel_start, panel_end)`, must be in bounds of `view`, with
+///   `panel_start <= panel_end <= cols_end <= stride`.
+/// * The caller has exclusive write access to
+///   `[panel_start, cols_end)` of every row in `rows` for the
+///   duration of the call (rows owned by this lane, disjoint across
+///   lanes).
+/// * No row in `rows` lies in `[panel_start, panel_end)`, and the
+///   panel rows' `[panel_end, cols_end)` ranges (`U12`) are finalized
+///   and published before the call (barrier-sequenced by the callers).
+pub unsafe fn trailing_update(
+    kernel: Kernel,
+    view: MatView,
+    rows: &[usize],
+    panel_start: usize,
+    panel_end: usize,
+    cols_end: usize,
+) {
+    let width = panel_end - panel_start;
+    if width == 0 || panel_end >= cols_end || rows.is_empty() {
+        return;
+    }
+    match kernel.resolve() {
+        Kernel::Auto => unreachable!("resolve() returns a concrete kernel"),
+        Kernel::Unroll4 => {
+            for &i in rows {
+                let row_i = view.row_mut(i, panel_start, cols_end);
+                let (l_i, tail) = row_i.split_at_mut(width);
+                axpy_rank_k_4(view, l_i, panel_start, tail, panel_end);
+            }
+        }
+        Kernel::Unroll8 => {
+            for &i in rows {
+                let row_i = view.row_mut(i, panel_start, cols_end);
+                let (l_i, tail) = row_i.split_at_mut(width);
+                axpy_rank_k_8(view, l_i, panel_start, tail, panel_end);
+            }
+        }
+        Kernel::Tiled => {
+            // ikj sweep tiled MC×KC×NR: the innermost row loop re-reads
+            // one KC×NR slab of U12 (L1-resident by construction) for up
+            // to MC rows, and each row's k-tiles ascend — so per (i, j)
+            // element the update order, fuse grouping and zero-group
+            // skips are exactly unroll4's. Bitwise identical.
+            for row_chunk in rows.chunks(MC) {
+                let mut k0 = panel_start;
+                while k0 < panel_end {
+                    let k1 = (k0 + KC).min(panel_end);
+                    let mut j0 = panel_end;
+                    while j0 < cols_end {
+                        let j1 = (j0 + NR).min(cols_end);
+                        for &i in row_chunk {
+                            // SAFETY: [k0, j1) of row i splits into the
+                            // read-only multiplier slice (within the
+                            // finalized-for-this-row panel columns) and
+                            // the owned trailing tile, per the function
+                            // contract.
+                            let row_i = view.row_mut(i, k0, j1);
+                            let (head, rest) = row_i.split_at_mut(panel_end - k0);
+                            let l_i = &head[..k1 - k0];
+                            let tail = &mut rest[j0 - panel_end..];
+                            axpy_rank_k_4(view, l_i, k0, tail, j0);
+                        }
+                        j0 = j1;
+                    }
+                    k0 = k1;
+                }
+            }
+        }
+    }
+}
+
+/// One row's rank-`l.len()` update over `tail`, four panel columns
+/// fused per sweep: `tail[j] -= Σ_p l[p] · U[k_base + p, j_base + j]`.
+///
+/// This is the historical `lu_ebv.rs`/`lu_blocked.rs` loop verbatim:
+/// four multipliers per group (skipped when all four are zero — the
+/// multipliers the factorization dropped), scalar remainder skipping
+/// zero multipliers. The j-loop bodies index plain `f64` slices with
+/// no side exits, which LLVM autovectorizes.
+///
+/// # Safety
+/// Rows `k_base..k_base + l.len()` of `view` at columns
+/// `[j_base, j_base + tail.len())` must be in bounds, finalized, and
+/// disjoint from `tail`.
+#[inline]
+unsafe fn axpy_rank_k_4(view: MatView, l: &[f64], k_base: usize, tail: &mut [f64], j_base: usize) {
+    let width = l.len();
+    let hi = j_base + tail.len();
+    let mut p = 0usize;
+    while p + 4 <= width {
+        let (l0, l1, l2, l3) = (l[p], l[p + 1], l[p + 2], l[p + 3]);
+        if l0 == 0.0 && l1 == 0.0 && l2 == 0.0 && l3 == 0.0 {
+            p += 4;
+            continue;
+        }
+        let u0 = view.row(k_base + p, j_base, hi);
+        let u1 = view.row(k_base + p + 1, j_base, hi);
+        let u2 = view.row(k_base + p + 2, j_base, hi);
+        let u3 = view.row(k_base + p + 3, j_base, hi);
+        for (j, t) in tail.iter_mut().enumerate() {
+            *t -= l0 * u0[j] + l1 * u1[j] + l2 * u2[j] + l3 * u3[j];
+        }
+        p += 4;
+    }
+    while p < width {
+        let lp = l[p];
+        if lp != 0.0 {
+            let up = view.row(k_base + p, j_base, hi);
+            for (t, &u) in tail.iter_mut().zip(up.iter()) {
+                *t -= lp * u;
+            }
+        }
+        p += 1;
+    }
+}
+
+/// Eight-wide sibling of [`axpy_rank_k_4`]: same shape, eight panel
+/// columns fused per sweep (one trailing-row write per eight
+/// multiply-adds). The wider fusion re-associates each element's sum,
+/// so results differ from `unroll4` in rounding — componentwise
+/// contract — but remain fully deterministic for a fixed panel
+/// decomposition.
+///
+/// # Safety
+/// As [`axpy_rank_k_4`].
+#[inline]
+unsafe fn axpy_rank_k_8(view: MatView, l: &[f64], k_base: usize, tail: &mut [f64], j_base: usize) {
+    let width = l.len();
+    let hi = j_base + tail.len();
+    let mut p = 0usize;
+    while p + 8 <= width {
+        let (l0, l1, l2, l3) = (l[p], l[p + 1], l[p + 2], l[p + 3]);
+        let (l4, l5, l6, l7) = (l[p + 4], l[p + 5], l[p + 6], l[p + 7]);
+        if l0 == 0.0
+            && l1 == 0.0
+            && l2 == 0.0
+            && l3 == 0.0
+            && l4 == 0.0
+            && l5 == 0.0
+            && l6 == 0.0
+            && l7 == 0.0
+        {
+            p += 8;
+            continue;
+        }
+        let u0 = view.row(k_base + p, j_base, hi);
+        let u1 = view.row(k_base + p + 1, j_base, hi);
+        let u2 = view.row(k_base + p + 2, j_base, hi);
+        let u3 = view.row(k_base + p + 3, j_base, hi);
+        let u4 = view.row(k_base + p + 4, j_base, hi);
+        let u5 = view.row(k_base + p + 5, j_base, hi);
+        let u6 = view.row(k_base + p + 6, j_base, hi);
+        let u7 = view.row(k_base + p + 7, j_base, hi);
+        for (j, t) in tail.iter_mut().enumerate() {
+            *t -= l0 * u0[j]
+                + l1 * u1[j]
+                + l2 * u2[j]
+                + l3 * u3[j]
+                + l4 * u4[j]
+                + l5 * u5[j]
+                + l6 * u6[j]
+                + l7 * u7[j];
+        }
+        p += 8;
+    }
+    while p < width {
+        let lp = l[p];
+        if lp != 0.0 {
+            let up = view.row(k_base + p, j_base, hi);
+            for (t, &u) in tail.iter_mut().zip(up.iter()) {
+                *t -= lp * u;
+            }
+        }
+        p += 1;
+    }
+}
+
+/// Guarded scatter-AXPY of the sparse numeric sweep: for each stored
+/// entry of one dependency `U` row, `acc[cols[q]] -= f * vals[q]`,
+/// skipping the diagonal (`cols[q] == diag`, handled separately via
+/// `u_diag_pos`) and entries whose stored value is exactly zero (ones
+/// the dynamic pattern dropped at emission — the sequential sweep
+/// never touched them).
+///
+/// The emission rule makes this loop's guards and order load-bearing:
+/// `SparseSymbolic::assemble` must reproduce `SparseLu::factor`'s
+/// structure *and* values bitwise, so every [`Kernel`] variant routes
+/// the sparse accumulator through this one scalar-guarded form —
+/// kernel choice is accepted for config symmetry and proven inert by
+/// `rust/tests/prop_sparse.rs`.
+#[inline]
+pub fn scatter_axpy(f: f64, cols: &[usize], vals: &[f64], diag: usize, acc: &mut [f64]) {
+    for (&c, &v) in cols.iter().zip(vals.iter()) {
+        if c == diag {
+            continue;
+        }
+        let v_kept = v != 0.0 && v.abs() > 0.0;
+        if !v_kept {
+            continue;
+        }
+        acc[c] -= f * v;
+    }
+}
+
+/// Flops of one rank-`width` trailing update over `rows` rows and
+/// `trailing` columns: one multiply + one subtract per (row, panel
+/// column, trailing column). Tiling only partitions that iteration
+/// space, so the MC×KC×NR decomposition sums back to exactly this
+/// count — which is why `FactorPlan::dense_blocked`'s per-Update-step
+/// accounting (`2 · rows · width · trailing`) stays conserved for
+/// every kernel and tile size (pinned here and in `ebv::plan`).
+pub fn tile_flops(rows: usize, width: usize, trailing: usize) -> u64 {
+    2 * rows as u64 * width as u64 * trailing as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random fill (splitmix-style) — no external
+    /// RNG, bit-reproducible across hosts.
+    fn fill(buf: &mut [f64], mut seed: u64) {
+        for v in buf.iter_mut() {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *v = ((seed >> 11) as f64 / (1u64 << 53) as f64) * 2.0 - 1.0;
+        }
+    }
+
+    /// Run `kernel` on a fresh copy of `a` (row-major `n × n`) over the
+    /// given geometry and return the updated buffer.
+    fn run(
+        kernel: Kernel,
+        a: &[f64],
+        n: usize,
+        rows: &[usize],
+        panel_start: usize,
+        panel_end: usize,
+    ) -> Vec<f64> {
+        let mut m = a.to_vec();
+        let view = MatView::from_raw(m.as_mut_ptr(), n);
+        // SAFETY: exclusive buffer, disjoint panel/trailing rows,
+        // indices in bounds by construction of the tests.
+        unsafe { trailing_update(kernel, view, rows, panel_start, panel_end, n) };
+        m
+    }
+
+    /// Naive reference: independent scalar saxpy per panel column, the
+    /// textbook order (componentwise oracle, not bitwise).
+    fn reference(a: &[f64], n: usize, rows: &[usize], panel_start: usize, panel_end: usize) -> Vec<f64> {
+        let mut m = a.to_vec();
+        for &i in rows {
+            for p in panel_start..panel_end {
+                let l = m[i * n + p];
+                for j in panel_end..n {
+                    m[i * n + j] -= l * a[p * n + j];
+                }
+            }
+        }
+        // The reference reads the original panel rows (`a`), which is
+        // fine: trailing_update never writes rows < panel_end either.
+        m
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn names_parse_round_trip() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::parse(k.name()), Some(k), "{k:?}");
+        }
+        assert_eq!(Kernel::parse("nope"), None);
+        assert_eq!(Kernel::default(), Kernel::Auto);
+    }
+
+    #[test]
+    fn concrete_kernels_resolve_to_themselves() {
+        // Never reads the environment for concrete variants, so this
+        // is safe to assert regardless of EBV_KERNEL.
+        for k in [Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled] {
+            assert_eq!(k.resolve(), k);
+        }
+    }
+
+    #[test]
+    fn auto_resolves_via_env_then_tiled() {
+        // Serialized env mutation: this is the only test touching
+        // EBV_KERNEL (resolve() of concrete kernels never reads it).
+        std::env::remove_var("EBV_KERNEL");
+        assert_eq!(Kernel::Auto.resolve(), Kernel::Tiled);
+        std::env::set_var("EBV_KERNEL", "unroll8");
+        assert_eq!(Kernel::Auto.resolve(), Kernel::Unroll8);
+        std::env::set_var("EBV_KERNEL", "auto");
+        assert_eq!(Kernel::Auto.resolve(), Kernel::Tiled);
+        std::env::set_var("EBV_KERNEL", "garbage");
+        assert_eq!(Kernel::Auto.resolve(), Kernel::Tiled);
+        std::env::remove_var("EBV_KERNEL");
+    }
+
+    #[test]
+    fn tile_model_constants() {
+        // The documented cache-budget formulas, spelled out so a
+        // future budget edit shows up as a named failure.
+        assert_eq!(NR, 64);
+        assert_eq!(MC, 341);
+        assert_eq!(KC % 8, 0);
+    }
+
+    /// Geometry grid exercising fuse remainders (widths not multiples
+    /// of 4/8), multiple KC tiles (width > KC), multiple NR tiles
+    /// (trailing > NR) and a sparse row set.
+    fn geometries() -> Vec<(usize, usize, usize)> {
+        // (n, panel_start, panel_end)
+        vec![(24, 0, 5), (40, 8, 16), (96, 10, 13), (180, 16, 16 + KC + 7), (200, 0, 3)]
+    }
+
+    #[test]
+    fn tiled_is_bitwise_unroll4() {
+        for (case, &(n, ps, pe)) in geometries().iter().enumerate() {
+            let mut a = vec![0.0f64; n * n];
+            fill(&mut a, 0x9E3779B9 + case as u64);
+            // A few exact-zero multipliers to exercise the group-skip
+            // and scalar-skip paths on both kernels identically.
+            for i in (pe..n).step_by(3) {
+                a[i * n + ps] = 0.0;
+                if pe - ps > 2 {
+                    a[i * n + ps + 1] = 0.0;
+                }
+            }
+            let rows: Vec<usize> = (pe..n).filter(|r| r % 5 != 0).collect();
+            let u4 = run(Kernel::Unroll4, &a, n, &rows, ps, pe);
+            let tiled = run(Kernel::Tiled, &a, n, &rows, ps, pe);
+            assert_eq!(bits(&u4), bits(&tiled), "case {case}: tiled must be bitwise unroll4");
+        }
+    }
+
+    #[test]
+    fn every_kernel_matches_the_reference_componentwise() {
+        for (case, &(n, ps, pe)) in geometries().iter().enumerate() {
+            let mut a = vec![0.0f64; n * n];
+            fill(&mut a, 0xC0FFEE + case as u64);
+            let rows: Vec<usize> = (pe..n).collect();
+            let oracle = reference(&a, n, &rows, ps, pe);
+            for k in [Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled, Kernel::Auto] {
+                let got = run(k, &a, n, &rows, ps, pe);
+                let diff = got
+                    .iter()
+                    .zip(oracle.iter())
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f64, f64::max);
+                assert!(diff < 1e-12, "case {case} kernel {k:?}: diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_are_deterministic_run_to_run() {
+        let n = 120;
+        let (ps, pe) = (8usize, 8 + KC + 3);
+        let mut a = vec![0.0f64; n * n];
+        fill(&mut a, 42);
+        let rows: Vec<usize> = (pe..n).collect();
+        for k in [Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled] {
+            let one = run(k, &a, n, &rows, ps, pe);
+            let two = run(k, &a, n, &rows, ps, pe);
+            assert_eq!(bits(&one), bits(&two), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn row_partition_never_changes_bits() {
+        // Split the row set as a LaneSchedule would (rows are the
+        // outer M partition): updating in two disjoint calls must be
+        // bitwise identical to one call — for every kernel.
+        let n = 150;
+        let (ps, pe) = (0usize, 36);
+        let mut a = vec![0.0f64; n * n];
+        fill(&mut a, 7);
+        let rows: Vec<usize> = (pe..n).collect();
+        let (lo, hi) = rows.split_at(rows.len() / 3);
+        for k in [Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled] {
+            let whole = run(k, &a, n, &rows, ps, pe);
+            let mut m = a.clone();
+            let view = MatView::from_raw(m.as_mut_ptr(), n);
+            // SAFETY: as in `run`; the two row sets are disjoint.
+            unsafe {
+                trailing_update(k, view, hi, ps, pe, n);
+                trailing_update(k, view, lo, ps, pe, n);
+            }
+            assert_eq!(bits(&whole), bits(&m), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_geometries_are_no_ops() {
+        let n = 16;
+        let mut a = vec![0.0f64; n * n];
+        fill(&mut a, 3);
+        for k in [Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled] {
+            // Empty panel, empty trailing block, empty row set.
+            assert_eq!(bits(&run(k, &a, n, &[12, 13], 4, 4)), bits(&a), "{k:?} width 0");
+            assert_eq!(bits(&run(k, &a, n, &[12], 0, n)), bits(&a), "{k:?} no trailing");
+            assert_eq!(bits(&run(k, &a, n, &[], 0, 4)), bits(&a), "{k:?} no rows");
+        }
+    }
+
+    #[test]
+    fn scatter_axpy_applies_guards() {
+        let cols = [0usize, 2, 3, 5];
+        let vals = [2.0, 0.0, -1.5, 4.0];
+        let mut acc = vec![1.0f64; 6];
+        // diag = 5 skips the last entry; the exact zero at column 2 is
+        // skipped (emission-rule guard); the rest apply.
+        scatter_axpy(0.5, &cols, &vals, 5, &mut acc);
+        assert_eq!(acc, vec![0.0, 1.0, 1.0, 1.75, 1.0, 1.0]);
+        // A zero multiplier still walks the row (the caller guards f,
+        // mirroring the sequential sweep's `f_kept` check upstream).
+        scatter_axpy(0.0, &cols, &vals, 5, &mut acc);
+        assert_eq!(acc, vec![0.0, 1.0, 1.0, 1.75, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn tile_flops_conserved_under_tiling() {
+        // Sum the per-tile counts of the exact MC×KC×NR decomposition
+        // trailing_update walks; must equal the untiled total that
+        // FactorPlan::dense_blocked accounts per Update step.
+        for &(rows, width, trailing) in
+            &[(500usize, 64usize, 960usize), (MC + 5, KC + 3, NR + 1), (3, 1, 2)]
+        {
+            let total = tile_flops(rows, width, trailing);
+            let mut summed = 0u64;
+            let mut r0 = 0;
+            while r0 < rows {
+                let r1 = (r0 + MC).min(rows);
+                let mut k0 = 0;
+                while k0 < width {
+                    let k1 = (k0 + KC).min(width);
+                    let mut j0 = 0;
+                    while j0 < trailing {
+                        let j1 = (j0 + NR).min(trailing);
+                        summed += tile_flops(r1 - r0, k1 - k0, j1 - j0);
+                        j0 = j1;
+                    }
+                    k0 = k1;
+                }
+                r0 = r1;
+            }
+            assert_eq!(summed, total, "rows={rows} width={width} trailing={trailing}");
+        }
+    }
+}

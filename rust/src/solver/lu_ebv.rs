@@ -21,12 +21,16 @@
 //!   updates panel rows full-width (building the `U12` block in place)
 //!   but deeper rows only across the panel's own columns; one trailing
 //!   step per panel then applies the deferred work as lane-distributed
-//!   rank-`nb` GEMM-style row updates, so the trailing matrix is swept
-//!   once per panel instead of once per column. The fused multi-column
-//!   accumulation reorders rounding, so blocked factors agree with
-//!   `SeqLu` componentwise rather than bitwise — but are themselves
-//!   bit-stable across lane counts, distributions and engine sizes
-//!   (each row's arithmetic depends only on the panel decomposition).
+//!   rank-`nb` updates through the shared trailing-update microkernel
+//!   ([`kernel::trailing_update`] — selectable fuse width and cache
+//!   tiling, each lane's owned rows forming the outer M partition), so
+//!   the trailing matrix is swept once per panel instead of once per
+//!   column. The fused multi-column accumulation reorders rounding, so
+//!   blocked factors agree with `SeqLu` componentwise rather than
+//!   bitwise — but for a fixed kernel choice are themselves bit-stable
+//!   across lane counts, distributions, engine sizes and kernel tile
+//!   sizes (each row's arithmetic depends only on the panel
+//!   decomposition and the kernel's fuse width).
 //!
 //! In both shapes lanes write only rows they own, so writes are
 //! disjoint by construction of [`LaneSchedule`]. The schedule's lane
@@ -38,6 +42,7 @@ use std::sync::{Arc, Mutex};
 use crate::ebv::schedule::{panels, LaneSchedule, RowDist};
 use crate::exec::{DeviceSet, ExchangeBuffer, LaneEngine, StepCtl};
 use crate::matrix::DenseMatrix;
+use crate::solver::kernel::{self, Kernel};
 use crate::solver::pivot::Permutation;
 use crate::solver::{DenseLuFactors, LuSolver};
 use crate::util::error::{EbvError, Result};
@@ -57,6 +62,11 @@ pub struct EbvLu {
     /// Panel width `nb` of the blocked elimination; `1` selects the
     /// column-at-a-time path (bit-identical to `SeqLu`).
     panel: usize,
+    /// Trailing-update microkernel of the blocked elimination (see
+    /// [`kernel`]); resolved once per factorization. Irrelevant on the
+    /// column-at-a-time path (`panel(1)`), which has no rank-`nb`
+    /// update.
+    kernel: Kernel,
     /// Engine override; `None` submits to the process-global engine.
     engine: Option<Arc<LaneEngine>>,
     /// Device-sharded execution: when set with more than one device,
@@ -77,6 +87,7 @@ impl EbvLu {
             pivot_tol: 1e-12,
             seq_threshold: 128,
             panel: DEFAULT_PANEL_WIDTH,
+            kernel: Kernel::Auto,
             engine: None,
             devices: None,
         }
@@ -126,6 +137,16 @@ impl EbvLu {
         self
     }
 
+    /// Select the trailing-update microkernel of the blocked
+    /// elimination (default [`Kernel::Auto`] — `EBV_KERNEL` or tiled).
+    /// `tiled` and `unroll4` factors are bitwise identical; `unroll8`
+    /// agrees componentwise. Every choice is bit-stable across lane
+    /// counts, distributions, engine sizes and device counts.
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
     pub fn lanes(&self) -> usize {
         self.lanes
     }
@@ -137,6 +158,11 @@ impl EbvLu {
     /// Configured panel width `nb`.
     pub fn panel_width(&self) -> usize {
         self.panel
+    }
+
+    /// Configured microkernel choice (possibly [`Kernel::Auto`]).
+    pub fn kernel_choice(&self) -> Kernel {
+        self.kernel
     }
 }
 
@@ -173,6 +199,7 @@ impl LuSolver for EbvLu {
                     &mut lu,
                     &schedule,
                     self.panel,
+                    self.kernel.resolve(),
                     self.pivot_tol,
                     set.as_ref(),
                 )?;
@@ -188,7 +215,14 @@ impl LuSolver for EbvLu {
         if self.panel <= 1 {
             parallel_eliminate(&mut lu, &schedule, self.pivot_tol, engine)?;
         } else {
-            parallel_eliminate_blocked(&mut lu, &schedule, self.panel, self.pivot_tol, engine)?;
+            parallel_eliminate_blocked(
+                &mut lu,
+                &schedule,
+                self.panel,
+                self.kernel.resolve(),
+                self.pivot_tol,
+                engine,
+            )?;
         }
         Ok(DenseLuFactors::new(lu, Permutation::identity(n)))
     }
@@ -385,6 +419,7 @@ fn parallel_eliminate_blocked(
     lu: &mut DenseMatrix,
     schedule: &LaneSchedule,
     nb: usize,
+    kern: Kernel,
     pivot_tol: f64,
     engine: &LaneEngine,
 ) -> Result<()> {
@@ -427,46 +462,22 @@ fn parallel_eliminate_blocked(
                 }
             }
             BlockStep::Update { panel_start, panel_end } => {
-                let width = panel_end - panel_start;
-                for &i in schedule.rows_from(lane, panel_end) {
-                    // SAFETY: lane owns row i; the panel rows read below
-                    // satisfy panel_start + p < panel_end <= i, so they
-                    // alias no write, and their final updates happened
-                    // at Col steps sequenced before this barrier.
-                    let row_i = unsafe { shared.row_mut(i) };
-                    let (head, tail) = row_i.split_at_mut(panel_end);
-                    let l_i = &head[panel_start..];
-                    // Four panel columns per sweep quarters the write
-                    // traffic on the trailing row — same shape as
-                    // `BlockedLu`'s ikj kernel (EXPERIMENTS.md §Perf,
-                    // L3-D1).
-                    let mut p = 0usize;
-                    while p + 4 <= width {
-                        let (l0, l1, l2, l3) = (l_i[p], l_i[p + 1], l_i[p + 2], l_i[p + 3]);
-                        if l0 == 0.0 && l1 == 0.0 && l2 == 0.0 && l3 == 0.0 {
-                            p += 4;
-                            continue;
-                        }
-                        let u0 = unsafe { &shared.row(panel_start + p)[panel_end..] };
-                        let u1 = unsafe { &shared.row(panel_start + p + 1)[panel_end..] };
-                        let u2 = unsafe { &shared.row(panel_start + p + 2)[panel_end..] };
-                        let u3 = unsafe { &shared.row(panel_start + p + 3)[panel_end..] };
-                        for (j, t) in tail.iter_mut().enumerate() {
-                            *t -= l0 * u0[j] + l1 * u1[j] + l2 * u2[j] + l3 * u3[j];
-                        }
-                        p += 4;
-                    }
-                    while p < width {
-                        let lp = l_i[p];
-                        if lp != 0.0 {
-                            let up = unsafe { &shared.row(panel_start + p)[panel_end..] };
-                            for (t, &u) in tail.iter_mut().zip(up.iter()) {
-                                *t -= lp * u;
-                            }
-                        }
-                        p += 1;
-                    }
-                }
+                // SAFETY: the lane's `rows_from` range is owned
+                // exclusively (disjoint across lanes by LaneSchedule
+                // construction); the panel rows the kernel reads (U12)
+                // satisfy panel_start + p < panel_end <= i, so they
+                // alias no write, and their final updates happened at
+                // Col steps sequenced before this barrier.
+                unsafe {
+                    kernel::trailing_update(
+                        kern,
+                        kernel::MatView::from_raw(shared.ptr, shared.cols),
+                        schedule.rows_from(lane, panel_end),
+                        panel_start,
+                        panel_end,
+                        n,
+                    )
+                };
             }
         }
         StepCtl::Continue
@@ -495,6 +506,7 @@ fn parallel_eliminate_blocked_sharded(
     lu: &mut DenseMatrix,
     schedule: &LaneSchedule,
     nb: usize,
+    kern: Kernel,
     pivot_tol: f64,
     set: &DeviceSet,
 ) -> Result<()> {
@@ -560,46 +572,19 @@ fn parallel_eliminate_blocked_sharded(
                     }
                 }
                 BlockStep::Update { panel_start, panel_end } => {
-                    let width = panel_end - panel_start;
-                    for &i in schedule.rows_from(lane, panel_end) {
-                        // SAFETY: same argument as the flat Update step;
-                        // the panel rows' final Col-step writes were
-                        // published by the closing cross-device barrier.
-                        let row_i = unsafe { shared.row_mut(i) };
-                        let (head, tail) = row_i.split_at_mut(panel_end);
-                        let l_i = &head[panel_start..];
-                        let mut p = 0usize;
-                        while p + 4 <= width {
-                            let (l0, l1, l2, l3) =
-                                (l_i[p], l_i[p + 1], l_i[p + 2], l_i[p + 3]);
-                            if l0 == 0.0 && l1 == 0.0 && l2 == 0.0 && l3 == 0.0 {
-                                p += 4;
-                                continue;
-                            }
-                            let u0 = unsafe { &shared.row(panel_start + p)[panel_end..] };
-                            let u1 =
-                                unsafe { &shared.row(panel_start + p + 1)[panel_end..] };
-                            let u2 =
-                                unsafe { &shared.row(panel_start + p + 2)[panel_end..] };
-                            let u3 =
-                                unsafe { &shared.row(panel_start + p + 3)[panel_end..] };
-                            for (j, t) in tail.iter_mut().enumerate() {
-                                *t -= l0 * u0[j] + l1 * u1[j] + l2 * u2[j] + l3 * u3[j];
-                            }
-                            p += 4;
-                        }
-                        while p < width {
-                            let lp = l_i[p];
-                            if lp != 0.0 {
-                                let up =
-                                    unsafe { &shared.row(panel_start + p)[panel_end..] };
-                                for (t, &u) in tail.iter_mut().zip(up.iter()) {
-                                    *t -= lp * u;
-                                }
-                            }
-                            p += 1;
-                        }
-                    }
+                    // SAFETY: same argument as the flat Update step; the
+                    // panel rows' final Col-step writes were published
+                    // by the closing cross-device barrier.
+                    unsafe {
+                        kernel::trailing_update(
+                            kern,
+                            kernel::MatView::from_raw(shared.ptr, shared.cols),
+                            schedule.rows_from(lane, panel_end),
+                            panel_start,
+                            panel_end,
+                            n,
+                        )
+                    };
                 }
             }
             StepCtl::Continue

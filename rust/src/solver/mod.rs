@@ -9,6 +9,7 @@
 
 pub mod cholesky;
 pub mod gauss_jordan;
+pub mod kernel;
 pub mod lu_blocked;
 pub mod lu_ebv;
 pub mod lu_seq;
@@ -24,6 +25,7 @@ use crate::util::error::Result;
 
 pub use cholesky::{cholesky_factor, cholesky_solve, CholeskyFactors};
 pub use gauss_jordan::GaussJordan;
+pub use kernel::Kernel;
 pub use lu_blocked::BlockedLu;
 pub use lu_ebv::{EbvLu, DEFAULT_PANEL_WIDTH};
 pub use lu_seq::SeqLu;
@@ -167,13 +169,20 @@ pub trait LuSolver: Send + Sync {
 }
 
 /// Look a solver up by its config name. `panel` is the blocked-panel
-/// width the EBV solver runs with (other solvers ignore it).
-pub fn solver_by_name(name: &str, lanes: usize, panel: usize) -> Option<Box<dyn LuSolver>> {
+/// width the EBV solver runs with, `kernel` the trailing-update
+/// microkernel both blocked solvers dispatch to (other solvers ignore
+/// both).
+pub fn solver_by_name(
+    name: &str,
+    lanes: usize,
+    panel: usize,
+    kernel: Kernel,
+) -> Option<Box<dyn LuSolver>> {
     match name {
         "seq" => Some(Box::new(SeqLu::new())),
         "seq-pivot" => Some(Box::new(SeqLu::with_pivoting())),
-        "ebv" => Some(Box::new(EbvLu::with_lanes(lanes).panel(panel))),
-        "blocked" => Some(Box::new(BlockedLu::new())),
+        "ebv" => Some(Box::new(EbvLu::with_lanes(lanes).panel(panel).kernel(kernel))),
+        "blocked" => Some(Box::new(BlockedLu::new().with_kernel(kernel))),
         "gauss-jordan" => Some(Box::new(GaussJordan::new())),
         _ => None,
     }
@@ -251,8 +260,11 @@ mod tests {
     #[test]
     fn solver_registry_resolves_names() {
         for name in ["seq", "seq-pivot", "ebv", "blocked", "gauss-jordan"] {
-            assert!(solver_by_name(name, 2, DEFAULT_PANEL_WIDTH).is_some(), "{name}");
+            assert!(
+                solver_by_name(name, 2, DEFAULT_PANEL_WIDTH, Kernel::Auto).is_some(),
+                "{name}"
+            );
         }
-        assert!(solver_by_name("nope", 2, DEFAULT_PANEL_WIDTH).is_none());
+        assert!(solver_by_name("nope", 2, DEFAULT_PANEL_WIDTH, Kernel::Auto).is_none());
     }
 }

@@ -50,6 +50,7 @@ use std::sync::Mutex;
 use crate::ebv::equalize::{equalize_hierarchical, equalize_weights};
 use crate::exec::{DeviceSet, LaneEngine, LaneSlots, StepCtl};
 use crate::matrix::CsrMatrix;
+use crate::solver::kernel::{scatter_axpy, Kernel};
 use crate::solver::sparse_lu::SparseLuFactors;
 use crate::util::error::{EbvError, Result};
 
@@ -80,6 +81,12 @@ pub struct SparseSymbolic {
     by_level: Vec<Vec<usize>>,
     /// Per-row numeric flop estimate — the equalization weight.
     row_cost: Vec<usize>,
+    /// Microkernel selection, accepted for config symmetry with the
+    /// dense solvers. The sparse accumulator always runs the
+    /// scalar-guarded [`scatter_axpy`] — the emission rule pins the
+    /// exact guard order, so every kernel choice is bitwise identical
+    /// here (proven by `rust/tests/prop_sparse.rs`).
+    kernel: Kernel,
 }
 
 impl SparseSymbolic {
@@ -196,7 +203,23 @@ impl SparseSymbolic {
             level,
             by_level,
             row_cost,
+            kernel: Kernel::Auto,
         })
+    }
+
+    /// Select the microkernel (default [`Kernel::Auto`]). Inert by
+    /// construction — see the `kernel` field — but plumbed so the
+    /// coordinator can thread one `service.kernel` choice through
+    /// every solver uniformly and the property tests can prove the
+    /// invariance.
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Configured microkernel choice (possibly [`Kernel::Auto`]).
+    pub fn kernel_choice(&self) -> Kernel {
+        self.kernel
     }
 
     #[inline]
@@ -293,20 +316,15 @@ impl SparseSymbolic {
             if !f_kept {
                 continue;
             }
-            for q in self.u_ptr[j]..self.u_ptr[j + 1] {
-                let c = self.u_idx[q];
-                if c == j {
-                    continue; // diagonal handled via u_diag_pos
-                }
-                let v = *u_val.add(q);
-                // A zero U entry is one the dynamic pattern dropped at
-                // emission — the sequential sweep never touched it.
-                let v_kept = v != 0.0 && v.abs() > 0.0;
-                if !v_kept {
-                    continue;
-                }
-                acc[c] -= f * v;
-            }
+            // Dependency row j's U entries are finalized (earlier DAG
+            // level or sequential order), so a shared slice view is
+            // sound. The scatter-AXPY skips the diagonal (handled via
+            // u_diag_pos) and exact-zero entries — ones the dynamic
+            // pattern dropped at emission, which the sequential sweep
+            // never touched.
+            let (q0, q1) = (self.u_ptr[j], self.u_ptr[j + 1]);
+            let u_vals = std::slice::from_raw_parts(u_val.add(q0) as *const f64, q1 - q0);
+            scatter_axpy(f, &self.u_idx[q0..q1], u_vals, j, acc);
         }
         let mut diag = 0.0;
         for q in self.u_ptr[i]..self.u_ptr[i + 1] {

@@ -491,6 +491,9 @@ pub fn encode_response(frame: &ResponseFrame) -> String {
                 m.engine_barrier_waits,
                 m.panel_width
             );
+            // Kernel names are lowercase identifiers — no JSON escaping
+            // needed (`auto|unroll4|unroll8|tiled`).
+            let _ = write!(out, ",\"kernel\":\"{}\"", m.kernel.name());
             let _ = write!(
                 out,
                 ",\"devices\":{},\"device_lanes\":{},\"device_jobs\":{},\
@@ -662,6 +665,11 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                     acc.metrics.engine_barrier_waits = as_index(expect_num(&mut sc, &k)?, &k)?
                 }
                 "panel_width" => acc.metrics.panel_width = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "kernel" => {
+                    let name = expect_str(&mut sc, &k)?;
+                    acc.metrics.kernel = crate::solver::Kernel::parse(&name)
+                        .ok_or_else(|| jerr(format!("field `kernel`: unknown kernel `{name}`")))?;
+                }
                 "devices" => acc.metrics.devices = as_index(expect_num(&mut sc, &k)?, &k)?,
                 "device_lanes" => {
                     acc.metrics.device_lanes = as_index(expect_num(&mut sc, &k)?, &k)?
@@ -945,6 +953,7 @@ mod tests {
             engine_steps: 620,
             engine_barrier_waits: 2480,
             panel_width: 64,
+            kernel: crate::solver::Kernel::Tiled,
             devices: 2,
             device_lanes: 2,
             device_jobs: 7,
@@ -988,6 +997,7 @@ mod tests {
             engine_steps: 17,
             engine_barrier_waits: 18,
             panel_width: 19,
+            kernel: crate::solver::Kernel::Unroll8,
             devices: 20,
             device_lanes: 21,
             device_jobs: 22,
@@ -1009,6 +1019,14 @@ mod tests {
         };
         let frame = ResponseFrame::Metrics(m);
         assert_eq!(decode_response(&encode_response(&frame)).unwrap(), frame);
+    }
+
+    #[test]
+    fn unknown_kernel_name_is_a_decode_error() {
+        let line = encode_response(&ResponseFrame::Metrics(MetricsSnapshot::default()));
+        let line = line.replace("\"kernel\":\"auto\"", "\"kernel\":\"simd512\"");
+        let err = decode_response(&line).unwrap_err();
+        assert!(err.to_string().contains("unknown kernel `simd512`"), "{err}");
     }
 
     #[test]

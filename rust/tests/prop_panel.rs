@@ -17,10 +17,10 @@
 use std::sync::Arc;
 
 use ebv_solve::ebv::schedule::RowDist;
-use ebv_solve::exec::LaneEngine;
+use ebv_solve::exec::{DeviceSet, LaneEngine};
 use ebv_solve::matrix::generate::{diag_dominant_dense, rhs, GenSeed};
 use ebv_solve::matrix::norms::rel_residual_dense;
-use ebv_solve::solver::{EbvLu, LuSolver, SeqLu};
+use ebv_solve::solver::{EbvLu, Kernel, LuSolver, SeqLu};
 use ebv_solve::testutil::forall;
 
 /// EbvLu forced onto the parallel path with an explicit panel width.
@@ -124,5 +124,64 @@ fn panel_width_checklist_grid() {
                 assert!(diff < 1e-9, "lanes={lanes} nb={nb} diff={diff:e}");
             }
         }
+    }
+}
+
+/// The kernel acceptance grid, pinned deterministically: every kernel
+/// variant at every checklist width, across lane counts, row
+/// distributions and device counts (see DESIGN.md §Microkernel).
+///
+/// * `nb = 1` dispatches the column path — bitwise `SeqLu` for every
+///   kernel (the microkernel never runs);
+/// * wider panels agree with `SeqLu` componentwise, and are **bitwise
+///   stable** across lanes/dists/devices for a fixed `(kernel, nb)`.
+#[test]
+fn kernel_checklist_grid() {
+    let n = 96;
+    let a = diag_dominant_dense(n, GenSeed(78));
+    let seq = SeqLu::new().factor(&a).unwrap();
+    let sharded = Arc::new(DeviceSet::new(2, 2));
+    for kernel in Kernel::ALL {
+        for nb in [1usize, 8, 64] {
+            // Reference decomposition: 2 block lanes, flat engine.
+            let reference = panelled(2, nb).kernel(kernel).factor(&a).unwrap();
+            let diff = reference.packed().max_abs_diff(seq.packed());
+            if nb == 1 {
+                assert_eq!(diff, 0.0, "kernel={kernel:?} nb=1 is the exact column path");
+            } else {
+                assert!(diff < 1e-9, "kernel={kernel:?} nb={nb} diff={diff:e}");
+            }
+            for lanes in [2usize, 4] {
+                for dist in RowDist::ALL {
+                    for devices in [1usize, 2] {
+                        let mut s = panelled(lanes, nb).kernel(kernel).with_dist(dist);
+                        if devices > 1 {
+                            s = s.with_devices(Arc::clone(&sharded));
+                        }
+                        let f = s.factor(&a).unwrap();
+                        assert_eq!(
+                            f.packed().max_abs_diff(reference.packed()),
+                            0.0,
+                            "kernel={kernel:?} nb={nb} lanes={lanes} {dist:?} D={devices}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `Tiled` and `Unroll4` produce byte-identical factors: `KC` is a
+/// multiple of the fuse width, so the tile loop splits every row's
+/// dot products at fuse-group boundaries and each element sees the
+/// exact historical k-order.
+#[test]
+fn tiled_is_bitwise_unroll4_on_the_panel_path() {
+    let n = 180;
+    let a = diag_dominant_dense(n, GenSeed(79));
+    for nb in [8usize, 64] {
+        let u4 = panelled(3, nb).kernel(Kernel::Unroll4).factor(&a).unwrap();
+        let t = panelled(3, nb).kernel(Kernel::Tiled).factor(&a).unwrap();
+        assert_eq!(u4.packed().data(), t.packed().data(), "nb={nb}");
     }
 }

@@ -15,7 +15,10 @@
 //!   barrier per DAG level;
 //! * same-pattern/different-values requests reuse the cached symbolic
 //!   object (Arc pointer equality) and increment `symbolic_reuse` in
-//!   the wire metrics frame.
+//!   the wire metrics frame;
+//! * the trailing-update kernel knob (DESIGN.md §Microkernel) is
+//!   **bitwise inert** on the sparse path — scatter-accumulate rows
+//!   keep their guard order under every `Kernel` variant.
 
 use std::sync::Arc;
 
@@ -109,6 +112,30 @@ fn split_checklist_grid() {
         assert_eq!(lvl_plan.lane_flops, row_plan.lane_flops, "{dist:?}");
         assert_eq!(lvl_plan.barriers, sym.level_count(), "{dist:?}");
         assert!(lvl_plan.barriers < row_plan.barriers, "{dist:?}");
+    }
+}
+
+/// The sparse path is **bitwise invariant under the kernel knob**: the
+/// scatter-accumulate emission rule (`kernel::scatter_axpy`) pins the
+/// guard order, so every `Kernel` variant — and both the flat and the
+/// device-sharded numeric paths — reproduce `SparseLu` byte-for-byte.
+#[test]
+fn kernel_choice_is_bitwise_inert_on_sparse() {
+    use ebv_solve::exec::DeviceSet;
+    use ebv_solve::solver::Kernel;
+
+    let a = poisson_2d(9);
+    let reference = SparseLu::new().factor(&a).unwrap();
+    let set = DeviceSet::new(2, 2);
+    for kernel in Kernel::ALL {
+        let sym = SparseSymbolic::analyze(&a).unwrap().with_kernel(kernel);
+        assert_eq!(sym.kernel_choice(), kernel);
+        let flat = sym.factor_par(&a, 4).unwrap();
+        assert_eq!(flat.l(), reference.l(), "kernel={kernel:?} flat");
+        assert_eq!(flat.u(), reference.u(), "kernel={kernel:?} flat");
+        let sharded = sym.factor_sharded(&a, 4, &set).unwrap();
+        assert_eq!(sharded.l(), reference.l(), "kernel={kernel:?} sharded");
+        assert_eq!(sharded.u(), reference.u(), "kernel={kernel:?} sharded");
     }
 }
 
