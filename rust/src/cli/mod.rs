@@ -133,8 +133,26 @@ COMMANDS:
               --events <path>               (with --profile: append the
                                              solve trace to a JSONL
                                              event log)
-    serve     Serve solves over the NDJSON wire protocol on stdin/stdout
-              (see README.md §Wire protocol for the frame format)
+    serve     Serve solves over the NDJSON wire protocol — stdin/stdout
+              by default, or concurrent TCP sessions with --listen
+              (frame format specified in docs/PROTOCOL.md)
+              --listen <addr>               (e.g. 127.0.0.1:7070; accept
+                                             concurrent sessions instead
+                                             of serving stdio; SIGINT
+                                             drains gracefully)
+              --max-sessions <k>            (with --listen: concurrent
+                                             session ceiling, default 8;
+                                             excess connections get a
+                                             `busy` error frame)
+              --deadline-ms <ms>            (per-request solve deadline;
+                                             expired requests answer
+                                             with a `deadline` error
+                                             frame; default none)
+              --max-frame-bytes <k>         (cap on one request line;
+                                             over-cap lines answer with
+                                             an `oversized` error frame;
+                                             default 64 MiB on TCP,
+                                             unlimited on stdio)
               --lanes <k> --batch <k> --window-us <µs> --queue <k>
               --engine-lanes <k>            (resident lanes in the shared
                                              execution engine; omit for
@@ -235,6 +253,14 @@ mod tests {
     fn usage_documents_the_kernel_knob() {
         assert!(USAGE.contains("--kernel"), "solve/serve/metrics should list --kernel");
         assert!(USAGE.contains("auto|unroll4|unroll8|tiled"));
+    }
+
+    #[test]
+    fn usage_documents_the_serving_edge_knobs() {
+        for knob in ["--listen", "--max-sessions", "--deadline-ms", "--max-frame-bytes"] {
+            assert!(USAGE.contains(knob), "serve should list {knob}");
+        }
+        assert!(USAGE.contains("docs/PROTOCOL.md"), "serve should point at the wire spec");
     }
 
     #[test]

@@ -148,6 +148,14 @@ pub struct ServiceConfig {
     pub use_runtime: bool,
     /// Refine runtime (f32) solutions to f64 accuracy.
     pub refine: bool,
+    /// Concurrent-session ceiling of the TCP serving edge
+    /// (`serve --listen`); connections past it are shed with a `busy`
+    /// error frame. Ignored by the single-session stdio mode.
+    pub max_sessions: usize,
+    /// Per-request solve deadline in milliseconds for wire sessions
+    /// (`0` = none): a request not answered within it gets a
+    /// `deadline` error frame and its result is discarded.
+    pub deadline_ms: u64,
     /// Span-structured solve tracing and lane/device profiling
     /// (`obs::set_enabled`). Off by default — the observability hooks
     /// then cost one relaxed atomic load per job. Turning it on makes
@@ -172,6 +180,8 @@ impl Default for ServiceConfig {
             artifacts_dir: "artifacts".to_string(),
             use_runtime: false,
             refine: true,
+            max_sessions: 8,
+            deadline_ms: 0,
             profiling: false,
         }
     }
@@ -209,6 +219,8 @@ impl ServiceConfig {
                 .unwrap_or_else(|| d.artifacts_dir.clone()),
             use_runtime: raw.get_parsed("service", "use_runtime", d.use_runtime)?,
             refine: raw.get_parsed("service", "refine", d.refine)?,
+            max_sessions: raw.get_parsed("service", "max_sessions", d.max_sessions)?,
+            deadline_ms: raw.get_parsed("service", "deadline_ms", d.deadline_ms)?,
             profiling: raw.get_parsed("service", "profiling", d.profiling)?,
         };
         cfg.validate()?;
@@ -227,6 +239,9 @@ impl ServiceConfig {
         }
         if self.devices == 0 {
             return Err(EbvError::Config("service.devices must be >= 1".into()));
+        }
+        if self.max_sessions == 0 {
+            return Err(EbvError::Config("service.max_sessions must be >= 1".into()));
         }
         if self.queue_capacity < self.max_batch {
             return Err(EbvError::Config(
@@ -321,6 +336,22 @@ mod tests {
         let raw = RawConfig::parse("[service]\nsparse_parallel = false\n").unwrap();
         assert!(!ServiceConfig::from_raw(&raw).unwrap().sparse_parallel);
         let raw = RawConfig::parse("[service]\nsparse_parallel = maybe\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn serving_edge_knobs_parse_and_validate() {
+        let d = ServiceConfig::default();
+        assert_eq!(d.max_sessions, 8);
+        assert_eq!(d.deadline_ms, 0, "no deadline by default");
+        let raw = RawConfig::parse("[service]\nmax_sessions = 3\ndeadline_ms = 250\n").unwrap();
+        let cfg = ServiceConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.max_sessions, 3);
+        assert_eq!(cfg.deadline_ms, 250);
+        let raw = RawConfig::parse("[service]\nmax_sessions = 0\n").unwrap();
+        let err = ServiceConfig::from_raw(&raw).unwrap_err();
+        assert!(err.to_string().contains("max_sessions must be >= 1"), "{err}");
+        let raw = RawConfig::parse("[service]\ndeadline_ms = soon\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err());
     }
 

@@ -155,6 +155,33 @@ pub struct MetricsSnapshot {
     /// runtime counterpart of `DevicePlan::device_imbalance`. `1.0`
     /// when nothing was profiled.
     pub device_measured_imbalance: f64,
+    /// Wire sessions ever opened against this service (stdio counts as
+    /// one). Zero for services never fronted by `wire`.
+    pub sessions_total: u64,
+    /// Sessions currently open (`opened - closed` at snapshot time).
+    pub active_sessions: u64,
+    /// High-water mark of concurrently open sessions.
+    pub peak_sessions: u64,
+    /// Connections refused by admission control (`busy` error frame
+    /// written, socket dropped) because `max_sessions` were active.
+    pub sessions_shed: u64,
+    /// Request frames decoded across all sessions (every line that
+    /// produced a request, valid or not — decode failures count too,
+    /// they consumed a frame slot).
+    pub wire_frames: u64,
+    /// Solve requests among `wire_frames` that reached the coordinator.
+    pub wire_solves: u64,
+    /// Error frames written across all sessions (any [`ErrorCode`]
+    /// class — see `docs/PROTOCOL.md` §Error frames).
+    ///
+    /// [`ErrorCode`]: crate::wire::ErrorCode
+    pub wire_errors: u64,
+    /// Nanoseconds spent decoding request frames (wire `Ingest` spans),
+    /// summed across sessions. Zero unless profiling is on.
+    pub wire_ingest_ns: u64,
+    /// Nanoseconds spent encoding response frames (wire `Encode`
+    /// spans), summed across sessions. Zero unless profiling is on.
+    pub wire_encode_ns: u64,
 }
 
 /// All service-level metrics.
@@ -173,6 +200,18 @@ pub struct ServiceMetrics {
     /// Sparse symbolic/numeric split counters (see [`MetricsSnapshot`]).
     pub symbolic_reuse: AtomicU64,
     pub numeric_refactor: AtomicU64,
+    /// Serving-edge counters (see the `sessions_*`/`wire_*` snapshot
+    /// fields). Bumped by `wire::server`/`wire::listener`; zero for
+    /// services never fronted by the wire layer.
+    pub sessions_opened: AtomicU64,
+    pub sessions_closed: AtomicU64,
+    pub peak_sessions: AtomicU64,
+    pub sessions_shed: AtomicU64,
+    pub wire_frames: AtomicU64,
+    pub wire_solves: AtomicU64,
+    pub wire_errors: AtomicU64,
+    pub wire_ingest_ns: AtomicU64,
+    pub wire_encode_ns: AtomicU64,
     pub latency: LatencyHistogram,
     /// Per-frame-class latency histograms (dense vs sparse solves) —
     /// the all-traffic `latency` histogram stays authoritative for the
@@ -247,7 +286,38 @@ impl ServiceMetrics {
             device_busy_ns: 0,
             exchange_ns: 0,
             device_measured_imbalance: 0.0,
+            sessions_total: self.sessions_opened.load(Ordering::Relaxed),
+            active_sessions: self
+                .sessions_opened
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.sessions_closed.load(Ordering::Relaxed)),
+            peak_sessions: self.peak_sessions.load(Ordering::Relaxed),
+            sessions_shed: self.sessions_shed.load(Ordering::Relaxed),
+            wire_frames: self.wire_frames.load(Ordering::Relaxed),
+            wire_solves: self.wire_solves.load(Ordering::Relaxed),
+            wire_errors: self.wire_errors.load(Ordering::Relaxed),
+            wire_ingest_ns: self.wire_ingest_ns.load(Ordering::Relaxed),
+            wire_encode_ns: self.wire_encode_ns.load(Ordering::Relaxed),
         }
+    }
+
+    /// Record a session opening: bumps `sessions_opened` and maintains
+    /// the concurrent high-water mark. Pair with [`session_closed`].
+    ///
+    /// [`session_closed`]: ServiceMetrics::session_closed
+    pub fn session_opened(&self) {
+        let opened = self.sessions_opened.fetch_add(1, Ordering::Relaxed) + 1;
+        let active = opened.saturating_sub(self.sessions_closed.load(Ordering::Relaxed));
+        self.peak_sessions.fetch_max(active, Ordering::Relaxed);
+    }
+
+    /// Record a session closing and fold its frame/solve/error counts
+    /// into the service-wide wire totals.
+    pub fn session_closed(&self, frames: u64, solves: u64, errors: u64) {
+        self.sessions_closed.fetch_add(1, Ordering::Relaxed);
+        self.wire_frames.fetch_add(frames, Ordering::Relaxed);
+        self.wire_solves.fetch_add(solves, Ordering::Relaxed);
+        self.wire_errors.fetch_add(errors, Ordering::Relaxed);
     }
 
     /// Fold a lane-engine snapshot into a metrics snapshot (the service
@@ -540,6 +610,35 @@ mod tests {
             &crate::obs::LaneProfileSnapshot::default(),
         );
         assert_eq!(s.measured_imbalance, 1.0);
+    }
+
+    #[test]
+    fn session_counters_track_active_peak_and_fold_totals() {
+        let m = ServiceMetrics::default();
+        let s = m.snapshot();
+        assert_eq!((s.sessions_total, s.active_sessions, s.peak_sessions), (0, 0, 0));
+        m.session_opened();
+        m.session_opened();
+        m.session_opened();
+        m.session_closed(10, 7, 1);
+        let s = m.snapshot();
+        assert_eq!(s.sessions_total, 3);
+        assert_eq!(s.active_sessions, 2);
+        assert_eq!(s.peak_sessions, 3);
+        assert_eq!(s.wire_frames, 10);
+        assert_eq!(s.wire_solves, 7);
+        assert_eq!(s.wire_errors, 1);
+        m.session_closed(5, 5, 0);
+        m.session_closed(1, 0, 1);
+        m.sessions_shed.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.active_sessions, 0);
+        assert_eq!(s.peak_sessions, 3, "peak is a high-water mark, not current");
+        assert_eq!(s.sessions_shed, 2);
+        assert_eq!((s.wire_frames, s.wire_solves, s.wire_errors), (16, 12, 2));
+        // Reopening after a drain keeps the peak monotone.
+        m.session_opened();
+        assert_eq!(m.snapshot().peak_sessions, 3);
     }
 
     #[test]

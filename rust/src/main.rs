@@ -22,7 +22,10 @@ use ebv_solve::exec::DeviceSet;
 use ebv_solve::runtime::Manifest;
 use ebv_solve::solver::{solver_by_name, EbvLu, Kernel, LuSolver, SparseLu, SparseSymbolic};
 use ebv_solve::util::fmt;
-use ebv_solve::wire::{serve_session_with, DecodeOptions, SessionOptions};
+use ebv_solve::wire::{
+    install_sigint_handler, serve_session_with, DecodeOptions, ListenOptions, SessionOptions,
+    WireServer,
+};
 use ebv_solve::workload::{generate_trace, SystemKind, TraceSpec};
 
 fn main() {
@@ -369,8 +372,9 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
     if args.flag("trace") {
         return cmd_serve_trace(args);
     }
-    // Default: the NDJSON wire session on stdin/stdout. Diagnostics go
-    // to stderr so stdout stays a clean frame stream.
+    // Default: the NDJSON wire session on stdin/stdout; `--listen`
+    // switches to the concurrent TCP front end. Diagnostics go to
+    // stderr so stdout stays a clean frame stream.
     let cfg = ServiceConfig {
         lanes: args.opt_positive("lanes", 4usize)?,
         max_batch: args.opt_parsed("batch", 16usize)?,
@@ -385,23 +389,72 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
         kernel: kernel_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         use_runtime: args.flag("runtime"),
+        max_sessions: args.opt_positive("max-sessions", 8usize)?,
+        deadline_ms: args.opt_parsed("deadline-ms", 0u64)?,
         profiling: args.flag("profile"),
         ..ServiceConfig::default()
     };
-    let svc = SolverService::start(cfg)?;
-    let opts = SessionOptions {
-        decode: DecodeOptions { allow_mtx_path: args.flag("allow-mtx-path") },
+    let listen = args.opt("listen").map(str::to_string);
+    // 64 MiB default line cap on TCP (a hostile peer must not OOM the
+    // server); stdio trusts its pipe and stays unlimited.
+    let default_frame_cap: usize = if listen.is_some() { 64 << 20 } else { usize::MAX };
+    let max_frame_bytes = match args.opt_positive("max-frame-bytes", default_frame_cap)? {
+        usize::MAX => None,
+        cap => Some(cap),
     };
+    let deadline = match cfg.deadline_ms {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
+    let max_sessions = cfg.max_sessions;
+    let svc = SolverService::start(cfg)?;
+    let session = SessionOptions {
+        decode: DecodeOptions { allow_mtx_path: args.flag("allow-mtx-path") },
+        deadline,
+        max_frame_bytes,
+        ..SessionOptions::default()
+    };
+    let stats = if let Some(addr) = listen {
+        install_sigint_handler();
+        let server = WireServer::bind(
+            addr.as_str(),
+            ListenOptions { max_sessions, watch_sigint: true, session },
+        )?;
+        eprintln!(
+            "ebv-solve serve: listening on {} (max_sessions={max_sessions}; \
+             SIGINT drains)",
+            server.local_addr()?
+        );
+        let listener_stats = server.run(&svc)?;
+        eprintln!(
+            "listener done: {} sessions served, {} shed",
+            listener_stats.sessions, listener_stats.shed
+        );
+        None
+    } else {
+        eprintln!(
+            "ebv-solve serve: NDJSON wire session on stdin/stdout \
+             (send {{\"op\":\"shutdown\"}} or EOF to end)"
+        );
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        Some(serve_session_with(&svc, stdin.lock(), stdout.lock(), session)?)
+    };
+    if let Some(stats) = stats {
+        eprintln!(
+            "session done: {} frames, {} solves, {} errors",
+            stats.frames, stats.solves, stats.errors
+        );
+    }
+    let snap = svc.metrics_snapshot();
     eprintln!(
-        "ebv-solve serve: NDJSON wire session on stdin/stdout \
-         (send {{\"op\":\"shutdown\"}} or EOF to end)"
-    );
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    let stats = serve_session_with(&svc, stdin.lock(), stdout.lock(), opts)?;
-    eprintln!(
-        "session done: {} frames, {} solves, {} errors",
-        stats.frames, stats.solves, stats.errors
+        "sessions: total={} peak={} shed={} wire_frames={} wire_solves={} wire_errors={}",
+        snap.sessions_total,
+        snap.peak_sessions,
+        snap.sessions_shed,
+        snap.wire_frames,
+        snap.wire_solves,
+        snap.wire_errors
     );
     eprintln!("metrics: {}", svc.metrics().summary());
     let e = svc.engine().stats();

@@ -61,6 +61,13 @@ pub fn prometheus(m: &MetricsSnapshot) -> String {
     counter("profiled_jobs_total", "Jobs profiled into the lane accumulators.", m.profiled_jobs);
     counter("device_busy_ns_total", "Profiled per-device compute nanoseconds (summed).", m.device_busy_ns);
     counter("exchange_ns_total", "Profiled nanoseconds inside sharded exchanges.", m.exchange_ns);
+    counter("sessions_total", "Wire sessions ever opened.", m.sessions_total);
+    counter("sessions_shed_total", "Connections shed with a busy frame.", m.sessions_shed);
+    counter("wire_frames_total", "Request frames read across all sessions.", m.wire_frames);
+    counter("wire_solves_total", "Solve frames answered with a solution.", m.wire_solves);
+    counter("wire_errors_total", "Error frames written across all sessions.", m.wire_errors);
+    counter("wire_ingest_ns_total", "Profiled nanoseconds decoding request frames.", m.wire_ingest_ns);
+    counter("wire_encode_ns_total", "Profiled nanoseconds encoding response frames.", m.wire_encode_ns);
     let mut gauge = |name: &str, help: &str, v: f64| {
         let _ = writeln!(out, "# HELP ebv_{name} {help}");
         let _ = writeln!(out, "# TYPE ebv_{name} gauge");
@@ -84,6 +91,8 @@ pub fn prometheus(m: &MetricsSnapshot) -> String {
         "Measured max/mean per-device busy time (DevicePlan counterpart).",
         m.device_measured_imbalance,
     );
+    gauge("active_sessions", "Wire sessions currently open.", m.active_sessions as f64);
+    gauge("peak_sessions", "High-water mark of concurrent sessions.", m.peak_sessions as f64);
     // Info-style gauge: the kernel name rides in a label so the value
     // stays a constant 1 (Prometheus has no string samples).
     let _ = writeln!(out, "# HELP ebv_kernel Resolved trailing-update microkernel.");
@@ -200,6 +209,15 @@ mod tests {
             device_busy_ns: 35,
             exchange_ns: 36,
             device_measured_imbalance: 37.5,
+            sessions_total: 38,
+            active_sessions: 39,
+            peak_sessions: 40,
+            sessions_shed: 41,
+            wire_frames: 42,
+            wire_solves: 43,
+            wire_errors: 44,
+            wire_ingest_ns: 45,
+            wire_encode_ns: 46,
         }
     }
 
@@ -214,6 +232,16 @@ mod tests {
             "ebv_measured_lane_imbalance 34.5",
             "ebv_exchange_ns_total 36",
             "ebv_sparse_latency_p99_seconds 30.5",
+            "ebv_sessions_total 38",
+            "# TYPE ebv_active_sessions gauge",
+            "ebv_active_sessions 39",
+            "ebv_peak_sessions 40",
+            "ebv_sessions_shed_total 41",
+            "ebv_wire_frames_total 42",
+            "ebv_wire_solves_total 43",
+            "ebv_wire_errors_total 44",
+            "ebv_wire_ingest_ns_total 45",
+            "ebv_wire_encode_ns_total 46",
             "ebv_kernel{kernel=\"tiled\"} 1",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");

@@ -20,7 +20,9 @@
 //! {"op":"shutdown"}
 //! ```
 //!
-//! Response schema mirrors [`ResponseFrame`]; see `README.md` for a
+//! Response schema mirrors [`ResponseFrame`]. The full field-by-field
+//! contract lives in `docs/PROTOCOL.md` (spot-checked against this
+//! codec by `tests/protocol_doc.rs`); see `README.md` for a
 //! copy-pasteable session.
 
 use std::fmt::Write as _;
@@ -32,7 +34,7 @@ use crate::matrix::{io as matrix_io, CooMatrix, DenseMatrix};
 use crate::util::error::{EbvError, Result};
 use crate::util::json::emit_str;
 use crate::wire::fingerprint::{combine_dense, fingerprint_csr, fingerprint_csr_pattern, Fnv1a};
-use crate::wire::frame::{RequestFrame, ResponseFrame, WireMatrix, WireSolve, WireSolution};
+use crate::wire::frame::{ErrorCode, RequestFrame, ResponseFrame, WireMatrix, WireSolve, WireSolution};
 use crate::wire::scanner::{Event, Scanner};
 
 // ---- decoding --------------------------------------------------------------
@@ -453,8 +455,9 @@ pub fn encode_request(frame: &RequestFrame) -> String {
 pub fn encode_response(frame: &ResponseFrame) -> String {
     let mut out = String::new();
     match frame {
-        ResponseFrame::Error { message } => {
-            out.push_str("{\"op\":\"error\",\"error\":");
+        ResponseFrame::Error { code, message } => {
+            // Code names are lowercase identifiers — no escaping needed.
+            let _ = write!(out, "{{\"op\":\"error\",\"code\":\"{}\",\"error\":", code.name());
             emit_str(message, &mut out);
             out.push('}');
         }
@@ -539,6 +542,18 @@ pub fn encode_response(frame: &ResponseFrame) -> String {
             );
             out.push_str(",\"device_measured_imbalance\":");
             push_num(&mut out, m.device_measured_imbalance);
+            let _ = write!(
+                out,
+                ",\"sessions_total\":{},\"active_sessions\":{},\"peak_sessions\":{},\
+                 \"sessions_shed\":{}",
+                m.sessions_total, m.active_sessions, m.peak_sessions, m.sessions_shed
+            );
+            let _ = write!(
+                out,
+                ",\"wire_frames\":{},\"wire_solves\":{},\"wire_errors\":{},\
+                 \"wire_ingest_ns\":{},\"wire_encode_ns\":{}",
+                m.wire_frames, m.wire_solves, m.wire_errors, m.wire_ingest_ns, m.wire_encode_ns
+            );
             out.push('}');
         }
         ResponseFrame::Solution(s) => {
@@ -589,6 +604,7 @@ struct RespAcc {
     ok: Option<bool>,
     x: Option<Vec<f64>>,
     error: Option<String>,
+    code: Option<ErrorCode>,
     residual: Option<f64>,
     backend: Option<String>,
     batch_size: Option<usize>,
@@ -615,6 +631,12 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                 "id" => acc.id = Some(as_index(expect_num(&mut sc, "id")?, "id")?),
                 "ok" => acc.ok = Some(expect_bool(&mut sc, "ok")?),
                 "error" => acc.error = Some(expect_str(&mut sc, "error")?),
+                "code" => {
+                    let name = expect_str(&mut sc, "code")?;
+                    acc.code = Some(ErrorCode::parse(&name).ok_or_else(|| {
+                        jerr(format!("field `code`: unknown error code `{name}`"))
+                    })?);
+                }
                 "backend" => acc.backend = Some(expect_str(&mut sc, "backend")?),
                 "served" => acc.served = Some(as_index(expect_num(&mut sc, "served")?, "served")?),
                 "batch_size" => {
@@ -708,6 +730,27 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                 "device_measured_imbalance" => {
                     acc.metrics.device_measured_imbalance = expect_num(&mut sc, &k)?
                 }
+                "sessions_total" => {
+                    acc.metrics.sessions_total = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "active_sessions" => {
+                    acc.metrics.active_sessions = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "peak_sessions" => {
+                    acc.metrics.peak_sessions = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "sessions_shed" => {
+                    acc.metrics.sessions_shed = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "wire_frames" => acc.metrics.wire_frames = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "wire_solves" => acc.metrics.wire_solves = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "wire_errors" => acc.metrics.wire_errors = as_index(expect_num(&mut sc, &k)?, &k)?,
+                "wire_ingest_ns" => {
+                    acc.metrics.wire_ingest_ns = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "wire_encode_ns" => {
+                    acc.metrics.wire_encode_ns = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
                 _ => skip_value(&mut sc)?,
             },
             other => return Err(jerr(format!("malformed response frame: {other:?}"))),
@@ -717,7 +760,11 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
 
     match acc.op.as_deref() {
         Some("goodbye") => Ok(ResponseFrame::Goodbye { served: require(acc.served, "served")? }),
-        Some("error") => Ok(ResponseFrame::Error { message: require(acc.error, "error")? }),
+        Some("error") => Ok(ResponseFrame::Error {
+            // Absent on pre-taxonomy peers: classify as `internal`.
+            code: acc.code.unwrap_or_default(),
+            message: require(acc.error, "error")?,
+        }),
         Some("metrics") => Ok(ResponseFrame::Metrics(acc.metrics)),
         Some("solution") => {
             let ok = require(acc.ok, "ok")?;
@@ -963,11 +1010,35 @@ mod tests {
         });
         assert_eq!(decode_response(&encode_response(&m)).unwrap(), m);
 
-        let e = ResponseFrame::Error { message: "json: bad \"frame\"\nwith newline".into() };
+        let e = ResponseFrame::Error {
+            code: ErrorCode::Decode,
+            message: "json: bad \"frame\"\nwith newline".into(),
+        };
         assert_eq!(decode_response(&encode_response(&e)).unwrap(), e);
 
         let g = ResponseFrame::Goodbye { served: 17 };
         assert_eq!(decode_response(&encode_response(&g)).unwrap(), g);
+    }
+
+    #[test]
+    fn every_error_code_survives_the_wire() {
+        for code in ErrorCode::ALL {
+            let e = ResponseFrame::error(code, format!("class {}", code.name()));
+            let line = encode_response(&e);
+            assert!(
+                line.contains(&format!("\"code\":\"{}\"", code.name())),
+                "{line}"
+            );
+            assert_eq!(decode_response(&line).unwrap(), e);
+        }
+        // Unknown code names are a decode error (new codes are a
+        // protocol revision), while an absent `code` — pre-taxonomy
+        // servers — classifies as `internal`.
+        let err =
+            decode_response(r#"{"op":"error","code":"transient","error":"x"}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown error code `transient`"), "{err}");
+        let legacy = decode_response(r#"{"op":"error","error":"x"}"#).unwrap();
+        assert_eq!(legacy, ResponseFrame::error(ErrorCode::Internal, "x"));
     }
 
     /// Field-drift guard: every `MetricsSnapshot` field distinct, exact
@@ -1016,6 +1087,15 @@ mod tests {
             device_busy_ns: 35,
             exchange_ns: 36,
             device_measured_imbalance: 37.5,
+            sessions_total: 38,
+            active_sessions: 39,
+            peak_sessions: 40,
+            sessions_shed: 41,
+            wire_frames: 42,
+            wire_solves: 43,
+            wire_errors: 44,
+            wire_ingest_ns: 45,
+            wire_encode_ns: 46,
         };
         let frame = ResponseFrame::Metrics(m);
         assert_eq!(decode_response(&encode_response(&frame)).unwrap(), frame);
@@ -1034,7 +1114,8 @@ mod tests {
         let a = diag_dominant_dense(3, GenSeed(14));
         let line = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 3])));
         assert!(!line.contains('\n'));
-        let resp = encode_response(&ResponseFrame::Error { message: "multi\nline".into() });
+        let resp =
+            encode_response(&ResponseFrame::error(ErrorCode::Decode, "multi\nline"));
         assert!(!resp.contains('\n'), "escapes keep frames single-line: {resp}");
     }
 }

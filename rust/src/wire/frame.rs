@@ -171,22 +171,107 @@ pub struct WireSolution {
     pub timings: Timings,
 }
 
+/// Machine-readable class of an `error` frame — the taxonomy clients
+/// dispatch on (retry vs fix-the-frame vs give-up). The human-readable
+/// `message` elaborates; the code is the contract. Documented
+/// frame-by-frame in `docs/PROTOCOL.md` §Error frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ErrorCode {
+    /// The request line was not a valid frame (bad JSON, unknown `op`,
+    /// inconsistent payload). Fix the frame; retrying verbatim fails.
+    Decode,
+    /// Admission control shed the request (session limit reached or
+    /// solve queue full). Transient: back off and retry.
+    Busy,
+    /// The per-session request deadline elapsed before the solve
+    /// finished. The solve may still complete server-side; its result
+    /// is discarded.
+    Deadline,
+    /// The request line exceeded the session's frame-size cap. The rest
+    /// of the line was discarded; the session continues.
+    Oversized,
+    /// Server-side failure outside the client's control (service shut
+    /// down mid-request, dropped reply). Also the decode default when a
+    /// peer omits `code` (pre-taxonomy servers).
+    #[default]
+    Internal,
+}
+
+impl ErrorCode {
+    /// Wire name (the `code` field of an `error` frame).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::Decode => "decode",
+            ErrorCode::Busy => "busy",
+            ErrorCode::Deadline => "deadline",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Parse a wire name; `None` for unknown codes (a decode error —
+    /// new codes are a protocol revision, not a silent extension).
+    pub fn parse(name: &str) -> Option<ErrorCode> {
+        Some(match name {
+            "decode" => ErrorCode::Decode,
+            "busy" => ErrorCode::Busy,
+            "deadline" => ErrorCode::Deadline,
+            "oversized" => ErrorCode::Oversized,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    /// All codes, for doc/spec exhaustiveness tests.
+    pub const ALL: [ErrorCode; 5] = [
+        ErrorCode::Decode,
+        ErrorCode::Busy,
+        ErrorCode::Deadline,
+        ErrorCode::Oversized,
+        ErrorCode::Internal,
+    ];
+}
+
 /// A response frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ResponseFrame {
     Solution(WireSolution),
     Metrics(MetricsSnapshot),
-    /// Frame-level failure (decode error, rejected request). The session
-    /// continues after an error frame.
-    Error { message: String },
-    /// Acknowledges `shutdown`; last frame of a session.
+    /// Frame-level failure (decode error, rejected request, expired
+    /// deadline). The session continues after an error frame.
+    Error { code: ErrorCode, message: String },
+    /// Acknowledges `shutdown` (or a server-initiated drain); last
+    /// frame of a session.
     Goodbye { served: u64 },
+}
+
+impl ResponseFrame {
+    /// Build an error frame.
+    pub fn error(code: ErrorCode, message: impl Into<String>) -> ResponseFrame {
+        ResponseFrame::Error { code, message: message.into() }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+
+    #[test]
+    fn error_codes_round_trip_their_names() {
+        for code in ErrorCode::ALL {
+            assert_eq!(ErrorCode::parse(code.name()), Some(code), "{code:?}");
+        }
+        assert_eq!(ErrorCode::parse("transient"), None);
+        // Peers that predate the taxonomy omit `code`; the decode
+        // default must be the catch-all class.
+        assert_eq!(ErrorCode::default(), ErrorCode::Internal);
+        let f = ResponseFrame::error(ErrorCode::Busy, "try later");
+        assert_eq!(
+            f,
+            ResponseFrame::Error { code: ErrorCode::Busy, message: "try later".into() }
+        );
+    }
 
     #[test]
     fn effective_key_prefers_explicit_then_fingerprint() {

@@ -1,0 +1,342 @@
+//! TCP front end: accept loop, admission control, graceful drain.
+//!
+//! [`WireServer`] owns a non-blocking [`TcpListener`] and runs the
+//! serving edge of `ebv-solve serve --listen ADDR`: each accepted
+//! connection gets its own named thread running the transport-generic
+//! [`serve_session_with`] loop against the shared [`ServiceHandle`],
+//! so concurrent sessions share one warmed-up coordinator — factor
+//! cache, symbolic-analysis cache, and execution engine included.
+//! Layering follows the protocol-edge/core split in DESIGN.md
+//! §Serving edge: this module owns sockets and admission, `server`
+//! owns framing and the session state machine, and the coordinator
+//! never learns what a socket is.
+//!
+//! Admission control is strict and cheap: when `max_sessions` sessions
+//! are active, a new connection is answered with a single `busy` error
+//! frame and closed — shed load fails fast instead of queueing unread
+//! sockets (see `docs/PROTOCOL.md` §Error frames). Graceful shutdown
+//! ([`ServerControl::stop`] or, when enabled, SIGINT) stops the accept
+//! loop, trips every session's drain flag, and joins the session
+//! threads; each session answers its in-flight request, writes
+//! `goodbye`, and closes.
+
+use std::io::{BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::service::ServiceHandle;
+use crate::util::error::{EbvError, Result};
+use crate::wire::codec::encode_response;
+use crate::wire::frame::{ErrorCode, ResponseFrame};
+use crate::wire::server::{serve_session_with, SessionOptions};
+
+/// How often the accept loop polls for new connections and the stop
+/// flag; also the per-session socket read timeout, which bounds how
+/// long a drain waits for an idle session to notice the flag.
+const POLL_TICK: Duration = Duration::from_millis(50);
+
+/// Listener policy.
+#[derive(Debug, Clone)]
+pub struct ListenOptions {
+    /// Concurrent-session ceiling; connection `max_sessions + 1` is
+    /// shed with a `busy` error frame.
+    pub max_sessions: usize,
+    /// Also treat a delivered SIGINT (see [`install_sigint_handler`])
+    /// as a stop request. Off by default so tests and embedders are
+    /// unaffected by process-global signal state.
+    pub watch_sigint: bool,
+    /// Per-session policy. The listener overrides
+    /// [`SessionOptions::stop`] with its own drain flag.
+    pub session: SessionOptions,
+}
+
+impl Default for ListenOptions {
+    fn default() -> Self {
+        ListenOptions {
+            max_sessions: 8,
+            watch_sigint: false,
+            session: SessionOptions::default(),
+        }
+    }
+}
+
+/// What one [`WireServer::run`] served, for the final log line.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ListenerStats {
+    /// Connections admitted to a session thread.
+    pub sessions: u64,
+    /// Connections shed with a `busy` frame.
+    pub shed: u64,
+}
+
+/// Handle for requesting a graceful drain from another thread (or a
+/// signal handler's watcher). Cloneable; all clones share one flag.
+#[derive(Debug, Clone)]
+pub struct ServerControl {
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerControl {
+    /// Request drain: stop accepting, finish in-flight requests, say
+    /// goodbye on every session. Idempotent.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+}
+
+/// A bound, not-yet-running TCP serving edge.
+#[derive(Debug)]
+pub struct WireServer {
+    listener: TcpListener,
+    opts: ListenOptions,
+    stop: Arc<AtomicBool>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7070`, or port `0` for an
+    /// OS-assigned port — read it back with [`local_addr`]).
+    ///
+    /// [`local_addr`]: WireServer::local_addr
+    pub fn bind<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        opts: ListenOptions,
+    ) -> Result<WireServer> {
+        let listener = TcpListener::bind(&addr)
+            .map_err(|e| EbvError::io(format!("wire listener: bind {addr:?}"), e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| EbvError::io("wire listener: set_nonblocking", e))?;
+        Ok(WireServer { listener, opts, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(|e| EbvError::io("wire listener: local_addr", e))
+    }
+
+    /// A stop handle for this server. Grab it before [`run`], hand it
+    /// to whoever decides when to drain.
+    ///
+    /// [`run`]: WireServer::run
+    pub fn control(&self) -> ServerControl {
+        ServerControl { stop: Arc::clone(&self.stop) }
+    }
+
+    /// Accept and serve until stopped. Blocks the calling thread;
+    /// session threads are scoped to this call and all joined before
+    /// it returns, so the returned [`ListenerStats`] and the service's
+    /// merged metrics are final. Single-shot: after a drain the stop
+    /// flag stays set and a second `run` returns immediately.
+    pub fn run(&self, svc: &ServiceHandle) -> Result<ListenerStats> {
+        let active = AtomicUsize::new(0);
+        let mut stats = ListenerStats::default();
+        let mut accept_err = None;
+
+        std::thread::scope(|scope| {
+            loop {
+                if self.opts.watch_sigint && sigint_tripped() {
+                    log::info!(target: "wire", "SIGINT: draining");
+                    self.stop.store(true, Ordering::Relaxed);
+                }
+                if self.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let (stream, peer) = match self.listener.accept() {
+                    Ok(accepted) => accepted,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(POLL_TICK);
+                        continue;
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        accept_err = Some(EbvError::io("wire listener: accept", e));
+                        break;
+                    }
+                };
+                if active.load(Ordering::Relaxed) >= self.opts.max_sessions {
+                    stats.shed += 1;
+                    svc.metrics().sessions_shed.fetch_add(1, Ordering::Relaxed);
+                    log::info!(target: "wire", "shed {peer}: at max_sessions ({})", self.opts.max_sessions);
+                    shed_busy(stream, self.opts.max_sessions);
+                    continue;
+                }
+                stats.sessions += 1;
+                // Count the admission here, not in the session thread:
+                // the gate must see every admitted-but-not-yet-started
+                // session or a burst could overshoot the ceiling.
+                active.fetch_add(1, Ordering::Relaxed);
+                let opts = SessionOptions {
+                    stop: Some(Arc::clone(&self.stop)),
+                    ..self.opts.session.clone()
+                };
+                let session_no = stats.sessions;
+                let spawned = std::thread::Builder::new()
+                    .name(format!("wire-session-{session_no}"))
+                    .spawn_scoped(scope, {
+                        let active = &active;
+                        move || {
+                            let _guard = ActiveGuard(active);
+                            run_session(svc, stream, peer, session_no, opts);
+                        }
+                    });
+                if let Err(e) = spawned {
+                    // Couldn't start the thread; undo the admission.
+                    active.fetch_sub(1, Ordering::Relaxed);
+                    stats.sessions -= 1;
+                    log::warn!(target: "wire", "spawn for {peer} failed: {e}");
+                }
+            }
+            // Drain: no more accepts; trip every session's flag. The
+            // scope joins the session threads on exit.
+            self.stop.store(true, Ordering::Relaxed);
+        });
+
+        match accept_err {
+            Some(e) => Err(e),
+            None => Ok(stats),
+        }
+    }
+}
+
+/// Decrements the active-session gate when the session thread ends,
+/// however it ends.
+struct ActiveGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// One admitted connection: read-timeout so the drain flag is polled,
+/// split the stream, run the session loop, print the close summary.
+fn run_session(
+    svc: &ServiceHandle,
+    stream: TcpStream,
+    peer: SocketAddr,
+    session_no: u64,
+    opts: SessionOptions,
+) {
+    // The read timeout is what lets an idle session notice the drain
+    // flag; without it we still serve, but drain waits on the client.
+    if let Err(e) = stream.set_read_timeout(Some(POLL_TICK)) {
+        log::warn!(target: "wire", "session {session_no} ({peer}): set_read_timeout failed: {e}");
+    }
+    let writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("[wire] session {session_no} ({peer}): split failed: {e}");
+            return;
+        }
+    };
+    match serve_session_with(svc, BufReader::new(stream), writer, opts) {
+        Ok(stats) => eprintln!(
+            "[wire] session {session_no} ({peer}) closed: frames={} solves={} errors={}",
+            stats.frames, stats.solves, stats.errors
+        ),
+        Err(e) => eprintln!("[wire] session {session_no} ({peer}) ended with error: {e}"),
+    }
+}
+
+/// Answer a shed connection with one `busy` frame and close it.
+fn shed_busy(mut stream: TcpStream, max_sessions: usize) {
+    let frame = ResponseFrame::error(
+        ErrorCode::Busy,
+        format!("server is at max_sessions ({max_sessions}); retry later"),
+    );
+    let mut line = encode_response(&frame);
+    line.push('\n');
+    // Best effort: the peer may already be gone, and a shed path must
+    // never block the acceptor.
+    let _ = stream.set_write_timeout(Some(POLL_TICK));
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.flush();
+}
+
+static SIGINT_TRIPPED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_sigint(_signum: i32) {
+    // Async-signal-safe: a single relaxed store, nothing else.
+    SIGINT_TRIPPED.store(true, Ordering::Relaxed);
+}
+
+/// Install a SIGINT handler that trips the flag
+/// [`ListenOptions::watch_sigint`] watches. Process-global; call once
+/// from `main` before [`WireServer::run`]. No-op off Unix.
+#[cfg(unix)]
+pub fn install_sigint_handler() {
+    extern "C" {
+        // `signal(2)` from the platform libc — the one C symbol the
+        // no-dependency rule lets us lean on. The handler registration
+        // itself is `sighandler_t signal(int, sighandler_t)`.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    unsafe {
+        signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigint_handler() {}
+
+/// Whether SIGINT has been delivered since the handler was installed.
+pub fn sigint_tripped() -> bool {
+    SIGINT_TRIPPED.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+    use crate::coordinator::SolverService;
+
+    fn test_service() -> ServiceHandle {
+        SolverService::start(ServiceConfig {
+            lanes: 2,
+            max_batch: 4,
+            batch_window_us: 100,
+            queue_capacity: 64,
+            engine_lanes: 2,
+            use_runtime: false,
+            ..ServiceConfig::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn bind_ephemeral_and_stop_with_no_traffic() {
+        let svc = test_service();
+        let server = WireServer::bind("127.0.0.1:0", ListenOptions::default()).unwrap();
+        let addr = server.local_addr().unwrap();
+        assert_ne!(addr.port(), 0, "the OS resolved the ephemeral port");
+        let control = server.control();
+        assert!(!control.is_stopped());
+        let stats = std::thread::scope(|scope| {
+            let handle = scope.spawn(|| server.run(&svc));
+            control.stop();
+            handle.join().unwrap()
+        })
+        .unwrap();
+        assert!(control.is_stopped());
+        assert_eq!(stats, ListenerStats::default());
+        // Single-shot: a drained server exits immediately on rerun.
+        assert_eq!(server.run(&svc).unwrap(), ListenerStats::default());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stopped_control_is_idempotent_and_shared() {
+        let server = WireServer::bind("127.0.0.1:0", ListenOptions::default()).unwrap();
+        let a = server.control();
+        let b = a.clone();
+        a.stop();
+        a.stop();
+        assert!(b.is_stopped(), "clones share the flag");
+    }
+}

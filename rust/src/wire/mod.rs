@@ -2,8 +2,12 @@
 //!
 //! Turns the in-process [`coordinator`](crate::coordinator) service
 //! into a servable system: clients speak newline-delimited JSON frames
-//! over any byte stream (today `stdin`/`stdout` via `ebv-solve serve`;
-//! the session loop is transport-agnostic so sockets slot in later).
+//! over any byte stream — `stdin`/`stdout` via `ebv-solve serve`, or
+//! concurrent TCP sessions via `serve --listen ADDR` ([`listener`]);
+//! the session loop itself is transport-agnostic. The protocol is
+//! specified frame-by-frame in `docs/PROTOCOL.md` — framing, every
+//! request/response field, fingerprint/cache-key semantics, the
+//! [`ErrorCode`] taxonomy, and session lifecycle.
 //!
 //! Why a bespoke layer instead of tree-parsing requests with
 //! [`util::json`](crate::util::json): a solve request carries the
@@ -23,7 +27,8 @@
 //! * [`fingerprint`] — streaming FNV-1a matrix content hashes;
 //! * [`frame`] — typed request/response frames;
 //! * [`codec`] — NDJSON line encode/decode;
-//! * [`server`] — the blocking per-session loop.
+//! * [`server`] — the blocking per-session loop;
+//! * [`listener`] — TCP accept loop, admission control, drain.
 //!
 //! A complete session transcript lives in `README.md`; see
 //! `examples/wire_session.rs` for the programmatic equivalent.
@@ -31,6 +36,7 @@
 pub mod codec;
 pub mod fingerprint;
 pub mod frame;
+pub mod listener;
 pub mod scanner;
 pub mod server;
 
@@ -41,6 +47,9 @@ pub use codec::{
 pub use fingerprint::{
     fingerprint_csr, fingerprint_csr_pattern, fingerprint_dense, Fnv1a, KEY_MASK,
 };
-pub use frame::{RequestFrame, ResponseFrame, WireMatrix, WireSolution, WireSolve};
+pub use frame::{ErrorCode, RequestFrame, ResponseFrame, WireMatrix, WireSolution, WireSolve};
+pub use listener::{
+    install_sigint_handler, ListenOptions, ListenerStats, ServerControl, WireServer,
+};
 pub use scanner::{parse_via_events, Event, Scanner};
 pub use server::{serve_session, serve_session_with, SessionOptions, SessionStats};

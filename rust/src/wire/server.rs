@@ -2,48 +2,77 @@
 //!
 //! [`serve_session`] is generic over `BufRead`/`Write`, so the same
 //! loop serves `stdin`/`stdout` behind `ebv-solve serve`, in-memory
-//! buffers in tests, and (future work) an accepted socket per session.
-//! Framing is one JSON object per line; every request line produces
-//! exactly one response line, written and flushed before the next read,
-//! so a pipe client can drive the session synchronously.
+//! buffers in tests, and accepted sockets behind
+//! [`super::listener::WireServer`]. Framing is one JSON object per
+//! line (see `docs/PROTOCOL.md`); every request line produces exactly
+//! one response line, written and flushed before the next read, so a
+//! pipe client can drive the session synchronously.
 //!
-//! Error containment: a malformed line produces an `error` frame and
-//! the session continues — one bad request in a long-lived pipe must
-//! not tear down the connection. Only I/O failure (peer gone) or a
-//! `shutdown` frame ends the loop.
+//! Error containment: a malformed or oversized line produces a typed
+//! `error` frame (see [`ErrorCode`]) and the session continues — one
+//! bad request in a long-lived pipe must not tear down the connection.
+//! Only I/O failure (peer gone), a `shutdown` frame, or the server's
+//! cooperative [`SessionOptions::stop`] drain flag ends the loop.
 //!
-//! With profiling on (`service.profiling` / `serve --profile`) the loop
-//! contributes the wire-side spans to the solve timeline — `ingest`
-//! around request decode and `encode` around response write — and
-//! prints an `obs` summary line to stderr when the session ends.
+//! Each session folds its [`SessionStats`] and, with profiling on
+//! (`service.profiling` / `serve --profile`), its wire-side span time
+//! (`ingest` around request decode, `encode` around response write)
+//! into the shared [`ServiceMetrics`] — the `sessions_*`/`wire_*`
+//! fields of the metrics frame aggregate across all sessions a service
+//! ever ran.
+//!
+//! [`ServiceMetrics`]: crate::coordinator::metrics::ServiceMetrics
 
-use std::io::{BufRead, Write};
+use std::io::{BufRead, ErrorKind, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::coordinator::service::ServiceHandle;
 use crate::util::error::{EbvError, Result};
 use crate::wire::codec::{decode_request_with, encode_response, DecodeOptions};
-use crate::wire::frame::{RequestFrame, ResponseFrame, WireMatrix, WireSolution, WireSolve};
+use crate::wire::frame::{
+    ErrorCode, RequestFrame, ResponseFrame, WireMatrix, WireSolution, WireSolve,
+};
 
 /// Counters of one wire session.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SessionStats {
-    /// Non-empty request lines read.
+    /// Non-empty request lines read (oversized lines count — they
+    /// consumed a frame slot even though their payload was discarded).
     pub frames: u64,
     /// Solve frames that produced a solution frame (ok or failed);
     /// rejected/undeliverable submissions count as `errors` instead.
     pub solves: u64,
-    /// Error frames written (decode failures, rejected submissions).
+    /// Error frames written (decode failures, rejected submissions,
+    /// expired deadlines, oversized lines).
     pub errors: u64,
 }
 
-/// Per-session policy.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+/// Per-session policy. `Default` is the permissive stdio posture: no
+/// deadline, no frame-size cap, no stop flag, restrictive decode.
+#[derive(Debug, Clone, Default)]
 pub struct SessionOptions {
     pub decode: DecodeOptions,
+    /// Per-request solve deadline. When the coordinator has not
+    /// answered within it, the session writes a `deadline` error frame
+    /// and moves on; the solve may still finish server-side, its
+    /// result discarded. `None` waits indefinitely.
+    pub deadline: Option<Duration>,
+    /// Hard cap on one request line's byte length. An over-cap line is
+    /// discarded (to the newline) and answered with an `oversized`
+    /// error frame; the session continues. `None` is unbounded.
+    pub max_frame_bytes: Option<usize>,
+    /// Cooperative drain flag, polled between reads. Once set, the
+    /// session writes `goodbye` and ends as if the client had sent
+    /// `shutdown`. Only effective when the reader yields periodically
+    /// (e.g. a socket with a read timeout) — a reader parked in a
+    /// blocking `read` is released at its next timeout or byte.
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
-/// Run one session with default (restrictive) options; see
+/// Run one session with default (stdio) options; see
 /// [`serve_session_with`].
 pub fn serve_session<R: BufRead, W: Write>(
     svc: &ServiceHandle,
@@ -54,81 +83,245 @@ pub fn serve_session<R: BufRead, W: Write>(
 }
 
 /// Run one session: read NDJSON request frames from `input`, answer
-/// each on `output`, until `shutdown`, EOF, or an I/O error. The
-/// service handle is borrowed — the caller owns service lifetime and
-/// can serve sequential sessions on one warmed-up service (keeping the
-/// `FactorCache` across sessions is the point of the fingerprint key).
+/// each on `output`, until `shutdown`, EOF, drain, or an I/O error.
+/// The service handle is borrowed — the caller owns service lifetime
+/// and can serve sequential or concurrent sessions on one warmed-up
+/// service (keeping the `FactorCache` across sessions is the point of
+/// the fingerprint key).
+///
+/// Session accounting (`sessions_total`, `active_sessions`,
+/// `peak_sessions`, and the folded `wire_*` totals) is recorded on the
+/// service metrics even when the session ends in an I/O error.
 pub fn serve_session_with<R: BufRead, W: Write>(
     svc: &ServiceHandle,
     mut input: R,
     mut output: W,
     opts: SessionOptions,
 ) -> Result<SessionStats> {
+    svc.metrics().session_opened();
+    let outcome = session_loop(svc, &mut input, &mut output, &opts);
+    let stats = match &outcome {
+        Ok(stats) => *stats,
+        Err((stats, _)) => *stats,
+    };
+    svc.metrics().session_closed(stats.frames, stats.solves, stats.errors);
+    if crate::obs::enabled() {
+        eprintln!("{}", crate::obs::summary_line(&svc.metrics_snapshot()));
+    }
+    outcome.map(|_| stats).map_err(|(_, e)| e)
+}
+
+/// What one bounded line read produced.
+enum ReadOutcome {
+    /// A complete request line is in the buffer (newline stripped).
+    Line,
+    Eof,
+    /// The line blew past `max_frame_bytes`; its remainder was
+    /// discarded up to the newline (or EOF).
+    Oversized,
+    /// The drain flag tripped while waiting for input.
+    Stopped,
+}
+
+/// Read one `\n`-terminated line into `buf`, enforcing the frame-size
+/// cap and polling the drain flag whenever the underlying reader
+/// yields (`WouldBlock`/`TimedOut`, as sockets with a read timeout do).
+/// A partial line buffered at EOF is returned as a final `Line` — a
+/// client that writes a frame and half-closes without the trailing
+/// newline still gets its answer.
+fn read_frame_line<R: BufRead>(
+    input: &mut R,
+    buf: &mut Vec<u8>,
+    max_bytes: Option<usize>,
+    stop: Option<&AtomicBool>,
+) -> std::io::Result<ReadOutcome> {
+    buf.clear();
+    let cap = max_bytes.unwrap_or(usize::MAX);
+    let mut over = false;
+    loop {
+        // Drain wins even mid-line: a half-written frame at drain time
+        // is dropped, never half-parsed — shutdown must not be
+        // stallable by a client that withholds its newline.
+        if stop.is_some_and(|s| s.load(Ordering::Relaxed)) {
+            return Ok(ReadOutcome::Stopped);
+        }
+        let chunk = match input.fill_buf() {
+            Ok(chunk) => chunk,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                // Read-timeout tick (or EINTR): loop back to poll the
+                // drain flag, then park in the next fill_buf.
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if chunk.is_empty() {
+            return Ok(if over {
+                ReadOutcome::Oversized
+            } else if buf.is_empty() {
+                ReadOutcome::Eof
+            } else {
+                ReadOutcome::Line
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if !over && buf.len().saturating_add(pos) > cap {
+                    over = true;
+                    buf.clear();
+                } else if !over {
+                    buf.extend_from_slice(&chunk[..pos]);
+                }
+                input.consume(pos + 1);
+                return Ok(if over { ReadOutcome::Oversized } else { ReadOutcome::Line });
+            }
+            None => {
+                let len = chunk.len();
+                if !over && buf.len().saturating_add(len) > cap {
+                    over = true;
+                    buf.clear(); // don't hold a frame we already rejected
+                } else if !over {
+                    buf.extend_from_slice(chunk);
+                }
+                input.consume(len);
+            }
+        }
+    }
+}
+
+fn session_loop<R: BufRead, W: Write>(
+    svc: &ServiceHandle,
+    input: &mut R,
+    output: &mut W,
+    opts: &SessionOptions,
+) -> std::result::Result<SessionStats, (SessionStats, EbvError)> {
     let mut stats = SessionStats::default();
-    let mut line = String::new();
+    let mut buf = Vec::new();
     // Session-sequential fallback ids for requests that don't carry one.
     let mut next_id: u64 = 0;
 
     loop {
-        line.clear();
-        let n = input
-            .read_line(&mut line)
-            .map_err(|e| EbvError::io("wire session: read", e))?;
-        if n == 0 {
-            // EOF without `shutdown`: client hung up; end quietly.
-            break;
-        }
-        let text = line.trim();
-        if text.is_empty() {
-            continue;
-        }
-        stats.frames += 1;
-
-        let decoded = {
-            let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Ingest);
-            decode_request_with(text, &opts.decode)
-        };
-        let response = match decoded {
-            Err(e) => {
-                stats.errors += 1;
-                ResponseFrame::Error { message: e.to_string() }
-            }
-            Ok(RequestFrame::Shutdown) => {
-                log::info!(target: "wire", "shutdown frame after {} frames", stats.frames);
-                write_frame(&mut output, &ResponseFrame::Goodbye { served: stats.solves })?;
+        let outcome =
+            read_frame_line(input, &mut buf, opts.max_frame_bytes, opts.stop.as_deref())
+                .map_err(|e| (stats, EbvError::io("wire session: read", e)))?;
+        let response = match outcome {
+            ReadOutcome::Eof => break, // client hung up without `shutdown`; end quietly
+            ReadOutcome::Stopped => {
+                // Server-initiated drain: say goodbye like a shutdown.
+                log::info!(target: "wire", "drain after {} frames", stats.frames);
+                write_frame(output, &ResponseFrame::Goodbye { served: stats.solves })
+                    .map_err(|e| (stats, e))?;
                 break;
             }
-            Ok(RequestFrame::Metrics) => ResponseFrame::Metrics(svc.metrics_snapshot()),
-            Ok(RequestFrame::Solve(ws)) | Ok(RequestFrame::SolveSparse(ws)) => {
-                let id = ws.id.unwrap_or(next_id);
-                next_id = next_id.max(id) + 1;
-                let resp = run_solve(svc, id, ws);
-                // `served` promises produced solutions; a rejected or
-                // dropped submission is an error, not a serve.
-                match &resp {
-                    ResponseFrame::Solution(_) => stats.solves += 1,
-                    ResponseFrame::Error { .. } => stats.errors += 1,
-                    _ => {}
+            ReadOutcome::Oversized => {
+                stats.frames += 1;
+                stats.errors += 1;
+                ResponseFrame::error(
+                    ErrorCode::Oversized,
+                    format!(
+                        "frame exceeds max_frame_bytes ({}); line discarded",
+                        opts.max_frame_bytes.unwrap_or(usize::MAX)
+                    ),
+                )
+            }
+            ReadOutcome::Line => {
+                let text = match std::str::from_utf8(&buf) {
+                    Ok(text) => text.trim(),
+                    Err(_) => {
+                        stats.frames += 1;
+                        stats.errors += 1;
+                        write_frame(
+                            output,
+                            &ResponseFrame::error(
+                                ErrorCode::Decode,
+                                "frame is not valid UTF-8",
+                            ),
+                        )
+                        .map_err(|e| (stats, e))?;
+                        drain_spans(svc);
+                        continue;
+                    }
+                };
+                if text.is_empty() {
+                    continue;
                 }
-                resp
+                stats.frames += 1;
+
+                let decoded = {
+                    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Ingest);
+                    decode_request_with(text, &opts.decode)
+                };
+                match decoded {
+                    Err(e) => {
+                        stats.errors += 1;
+                        ResponseFrame::error(ErrorCode::Decode, e.to_string())
+                    }
+                    Ok(RequestFrame::Shutdown) => {
+                        log::info!(target: "wire", "shutdown frame after {} frames", stats.frames);
+                        write_frame(output, &ResponseFrame::Goodbye { served: stats.solves })
+                            .map_err(|e| (stats, e))?;
+                        break;
+                    }
+                    Ok(RequestFrame::Metrics) => ResponseFrame::Metrics(svc.metrics_snapshot()),
+                    Ok(RequestFrame::Solve(ws)) | Ok(RequestFrame::SolveSparse(ws)) => {
+                        let id = ws.id.unwrap_or(next_id);
+                        next_id = next_id.max(id) + 1;
+                        let resp = run_solve(svc, id, ws, opts.deadline);
+                        // `served` promises produced solutions; a
+                        // rejected or dropped submission is an error,
+                        // not a serve.
+                        match &resp {
+                            ResponseFrame::Solution(_) => stats.solves += 1,
+                            ResponseFrame::Error { .. } => stats.errors += 1,
+                            _ => {}
+                        }
+                        resp
+                    }
+                }
             }
         };
-        write_frame(&mut output, &response)?;
-        if crate::obs::enabled() {
-            // Drain the session thread's span sink every frame — the
-            // wire-side ingest/encode spans are per-request scratch,
-            // and a long-lived pipe must not accumulate them forever.
-            let _ = crate::obs::take_thread_spans();
-        }
+        write_frame(output, &response).map_err(|e| (stats, e))?;
+        drain_spans(svc);
     }
-    if crate::obs::enabled() {
-        eprintln!("{}", crate::obs::summary_line(&svc.metrics_snapshot()));
-    }
+    drain_spans(svc);
     Ok(stats)
 }
 
-/// Submit one solve and block for its response frame.
-fn run_solve(svc: &ServiceHandle, id: u64, ws: WireSolve) -> ResponseFrame {
+/// Drain the session thread's span sink, crediting the wire-side
+/// `ingest`/`encode` time to the service-wide accumulators. The sink is
+/// per-request scratch — a long-lived pipe must not accumulate spans
+/// forever — so this runs after every frame.
+fn drain_spans(svc: &ServiceHandle) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let (mut ingest, mut encode) = (0u64, 0u64);
+    for span in crate::obs::take_thread_spans() {
+        match span.phase {
+            crate::obs::Phase::Ingest => ingest += span.dur_ns,
+            crate::obs::Phase::Encode => encode += span.dur_ns,
+            _ => {}
+        }
+    }
+    if ingest > 0 {
+        svc.metrics().wire_ingest_ns.fetch_add(ingest, Ordering::Relaxed);
+    }
+    if encode > 0 {
+        svc.metrics().wire_encode_ns.fetch_add(encode, Ordering::Relaxed);
+    }
+}
+
+/// Submit one solve and block for its response frame, up to `deadline`.
+fn run_solve(
+    svc: &ServiceHandle,
+    id: u64,
+    ws: WireSolve,
+    deadline: Option<Duration>,
+) -> ResponseFrame {
     let key = ws.effective_key();
     let pattern_key = ws.effective_pattern_key();
     let WireSolve { matrix, b, .. } = ws;
@@ -140,11 +333,34 @@ fn run_solve(svc: &ServiceHandle, id: u64, ws: WireSolve) -> ResponseFrame {
     };
     let rx = match submitted {
         Ok(rx) => rx,
-        // Admission-control rejection (backpressure): an error frame,
-        // not a failed solution — the client should retry later.
-        Err(e) => return ResponseFrame::Error { message: e.to_string() },
+        // Admission-control rejection (backpressure): a `busy` error
+        // frame, not a failed solution — the client should back off
+        // and retry. Any other submit failure is server-side.
+        Err(e) => {
+            let msg = e.to_string();
+            let code =
+                if msg.contains("backpressure") { ErrorCode::Busy } else { ErrorCode::Internal };
+            return ResponseFrame::error(code, msg);
+        }
     };
-    match rx.recv() {
+    let received = match deadline {
+        None => rx.recv().map_err(|_| {
+            ResponseFrame::error(ErrorCode::Internal, "coordinator: service dropped the request")
+        }),
+        Some(d) => rx.recv_timeout(d).map_err(|e| match e {
+            // The worker's late send to the dropped receiver is a
+            // harmless no-op; the result is simply discarded.
+            RecvTimeoutError::Timeout => ResponseFrame::error(
+                ErrorCode::Deadline,
+                format!("deadline: solve not finished within {}ms; result discarded", d.as_millis()),
+            ),
+            RecvTimeoutError::Disconnected => ResponseFrame::error(
+                ErrorCode::Internal,
+                "coordinator: service dropped the request",
+            ),
+        }),
+    };
+    match received {
         Ok(resp) => ResponseFrame::Solution(WireSolution {
             id,
             result: resp.result,
@@ -154,9 +370,7 @@ fn run_solve(svc: &ServiceHandle, id: u64, ws: WireSolve) -> ResponseFrame {
             matrix_key: key,
             timings: resp.timings,
         }),
-        Err(_) => ResponseFrame::Error {
-            message: "coordinator: service dropped the request".to_string(),
-        },
+        Err(frame) => frame,
     }
 }
 
@@ -193,9 +407,13 @@ mod tests {
     }
 
     fn run(input: &str) -> (SessionStats, Vec<ResponseFrame>) {
+        run_with(input, SessionOptions::default())
+    }
+
+    fn run_with(input: &str, opts: SessionOptions) -> (SessionStats, Vec<ResponseFrame>) {
         let svc = test_service();
         let mut out = Vec::new();
-        let stats = serve_session(&svc, input.as_bytes(), &mut out).unwrap();
+        let stats = serve_session_with(&svc, input.as_bytes(), &mut out, opts).unwrap();
         svc.shutdown();
         let text = String::from_utf8(out).unwrap();
         let frames = text.lines().map(|l| decode_response(l).unwrap()).collect();
@@ -225,8 +443,88 @@ mod tests {
         let (stats, frames) = run(&input);
         assert_eq!(stats.frames, 2);
         assert_eq!(stats.errors, 1);
-        assert!(matches!(frames[0], ResponseFrame::Error { .. }));
+        assert!(
+            matches!(&frames[0], ResponseFrame::Error { code: ErrorCode::Decode, .. }),
+            "{frames:?}"
+        );
         assert!(matches!(&frames[1], ResponseFrame::Solution(s) if s.result.is_ok()));
+    }
+
+    #[test]
+    fn oversized_line_gets_typed_error_and_session_continues() {
+        let a = diag_dominant_dense(6, GenSeed(25));
+        let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 6])));
+        assert!(solve.len() <= 4096, "cap must admit the real frame");
+        let huge = "x".repeat(5000);
+        let input = format!("{huge}\n{solve}\n{{\"op\":\"shutdown\"}}\n");
+        let opts = SessionOptions { max_frame_bytes: Some(4096), ..SessionOptions::default() };
+        let (stats, frames) = run_with(&input, opts);
+        assert_eq!(stats.frames, 3);
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.solves, 1);
+        let ResponseFrame::Error { code, message } = &frames[0] else { panic!("{frames:?}") };
+        assert_eq!(*code, ErrorCode::Oversized);
+        assert!(message.contains("4096"), "{message}");
+        assert!(matches!(&frames[1], ResponseFrame::Solution(s) if s.result.is_ok()));
+        assert_eq!(frames[2], ResponseFrame::Goodbye { served: 1 });
+    }
+
+    #[test]
+    fn missing_final_newline_still_answers_the_frame() {
+        let a = diag_dominant_dense(5, GenSeed(26));
+        let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 5])));
+        // No trailing newline: the partial line at EOF is decoded.
+        let (stats, frames) = run(&solve);
+        assert_eq!(stats.solves, 1);
+        assert!(matches!(&frames[0], ResponseFrame::Solution(s) if s.result.is_ok()));
+    }
+
+    #[test]
+    fn pre_set_stop_flag_drains_before_reading() {
+        let a = diag_dominant_dense(4, GenSeed(27));
+        let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 4])));
+        let stop = Arc::new(AtomicBool::new(true));
+        let opts = SessionOptions { stop: Some(Arc::clone(&stop)), ..SessionOptions::default() };
+        let (stats, frames) = run_with(&format!("{solve}\n"), opts);
+        // The drain flag was set before the first read: goodbye only.
+        assert_eq!(stats.solves, 0);
+        assert_eq!(frames, vec![ResponseFrame::Goodbye { served: 0 }]);
+    }
+
+    #[test]
+    fn expired_deadline_yields_deadline_error_frame() {
+        let a = diag_dominant_dense(64, GenSeed(28));
+        let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 64])));
+        let opts = SessionOptions {
+            deadline: Some(Duration::from_nanos(1)),
+            ..SessionOptions::default()
+        };
+        let (stats, frames) = run_with(&format!("{solve}\n"), opts);
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.solves, 0);
+        let ResponseFrame::Error { code, message } = &frames[0] else { panic!("{frames:?}") };
+        assert_eq!(*code, ErrorCode::Deadline);
+        assert!(message.contains("deadline"), "{message}");
+    }
+
+    #[test]
+    fn sessions_fold_into_service_metrics() {
+        let svc = test_service();
+        let a = diag_dominant_dense(6, GenSeed(29));
+        let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 6])));
+        let input = format!("not json\n{solve}\n");
+        for _ in 0..2 {
+            let mut out = Vec::new();
+            serve_session(&svc, input.as_bytes(), &mut out).unwrap();
+        }
+        let m = svc.metrics_snapshot();
+        svc.shutdown();
+        assert_eq!(m.sessions_total, 2);
+        assert_eq!(m.active_sessions, 0);
+        assert_eq!(m.peak_sessions, 1, "sequential sessions never overlap");
+        assert_eq!(m.wire_frames, 4);
+        assert_eq!(m.wire_solves, 2);
+        assert_eq!(m.wire_errors, 2);
     }
 
     #[test]
@@ -242,6 +540,9 @@ mod tests {
         assert_eq!(m.engine_lanes, 2);
         assert_eq!(m.engine_barrier_waits, m.engine_steps * m.engine_lanes);
         assert_eq!(m.panel_width, 64, "default panel width travels in the frame");
+        // The in-flight session is visible to its own metrics frame.
+        assert_eq!(m.sessions_total, 1);
+        assert_eq!(m.active_sessions, 1);
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! `docs/PROTOCOL.md` is the wire contract — these tests pin it to the
+//! implementation so the spec cannot silently drift from the codec.
+//!
+//! Two directions:
+//!
+//! * every JSON example in the doc must round-trip through the real
+//!   decoder (the one gated example must fail with exactly the
+//!   documented gating error), and
+//! * every field the encoder can emit must be documented: frames of
+//!   every kind are encoded fully populated, their keys extracted, and
+//!   each key required to appear backticked in the doc.
+
+use ebv_solve::coordinator::request::Timings;
+use ebv_solve::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+use ebv_solve::wire::{
+    decode_request, decode_response, encode_request, encode_response, ErrorCode, RequestFrame,
+    ResponseFrame, WireSolution, WireSolve,
+};
+
+const DOC: &str = include_str!("../../docs/PROTOCOL.md");
+
+/// All lines inside ```json fences that carry a frame (start with `{`).
+fn doc_examples() -> Vec<String> {
+    let mut in_json = false;
+    let mut out = Vec::new();
+    for line in DOC.lines() {
+        let trimmed = line.trim();
+        if trimmed.starts_with("```") {
+            in_json = trimmed == "```json";
+            continue;
+        }
+        if in_json && trimmed.starts_with('{') {
+            out.push(trimmed.to_string());
+        }
+    }
+    out
+}
+
+#[test]
+fn every_documented_example_round_trips_through_the_codec() {
+    let examples = doc_examples();
+    assert!(
+        examples.len() >= 14,
+        "the doc should carry examples of every frame kind, found {}",
+        examples.len()
+    );
+
+    for line in &examples {
+        if line.contains("mtx_path") {
+            // The one documented-as-gated example: default sessions must
+            // refuse it with the documented error, not read the file.
+            let err = decode_request(line).expect_err("mtx_path is gated by default");
+            let msg = err.to_string();
+            assert!(msg.contains("--allow-mtx-path"), "{line}: {msg}");
+            continue;
+        }
+        let as_request = decode_request(line);
+        let as_response = decode_response(line);
+        assert!(
+            as_request.is_ok() || as_response.is_ok(),
+            "documented example decodes as neither direction:\n  {line}\n  as request: {:?}\n  as response: {:?}",
+            as_request.err(),
+            as_response.err()
+        );
+    }
+}
+
+/// Extract every JSON object key (`"name":`) from an encoded frame.
+/// Good enough for codec output: our generated string values carry no
+/// escapes, and a string *value* is never followed by `:`.
+fn keys_of(frame: &str) -> Vec<String> {
+    let bytes = frame.as_bytes();
+    let mut keys = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < bytes.len() && bytes[j] != b'"' {
+                j += 1;
+            }
+            if j + 1 < bytes.len() && bytes[j + 1] == b':' {
+                keys.push(frame[start..j].to_string());
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    keys
+}
+
+#[test]
+fn every_wire_key_the_codec_emits_is_documented() {
+    // Fully populated frames of every kind. The metrics frame comes
+    // from the doc's own example re-encoded: decode tolerates missing
+    // fields, but encode emits every field the snapshot has — so a new
+    // snapshot field surfaces here as an undocumented key.
+    let metrics_example = doc_examples()
+        .into_iter()
+        .find(|l| l.contains("\"op\":\"metrics\"") && l.contains("submitted"))
+        .expect("the doc documents a full metrics response");
+    let metrics = decode_response(&metrics_example).expect("doc metrics example decodes");
+
+    let dense = WireSolve::dense(diag_dominant_dense(3, GenSeed(1)), vec![1.0; 3])
+        .with_id(7)
+        .with_key(42);
+    let dense_uncached =
+        WireSolve::dense(diag_dominant_dense(3, GenSeed(1)), vec![1.0; 3]).without_cache();
+    let sparse = WireSolve::sparse(diag_dominant_sparse(4, 2, GenSeed(2)), vec![1.0; 4]);
+    let solution = WireSolution {
+        id: 7,
+        result: Ok(vec![0.5; 3]),
+        residual: 1e-12,
+        backend: "native-ebv".to_string(),
+        batch_size: 1,
+        matrix_key: Some(42),
+        timings: Timings { queue_secs: 0.1, batch_secs: 0.2, exec_secs: 0.3 },
+    };
+    let failed = WireSolution {
+        result: Err("lu: zero pivot at column 1".to_string()),
+        residual: f64::NAN,
+        matrix_key: None,
+        ..solution.clone()
+    };
+
+    let frames: Vec<String> = vec![
+        encode_request(&RequestFrame::Solve(dense)),
+        encode_request(&RequestFrame::Solve(dense_uncached)),
+        encode_request(&RequestFrame::SolveSparse(sparse)),
+        encode_request(&RequestFrame::Metrics),
+        encode_request(&RequestFrame::Shutdown),
+        encode_response(&ResponseFrame::Solution(solution)),
+        encode_response(&ResponseFrame::Solution(failed)),
+        encode_response(&metrics),
+        encode_response(&ResponseFrame::error(ErrorCode::Busy, "try later")),
+        encode_response(&ResponseFrame::Goodbye { served: 3 }),
+    ];
+
+    let mut missing = Vec::new();
+    for frame in &frames {
+        let keys = keys_of(frame);
+        assert!(!keys.is_empty(), "key extraction failed on {frame}");
+        for key in keys {
+            if !DOC.contains(&format!("`{key}`")) && !missing.contains(&key) {
+                missing.push(key);
+            }
+        }
+    }
+    assert!(
+        missing.is_empty(),
+        "wire keys emitted by the codec but not documented (backticked) in docs/PROTOCOL.md: {missing:?}"
+    );
+}
+
+#[test]
+fn every_error_code_is_documented_with_its_wire_name() {
+    for code in ErrorCode::ALL {
+        assert!(
+            DOC.contains(&format!("`{}`", code.name())),
+            "error code `{}` missing from docs/PROTOCOL.md",
+            code.name()
+        );
+    }
+}

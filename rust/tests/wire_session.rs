@@ -135,7 +135,10 @@ fn sparse_triplets_and_mtx_path_both_serve() {
     let input = format!("{triplets}\n{by_path}\n{{\"op\":\"metrics\"}}\n{{\"op\":\"shutdown\"}}\n");
     let frames = run_session_with(
         &input,
-        SessionOptions { decode: DecodeOptions { allow_mtx_path: true } },
+        SessionOptions {
+            decode: DecodeOptions { allow_mtx_path: true },
+            ..SessionOptions::default()
+        },
     );
     let (r1, r2) = (solution(&frames[0]), solution(&frames[1]));
     assert!(r1.result.is_ok(), "{:?}", r1.result);
@@ -173,7 +176,8 @@ fn mtx_path_is_denied_unless_opted_in() {
     let input = "{\"op\":\"solve_sparse\",\"mtx_path\":\"/etc/hostname\",\"b\":[1]}\n\
                  {\"op\":\"shutdown\"}\n";
     let frames = run_session(input);
-    let ResponseFrame::Error { message } = &frames[0] else { panic!("{frames:?}") };
+    let ResponseFrame::Error { code, message } = &frames[0] else { panic!("{frames:?}") };
+    assert_eq!(*code, ebv_solve::wire::ErrorCode::Decode);
     assert!(message.contains("mtx_path"), "{message}");
     assert!(message.contains("--allow-mtx-path"), "{message}");
     assert!(matches!(frames[1], ResponseFrame::Goodbye { served: 0 }));

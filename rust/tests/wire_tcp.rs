@@ -1,0 +1,346 @@
+//! Integration: the TCP serving edge — concurrent sessions over real
+//! sockets against one shared service, admission control, hostile
+//! input containment, and graceful drain.
+//!
+//! The load-bearing assertion is bit-identity: responses produced by
+//! concurrent TCP sessions are bitwise identical to a single stdio
+//! session on an identically configured service (DESIGN.md
+//! §Bit-identity ledger — concurrency is inert on solve results).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::{ServiceHandle, SolverService};
+use ebv_solve::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, rhs, GenSeed};
+use ebv_solve::matrix::CsrMatrix;
+use ebv_solve::wire::{
+    decode_response, encode_request, serve_session, ErrorCode, ListenOptions, RequestFrame,
+    ResponseFrame, SessionOptions, WireServer, WireSolve,
+};
+
+fn start_service() -> ServiceHandle {
+    SolverService::start(ServiceConfig {
+        lanes: 2,
+        max_batch: 4,
+        batch_window_us: 100,
+        queue_capacity: 64,
+        engine_lanes: 2,
+        use_runtime: false,
+        ..ServiceConfig::default()
+    })
+    .unwrap()
+}
+
+/// One TCP wire client: line-oriented send, frame-decoded receive.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let writer = stream.try_clone().expect("clone stream");
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).expect("send");
+        self.writer.write_all(b"\n").expect("send newline");
+        self.writer.flush().expect("flush");
+    }
+
+    /// Read one response line; `None` at EOF (server closed).
+    fn recv(&mut self) -> Option<ResponseFrame> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        if n == 0 {
+            return None;
+        }
+        Some(decode_response(line.trim()).expect("server frames decode"))
+    }
+
+    fn recv_solution(&mut self) -> ebv_solve::wire::WireSolution {
+        match self.recv() {
+            Some(ResponseFrame::Solution(s)) => s,
+            other => panic!("expected solution frame, got {other:?}"),
+        }
+    }
+}
+
+/// The bit pattern of a solution vector — the unit of the identity
+/// argument (timings and batch sizes legitimately differ under
+/// concurrency; the numbers must not).
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+fn solution_bits(frame: &ResponseFrame) -> Vec<u64> {
+    match frame {
+        ResponseFrame::Solution(s) => bits(s.result.as_ref().expect("solve succeeds")),
+        other => panic!("expected solution frame, got {other:?}"),
+    }
+}
+
+/// Same sparsity pattern, different values: shares the pattern
+/// fingerprint (symbolic reuse) but not the content fingerprint.
+fn same_pattern_variant(a: &CsrMatrix) -> CsrMatrix {
+    CsrMatrix::from_raw(
+        a.rows(),
+        a.cols(),
+        a.row_ptr().to_vec(),
+        a.col_idx().to_vec(),
+        a.values().iter().map(|v| v * 2.0).collect(),
+    )
+    .unwrap()
+}
+
+/// Reference run: the same request lines through one in-memory stdio
+/// session on a fresh, identically configured service.
+fn single_session_frames(requests: &[String]) -> Vec<ResponseFrame> {
+    let svc = start_service();
+    let input = format!("{}\n{{\"op\":\"shutdown\"}}\n", requests.join("\n"));
+    let mut output = Vec::new();
+    serve_session(&svc, input.as_bytes(), &mut output).unwrap();
+    svc.shutdown();
+    String::from_utf8(output)
+        .unwrap()
+        .lines()
+        .map(|l| decode_response(l).unwrap())
+        .collect()
+}
+
+#[test]
+fn concurrent_tcp_sessions_match_single_session_bitwise() {
+    let n = 24;
+    let dense = diag_dominant_dense(n, GenSeed(71));
+    let db = rhs(n, GenSeed(72));
+    let sparse = diag_dominant_sparse(40, 4, GenSeed(73));
+    let sb = rhs(40, GenSeed(74));
+    let sparse2 = same_pattern_variant(&sparse);
+
+    let dense_req =
+        encode_request(&RequestFrame::Solve(WireSolve::dense(dense.clone(), db.clone())));
+    let sparse_req =
+        encode_request(&RequestFrame::SolveSparse(WireSolve::sparse(sparse.clone(), sb.clone())));
+    let sparse2_req =
+        encode_request(&RequestFrame::SolveSparse(WireSolve::sparse(sparse2, sb.clone())));
+
+    let reference = single_session_frames(&[
+        dense_req.clone(),
+        sparse_req.clone(),
+        sparse2_req.clone(),
+    ]);
+    let ref_dense = solution_bits(&reference[0]);
+    let ref_sparse = solution_bits(&reference[1]);
+    let ref_sparse2 = solution_bits(&reference[2]);
+
+    let svc = start_service();
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        ListenOptions { max_sessions: 4, ..ListenOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let control = server.control();
+
+    let stats = std::thread::scope(|scope| {
+        let run = scope.spawn(|| server.run(&svc));
+        let clients: Vec<_> = (0..3)
+            .map(|_| {
+                let (dense_req, sparse_req, sparse2_req) = (&dense_req, &sparse_req, &sparse2_req);
+                scope.spawn(move || {
+                    let mut c = Client::connect(addr);
+                    c.send(dense_req);
+                    let d = c.recv_solution();
+                    c.send(sparse_req);
+                    let s1 = c.recv_solution();
+                    c.send(sparse2_req);
+                    let s2 = c.recv_solution();
+                    c.send("{\"op\":\"shutdown\"}");
+                    assert!(
+                        matches!(c.recv(), Some(ResponseFrame::Goodbye { served: 3 })),
+                        "shutdown acknowledges the session's solves"
+                    );
+                    (d, s1, s2)
+                })
+            })
+            .collect();
+        let results: Vec<_> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+        control.stop();
+        let stats = run.join().unwrap().unwrap();
+
+        for (d, s1, s2) in results {
+            assert_eq!(bits(d.result.as_ref().unwrap()), ref_dense, "dense drifted");
+            assert_eq!(bits(s1.result.as_ref().unwrap()), ref_sparse, "sparse drifted");
+            assert_eq!(bits(s2.result.as_ref().unwrap()), ref_sparse2, "same-pattern drifted");
+            // The fingerprint keying is transport-independent too.
+            assert!(d.matrix_key.is_some());
+        }
+        stats
+    });
+
+    assert_eq!(stats.sessions, 3);
+    assert_eq!(stats.shed, 0);
+    let m = svc.metrics_snapshot();
+    svc.shutdown();
+    assert_eq!(m.sessions_total, 3);
+    assert_eq!(m.active_sessions, 0, "every session joined before run() returned");
+    assert!(m.peak_sessions >= 1 && m.peak_sessions <= 3, "{m:?}");
+    assert_eq!(m.wire_frames, 12, "3 sessions x (3 solves + shutdown)");
+    assert_eq!(m.wire_solves, 9);
+    assert_eq!(m.wire_errors, 0);
+    // The same-pattern variant reuses the symbolic analysis cached by
+    // another request — across sessions, through the shared service.
+    assert!(m.symbolic_reuse >= 1, "same-pattern traffic must reuse symbolics: {m:?}");
+}
+
+#[test]
+fn saturation_sheds_with_typed_busy_frame() {
+    let n = 12;
+    let a = diag_dominant_dense(n, GenSeed(75));
+    let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, rhs(n, GenSeed(76)))));
+
+    let svc = start_service();
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        ListenOptions { max_sessions: 1, ..ListenOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let control = server.control();
+
+    let stats = std::thread::scope(|scope| {
+        let run = scope.spawn(|| server.run(&svc));
+        let mut c1 = Client::connect(addr);
+        // A completed round trip proves c1 is admitted and active.
+        c1.send(&solve);
+        assert!(c1.recv_solution().result.is_ok());
+
+        // The second connection must be shed — a typed frame, not a
+        // hang and not a silent close.
+        let mut c2 = Client::connect(addr);
+        match c2.recv() {
+            Some(ResponseFrame::Error { code, message }) => {
+                assert_eq!(code, ErrorCode::Busy);
+                assert!(message.contains("max_sessions"), "{message}");
+            }
+            other => panic!("expected busy frame, got {other:?}"),
+        }
+        assert!(c2.recv().is_none(), "shed connection is closed after the busy frame");
+
+        c1.send("{\"op\":\"shutdown\"}");
+        assert!(matches!(c1.recv(), Some(ResponseFrame::Goodbye { served: 1 })));
+        control.stop();
+        run.join().unwrap().unwrap()
+    });
+
+    assert_eq!(stats.sessions, 1);
+    assert_eq!(stats.shed, 1);
+    let m = svc.metrics_snapshot();
+    svc.shutdown();
+    assert_eq!(m.sessions_total, 1);
+    assert_eq!(m.sessions_shed, 1);
+    assert_eq!(m.peak_sessions, 1);
+}
+
+#[test]
+fn hostile_inputs_do_not_wedge_the_listener() {
+    let n = 16;
+    let a = diag_dominant_dense(n, GenSeed(77));
+    let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, rhs(n, GenSeed(78)))));
+    assert!(solve.len() <= 8192, "cap must admit the real frame");
+
+    let svc = start_service();
+    let session =
+        SessionOptions { max_frame_bytes: Some(8192), ..SessionOptions::default() };
+    let server = WireServer::bind(
+        "127.0.0.1:0",
+        ListenOptions { max_sessions: 4, session, ..ListenOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let control = server.control();
+
+    let stats = std::thread::scope(|scope| {
+        let run = scope.spawn(|| server.run(&svc));
+
+        // Oversized line: typed error, session continues and still solves.
+        let mut c1 = Client::connect(addr);
+        c1.send(&"x".repeat(10_000));
+        match c1.recv() {
+            Some(ResponseFrame::Error { code, .. }) => assert_eq!(code, ErrorCode::Oversized),
+            other => panic!("expected oversized frame, got {other:?}"),
+        }
+        c1.send(&solve);
+        assert!(c1.recv_solution().result.is_ok(), "session survives an oversized line");
+        c1.send("{\"op\":\"shutdown\"}");
+        assert!(matches!(c1.recv(), Some(ResponseFrame::Goodbye { .. })));
+
+        // Mid-frame disconnect: half a JSON object, then the peer is
+        // gone. The session must end without wedging the listener.
+        {
+            let mut c2 = Client::connect(addr);
+            c2.writer.write_all(b"{\"op\":\"sol").unwrap();
+            c2.writer.flush().unwrap();
+        } // both halves of the socket drop here
+
+        // Slow-loris: a valid frame dribbled in small chunks, slower
+        // than the session's read-timeout tick. Must still be served.
+        let mut c3 = Client::connect(addr);
+        let payload = format!("{solve}\n");
+        for chunk in payload.as_bytes().chunks(payload.len() / 6 + 1) {
+            c3.writer.write_all(chunk).unwrap();
+            c3.writer.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(60));
+        }
+        assert!(c3.recv_solution().result.is_ok(), "slow writer is served, not dropped");
+        c3.send("{\"op\":\"shutdown\"}");
+        assert!(matches!(c3.recv(), Some(ResponseFrame::Goodbye { .. })));
+
+        control.stop();
+        run.join().unwrap().unwrap()
+    });
+
+    assert_eq!(stats.sessions, 3, "every hostile client was admitted");
+    assert_eq!(stats.shed, 0);
+    let m = svc.metrics_snapshot();
+    svc.shutdown();
+    assert_eq!(m.sessions_total, 3);
+    assert_eq!(m.active_sessions, 0);
+    assert!(m.wire_errors >= 1, "the oversized line was counted: {m:?}");
+}
+
+#[test]
+fn drain_says_goodbye_to_open_sessions() {
+    let n = 10;
+    let a = diag_dominant_dense(n, GenSeed(79));
+    let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, rhs(n, GenSeed(80)))));
+
+    let svc = start_service();
+    let server = WireServer::bind("127.0.0.1:0", ListenOptions::default()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let control = server.control();
+
+    let stats = std::thread::scope(|scope| {
+        let run = scope.spawn(|| server.run(&svc));
+        let mut c = Client::connect(addr);
+        // A round trip proves the session is live before the drain.
+        c.send(&solve);
+        assert!(c.recv_solution().result.is_ok());
+        control.stop();
+        // The idle session notices the flag at its next read tick and
+        // closes down the documented way: goodbye, then EOF.
+        assert!(matches!(c.recv(), Some(ResponseFrame::Goodbye { served: 1 })));
+        assert!(c.recv().is_none(), "socket closed after goodbye");
+        run.join().unwrap().unwrap()
+    });
+
+    assert_eq!(stats.sessions, 1);
+    let m = svc.metrics_snapshot();
+    svc.shutdown();
+    assert_eq!(m.sessions_total, 1);
+    assert_eq!(m.active_sessions, 0);
+}
