@@ -10,8 +10,12 @@
 //!   the scanner; kept here as the measured baseline).
 //!
 //! Cases: dense 1000×1000 (1M floats inline) and sparse n=200 000 with
-//! ~5 nnz/row (~1M triplet entries). Writes the standard bench report
-//! and a repo-level `BENCH_wire.json` summary.
+//! ~5 nnz/row (~1M triplet entries). A second leg round-trips the same
+//! frames (encode → decode) through each wire encoding — NDJSON decimal
+//! text vs the negotiated length-prefixed binary format
+//! (`wire::binary`) — to price the decimal-format/parse tax the binary
+//! frames remove. Writes the standard bench report and a repo-level
+//! `BENCH_wire.json` summary.
 //!
 //! ```sh
 //! cargo bench --bench wire_ingest     # or: cargo run --release --bin ...
@@ -23,7 +27,17 @@ use ebv_solve::bench::{self, Bencher, Report};
 use ebv_solve::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, rhs, GenSeed};
 use ebv_solve::matrix::{CooMatrix, DenseMatrix};
 use ebv_solve::util::json::Json;
+use ebv_solve::wire::binary;
 use ebv_solve::wire::{decode_request, encode_request, RequestFrame, WireMatrix, WireSolve};
+
+/// Binary round trip: typed frame → length-prefixed bytes → typed frame.
+fn binary_round_trip(frame: &RequestFrame) -> RequestFrame {
+    let bytes = binary::encode_request_binary(frame).expect("solve frames encode");
+    let header = binary::parse_header(bytes[..binary::HEADER_LEN].try_into().unwrap())
+        .expect("header parses");
+    binary::decode_request_payload(header.kind, &bytes[binary::HEADER_LEN..])
+        .expect("payload decodes")
+}
 
 /// Tree-parse baseline: full `Json` materialization, then ingest.
 fn tree_ingest_dense(line: &str) -> DenseMatrix {
@@ -129,7 +143,56 @@ fn main() {
         report.push_stats(t_scan);
     }
 
+    // ---- encode+decode round trip per wire format --------------------------
+    // Same payload shapes, full cycle: typed frame → wire bytes → typed
+    // frame. NDJSON pays shortest-round-trip decimal formatting one way
+    // and decimal parsing the other; the binary frames move the f64
+    // bits verbatim. Both must reproduce the typed frame exactly.
+    let mut rt_report = Report::new("Wire round trip — NDJSON vs binary frames");
+    rt_report.set_headers(&[
+        "case", "NDJSON", "binary", "NDJSON rt, s", "binary rt, s", "binary MB/s", "speedup",
+    ]);
+    let mut rt_results = Vec::new();
+    {
+        let mut leg = |label: &str, frame: &RequestFrame| {
+            let nd_len = encode_request(frame).len() + 1;
+            let bin_len = binary::encode_request_binary(frame).unwrap().len();
+            assert_eq!(&decode_request(&encode_request(frame)).unwrap(), frame);
+            assert_eq!(&binary_round_trip(frame), frame);
+            let t_nd = bencher.run(&format!("{label}-rt-ndjson"), || {
+                decode_request(&encode_request(frame)).unwrap()
+            });
+            let t_bin = bencher.run(&format!("{label}-rt-binary"), || binary_round_trip(frame));
+            rt_report.push_row(vec![
+                label.into(),
+                format!("{:.1} MiB", mb(nd_len)),
+                format!("{:.1} MiB", mb(bin_len)),
+                format!("{:.4}", t_nd.median),
+                format!("{:.4}", t_bin.median),
+                format!("{:.1}", mb(bin_len) / t_bin.median),
+                format!("{:.2}x", t_nd.median / t_bin.median),
+            ]);
+            rt_results.push((format!("{label}_rt_ndjson"), nd_len, t_nd.median));
+            rt_results.push((format!("{label}_rt_binary"), bin_len, t_bin.median));
+            rt_report.push_stats(t_nd);
+            rt_report.push_stats(t_bin);
+        };
+        let n = if smoke { 64 } else { 1000 };
+        let dense = RequestFrame::Solve(WireSolve::dense(
+            diag_dominant_dense(n, GenSeed(75)),
+            rhs(n, GenSeed(76)),
+        ));
+        leg("dense_1m_values", &dense);
+        let n = if smoke { 2_000 } else { 200_000 };
+        let sparse = RequestFrame::SolveSparse(WireSolve::sparse(
+            diag_dominant_sparse(n, 5, GenSeed(77)),
+            rhs(n, GenSeed(78)),
+        ));
+        leg("sparse_1m_nnz", &sparse);
+    }
+
     println!("{}", report.render());
+    println!("{}", rt_report.render());
     if let Ok(p) = report.write_json() {
         println!("report: {}", p.display());
     }
@@ -148,6 +211,17 @@ fn main() {
                     ("stream_scan_median_s", Json::from(*scan_s)),
                     ("scan_mb_per_s", Json::from(mb(*bytes) / *scan_s)),
                     ("speedup_tree_over_scan", Json::from(*tree_s / *scan_s)),
+                ])
+            })),
+        ),
+        (
+            "round_trip",
+            Json::arr(rt_results.iter().map(|(name, bytes, median)| {
+                Json::obj([
+                    ("name", Json::Str(name.clone())),
+                    ("payload_bytes", Json::from(*bytes)),
+                    ("round_trip_median_s", Json::from(*median)),
+                    ("mb_per_s", Json::from(mb(*bytes) / *median)),
                 ])
             })),
         ),
@@ -171,6 +245,15 @@ fn main() {
         assert!(
             scan_s <= tree_s,
             "{name}: streaming scan ({scan_s:.4}s) slower than tree parse ({tree_s:.4}s)"
+        );
+    }
+    // The binary frames exist to beat decimal text on exactly these
+    // payloads; a loss here means the encoding is pure overhead.
+    for pair in rt_results.chunks(2) {
+        let [(name, _, nd_s), (_, _, bin_s)] = pair else { unreachable!() };
+        assert!(
+            bin_s <= nd_s,
+            "{name}: binary round trip ({bin_s:.4}s) slower than NDJSON ({nd_s:.4}s)"
         );
     }
 }

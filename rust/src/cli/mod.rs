@@ -133,9 +133,19 @@ COMMANDS:
               --events <path>               (with --profile: append the
                                              solve trace to a JSONL
                                              event log)
+              --binary                      (drive an in-process wire
+                                             session that negotiates the
+                                             length-prefixed binary frame
+                                             format — NDJSON offer, binary
+                                             repeat solve, metrics — and
+                                             print NDJSON-vs-binary frame
+                                             sizes; see docs/PROTOCOL.md
+                                             §Binary frames)
     serve     Serve solves over the NDJSON wire protocol — stdin/stdout
-              by default, or concurrent TCP sessions with --listen
-              (frame format specified in docs/PROTOCOL.md)
+              by default, or concurrent TCP sessions with --listen;
+              sessions that offer `accept_binary` get the length-prefixed
+              binary frame format for payload-heavy frames
+              (both formats specified in docs/PROTOCOL.md)
               --listen <addr>               (e.g. 127.0.0.1:7070; accept
                                              concurrent sessions instead
                                              of serving stdio; SIGINT
@@ -261,6 +271,12 @@ mod tests {
             assert!(USAGE.contains(knob), "serve should list {knob}");
         }
         assert!(USAGE.contains("docs/PROTOCOL.md"), "serve should point at the wire spec");
+    }
+
+    #[test]
+    fn usage_documents_the_binary_wire_demo() {
+        assert!(USAGE.contains("--binary"), "solve should list --binary");
+        assert!(USAGE.contains("§Binary frames"), "--binary should point at the spec section");
     }
 
     #[test]

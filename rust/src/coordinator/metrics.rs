@@ -182,6 +182,16 @@ pub struct MetricsSnapshot {
     /// Nanoseconds spent encoding response frames (wire `Encode`
     /// spans), summed across sessions. Zero unless profiling is on.
     pub wire_encode_ns: u64,
+    /// Sessions that negotiated the binary frame encoding
+    /// (`accept_binary` — see `docs/PROTOCOL.md` §Binary frames).
+    pub binary_sessions: u64,
+    /// Transport bytes read from peers across all sessions, both
+    /// formats (discarded oversized payloads count — they were
+    /// consumed).
+    pub wire_bytes_in: u64,
+    /// Transport bytes written to peers across all sessions, both
+    /// formats.
+    pub wire_bytes_out: u64,
 }
 
 /// All service-level metrics.
@@ -212,6 +222,11 @@ pub struct ServiceMetrics {
     pub wire_errors: AtomicU64,
     pub wire_ingest_ns: AtomicU64,
     pub wire_encode_ns: AtomicU64,
+    /// Sessions that latched the binary encoding (bumped once per
+    /// session by `wire::server` at negotiation time).
+    pub binary_sessions: AtomicU64,
+    pub wire_bytes_in: AtomicU64,
+    pub wire_bytes_out: AtomicU64,
     pub latency: LatencyHistogram,
     /// Per-frame-class latency histograms (dense vs sparse solves) —
     /// the all-traffic `latency` histogram stays authoritative for the
@@ -298,6 +313,9 @@ impl ServiceMetrics {
             wire_errors: self.wire_errors.load(Ordering::Relaxed),
             wire_ingest_ns: self.wire_ingest_ns.load(Ordering::Relaxed),
             wire_encode_ns: self.wire_encode_ns.load(Ordering::Relaxed),
+            binary_sessions: self.binary_sessions.load(Ordering::Relaxed),
+            wire_bytes_in: self.wire_bytes_in.load(Ordering::Relaxed),
+            wire_bytes_out: self.wire_bytes_out.load(Ordering::Relaxed),
         }
     }
 
@@ -311,13 +329,22 @@ impl ServiceMetrics {
         self.peak_sessions.fetch_max(active, Ordering::Relaxed);
     }
 
-    /// Record a session closing and fold its frame/solve/error counts
-    /// into the service-wide wire totals.
-    pub fn session_closed(&self, frames: u64, solves: u64, errors: u64) {
+    /// Record a session closing and fold its frame/solve/error/byte
+    /// counts into the service-wide wire totals.
+    pub fn session_closed(
+        &self,
+        frames: u64,
+        solves: u64,
+        errors: u64,
+        bytes_in: u64,
+        bytes_out: u64,
+    ) {
         self.sessions_closed.fetch_add(1, Ordering::Relaxed);
         self.wire_frames.fetch_add(frames, Ordering::Relaxed);
         self.wire_solves.fetch_add(solves, Ordering::Relaxed);
         self.wire_errors.fetch_add(errors, Ordering::Relaxed);
+        self.wire_bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
+        self.wire_bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
     }
 
     /// Fold a lane-engine snapshot into a metrics snapshot (the service
@@ -620,7 +647,7 @@ mod tests {
         m.session_opened();
         m.session_opened();
         m.session_opened();
-        m.session_closed(10, 7, 1);
+        m.session_closed(10, 7, 1, 4096, 2048);
         let s = m.snapshot();
         assert_eq!(s.sessions_total, 3);
         assert_eq!(s.active_sessions, 2);
@@ -628,14 +655,17 @@ mod tests {
         assert_eq!(s.wire_frames, 10);
         assert_eq!(s.wire_solves, 7);
         assert_eq!(s.wire_errors, 1);
-        m.session_closed(5, 5, 0);
-        m.session_closed(1, 0, 1);
+        assert_eq!((s.wire_bytes_in, s.wire_bytes_out), (4096, 2048));
+        m.session_closed(5, 5, 0, 100, 200);
+        m.session_closed(1, 0, 1, 10, 20);
         m.sessions_shed.fetch_add(2, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.active_sessions, 0);
         assert_eq!(s.peak_sessions, 3, "peak is a high-water mark, not current");
         assert_eq!(s.sessions_shed, 2);
         assert_eq!((s.wire_frames, s.wire_solves, s.wire_errors), (16, 12, 2));
+        assert_eq!((s.wire_bytes_in, s.wire_bytes_out), (4206, 2268));
+        assert_eq!(s.binary_sessions, 0, "negotiation is latched by the session loop");
         // Reopening after a drain keeps the peak monotone.
         m.session_opened();
         assert_eq!(m.snapshot().peak_sessions, 3);

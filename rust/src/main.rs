@@ -76,6 +76,9 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
     if args.flag("profile") {
         return cmd_solve_profiled(args);
     }
+    if args.flag("binary") {
+        return cmd_solve_binary(args);
+    }
     let n = args.opt_parsed("n", 512usize)?;
     let seed = args.opt_parsed("seed", 7u64)?;
     let kind = args.opt("kind").unwrap_or("dense");
@@ -193,6 +196,157 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
             return Err(ebv_solve::EbvError::Config(format!("unknown kind `{other}`")));
         }
     }
+    Ok(())
+}
+
+/// `solve --binary`: drive a complete negotiated wire session in
+/// process — an NDJSON solve carrying the `accept_binary` offer, the
+/// same matrix again as a length-prefixed binary frame (fresh RHS, so
+/// the second solve rides the factor cache), `metrics`, `shutdown` —
+/// then decode the mixed response stream and report what the binary
+/// encoding saves on the payload-heavy frames. Doubles as the
+/// end-to-end binary exercise the CI smoke leg runs.
+fn cmd_solve_binary(args: &Args) -> ebv_solve::Result<()> {
+    use ebv_solve::wire::{
+        binary, encode_request, encode_request_negotiating, encode_response, RequestFrame,
+        ResponseFrame, WireSolve,
+    };
+
+    let n = args.opt_parsed("n", 512usize)?;
+    let seed = args.opt_parsed("seed", 7u64)?;
+    let kind = args.opt("kind").unwrap_or("dense");
+    let lanes = args.opt_positive("lanes", ebv_solve::exec::default_lanes())?;
+    let cfg = ServiceConfig {
+        lanes,
+        engine_lanes: lanes,
+        panel_width: args.opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
+        kernel: kernel_arg(args)?,
+        sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
+        ..ServiceConfig::default()
+    };
+    let svc = SolverService::start(cfg)?;
+
+    // Same matrix twice with fresh right-hand sides: the NDJSON frame
+    // offers `accept_binary`, the repeat travels binary and must hit
+    // the factor cache (identical content fingerprint, so identical
+    // `matrix_key` in both replies).
+    let (req1, req2) = match kind {
+        "dense" => {
+            let a = diag_dominant_dense(n, GenSeed(seed));
+            let b1 = rhs(n, GenSeed(seed ^ 1));
+            let b2 = rhs(n, GenSeed(seed ^ 2));
+            (
+                RequestFrame::Solve(WireSolve::dense(a.clone(), b1).with_id(1)),
+                RequestFrame::Solve(WireSolve::dense(a, b2).with_id(2)),
+            )
+        }
+        "sparse" | "poisson" => {
+            let a = if kind == "sparse" {
+                diag_dominant_sparse(n, 5, GenSeed(seed))
+            } else {
+                let g = (n as f64).sqrt().round().max(2.0) as usize;
+                poisson_2d(g)
+            };
+            let b1 = rhs(a.rows(), GenSeed(seed ^ 1));
+            let b2 = rhs(a.rows(), GenSeed(seed ^ 2));
+            (
+                RequestFrame::SolveSparse(WireSolve::sparse(a.clone(), b1).with_id(1)),
+                RequestFrame::SolveSparse(WireSolve::sparse(a, b2).with_id(2)),
+            )
+        }
+        other => {
+            return Err(ebv_solve::EbvError::Config(format!("unknown kind `{other}`")));
+        }
+    };
+
+    let req_ndjson_len = encode_request(&req2).len() + 1;
+    let req_binary = binary::encode_request_binary(&req2)?;
+    let req_binary_len = req_binary.len();
+
+    let mut input = Vec::new();
+    input.extend_from_slice(encode_request_negotiating(&req1).as_bytes());
+    input.push(b'\n');
+    input.extend_from_slice(&req_binary);
+    input.extend_from_slice(encode_request(&RequestFrame::Metrics).as_bytes());
+    input.push(b'\n');
+    input.extend_from_slice(encode_request(&RequestFrame::Shutdown).as_bytes());
+    input.push(b'\n');
+
+    let t0 = Instant::now();
+    let mut out = Vec::new();
+    let stats = serve_session_with(&svc, &input[..], &mut out, SessionOptions::default())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let frames = binary::decode_response_stream(&out)?;
+    let mut solutions = Vec::new();
+    let mut binary_sessions = 0u64;
+    for (frame, _ext) in &frames {
+        match frame {
+            ResponseFrame::Solution(s) => match &s.result {
+                Ok(_) => solutions.push(s.clone()),
+                Err(e) => {
+                    return Err(ebv_solve::EbvError::Runtime(format!(
+                        "solve {} failed on the wire: {e}",
+                        s.id
+                    )));
+                }
+            },
+            ResponseFrame::Metrics(m) => binary_sessions = m.binary_sessions,
+            ResponseFrame::Error { code, message } => {
+                return Err(ebv_solve::EbvError::Runtime(format!(
+                    "wire session answered `{}`: {message}",
+                    code.name()
+                )));
+            }
+            ResponseFrame::Goodbye { .. } => {}
+        }
+    }
+    let [s1, s2] = &solutions[..] else {
+        return Err(ebv_solve::EbvError::Runtime(format!(
+            "expected 2 solutions, got {}",
+            solutions.len()
+        )));
+    };
+    if binary_sessions != 1 {
+        return Err(ebv_solve::EbvError::Runtime(format!(
+            "metrics report {binary_sessions} binary sessions, expected 1"
+        )));
+    }
+    if s1.matrix_key != s2.matrix_key || s1.matrix_key.is_none() {
+        return Err(ebv_solve::EbvError::Runtime(format!(
+            "fingerprint keys disagree across encodings: {:?} vs {:?}",
+            s1.matrix_key, s2.matrix_key
+        )));
+    }
+
+    let sol_ndjson_len = encode_response(&ResponseFrame::Solution(s2.clone())).len() + 1;
+    let sol_binary_len = binary::encode_solution_binary(s2)?.len();
+    println!(
+        "{kind} n={n} --binary: negotiated session ok in {} \
+         (2 solves, residuals {:.3e} / {:.3e}, shared matrix_key)",
+        fmt::secs(wall),
+        s1.residual,
+        s2.residual
+    );
+    println!(
+        "  solve request:  {} NDJSON -> {} binary ({:.1}x smaller)",
+        fmt::bytes(req_ndjson_len as u64),
+        fmt::bytes(req_binary_len as u64),
+        req_ndjson_len as f64 / req_binary_len as f64
+    );
+    println!(
+        "  solution frame: {} NDJSON -> {} binary ({:.1}x smaller)",
+        fmt::bytes(sol_ndjson_len as u64),
+        fmt::bytes(sol_binary_len as u64),
+        sol_ndjson_len as f64 / sol_binary_len as f64
+    );
+    println!(
+        "  session: {} frames, bytes_in={} bytes_out={}",
+        stats.frames,
+        fmt::bytes(stats.bytes_in),
+        fmt::bytes(stats.bytes_out)
+    );
+    svc.shutdown();
     Ok(())
 }
 
@@ -442,19 +596,27 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
     };
     if let Some(stats) = stats {
         eprintln!(
-            "session done: {} frames, {} solves, {} errors",
-            stats.frames, stats.solves, stats.errors
+            "session done: {} frames, {} solves, {} errors, {} in, {} out",
+            stats.frames,
+            stats.solves,
+            stats.errors,
+            fmt::bytes(stats.bytes_in),
+            fmt::bytes(stats.bytes_out)
         );
     }
     let snap = svc.metrics_snapshot();
     eprintln!(
-        "sessions: total={} peak={} shed={} wire_frames={} wire_solves={} wire_errors={}",
+        "sessions: total={} peak={} shed={} binary={} wire_frames={} wire_solves={} \
+         wire_errors={} bytes_in={} bytes_out={}",
         snap.sessions_total,
         snap.peak_sessions,
         snap.sessions_shed,
+        snap.binary_sessions,
         snap.wire_frames,
         snap.wire_solves,
-        snap.wire_errors
+        snap.wire_errors,
+        snap.wire_bytes_in,
+        snap.wire_bytes_out
     );
     eprintln!("metrics: {}", svc.metrics().summary());
     let e = svc.engine().stats();

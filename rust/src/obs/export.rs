@@ -68,6 +68,9 @@ pub fn prometheus(m: &MetricsSnapshot) -> String {
     counter("wire_errors_total", "Error frames written across all sessions.", m.wire_errors);
     counter("wire_ingest_ns_total", "Profiled nanoseconds decoding request frames.", m.wire_ingest_ns);
     counter("wire_encode_ns_total", "Profiled nanoseconds encoding response frames.", m.wire_encode_ns);
+    counter("binary_sessions_total", "Sessions that negotiated the binary frame encoding.", m.binary_sessions);
+    counter("wire_bytes_in_total", "Transport bytes read from peers, both frame formats.", m.wire_bytes_in);
+    counter("wire_bytes_out_total", "Transport bytes written to peers, both frame formats.", m.wire_bytes_out);
     let mut gauge = |name: &str, help: &str, v: f64| {
         let _ = writeln!(out, "# HELP ebv_{name} {help}");
         let _ = writeln!(out, "# TYPE ebv_{name} gauge");
@@ -218,6 +221,9 @@ mod tests {
             wire_errors: 44,
             wire_ingest_ns: 45,
             wire_encode_ns: 46,
+            binary_sessions: 47,
+            wire_bytes_in: 48,
+            wire_bytes_out: 49,
         }
     }
 
@@ -242,6 +248,9 @@ mod tests {
             "ebv_wire_errors_total 44",
             "ebv_wire_ingest_ns_total 45",
             "ebv_wire_encode_ns_total 46",
+            "ebv_binary_sessions_total 47",
+            "ebv_wire_bytes_in_total 48",
+            "ebv_wire_bytes_out_total 49",
             "ebv_kernel{kernel=\"tiled\"} 1",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");

@@ -1,0 +1,707 @@
+//! Binary wire frames: the negotiated fast path for payload-heavy
+//! frames (`docs/PROTOCOL.md` §Binary frames).
+//!
+//! NDJSON stays the session default and the only control-plane
+//! encoding — `metrics`, `error`, `goodbye`, and failed solutions are
+//! always text. What moves to binary, once a session negotiates it
+//! with `accept_binary` (see [`super::codec::FrameExt`]), are the
+//! frames that carry megabyte float columns: dense/sparse solve
+//! requests and ok-solutions. Those columns travel as verbatim
+//! little-endian `f64` bits (index arrays as `u32le`), so a binary
+//! round trip is bit-identical by construction — no decimal parse on
+//! ingest, no decimal format on emit — and every bit-identity ledger
+//! guarantee is format-inert (`rust/tests/wire_binary.rs` pins
+//! NDJSON ≡ binary with `to_bits`).
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! header (12 bytes):  magic 0xEB 0x56 | version u8 | kind u8 | payload_len u64le
+//! kind 0x01 solve:        flags u8 | rows u32 | cols u32 | [id u64] | [key u64]
+//!                         | values f64le × rows*cols | b f64le × rows
+//! kind 0x02 solve_sparse: flags u8 | rows u32 | cols u32 | nnz u32 | [id u64] | [key u64]
+//!                         | row u32le × nnz | col u32le × nnz | val f64le × nnz
+//!                         | b f64le × rows
+//! kind 0x03 solution:     flags u8 | id u64 | batch_size u32 | n u32 | [matrix_key u64]
+//!                         | residual f64le | queue_secs f64le | batch_secs f64le
+//!                         | exec_secs f64le | backend_len u8 | backend utf-8
+//!                         | x f64le × n
+//! ```
+//!
+//! The magic's first byte (`0xEB`) can never begin a JSON document
+//! (compile-time pinned against [`super::scanner::can_start_json`]),
+//! so the session reader dispatches per frame on one peeked byte and
+//! mixed NDJSON/binary sessions are unambiguous. `payload_len` is
+//! declared up front and checked against the session's
+//! `max_frame_bytes` cap *before* any payload allocation — an absurd
+//! declaration costs an `oversized` error frame and a streaming
+//! discard, never memory.
+
+use crate::coordinator::request::Timings;
+use crate::matrix::{CooMatrix, DenseMatrix};
+use crate::util::error::{EbvError, Result};
+use crate::wire::codec::{decode_response_ext, FrameExt};
+use crate::wire::fingerprint::{combine_dense, fingerprint_csr, fingerprint_csr_pattern, Fnv1a};
+use crate::wire::frame::{RequestFrame, ResponseFrame, WireMatrix, WireSolution, WireSolve};
+use crate::wire::scanner::can_start_json;
+
+/// Frame magic: `0xEB 0x56` ("EBV"). The first byte is deliberately
+/// outside the set of bytes that can start a JSON document.
+pub const MAGIC: [u8; 2] = [0xEB, 0x56];
+
+/// Binary framing version; a bump is a protocol revision.
+pub const VERSION: u8 = 1;
+
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// Dense solve request (`op: "solve"` equivalent).
+pub const KIND_SOLVE_DENSE: u8 = 0x01;
+/// Sparse solve request (`op: "solve_sparse"` equivalent, COO triplets).
+pub const KIND_SOLVE_SPARSE: u8 = 0x02;
+/// Ok-solution response (`op: "solution"`, `ok: true` equivalent).
+pub const KIND_SOLUTION: u8 = 0x03;
+
+// The whole dispatch scheme rests on this byte being un-confusable
+// with the start of an NDJSON frame.
+const _: () = assert!(!can_start_json(MAGIC[0]), "binary magic must not start JSON");
+
+/// Request flags (kinds 0x01/0x02).
+const FLAG_ID: u8 = 0x01;
+const FLAG_KEY: u8 = 0x02;
+const FLAG_NO_CACHE: u8 = 0x04;
+/// Solution flags (kind 0x03).
+const FLAG_MATRIX_KEY: u8 = 0x01;
+
+/// Ids and keys share the NDJSON integer range (53-bit JSON-safe, see
+/// [`super::fingerprint::KEY_MASK`] docs) so a value that decodes from
+/// one format always decodes from the other.
+const MAX_WIRE_INT: u64 = 1 << 53;
+
+fn berr(msg: impl Into<String>) -> EbvError {
+    EbvError::Json(format!("binary frame: {}", msg.into()))
+}
+
+/// Does this byte open a binary frame? The session reader peeks one
+/// byte per frame and dispatches on this.
+pub fn is_magic(byte: u8) -> bool {
+    byte == MAGIC[0]
+}
+
+/// A parsed frame header: the kind byte and the declared payload
+/// length. The length is a *claim* — validate it against the session
+/// cap before allocating anything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: u8,
+    pub payload_len: u64,
+}
+
+/// Encode a frame header.
+pub fn encode_header(kind: u8, payload_len: u64) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0] = MAGIC[0];
+    h[1] = MAGIC[1];
+    h[2] = VERSION;
+    h[3] = kind;
+    h[4..12].copy_from_slice(&payload_len.to_le_bytes());
+    h
+}
+
+/// Parse and validate a frame header (magic + version; the kind byte is
+/// passed through so the payload decoder can reject unknown kinds
+/// *after* the declared payload has been consumed — framing stays in
+/// sync across the error).
+pub fn parse_header(bytes: &[u8; HEADER_LEN]) -> Result<FrameHeader> {
+    if bytes[0] != MAGIC[0] || bytes[1] != MAGIC[1] {
+        return Err(berr(format!("bad magic {:#04x} {:#04x}", bytes[0], bytes[1])));
+    }
+    if bytes[2] != VERSION {
+        return Err(berr(format!("unsupported version {} (this peer speaks {VERSION})", bytes[2])));
+    }
+    let payload_len = u64::from_le_bytes(bytes[4..12].try_into().expect("8 bytes"));
+    Ok(FrameHeader { kind: bytes[3], payload_len })
+}
+
+// ---- little-endian cursor ---------------------------------------------------
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(bytes: &'a [u8]) -> Cursor<'a> {
+        Cursor { bytes, at: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&end| end <= self.bytes.len())
+            .ok_or_else(|| berr(format!("payload truncated reading {what}")))?;
+        let s = &self.bytes[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn done(&self, kind: &str) -> Result<()> {
+        if self.at == self.bytes.len() {
+            Ok(())
+        } else {
+            Err(berr(format!(
+                "{kind} payload length mismatch: {} bytes declared, {} consumed",
+                self.bytes.len(),
+                self.at
+            )))
+        }
+    }
+}
+
+fn push_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn as_u32(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n).map_err(|_| berr(format!("{what} = {n} exceeds the u32 wire range")))
+}
+
+fn wire_int(x: u64, what: &str) -> Result<u64> {
+    if x <= MAX_WIRE_INT {
+        Ok(x)
+    } else {
+        Err(berr(format!("{what} = {x} exceeds the 53-bit wire integer range")))
+    }
+}
+
+// ---- requests ---------------------------------------------------------------
+
+fn request_flags(ws: &WireSolve) -> u8 {
+    let mut flags = 0u8;
+    if ws.id.is_some() {
+        flags |= FLAG_ID;
+    }
+    if ws.key.is_some() {
+        flags |= FLAG_KEY;
+    }
+    if ws.no_cache {
+        flags |= FLAG_NO_CACHE;
+    }
+    flags
+}
+
+fn push_request_common(out: &mut Vec<u8>, ws: &WireSolve) -> Result<()> {
+    if let Some(id) = ws.id {
+        push_u64(out, wire_int(id, "id")?);
+    }
+    if let Some(key) = ws.key {
+        push_u64(out, wire_int(key, "key")?);
+    }
+    Ok(())
+}
+
+/// Encode a solve request as one complete binary frame (header +
+/// payload). Control frames (`metrics`/`shutdown`) have no binary form
+/// — they are NDJSON by specification — and are refused here.
+pub fn encode_request_binary(frame: &RequestFrame) -> Result<Vec<u8>> {
+    let (kind, ws) = match frame {
+        RequestFrame::Solve(ws) => (KIND_SOLVE_DENSE, ws),
+        RequestFrame::SolveSparse(ws) => (KIND_SOLVE_SPARSE, ws),
+        RequestFrame::Metrics | RequestFrame::Shutdown => {
+            return Err(berr("control frames are NDJSON-only"));
+        }
+    };
+    let mut payload = Vec::new();
+    payload.push(request_flags(ws));
+    match (&ws.matrix, kind) {
+        (WireMatrix::Dense(a), KIND_SOLVE_DENSE) => {
+            push_u32(&mut payload, as_u32(a.rows(), "rows")?);
+            push_u32(&mut payload, as_u32(a.cols(), "cols")?);
+            push_request_common(&mut payload, ws)?;
+            payload.reserve(8 * (a.data().len() + ws.b.len()));
+            for &v in a.data() {
+                push_f64(&mut payload, v);
+            }
+            for &v in &ws.b {
+                push_f64(&mut payload, v);
+            }
+        }
+        (WireMatrix::Sparse(a), KIND_SOLVE_SPARSE) => {
+            push_u32(&mut payload, as_u32(a.rows(), "rows")?);
+            push_u32(&mut payload, as_u32(a.cols(), "cols")?);
+            push_u32(&mut payload, as_u32(a.nnz(), "nnz")?);
+            push_request_common(&mut payload, ws)?;
+            payload.reserve(8 * (2 * a.nnz() + ws.b.len()));
+            // Expand CSR back to COO rows, exactly like the NDJSON
+            // `row` member.
+            for r in 0..a.rows() {
+                for _ in a.row_ptr()[r]..a.row_ptr()[r + 1] {
+                    push_u32(&mut payload, r as u32);
+                }
+            }
+            for &j in a.col_idx() {
+                push_u32(&mut payload, as_u32(j, "col index")?);
+            }
+            for &v in a.values() {
+                push_f64(&mut payload, v);
+            }
+            for &v in &ws.b {
+                push_f64(&mut payload, v);
+            }
+        }
+        _ => unreachable!("frame kind and matrix variant are kept consistent"),
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&encode_header(kind, payload.len() as u64));
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+fn read_request_common(cur: &mut Cursor, flags: u8) -> Result<(Option<u64>, Option<u64>, bool)> {
+    let id = if flags & FLAG_ID != 0 { Some(wire_int(cur.u64("id")?, "id")?) } else { None };
+    let key = if flags & FLAG_KEY != 0 { Some(wire_int(cur.u64("key")?, "key")?) } else { None };
+    Ok((id, key, flags & FLAG_NO_CACHE != 0))
+}
+
+/// Exact payload size a dense/sparse request header block implies —
+/// checked against the declared length before the column vectors are
+/// materialised, so a length/payload mismatch is a typed error.
+fn expect_len(kind: &str, declared: usize, fixed: u128, elems: u128) -> Result<()> {
+    let want = fixed + 8 * elems;
+    if declared as u128 != want {
+        return Err(berr(format!(
+            "{kind} payload length mismatch: {declared} bytes declared, {want} implied by shape"
+        )));
+    }
+    Ok(())
+}
+
+fn decode_dense_payload(payload: &[u8]) -> Result<WireSolve> {
+    let mut cur = Cursor::new(payload);
+    let flags = cur.u8("flags")?;
+    let rows = cur.u32("rows")? as usize;
+    let cols = cur.u32("cols")? as usize;
+    let (id, key, no_cache) = read_request_common(&mut cur, flags)?;
+    let fixed = cur.at as u128;
+    let cells = rows as u128 * cols as u128;
+    expect_len("solve", payload.len(), fixed, cells + rows as u128)?;
+
+    // Hash in row-major stream order — identical to the NDJSON scan, so
+    // the auto-key is format-independent.
+    let mut hash = Fnv1a::new();
+    let mut values = Vec::with_capacity(rows * cols);
+    for _ in 0..rows * cols {
+        let v = cur.f64("values")?;
+        hash.write_f64(v);
+        values.push(v);
+    }
+    let mut b = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        b.push(cur.f64("b")?);
+    }
+    cur.done("solve")?;
+    let fingerprint = combine_dense(rows, cols, hash.finish());
+    let a = DenseMatrix::from_vec(rows, cols, values)
+        .map_err(|e| berr(format!("dense payload: {e}")))?;
+    Ok(WireSolve {
+        id,
+        matrix: WireMatrix::Dense(a),
+        b,
+        key,
+        no_cache,
+        fingerprint,
+        pattern_fingerprint: None,
+    })
+}
+
+fn decode_sparse_payload(payload: &[u8]) -> Result<WireSolve> {
+    let mut cur = Cursor::new(payload);
+    let flags = cur.u8("flags")?;
+    let rows = cur.u32("rows")? as usize;
+    let cols = cur.u32("cols")? as usize;
+    let nnz = cur.u32("nnz")? as usize;
+    let (id, key, no_cache) = read_request_common(&mut cur, flags)?;
+    let fixed = cur.at as u128 + 8 * nnz as u128; // row + col arrays are u32
+    expect_len("solve_sparse", payload.len(), fixed, nnz as u128 + rows as u128)?;
+
+    let mut coo = CooMatrix::new(rows, cols);
+    let mut ri = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        ri.push(cur.u32("row")? as usize);
+    }
+    let mut ci = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        ci.push(cur.u32("col")? as usize);
+    }
+    for (&i, &j) in ri.iter().zip(&ci) {
+        let v = cur.f64("val")?;
+        coo.push(i, j, v).map_err(|e| berr(format!("triplet payload: {e}")))?;
+    }
+    let mut b = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        b.push(cur.f64("b")?);
+    }
+    cur.done("solve_sparse")?;
+    // Identical to the NDJSON path: fingerprint the assembled CSR so
+    // triplet order (and wire format) cannot split the cache key.
+    let a = coo.to_csr();
+    let fingerprint = fingerprint_csr(&a);
+    let pattern_fingerprint = Some(fingerprint_csr_pattern(&a));
+    Ok(WireSolve {
+        id,
+        matrix: WireMatrix::Sparse(a),
+        b,
+        key,
+        no_cache,
+        fingerprint,
+        pattern_fingerprint,
+    })
+}
+
+/// Decode a binary request payload. The solution kind is refused in
+/// this direction; unknown kinds are a decode error (new kinds are a
+/// protocol revision, not a silent extension).
+pub fn decode_request_payload(kind: u8, payload: &[u8]) -> Result<RequestFrame> {
+    match kind {
+        KIND_SOLVE_DENSE => decode_dense_payload(payload).map(RequestFrame::Solve),
+        KIND_SOLVE_SPARSE => decode_sparse_payload(payload).map(RequestFrame::SolveSparse),
+        KIND_SOLUTION => Err(berr("kind 0x03 (solution) is a response frame")),
+        other => Err(berr(format!("unknown frame kind {other:#04x}"))),
+    }
+}
+
+// ---- solutions --------------------------------------------------------------
+
+/// Header + everything before the `x` column block of an ok-solution
+/// frame, appended to `out`. The emitter streams the columns after
+/// this prefix in bounded chunks (see
+/// [`super::codec::ResponseWriter`]); `encode_solution_binary` is the
+/// one-shot convenience for tests and benches.
+pub fn push_solution_prefix(out: &mut Vec<u8>, s: &WireSolution) -> Result<()> {
+    let x = s.result.as_ref().map_err(|_| berr("failed solutions are NDJSON-only"))?;
+    let n = as_u32(x.len(), "solution length")?;
+    let backend = s.backend.as_bytes();
+    let backend_len =
+        u8::try_from(backend.len()).map_err(|_| berr("backend name exceeds 255 bytes"))?;
+    let flags = if s.matrix_key.is_some() { FLAG_MATRIX_KEY } else { 0 };
+    let fixed = 1 + 8 + 4 + 4
+        + if s.matrix_key.is_some() { 8 } else { 0 }
+        + 4 * 8
+        + 1
+        + backend.len();
+    let payload_len = fixed as u64 + 8 * x.len() as u64;
+
+    out.extend_from_slice(&encode_header(KIND_SOLUTION, payload_len));
+    out.push(flags);
+    push_u64(out, wire_int(s.id, "id")?);
+    push_u32(out, as_u32(s.batch_size, "batch_size")?);
+    push_u32(out, n);
+    if let Some(k) = s.matrix_key {
+        push_u64(out, wire_int(k, "matrix_key")?);
+    }
+    // Raw bits: unlike NDJSON (which canonicalises non-finite values to
+    // `null`), binary preserves the exact residual bit pattern.
+    push_f64(out, s.residual);
+    push_f64(out, s.timings.queue_secs);
+    push_f64(out, s.timings.batch_secs);
+    push_f64(out, s.timings.exec_secs);
+    out.push(backend_len);
+    out.extend_from_slice(backend);
+    Ok(())
+}
+
+/// One-shot binary encoding of an ok-solution (header + payload).
+pub fn encode_solution_binary(s: &WireSolution) -> Result<Vec<u8>> {
+    let x = s.result.as_ref().map_err(|_| berr("failed solutions are NDJSON-only"))?;
+    let mut out = Vec::new();
+    push_solution_prefix(&mut out, s)?;
+    out.reserve(8 * x.len());
+    for &v in x {
+        push_f64(&mut out, v);
+    }
+    Ok(out)
+}
+
+/// Decode a solution payload (the client half).
+pub fn decode_solution_payload(payload: &[u8]) -> Result<WireSolution> {
+    let mut cur = Cursor::new(payload);
+    let flags = cur.u8("flags")?;
+    let id = wire_int(cur.u64("id")?, "id")?;
+    let batch_size = cur.u32("batch_size")? as usize;
+    let n = cur.u32("n")? as usize;
+    let matrix_key = if flags & FLAG_MATRIX_KEY != 0 {
+        Some(wire_int(cur.u64("matrix_key")?, "matrix_key")?)
+    } else {
+        None
+    };
+    let residual = cur.f64("residual")?;
+    let timings = Timings {
+        queue_secs: cur.f64("queue_secs")?,
+        batch_secs: cur.f64("batch_secs")?,
+        exec_secs: cur.f64("exec_secs")?,
+    };
+    let backend_len = cur.u8("backend_len")? as usize;
+    let backend = std::str::from_utf8(cur.take(backend_len, "backend")?)
+        .map_err(|_| berr("backend name is not UTF-8"))?
+        .to_string();
+    if payload.len() - cur.at != 8 * n {
+        return Err(berr(format!(
+            "solution payload length mismatch: {} column bytes, {} implied by n",
+            payload.len() - cur.at,
+            8 * n
+        )));
+    }
+    let mut x = Vec::with_capacity(n);
+    for _ in 0..n {
+        x.push(cur.f64("x")?);
+    }
+    cur.done("solution")?;
+    Ok(WireSolution { id, result: Ok(x), residual, backend, batch_size, matrix_key, timings })
+}
+
+// ---- client-side stream splitting -------------------------------------------
+
+/// Split a mixed NDJSON/binary response byte stream into decoded
+/// frames — the client half of a negotiated session. Binary frames
+/// (always ok-solutions in this direction) report a default
+/// [`FrameExt`]; NDJSON frames surface the server's `accept_binary`
+/// ack through theirs.
+pub fn decode_response_stream(bytes: &[u8]) -> Result<Vec<(ResponseFrame, FrameExt)>> {
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while at < bytes.len() {
+        if is_magic(bytes[at]) {
+            let header: &[u8; HEADER_LEN] = bytes
+                .get(at..at + HEADER_LEN)
+                .and_then(|h| h.try_into().ok())
+                .ok_or_else(|| berr("truncated header"))?;
+            let hdr = parse_header(header)?;
+            let len = usize::try_from(hdr.payload_len)
+                .map_err(|_| berr("declared payload exceeds this platform"))?;
+            let payload = bytes
+                .get(at + HEADER_LEN..at + HEADER_LEN + len)
+                .ok_or_else(|| berr("truncated payload"))?;
+            if hdr.kind != KIND_SOLUTION {
+                return Err(berr(format!("unexpected response kind {:#04x}", hdr.kind)));
+            }
+            out.push((
+                ResponseFrame::Solution(decode_solution_payload(payload)?),
+                FrameExt::default(),
+            ));
+            at += HEADER_LEN + len;
+        } else {
+            let end = bytes[at..]
+                .iter()
+                .position(|&b| b == b'\n')
+                .map_or(bytes.len(), |p| at + p);
+            let line = std::str::from_utf8(&bytes[at..end])
+                .map_err(|_| berr("response line is not UTF-8"))?
+                .trim();
+            if !line.is_empty() {
+                out.push(decode_response_ext(line)?);
+            }
+            at = end + 1;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, GenSeed};
+    use crate::wire::codec::{decode_request, encode_request};
+
+    fn bits(xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn header_round_trips_and_is_stable() {
+        let h = encode_header(KIND_SOLVE_DENSE, 16);
+        assert_eq!(h, [0xEB, 0x56, 0x01, 0x01, 0x10, 0, 0, 0, 0, 0, 0, 0]);
+        let parsed = parse_header(&h).unwrap();
+        assert_eq!(parsed, FrameHeader { kind: KIND_SOLVE_DENSE, payload_len: 16 });
+        // Unknown kinds pass the header (so the payload can be skipped
+        // in sync); bad magic/version do not.
+        assert_eq!(parse_header(&encode_header(0x7F, 0)).unwrap().kind, 0x7F);
+        let mut bad = h;
+        bad[1] = 0x00;
+        assert!(parse_header(&bad).is_err());
+        let mut bad = h;
+        bad[2] = 9;
+        assert!(parse_header(&bad).unwrap_err().to_string().contains("version"), "{bad:?}");
+    }
+
+    #[test]
+    fn dense_request_decodes_bitwise_identical_to_ndjson() {
+        let a = diag_dominant_dense(7, GenSeed(31));
+        let ws = WireSolve::dense(a, vec![0.25, -1.5, 3.0, 0.125, 9.0, -2.0, 1.0])
+            .with_id(5)
+            .with_key(77);
+        let frame = RequestFrame::Solve(ws);
+        let text = decode_request(&encode_request(&frame)).unwrap();
+        let bin = encode_request_binary(&frame).unwrap();
+        let hdr = parse_header(bin[..HEADER_LEN].try_into().unwrap()).unwrap();
+        assert_eq!(hdr.payload_len as usize, bin.len() - HEADER_LEN);
+        let back = decode_request_payload(hdr.kind, &bin[HEADER_LEN..]).unwrap();
+        assert_eq!(back, text);
+        let (RequestFrame::Solve(t), RequestFrame::Solve(b)) = (&text, &back) else {
+            unreachable!()
+        };
+        assert_eq!(t.fingerprint, b.fingerprint, "auto-key is format-independent");
+        let (WireMatrix::Dense(ta), WireMatrix::Dense(ba)) = (&t.matrix, &b.matrix) else {
+            unreachable!()
+        };
+        assert_eq!(bits(ta.data()), bits(ba.data()));
+        assert_eq!(bits(&t.b), bits(&b.b));
+    }
+
+    #[test]
+    fn sparse_request_decodes_bitwise_identical_to_ndjson() {
+        let a = diag_dominant_sparse(10, 3, GenSeed(32));
+        let ws = WireSolve::sparse(a, vec![0.5; 10]).without_cache();
+        let frame = RequestFrame::SolveSparse(ws);
+        let text = decode_request(&encode_request(&frame)).unwrap();
+        let bin = encode_request_binary(&frame).unwrap();
+        let hdr = parse_header(bin[..HEADER_LEN].try_into().unwrap()).unwrap();
+        let back = decode_request_payload(hdr.kind, &bin[HEADER_LEN..]).unwrap();
+        assert_eq!(back, text);
+        let (RequestFrame::SolveSparse(t), RequestFrame::SolveSparse(b)) = (&text, &back) else {
+            unreachable!()
+        };
+        assert_eq!(t.fingerprint, b.fingerprint);
+        assert_eq!(t.pattern_fingerprint, b.pattern_fingerprint);
+        assert!(b.no_cache);
+    }
+
+    #[test]
+    fn solution_round_trips_with_exact_bits() {
+        let s = WireSolution {
+            id: 9,
+            result: Ok(vec![1.0, -0.0, 0.1 + 0.2, f64::MIN_POSITIVE]),
+            residual: f64::NAN,
+            backend: "native-ebv".into(),
+            batch_size: 3,
+            matrix_key: Some(0xABCDEF),
+            timings: Timings { queue_secs: 0.125, batch_secs: 0.25, exec_secs: 0.5 },
+        };
+        let bin = encode_solution_binary(&s).unwrap();
+        let hdr = parse_header(bin[..HEADER_LEN].try_into().unwrap()).unwrap();
+        assert_eq!(hdr.kind, KIND_SOLUTION);
+        let back = decode_solution_payload(&bin[HEADER_LEN..]).unwrap();
+        assert_eq!(bits(back.result.as_ref().unwrap()), bits(s.result.as_ref().unwrap()));
+        // Binary keeps the exact NaN pattern; -0.0 keeps its sign bit.
+        assert_eq!(back.residual.to_bits(), s.residual.to_bits());
+        assert_eq!(back.result.as_ref().unwrap()[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!((back.id, back.batch_size, back.matrix_key), (9, 3, Some(0xABCDEF)));
+        assert_eq!(back.backend, "native-ebv");
+        assert_eq!(back.timings, s.timings);
+    }
+
+    #[test]
+    fn control_frames_and_failed_solutions_have_no_binary_form() {
+        assert!(encode_request_binary(&RequestFrame::Metrics).is_err());
+        assert!(encode_request_binary(&RequestFrame::Shutdown).is_err());
+        let failed = WireSolution {
+            id: 1,
+            result: Err("zero pivot".into()),
+            residual: f64::NAN,
+            backend: "native-ebv".into(),
+            batch_size: 1,
+            matrix_key: None,
+            timings: Timings::default(),
+        };
+        assert!(encode_solution_binary(&failed).is_err());
+    }
+
+    #[test]
+    fn length_payload_mismatch_is_a_decode_error() {
+        let a = diag_dominant_dense(3, GenSeed(33));
+        let frame = RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 3]));
+        let bin = encode_request_binary(&frame).unwrap();
+        // Truncate one column byte: the shape now implies more bytes
+        // than the payload carries.
+        let payload = &bin[HEADER_LEN..bin.len() - 1];
+        let err = decode_request_payload(KIND_SOLVE_DENSE, payload).unwrap_err();
+        assert!(err.to_string().contains("length mismatch"), "{err}");
+        // Same in the other direction: extra bytes are refused too.
+        let mut fat = bin[HEADER_LEN..].to_vec();
+        fat.push(0);
+        assert!(decode_request_payload(KIND_SOLVE_DENSE, &fat).is_err());
+    }
+
+    #[test]
+    fn hostile_kinds_and_out_of_range_fields_are_refused() {
+        assert!(decode_request_payload(KIND_SOLUTION, &[]).is_err());
+        assert!(decode_request_payload(0x5A, &[]).is_err());
+        // Out-of-bounds triplet indices fail assembly, like NDJSON.
+        let mut payload = vec![0u8]; // flags
+        push_u32(&mut payload, 2); // rows
+        push_u32(&mut payload, 2); // cols
+        push_u32(&mut payload, 1); // nnz
+        push_u32(&mut payload, 7); // row index out of bounds
+        push_u32(&mut payload, 0);
+        push_f64(&mut payload, 1.0);
+        push_f64(&mut payload, 1.0);
+        push_f64(&mut payload, 2.0);
+        let err = decode_request_payload(KIND_SOLVE_SPARSE, &payload).unwrap_err();
+        assert!(err.to_string().contains("triplet"), "{err}");
+        // A key outside the 53-bit wire range is refused on decode,
+        // mirroring the NDJSON integer rule.
+        let a = diag_dominant_dense(2, GenSeed(34));
+        let mut ws = WireSolve::dense(a, vec![1.0; 2]);
+        ws.key = Some(u64::MAX);
+        assert!(encode_request_binary(&RequestFrame::Solve(ws)).is_err());
+    }
+
+    #[test]
+    fn response_stream_splits_mixed_formats() {
+        let sol = WireSolution {
+            id: 2,
+            result: Ok(vec![4.0, 5.0]),
+            residual: 1e-13,
+            backend: "native-ebv".into(),
+            batch_size: 1,
+            matrix_key: None,
+            timings: Timings::default(),
+        };
+        let mut stream = Vec::new();
+        stream.extend_from_slice(b"{\"op\":\"error\",\"code\":\"busy\",\"error\":\"later\"}\n");
+        stream.extend_from_slice(&encode_solution_binary(&sol).unwrap());
+        stream.extend_from_slice(b"{\"op\":\"goodbye\",\"served\":1}\n");
+        let frames = decode_response_stream(&stream).unwrap();
+        assert_eq!(frames.len(), 3);
+        assert!(matches!(&frames[0].0, ResponseFrame::Error { .. }));
+        let ResponseFrame::Solution(s) = &frames[1].0 else { panic!("{frames:?}") };
+        assert_eq!(bits(s.result.as_ref().unwrap()), bits(&[4.0, 5.0]));
+        assert_eq!(frames[2].0, ResponseFrame::Goodbye { served: 1 });
+        // Truncation mid-frame is an error, not a silent drop.
+        assert!(decode_response_stream(&stream[..stream.len() - 30]).is_err());
+    }
+}

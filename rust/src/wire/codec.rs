@@ -26,7 +26,7 @@
 //! copy-pasteable session.
 
 use std::fmt::Write as _;
-use std::io::BufRead;
+use std::io::{BufRead, Write};
 
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::request::Timings;
@@ -140,6 +140,15 @@ fn expect_bool<R: BufRead>(sc: &mut Scanner<R>, field: &str) -> Result<bool> {
     }
 }
 
+/// Session-negotiation members that ride alongside a frame, outside
+/// the frame payload proper (`docs/PROTOCOL.md` §Binary frames).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FrameExt {
+    /// The peer offered (on a request) or acknowledged (on a response)
+    /// the binary frame encoding for the rest of the session.
+    pub accept_binary: bool,
+}
+
 /// Decode-time policy knobs.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct DecodeOptions {
@@ -166,6 +175,7 @@ struct ReqAcc {
     key: Option<u64>,
     no_cache: bool,
     mtx_path: Option<String>,
+    accept_binary: bool,
     /// Streaming hash of `values` in arrival (row-major) order.
     values_hash: Fnv1a,
 }
@@ -178,6 +188,12 @@ pub fn decode_request(line: &str) -> Result<RequestFrame> {
 /// Decode one request line. The scanner runs over the raw bytes; large
 /// payload arrays are ingested without constructing a `Json` tree.
 pub fn decode_request_with(line: &str, opts: &DecodeOptions) -> Result<RequestFrame> {
+    decode_request_ext(line, opts).map(|(frame, _)| frame)
+}
+
+/// Decode one request line, surfacing the session-negotiation members
+/// (`accept_binary`) alongside the frame.
+pub fn decode_request_ext(line: &str, opts: &DecodeOptions) -> Result<(RequestFrame, FrameExt)> {
     let mut sc = Scanner::new(line.as_bytes());
     match sc.next_event()? {
         Some(Event::ObjectStart) => {}
@@ -199,6 +215,7 @@ pub fn decode_request_with(line: &str, opts: &DecodeOptions) -> Result<RequestFr
                 }
                 "key" => acc.key = Some(as_index(expect_num(&mut sc, "key")?, "key")?),
                 "no_cache" => acc.no_cache = expect_bool(&mut sc, "no_cache")?,
+                "accept_binary" => acc.accept_binary = expect_bool(&mut sc, "accept_binary")?,
                 "mtx_path" => acc.mtx_path = Some(expect_str(&mut sc, "mtx_path")?),
                 "values" => {
                     // Last duplicate member wins (matching the tree
@@ -238,14 +255,16 @@ pub fn decode_request_with(line: &str, opts: &DecodeOptions) -> Result<RequestFr
     }
     sc.finish()?;
 
-    match acc.op.as_deref() {
-        Some("metrics") => Ok(RequestFrame::Metrics),
-        Some("shutdown") => Ok(RequestFrame::Shutdown),
-        Some("solve") => build_dense(acc).map(RequestFrame::Solve),
-        Some("solve_sparse") => build_sparse(acc, opts).map(RequestFrame::SolveSparse),
-        Some(other) => Err(jerr(format!("unknown op `{other}`"))),
-        None => Err(jerr("request frame missing `op`")),
-    }
+    let ext = FrameExt { accept_binary: acc.accept_binary };
+    let frame = match acc.op.as_deref() {
+        Some("metrics") => RequestFrame::Metrics,
+        Some("shutdown") => RequestFrame::Shutdown,
+        Some("solve") => RequestFrame::Solve(build_dense(acc)?),
+        Some("solve_sparse") => RequestFrame::SolveSparse(build_sparse(acc, opts)?),
+        Some(other) => return Err(jerr(format!("unknown op `{other}`"))),
+        None => return Err(jerr("request frame missing `op`")),
+    };
+    Ok((frame, ext))
 }
 
 fn require<T>(v: Option<T>, field: &str) -> Result<T> {
@@ -451,6 +470,21 @@ pub fn encode_request(frame: &RequestFrame) -> String {
     out
 }
 
+/// Stamp the negotiation member onto an already-encoded NDJSON frame.
+/// Member order on the wire is free, so the offer/ack simply goes
+/// first: `{"accept_binary":true,<rest of the frame>`.
+fn splice_accept_binary(line: &str) -> String {
+    debug_assert!(line.starts_with('{'), "frames are JSON objects: {line}");
+    format!("{{\"accept_binary\":true,{}", &line[1..])
+}
+
+/// Encode a request line that also offers the binary encoding for the
+/// rest of the session (`docs/PROTOCOL.md` §Binary frames). Works for
+/// any request frame — the offer commonly rides on the first solve.
+pub fn encode_request_negotiating(frame: &RequestFrame) -> String {
+    splice_accept_binary(&encode_request(frame))
+}
+
 /// Encode a response frame as one NDJSON line (no trailing newline).
 pub fn encode_response(frame: &ResponseFrame) -> String {
     let mut out = String::new();
@@ -554,45 +588,227 @@ pub fn encode_response(frame: &ResponseFrame) -> String {
                  \"wire_ingest_ns\":{},\"wire_encode_ns\":{}",
                 m.wire_frames, m.wire_solves, m.wire_errors, m.wire_ingest_ns, m.wire_encode_ns
             );
-            out.push('}');
-        }
-        ResponseFrame::Solution(s) => {
-            let _ = write!(out, "{{\"op\":\"solution\",\"id\":{}", s.id);
-            match &s.result {
-                Ok(x) => {
-                    out.push_str(",\"ok\":true,\"x\":");
-                    push_f64_array(&mut out, x);
-                }
-                Err(e) => {
-                    out.push_str(",\"ok\":false,\"error\":");
-                    emit_str(e, &mut out);
-                }
-            }
-            out.push_str(",\"residual\":");
-            push_num(&mut out, s.residual);
-            out.push_str(",\"backend\":");
-            emit_str(&s.backend, &mut out);
-            let _ = write!(out, ",\"batch_size\":{}", s.batch_size);
-            if let Some(k) = s.matrix_key {
-                let _ = write!(out, ",\"matrix_key\":{k}");
-            }
             let _ = write!(
                 out,
-                ",\"timings\":{{\"queue_secs\":{},\"batch_secs\":{},\"exec_secs\":{}}}",
-                fmt_num(s.timings.queue_secs),
-                fmt_num(s.timings.batch_secs),
-                fmt_num(s.timings.exec_secs)
+                ",\"binary_sessions\":{},\"wire_bytes_in\":{},\"wire_bytes_out\":{}",
+                m.binary_sessions, m.wire_bytes_in, m.wire_bytes_out
             );
             out.push('}');
         }
+        ResponseFrame::Solution(s) => match &s.result {
+            Ok(x) => {
+                push_solution_head(&mut out, s);
+                for (i, &v) in x.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    push_num(&mut out, v);
+                }
+                push_solution_tail(&mut out, s);
+            }
+            Err(e) => {
+                let _ = write!(out, "{{\"op\":\"solution\",\"id\":{}", s.id);
+                out.push_str(",\"ok\":false,\"error\":");
+                emit_str(e, &mut out);
+                push_solution_meta(&mut out, s);
+                out.push('}');
+            }
+        },
     }
     out
+}
+
+/// Everything of an ok-solution line before the `x` elements. Shared
+/// between `encode_response` and the chunked [`ResponseWriter`] so the
+/// streamed emission is byte-identical to the one-shot encoding by
+/// construction.
+fn push_solution_head(out: &mut String, s: &WireSolution) {
+    let _ = write!(out, "{{\"op\":\"solution\",\"id\":{}", s.id);
+    out.push_str(",\"ok\":true,\"x\":[");
+}
+
+/// Everything of an ok-solution line after the `x` elements.
+fn push_solution_tail(out: &mut String, s: &WireSolution) {
+    out.push(']');
+    push_solution_meta(out, s);
+    out.push('}');
+}
+
+/// The trailing metadata members every solution line carries.
+fn push_solution_meta(out: &mut String, s: &WireSolution) {
+    out.push_str(",\"residual\":");
+    push_num(out, s.residual);
+    out.push_str(",\"backend\":");
+    emit_str(&s.backend, out);
+    let _ = write!(out, ",\"batch_size\":{}", s.batch_size);
+    if let Some(k) = s.matrix_key {
+        let _ = write!(out, ",\"matrix_key\":{k}");
+    }
+    let _ = write!(
+        out,
+        ",\"timings\":{{\"queue_secs\":{},\"batch_secs\":{},\"exec_secs\":{}}}",
+        fmt_num(s.timings.queue_secs),
+        fmt_num(s.timings.batch_secs),
+        fmt_num(s.timings.exec_secs)
+    );
 }
 
 fn fmt_num(x: f64) -> String {
     let mut s = String::new();
     push_num(&mut s, x);
     s
+}
+
+// ---- streaming response emission --------------------------------------------
+
+/// Solution vectors are streamed in chunks of this many elements, so
+/// the emitter's scratch stays bounded no matter how large `x` is.
+pub const WRITE_CHUNK: usize = 4096;
+
+/// Streaming response emitter: the serve loop's replacement for
+/// building each response as one full in-memory `String`.
+///
+/// Solution vectors — the only payload that scales with the problem —
+/// are written to the transport in [`WRITE_CHUNK`]-element chunks:
+/// verbatim `f64::to_le_bytes` columns once the session has negotiated
+/// binary ([`ResponseWriter::enable_binary`]), shortest-round-trip
+/// decimal otherwise. The NDJSON byte stream is identical to
+/// [`encode_response`]'s by construction (both build from
+/// `push_solution_head`/`push_solution_tail`). Control frames and
+/// failed solutions are small and stay on the one-shot NDJSON path.
+///
+/// Every frame is flushed before the call returns, preserving the
+/// write-and-flush-before-next-read session contract, and every byte
+/// is counted toward [`ResponseWriter::bytes_out`].
+pub struct ResponseWriter<W: Write> {
+    out: W,
+    binary: bool,
+    /// The next frame must carry the `accept_binary` ack (either as a
+    /// spliced NDJSON member or by itself being a binary frame).
+    ack_pending: bool,
+    bytes_out: u64,
+    /// Reused text scratch — holds at most a head/tail or one chunk.
+    scratch: String,
+    /// Reused byte scratch for binary chunks.
+    buf: Vec<u8>,
+}
+
+impl<W: Write> ResponseWriter<W> {
+    pub fn new(out: W) -> ResponseWriter<W> {
+        ResponseWriter {
+            out,
+            binary: false,
+            ack_pending: false,
+            bytes_out: 0,
+            scratch: String::new(),
+            buf: Vec::new(),
+        }
+    }
+
+    /// Switch the session to binary solution emission (the peer sent
+    /// `accept_binary`). The next frame written carries the ack.
+    pub fn enable_binary(&mut self) {
+        if !self.binary {
+            self.binary = true;
+            self.ack_pending = true;
+        }
+    }
+
+    /// Has the session negotiated binary emission?
+    pub fn is_binary(&self) -> bool {
+        self.binary
+    }
+
+    /// Total bytes written to the transport so far.
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out
+    }
+
+    /// Write one response frame and flush it. The whole emission —
+    /// encode and transport write — runs under the `encode` span, so
+    /// the PR-6 phase taxonomy keeps measuring response cost.
+    pub fn write_frame(&mut self, frame: &ResponseFrame) -> Result<()> {
+        let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Encode);
+        let wrote = match frame {
+            ResponseFrame::Solution(s) if s.result.is_ok() => {
+                if self.binary {
+                    self.write_solution_binary(s)
+                } else {
+                    self.write_solution_ndjson(s)
+                }
+            }
+            other => {
+                let line = encode_response(other);
+                let line =
+                    if self.ack_pending { splice_accept_binary(&line) } else { line };
+                self.scratch.clear();
+                self.scratch.push_str(&line);
+                self.scratch.push('\n');
+                self.put_scratch()
+            }
+        };
+        self.ack_pending = false;
+        wrote
+            .and_then(|()| self.out.flush())
+            .map_err(|e| EbvError::io("wire session: write", e))
+    }
+
+    fn put_scratch(&mut self) -> std::io::Result<()> {
+        self.out.write_all(self.scratch.as_bytes())?;
+        self.bytes_out += self.scratch.len() as u64;
+        self.scratch.clear();
+        Ok(())
+    }
+
+    fn put_buf(&mut self) -> std::io::Result<()> {
+        self.out.write_all(&self.buf)?;
+        self.bytes_out += self.buf.len() as u64;
+        self.buf.clear();
+        Ok(())
+    }
+
+    fn write_solution_ndjson(&mut self, s: &WireSolution) -> std::io::Result<()> {
+        let x = s.result.as_ref().expect("caller checked result.is_ok()");
+        self.scratch.clear();
+        if self.ack_pending {
+            // Unreachable in practice (an ack-pending session emits
+            // binary solutions), but kept correct: splice the ack.
+            let mut head = String::new();
+            push_solution_head(&mut head, s);
+            self.scratch.push_str(&splice_accept_binary(&head));
+        } else {
+            push_solution_head(&mut self.scratch, s);
+        }
+        self.put_scratch()?;
+        for (c, chunk) in x.chunks(WRITE_CHUNK).enumerate() {
+            for (i, &v) in chunk.iter().enumerate() {
+                if c > 0 || i > 0 {
+                    self.scratch.push(',');
+                }
+                push_num(&mut self.scratch, v);
+            }
+            self.put_scratch()?;
+        }
+        push_solution_tail(&mut self.scratch, s);
+        self.scratch.push('\n');
+        self.put_scratch()
+    }
+
+    fn write_solution_binary(&mut self, s: &WireSolution) -> std::io::Result<()> {
+        let x = s.result.as_ref().expect("caller checked result.is_ok()");
+        self.buf.clear();
+        super::binary::push_solution_prefix(&mut self.buf, s)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e.to_string()))?;
+        self.put_buf()?;
+        for chunk in x.chunks(WRITE_CHUNK) {
+            self.buf.reserve(8 * chunk.len());
+            for &v in chunk {
+                self.buf.extend_from_slice(&v.to_le_bytes());
+            }
+            self.put_buf()?;
+        }
+        Ok(())
+    }
 }
 
 // ---- response decoding (client side / round-trip tests) --------------------
@@ -611,11 +827,18 @@ struct RespAcc {
     matrix_key: Option<u64>,
     timings: Timings,
     served: Option<u64>,
+    accept_binary: bool,
     metrics: MetricsSnapshot,
 }
 
 /// Decode one response line (the client half of the protocol).
 pub fn decode_response(line: &str) -> Result<ResponseFrame> {
+    decode_response_ext(line).map(|(frame, _)| frame)
+}
+
+/// Decode one response line, surfacing the session-negotiation members
+/// (the server's `accept_binary` ack) alongside the frame.
+pub fn decode_response_ext(line: &str) -> Result<(ResponseFrame, FrameExt)> {
     let mut sc = Scanner::new(line.as_bytes());
     match sc.next_event()? {
         Some(Event::ObjectStart) => {}
@@ -638,6 +861,9 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                     })?);
                 }
                 "backend" => acc.backend = Some(expect_str(&mut sc, "backend")?),
+                "accept_binary" => {
+                    acc.accept_binary = expect_bool(&mut sc, "accept_binary")?
+                }
                 "served" => acc.served = Some(as_index(expect_num(&mut sc, "served")?, "served")?),
                 "batch_size" => {
                     acc.batch_size =
@@ -751,6 +977,15 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                 "wire_encode_ns" => {
                     acc.metrics.wire_encode_ns = as_index(expect_num(&mut sc, &k)?, &k)?
                 }
+                "binary_sessions" => {
+                    acc.metrics.binary_sessions = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "wire_bytes_in" => {
+                    acc.metrics.wire_bytes_in = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
+                "wire_bytes_out" => {
+                    acc.metrics.wire_bytes_out = as_index(expect_num(&mut sc, &k)?, &k)?
+                }
                 _ => skip_value(&mut sc)?,
             },
             other => return Err(jerr(format!("malformed response frame: {other:?}"))),
@@ -758,14 +993,15 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
     }
     sc.finish()?;
 
-    match acc.op.as_deref() {
-        Some("goodbye") => Ok(ResponseFrame::Goodbye { served: require(acc.served, "served")? }),
-        Some("error") => Ok(ResponseFrame::Error {
+    let ext = FrameExt { accept_binary: acc.accept_binary };
+    let frame = match acc.op.as_deref() {
+        Some("goodbye") => ResponseFrame::Goodbye { served: require(acc.served, "served")? },
+        Some("error") => ResponseFrame::Error {
             // Absent on pre-taxonomy peers: classify as `internal`.
             code: acc.code.unwrap_or_default(),
             message: require(acc.error, "error")?,
-        }),
-        Some("metrics") => Ok(ResponseFrame::Metrics(acc.metrics)),
+        },
+        Some("metrics") => ResponseFrame::Metrics(acc.metrics),
         Some("solution") => {
             let ok = require(acc.ok, "ok")?;
             let result = if ok {
@@ -773,7 +1009,7 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
             } else {
                 Err(require(acc.error, "error")?)
             };
-            Ok(ResponseFrame::Solution(WireSolution {
+            ResponseFrame::Solution(WireSolution {
                 id: require(acc.id, "id")?,
                 result,
                 residual: acc.residual.unwrap_or(f64::NAN),
@@ -781,11 +1017,12 @@ pub fn decode_response(line: &str) -> Result<ResponseFrame> {
                 batch_size: acc.batch_size.unwrap_or(1),
                 matrix_key: acc.matrix_key,
                 timings: acc.timings,
-            }))
+            })
         }
-        Some(other) => Err(jerr(format!("unknown response op `{other}`"))),
-        None => Err(jerr("response frame missing `op`")),
-    }
+        Some(other) => return Err(jerr(format!("unknown response op `{other}`"))),
+        None => return Err(jerr("response frame missing `op`")),
+    };
+    Ok((frame, ext))
 }
 
 fn decode_timings<R: BufRead>(sc: &mut Scanner<R>) -> Result<Timings> {
@@ -1096,6 +1333,9 @@ mod tests {
             wire_errors: 44,
             wire_ingest_ns: 45,
             wire_encode_ns: 46,
+            binary_sessions: 47,
+            wire_bytes_in: 48,
+            wire_bytes_out: 49,
         };
         let frame = ResponseFrame::Metrics(m);
         assert_eq!(decode_response(&encode_response(&frame)).unwrap(), frame);
@@ -1107,6 +1347,100 @@ mod tests {
         let line = line.replace("\"kernel\":\"auto\"", "\"kernel\":\"simd512\"");
         let err = decode_response(&line).unwrap_err();
         assert!(err.to_string().contains("unknown kernel `simd512`"), "{err}");
+    }
+
+    #[test]
+    fn negotiation_member_rides_any_frame_in_both_directions() {
+        // Request side: the offer is an ordinary boolean member.
+        let line = encode_request_negotiating(&RequestFrame::Metrics);
+        assert_eq!(line, r#"{"accept_binary":true,"op":"metrics"}"#);
+        let (frame, ext) = decode_request_ext(&line, &DecodeOptions::default()).unwrap();
+        assert_eq!(frame, RequestFrame::Metrics);
+        assert!(ext.accept_binary);
+        // ...including on a payload-carrying solve.
+        let a = diag_dominant_dense(3, GenSeed(21));
+        let solve = RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 3]));
+        let (frame, ext) =
+            decode_request_ext(&encode_request_negotiating(&solve), &DecodeOptions::default())
+                .unwrap();
+        assert_eq!(frame, solve);
+        assert!(ext.accept_binary);
+        // Plain frames carry no offer.
+        let (_, ext) =
+            decode_request_ext(&encode_request(&solve), &DecodeOptions::default()).unwrap();
+        assert!(!ext.accept_binary);
+        // Response side: the ack is surfaced the same way, and peers
+        // that predate the member never see a behavior change (unknown
+        // members were always skipped).
+        let (frame, ext) =
+            decode_response_ext(r#"{"accept_binary":true,"op":"goodbye","served":2}"#).unwrap();
+        assert_eq!(frame, ResponseFrame::Goodbye { served: 2 });
+        assert!(ext.accept_binary);
+    }
+
+    #[test]
+    fn streamed_ndjson_solution_is_byte_identical_to_encode_response() {
+        // Cross the chunk boundary so head/chunk/tail seams are covered.
+        let n = WRITE_CHUNK + 3;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).sin() * 1e3).collect();
+        let frame = ResponseFrame::Solution(WireSolution {
+            id: 12,
+            result: Ok(x),
+            residual: 3.5e-14,
+            backend: "native-ebv".into(),
+            batch_size: 2,
+            matrix_key: Some(99),
+            timings: Timings { queue_secs: 0.001, batch_secs: 0.002, exec_secs: 0.003 },
+        });
+        let mut streamed = Vec::new();
+        let mut w = ResponseWriter::new(&mut streamed);
+        w.write_frame(&frame).unwrap();
+        let bytes = w.bytes_out();
+        let oneshot = encode_response(&frame) + "\n";
+        assert_eq!(streamed, oneshot.as_bytes());
+        assert_eq!(bytes, oneshot.len() as u64);
+        // Control frames too.
+        let goodbye = ResponseFrame::Goodbye { served: 1 };
+        let mut streamed = Vec::new();
+        ResponseWriter::new(&mut streamed).write_frame(&goodbye).unwrap();
+        assert_eq!(streamed, (encode_response(&goodbye) + "\n").as_bytes());
+    }
+
+    #[test]
+    fn binary_writer_acks_then_streams_verbatim_bits() {
+        let sol = WireSolution {
+            id: 7,
+            result: Ok((0..WRITE_CHUNK * 2 + 5).map(|i| i as f64 * 0.1).collect()),
+            residual: 1e-15,
+            backend: "native-ebv".into(),
+            batch_size: 1,
+            matrix_key: None,
+            timings: Timings::default(),
+        };
+        let mut out = Vec::new();
+        let mut w = ResponseWriter::new(&mut out);
+        w.enable_binary();
+        assert!(w.is_binary());
+        // An NDJSON control frame written while the ack is pending
+        // carries the spliced member...
+        w.write_frame(&ResponseFrame::Metrics(MetricsSnapshot::default())).unwrap();
+        // ...and the ok-solution goes out as one binary frame.
+        w.write_frame(&ResponseFrame::Solution(sol.clone())).unwrap();
+        // Failed solutions stay NDJSON even on a binary session.
+        let failed = ResponseFrame::Solution(WireSolution {
+            result: Err("zero pivot".into()),
+            ..sol.clone()
+        });
+        w.write_frame(&failed).unwrap();
+        let total = w.bytes_out();
+        assert_eq!(total, out.len() as u64);
+        let frames = super::super::binary::decode_response_stream(&out).unwrap();
+        assert_eq!(frames.len(), 3);
+        assert!(frames[0].1.accept_binary, "ack on the first frame: {frames:?}");
+        let ResponseFrame::Solution(back) = &frames[1].0 else { panic!("{frames:?}") };
+        let (xb, xs) = (back.result.as_ref().unwrap(), sol.result.as_ref().unwrap());
+        assert!(xb.iter().zip(xs).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(matches!(&frames[2].0, ResponseFrame::Solution(s) if s.result.is_err()));
     }
 
     #[test]

@@ -1,10 +1,14 @@
-//! Wire frame types of the NDJSON solve protocol.
+//! Wire frame types of the solve protocol.
 //!
-//! One frame per line. Requests are [`RequestFrame`]s (`solve`,
+//! One frame per NDJSON line — or, on a session that negotiated
+//! `accept_binary`, one length-prefixed binary frame for the
+//! payload-heavy shapes ([`super::binary`]); the typed frames here are
+//! encoding-agnostic, which is what makes the two formats provably
+//! bit-equivalent. Requests are [`RequestFrame`]s (`solve`,
 //! `solve_sparse`, `metrics`, `shutdown`); the server answers each with
 //! exactly one [`ResponseFrame`] (`solution`, `metrics`, `error`,
-//! `goodbye`). Encoding/decoding lives in [`super::codec`]; this module
-//! holds the typed shapes and the fingerprint/key policy.
+//! `goodbye`). NDJSON encoding/decoding lives in [`super::codec`]; this
+//! module holds the typed shapes and the fingerprint/key policy.
 //!
 //! The `metrics` response carries the full
 //! [`MetricsSnapshot`], including the lane-engine counters

@@ -235,9 +235,12 @@ fn run_session(
         }
     };
     match serve_session_with(svc, BufReader::new(stream), writer, opts) {
+        // Byte totals ride along so shed/deadline decisions can be
+        // correlated with payload size straight from the log.
         Ok(stats) => eprintln!(
-            "[wire] session {session_no} ({peer}) closed: frames={} solves={} errors={}",
-            stats.frames, stats.solves, stats.errors
+            "[wire] session {session_no} ({peer}) closed: frames={} solves={} errors={} \
+             bytes_in={} bytes_out={}",
+            stats.frames, stats.solves, stats.errors, stats.bytes_in, stats.bytes_out
         ),
         Err(e) => eprintln!("[wire] session {session_no} ({peer}) ended with error: {e}"),
     }

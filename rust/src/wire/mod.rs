@@ -26,13 +26,16 @@
 //! * [`scanner`] — incremental zero-tree JSON event scanner;
 //! * [`fingerprint`] — streaming FNV-1a matrix content hashes;
 //! * [`frame`] — typed request/response frames;
-//! * [`codec`] — NDJSON line encode/decode;
+//! * [`codec`] — NDJSON line encode/decode + streaming [`ResponseWriter`];
+//! * [`binary`] — negotiated length-prefixed binary frames (verbatim
+//!   f64le columns for solve payloads and ok-solutions);
 //! * [`server`] — the blocking per-session loop;
 //! * [`listener`] — TCP accept loop, admission control, drain.
 //!
 //! A complete session transcript lives in `README.md`; see
 //! `examples/wire_session.rs` for the programmatic equivalent.
 
+pub mod binary;
 pub mod codec;
 pub mod fingerprint;
 pub mod frame;
@@ -41,8 +44,9 @@ pub mod scanner;
 pub mod server;
 
 pub use codec::{
-    decode_request, decode_request_with, decode_response, encode_request, encode_response,
-    DecodeOptions,
+    decode_request, decode_request_ext, decode_request_with, decode_response,
+    decode_response_ext, encode_request, encode_request_negotiating, encode_response,
+    DecodeOptions, FrameExt, ResponseWriter, WRITE_CHUNK,
 };
 pub use fingerprint::{
     fingerprint_csr, fingerprint_csr_pattern, fingerprint_dense, Fnv1a, KEY_MASK,

@@ -17,6 +17,20 @@ use std::io::BufRead;
 use crate::util::error::{EbvError, Result};
 use crate::util::json::Json;
 
+/// Can `byte` legally begin a JSON document? Whitespace, the two
+/// container openers, strings, numbers (including a leading minus), and
+/// the three literals — nothing else. The binary wire magic
+/// ([`super::binary::MAGIC`]) is chosen outside this set, which is what
+/// lets a session reader dispatch NDJSON-vs-binary on one peeked byte;
+/// `super::binary` pins that disjointness at compile time.
+pub const fn can_start_json(byte: u8) -> bool {
+    matches!(
+        byte,
+        b' ' | b'\t' | b'\r' | b'\n' | b'{' | b'[' | b'"' | b'-' | b'0'..=b'9' | b't' | b'f'
+            | b'n'
+    )
+}
+
 /// One scanner event. Container contents are delivered between the
 /// matching `*Start`/`*End` pair; object members arrive as a `Key`
 /// event followed by the member value's event(s).
@@ -423,6 +437,17 @@ mod tests {
         }
         sc.finish().unwrap();
         out
+    }
+
+    #[test]
+    fn json_start_set_is_exact_and_excludes_the_binary_magic() {
+        for b in [b'{', b'[', b'"', b'-', b'0', b'9', b't', b'f', b'n', b' ', b'\t'] {
+            assert!(can_start_json(b), "{}", b as char);
+        }
+        for b in [0xEBu8, 0xFF, b'}', b']', b'x', b'+', b'\''] {
+            assert!(!can_start_json(b), "{b:#04x}");
+        }
+        assert!(!can_start_json(crate::wire::binary::MAGIC[0]));
     }
 
     #[test]

@@ -1,17 +1,23 @@
-//! Blocking NDJSON session loop over the solve service.
+//! Blocking wire session loop over the solve service.
 //!
 //! [`serve_session`] is generic over `BufRead`/`Write`, so the same
 //! loop serves `stdin`/`stdout` behind `ebv-solve serve`, in-memory
 //! buffers in tests, and accepted sockets behind
 //! [`super::listener::WireServer`]. Framing is one JSON object per
-//! line (see `docs/PROTOCOL.md`); every request line produces exactly
-//! one response line, written and flushed before the next read, so a
-//! pipe client can drive the session synchronously.
+//! line (see `docs/PROTOCOL.md`) — or, once a session has offered
+//! `accept_binary`, length-prefixed binary frames ([`super::binary`])
+//! interleaved freely with NDJSON lines; the reader dispatches per
+//! frame on one peeked byte. Every request frame produces exactly one
+//! response frame, written through the chunked
+//! [`ResponseWriter`](super::codec::ResponseWriter) and flushed before
+//! the next read, so a pipe client can drive the session synchronously.
 //!
-//! Error containment: a malformed or oversized line produces a typed
-//! `error` frame (see [`ErrorCode`]) and the session continues — one
-//! bad request in a long-lived pipe must not tear down the connection.
-//! Only I/O failure (peer gone), a `shutdown` frame, or the server's
+//! Error containment: a malformed or oversized frame — text or binary
+//! — produces a typed `error` frame (see [`ErrorCode`]) and the
+//! session continues; one bad request in a long-lived pipe must not
+//! tear down the connection. A binary frame's declared length is
+//! checked against the cap *before* any payload allocation. Only I/O
+//! failure (peer gone), a `shutdown` frame, or the server's
 //! cooperative [`SessionOptions::stop`] drain flag ends the loop.
 //!
 //! Each session folds its [`SessionStats`] and, with profiling on
@@ -31,7 +37,8 @@ use std::time::Duration;
 
 use crate::coordinator::service::ServiceHandle;
 use crate::util::error::{EbvError, Result};
-use crate::wire::codec::{decode_request_with, encode_response, DecodeOptions};
+use crate::wire::binary;
+use crate::wire::codec::{decode_request_ext, DecodeOptions, FrameExt, ResponseWriter};
 use crate::wire::frame::{
     ErrorCode, RequestFrame, ResponseFrame, WireMatrix, WireSolution, WireSolve,
 };
@@ -39,15 +46,20 @@ use crate::wire::frame::{
 /// Counters of one wire session.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SessionStats {
-    /// Non-empty request lines read (oversized lines count — they
+    /// Non-empty request frames read (oversized frames count — they
     /// consumed a frame slot even though their payload was discarded).
     pub frames: u64,
     /// Solve frames that produced a solution frame (ok or failed);
     /// rejected/undeliverable submissions count as `errors` instead.
     pub solves: u64,
     /// Error frames written (decode failures, rejected submissions,
-    /// expired deadlines, oversized lines).
+    /// expired deadlines, oversized frames).
     pub errors: u64,
+    /// Transport bytes consumed from the peer (both formats, including
+    /// discarded oversized payloads).
+    pub bytes_in: u64,
+    /// Transport bytes written to the peer (both formats).
+    pub bytes_out: u64,
 }
 
 /// Per-session policy. `Default` is the permissive stdio posture: no
@@ -104,36 +116,55 @@ pub fn serve_session_with<R: BufRead, W: Write>(
         Ok(stats) => *stats,
         Err((stats, _)) => *stats,
     };
-    svc.metrics().session_closed(stats.frames, stats.solves, stats.errors);
+    svc.metrics().session_closed(
+        stats.frames,
+        stats.solves,
+        stats.errors,
+        stats.bytes_in,
+        stats.bytes_out,
+    );
     if crate::obs::enabled() {
         eprintln!("{}", crate::obs::summary_line(&svc.metrics_snapshot()));
     }
     outcome.map(|_| stats).map_err(|(_, e)| e)
 }
 
-/// What one bounded line read produced.
+/// What one bounded frame read produced.
 enum ReadOutcome {
-    /// A complete request line is in the buffer (newline stripped).
+    /// A complete NDJSON request line is in the buffer (newline
+    /// stripped).
     Line,
     Eof,
     /// The line blew past `max_frame_bytes`; its remainder was
     /// discarded up to the newline (or EOF).
     Oversized,
+    /// A complete binary payload of this frame kind is in the buffer.
+    Binary(u8),
+    /// A binary header arrived but did not parse (wrong magic tail or
+    /// version); framing sync is lost until the peer resynchronises.
+    BinaryBad(String),
+    /// A binary frame declared more payload bytes than the cap; the
+    /// payload was discarded from the stream without being held.
+    BinaryOversized(u64),
     /// The drain flag tripped while waiting for input.
     Stopped,
 }
 
-/// Read one `\n`-terminated line into `buf`, enforcing the frame-size
-/// cap and polling the drain flag whenever the underlying reader
-/// yields (`WouldBlock`/`TimedOut`, as sockets with a read timeout do).
-/// A partial line buffered at EOF is returned as a final `Line` — a
-/// client that writes a frame and half-closes without the trailing
-/// newline still gets its answer.
-fn read_frame_line<R: BufRead>(
+/// Read one request frame into `buf` — an `\n`-terminated NDJSON line,
+/// or (dispatched on the first byte of the frame being the binary
+/// magic, which can never start JSON) one length-prefixed binary
+/// frame. Enforces the frame-size cap and polls the drain flag
+/// whenever the underlying reader yields (`WouldBlock`/`TimedOut`, as
+/// sockets with a read timeout do). A partial line buffered at EOF is
+/// returned as a final `Line` — a client that writes a frame and
+/// half-closes without the trailing newline still gets its answer.
+/// Every byte consumed is counted into `bytes_in`.
+fn read_frame<R: BufRead>(
     input: &mut R,
     buf: &mut Vec<u8>,
     max_bytes: Option<usize>,
     stop: Option<&AtomicBool>,
+    bytes_in: &mut u64,
 ) -> std::io::Result<ReadOutcome> {
     buf.clear();
     let cap = max_bytes.unwrap_or(usize::MAX);
@@ -168,6 +199,12 @@ fn read_frame_line<R: BufRead>(
                 ReadOutcome::Line
             });
         }
+        // Binary dispatch happens only at a frame boundary: nothing of
+        // a text line buffered yet and not mid-discard. A magic byte
+        // inside a text line is that line's payload, not a frame start.
+        if buf.is_empty() && !over && binary::is_magic(chunk[0]) {
+            return read_binary_frame(input, buf, cap, stop, bytes_in);
+        }
         match chunk.iter().position(|&b| b == b'\n') {
             Some(pos) => {
                 if !over && buf.len().saturating_add(pos) > cap {
@@ -177,6 +214,7 @@ fn read_frame_line<R: BufRead>(
                     buf.extend_from_slice(&chunk[..pos]);
                 }
                 input.consume(pos + 1);
+                *bytes_in += pos as u64 + 1;
                 return Ok(if over { ReadOutcome::Oversized } else { ReadOutcome::Line });
             }
             None => {
@@ -188,7 +226,165 @@ fn read_frame_line<R: BufRead>(
                     buf.extend_from_slice(chunk);
                 }
                 input.consume(len);
+                *bytes_in += len as u64;
             }
+        }
+    }
+}
+
+/// How an exact-count read ended.
+enum Filled {
+    Yes,
+    Eof,
+    Stopped,
+}
+
+/// `read_exact` with drain-flag polling and byte accounting.
+fn fill_exact<R: BufRead>(
+    input: &mut R,
+    out: &mut [u8],
+    stop: Option<&AtomicBool>,
+    bytes_in: &mut u64,
+) -> std::io::Result<Filled> {
+    let mut at = 0usize;
+    while at < out.len() {
+        if stop.is_some_and(|s| s.load(Ordering::Relaxed)) {
+            return Ok(Filled::Stopped);
+        }
+        let chunk = match input.fill_buf() {
+            Ok(chunk) => chunk,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if chunk.is_empty() {
+            return Ok(Filled::Eof);
+        }
+        let n = chunk.len().min(out.len() - at);
+        out[at..at + n].copy_from_slice(&chunk[..n]);
+        input.consume(n);
+        *bytes_in += n as u64;
+        at += n;
+    }
+    Ok(Filled::Yes)
+}
+
+/// Consume and drop `remaining` bytes — the streaming skip for an
+/// over-cap binary payload, which must never be buffered.
+fn discard_exact<R: BufRead>(
+    input: &mut R,
+    mut remaining: u64,
+    stop: Option<&AtomicBool>,
+    bytes_in: &mut u64,
+) -> std::io::Result<Filled> {
+    while remaining > 0 {
+        if stop.is_some_and(|s| s.load(Ordering::Relaxed)) {
+            return Ok(Filled::Stopped);
+        }
+        let chunk = match input.fill_buf() {
+            Ok(chunk) => chunk,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if chunk.is_empty() {
+            return Ok(Filled::Eof);
+        }
+        let n = (chunk.len() as u64).min(remaining) as usize;
+        input.consume(n);
+        *bytes_in += n as u64;
+        remaining -= n as u64;
+    }
+    Ok(Filled::Yes)
+}
+
+/// Read one binary frame whose magic byte is next on the stream. The
+/// declared payload length is validated against the cap *before* any
+/// allocation; an over-cap payload is discarded in a streaming skip. A
+/// peer disconnecting mid-frame ends the session quietly (`Eof`), like
+/// a text client hanging up mid-stream.
+fn read_binary_frame<R: BufRead>(
+    input: &mut R,
+    buf: &mut Vec<u8>,
+    cap: usize,
+    stop: Option<&AtomicBool>,
+    bytes_in: &mut u64,
+) -> std::io::Result<ReadOutcome> {
+    let mut header = [0u8; binary::HEADER_LEN];
+    match fill_exact(input, &mut header, stop, bytes_in)? {
+        Filled::Stopped => return Ok(ReadOutcome::Stopped),
+        Filled::Eof => return Ok(ReadOutcome::Eof),
+        Filled::Yes => {}
+    }
+    let hdr = match binary::parse_header(&header) {
+        Ok(hdr) => hdr,
+        Err(e) => return Ok(ReadOutcome::BinaryBad(e.to_string())),
+    };
+    if hdr.payload_len > cap as u64 {
+        match discard_exact(input, hdr.payload_len, stop, bytes_in)? {
+            Filled::Stopped => return Ok(ReadOutcome::Stopped),
+            Filled::Eof => return Ok(ReadOutcome::Eof),
+            Filled::Yes => {}
+        }
+        return Ok(ReadOutcome::BinaryOversized(hdr.payload_len));
+    }
+    // Allocation strictly after the cap check.
+    buf.resize(hdr.payload_len as usize, 0);
+    match fill_exact(input, buf, stop, bytes_in)? {
+        Filled::Stopped => Ok(ReadOutcome::Stopped),
+        Filled::Eof => Ok(ReadOutcome::Eof),
+        Filled::Yes => Ok(ReadOutcome::Binary(hdr.kind)),
+    }
+}
+
+/// What handling one decoded request frame asks of the loop.
+enum Handled {
+    Reply(ResponseFrame),
+    Shutdown,
+}
+
+/// Route one decoded request (either format) to its response. Solve
+/// accounting: `served` promises produced solutions; a rejected or
+/// dropped submission is an error, not a serve.
+fn handle_decoded(
+    svc: &ServiceHandle,
+    opts: &SessionOptions,
+    stats: &mut SessionStats,
+    next_id: &mut u64,
+    decoded: Result<RequestFrame>,
+) -> Handled {
+    match decoded {
+        Err(e) => {
+            stats.errors += 1;
+            Handled::Reply(ResponseFrame::error(ErrorCode::Decode, e.to_string()))
+        }
+        Ok(RequestFrame::Shutdown) => Handled::Shutdown,
+        Ok(RequestFrame::Metrics) => {
+            Handled::Reply(ResponseFrame::Metrics(svc.metrics_snapshot()))
+        }
+        Ok(RequestFrame::Solve(ws)) | Ok(RequestFrame::SolveSparse(ws)) => {
+            // Session-sequential fallback ids for unnumbered requests.
+            let id = ws.id.unwrap_or(*next_id);
+            *next_id = (*next_id).max(id) + 1;
+            let resp = run_solve(svc, id, ws, opts.deadline);
+            match &resp {
+                ResponseFrame::Solution(_) => stats.solves += 1,
+                ResponseFrame::Error { .. } => stats.errors += 1,
+                _ => {}
+            }
+            Handled::Reply(resp)
         }
     }
 }
@@ -201,32 +397,82 @@ fn session_loop<R: BufRead, W: Write>(
 ) -> std::result::Result<SessionStats, (SessionStats, EbvError)> {
     let mut stats = SessionStats::default();
     let mut buf = Vec::new();
-    // Session-sequential fallback ids for requests that don't carry one.
     let mut next_id: u64 = 0;
+    let mut writer = ResponseWriter::new(output);
+
+    // Write one frame through the chunked emitter, keeping the byte
+    // counter coherent even when the write fails partway.
+    macro_rules! send {
+        ($frame:expr) => {{
+            let wrote = writer.write_frame($frame);
+            stats.bytes_out = writer.bytes_out();
+            wrote.map_err(|e| (stats, e))?;
+        }};
+    }
 
     loop {
-        let outcome =
-            read_frame_line(input, &mut buf, opts.max_frame_bytes, opts.stop.as_deref())
-                .map_err(|e| (stats, EbvError::io("wire session: read", e)))?;
-        let response = match outcome {
+        let outcome = read_frame(
+            input,
+            &mut buf,
+            opts.max_frame_bytes,
+            opts.stop.as_deref(),
+            &mut stats.bytes_in,
+        )
+        .map_err(|e| (stats, EbvError::io("wire session: read", e)))?;
+        let handled = match outcome {
             ReadOutcome::Eof => break, // client hung up without `shutdown`; end quietly
             ReadOutcome::Stopped => {
                 // Server-initiated drain: say goodbye like a shutdown.
                 log::info!(target: "wire", "drain after {} frames", stats.frames);
-                write_frame(output, &ResponseFrame::Goodbye { served: stats.solves })
-                    .map_err(|e| (stats, e))?;
+                send!(&ResponseFrame::Goodbye { served: stats.solves });
                 break;
             }
             ReadOutcome::Oversized => {
                 stats.frames += 1;
                 stats.errors += 1;
-                ResponseFrame::error(
+                Handled::Reply(ResponseFrame::error(
                     ErrorCode::Oversized,
                     format!(
                         "frame exceeds max_frame_bytes ({}); line discarded",
                         opts.max_frame_bytes.unwrap_or(usize::MAX)
                     ),
-                )
+                ))
+            }
+            ReadOutcome::BinaryOversized(declared) => {
+                stats.frames += 1;
+                stats.errors += 1;
+                Handled::Reply(ResponseFrame::error(
+                    ErrorCode::Oversized,
+                    format!(
+                        "binary frame declares {declared} payload bytes, exceeds \
+                         max_frame_bytes ({}); payload discarded",
+                        opts.max_frame_bytes.unwrap_or(usize::MAX)
+                    ),
+                ))
+            }
+            ReadOutcome::BinaryBad(msg) => {
+                stats.frames += 1;
+                stats.errors += 1;
+                Handled::Reply(ResponseFrame::error(ErrorCode::Decode, msg))
+            }
+            ReadOutcome::Binary(kind) => {
+                stats.frames += 1;
+                if !writer.is_binary() {
+                    // The payload was consumed in sync, so the session
+                    // survives — but un-negotiated binary is refused.
+                    stats.errors += 1;
+                    Handled::Reply(ResponseFrame::error(
+                        ErrorCode::Decode,
+                        "binary frame before negotiation: offer `accept_binary` on an \
+                         NDJSON request first; payload discarded",
+                    ))
+                } else {
+                    let decoded = {
+                        let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Ingest);
+                        binary::decode_request_payload(kind, &buf)
+                    };
+                    handle_decoded(svc, opts, &mut stats, &mut next_id, decoded)
+                }
             }
             ReadOutcome::Line => {
                 let text = match std::str::from_utf8(&buf) {
@@ -234,14 +480,10 @@ fn session_loop<R: BufRead, W: Write>(
                     Err(_) => {
                         stats.frames += 1;
                         stats.errors += 1;
-                        write_frame(
-                            output,
-                            &ResponseFrame::error(
-                                ErrorCode::Decode,
-                                "frame is not valid UTF-8",
-                            ),
-                        )
-                        .map_err(|e| (stats, e))?;
+                        send!(&ResponseFrame::error(
+                            ErrorCode::Decode,
+                            "frame is not valid UTF-8",
+                        ));
                         drain_spans(svc);
                         continue;
                     }
@@ -253,38 +495,31 @@ fn session_loop<R: BufRead, W: Write>(
 
                 let decoded = {
                     let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Ingest);
-                    decode_request_with(text, &opts.decode)
+                    decode_request_ext(text, &opts.decode)
                 };
-                match decoded {
-                    Err(e) => {
-                        stats.errors += 1;
-                        ResponseFrame::error(ErrorCode::Decode, e.to_string())
-                    }
-                    Ok(RequestFrame::Shutdown) => {
-                        log::info!(target: "wire", "shutdown frame after {} frames", stats.frames);
-                        write_frame(output, &ResponseFrame::Goodbye { served: stats.solves })
-                            .map_err(|e| (stats, e))?;
-                        break;
-                    }
-                    Ok(RequestFrame::Metrics) => ResponseFrame::Metrics(svc.metrics_snapshot()),
-                    Ok(RequestFrame::Solve(ws)) | Ok(RequestFrame::SolveSparse(ws)) => {
-                        let id = ws.id.unwrap_or(next_id);
-                        next_id = next_id.max(id) + 1;
-                        let resp = run_solve(svc, id, ws, opts.deadline);
-                        // `served` promises produced solutions; a
-                        // rejected or dropped submission is an error,
-                        // not a serve.
-                        match &resp {
-                            ResponseFrame::Solution(_) => stats.solves += 1,
-                            ResponseFrame::Error { .. } => stats.errors += 1,
-                            _ => {}
-                        }
-                        resp
-                    }
+                let (decoded, ext) = match decoded {
+                    Ok((frame, ext)) => (Ok(frame), ext),
+                    Err(e) => (Err(e), FrameExt::default()),
+                };
+                if ext.accept_binary && !writer.is_binary() {
+                    // Per-session latch: from here on, ok-solutions go
+                    // out binary (the next frame carries the ack) and
+                    // binary requests are accepted.
+                    log::info!(target: "wire", "binary negotiated after {} frames", stats.frames);
+                    svc.metrics().binary_sessions.fetch_add(1, Ordering::Relaxed);
+                    writer.enable_binary();
                 }
+                handle_decoded(svc, opts, &mut stats, &mut next_id, decoded)
             }
         };
-        write_frame(output, &response).map_err(|e| (stats, e))?;
+        match handled {
+            Handled::Shutdown => {
+                log::info!(target: "wire", "shutdown frame after {} frames", stats.frames);
+                send!(&ResponseFrame::Goodbye { served: stats.solves });
+                break;
+            }
+            Handled::Reply(response) => send!(&response),
+        }
         drain_spans(svc);
     }
     drain_spans(svc);
@@ -374,16 +609,6 @@ fn run_solve(
     }
 }
 
-fn write_frame<W: Write>(output: &mut W, frame: &ResponseFrame) -> Result<()> {
-    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Encode);
-    let mut line = encode_response(frame);
-    line.push('\n');
-    output
-        .write_all(line.as_bytes())
-        .and_then(|()| output.flush())
-        .map_err(|e| EbvError::io("wire session: write", e))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -411,13 +636,20 @@ mod tests {
     }
 
     fn run_with(input: &str, opts: SessionOptions) -> (SessionStats, Vec<ResponseFrame>) {
-        let svc = test_service();
-        let mut out = Vec::new();
-        let stats = serve_session_with(&svc, input.as_bytes(), &mut out, opts).unwrap();
-        svc.shutdown();
+        let (stats, out) = run_raw(input.as_bytes(), opts);
         let text = String::from_utf8(out).unwrap();
         let frames = text.lines().map(|l| decode_response(l).unwrap()).collect();
         (stats, frames)
+    }
+
+    /// Like `run_with`, but the response stream stays raw bytes — for
+    /// sessions whose responses are (partly) binary.
+    fn run_raw(input: &[u8], opts: SessionOptions) -> (SessionStats, Vec<u8>) {
+        let svc = test_service();
+        let mut out = Vec::new();
+        let stats = serve_session_with(&svc, input, &mut out, opts).unwrap();
+        svc.shutdown();
+        (stats, out)
     }
 
     #[test]
@@ -525,6 +757,11 @@ mod tests {
         assert_eq!(m.wire_frames, 4);
         assert_eq!(m.wire_solves, 2);
         assert_eq!(m.wire_errors, 2);
+        // Byte accounting folds too: each session consumed the whole
+        // input and wrote at least one response byte per frame.
+        assert_eq!(m.wire_bytes_in, 2 * input.len() as u64);
+        assert!(m.wire_bytes_out > 0);
+        assert_eq!(m.binary_sessions, 0, "nothing negotiated binary here");
     }
 
     #[test]
@@ -550,6 +787,100 @@ mod tests {
         let (stats, frames) = run("");
         assert_eq!(stats, SessionStats::default());
         assert!(frames.is_empty());
+    }
+
+    #[test]
+    fn negotiated_session_interleaves_formats_and_counts_bytes() {
+        use crate::wire::codec::encode_request_negotiating;
+        let a = diag_dominant_dense(6, GenSeed(41));
+        // Offer on a metrics frame so the ack is visible as a spliced
+        // NDJSON member; then a binary solve; then NDJSON shutdown.
+        let offer = encode_request_negotiating(&RequestFrame::Metrics);
+        let bin = binary::encode_request_binary(&RequestFrame::Solve(WireSolve::dense(
+            a,
+            vec![1.0; 6],
+        )))
+        .unwrap();
+        let mut input = Vec::new();
+        input.extend_from_slice(offer.as_bytes());
+        input.push(b'\n');
+        input.extend_from_slice(&bin);
+        input.extend_from_slice(b"{\"op\":\"shutdown\"}\n");
+
+        let svc = test_service();
+        let mut out = Vec::new();
+        let stats = serve_session_with(&svc, input.as_slice(), &mut out, SessionOptions::default())
+            .unwrap();
+        let m = svc.metrics_snapshot();
+        svc.shutdown();
+        assert_eq!((stats.frames, stats.solves, stats.errors), (3, 1, 0));
+        assert_eq!(stats.bytes_in, input.len() as u64);
+        assert_eq!(stats.bytes_out, out.len() as u64);
+        assert_eq!(m.binary_sessions, 1);
+
+        let frames = binary::decode_response_stream(&out).unwrap();
+        assert_eq!(frames.len(), 3);
+        assert!(frames[0].1.accept_binary, "ack rides the first response: {frames:?}");
+        assert!(matches!(&frames[0].0, ResponseFrame::Metrics(_)));
+        let ResponseFrame::Solution(s) = &frames[1].0 else { panic!("{frames:?}") };
+        assert!(s.result.is_ok());
+        assert_eq!(frames[2].0, ResponseFrame::Goodbye { served: 1 });
+    }
+
+    #[test]
+    fn binary_before_negotiation_is_refused_and_session_survives() {
+        let a = diag_dominant_dense(5, GenSeed(42));
+        let bin = binary::encode_request_binary(&RequestFrame::Solve(WireSolve::dense(
+            a.clone(),
+            vec![1.0; 5],
+        )))
+        .unwrap();
+        let solve = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![2.0; 5])));
+        let mut input = bin;
+        input.extend_from_slice(solve.as_bytes());
+        input.push(b'\n');
+        let (stats, out) = run_raw(&input, SessionOptions::default());
+        assert_eq!((stats.frames, stats.solves, stats.errors), (2, 1, 1));
+        // Both responses are NDJSON — the session never negotiated.
+        let text = String::from_utf8(out).unwrap();
+        let frames: Vec<_> = text.lines().map(|l| decode_response(l).unwrap()).collect();
+        let ResponseFrame::Error { code, message } = &frames[0] else { panic!("{frames:?}") };
+        assert_eq!(*code, ErrorCode::Decode);
+        assert!(message.contains("negotiation"), "{message}");
+        assert!(matches!(&frames[1], ResponseFrame::Solution(s) if s.result.is_ok()));
+    }
+
+    #[test]
+    fn oversized_binary_frame_is_discarded_without_allocation() {
+        // Header declares 1 GiB; the cap is 4 KiB. The "payload" that
+        // actually follows is a normal NDJSON solve — it gets eaten by
+        // the streaming discard up to the declared length or EOF.
+        let header = binary::encode_header(binary::KIND_SOLVE_DENSE, 1 << 30);
+        let mut input = header.to_vec();
+        input.extend_from_slice(b"leftover");
+        let opts = SessionOptions { max_frame_bytes: Some(4096), ..SessionOptions::default() };
+        let (stats, out) = run_raw(&input, opts);
+        // EOF hit mid-discard: the session ends quietly after counting
+        // what it consumed.
+        assert_eq!(stats.frames, 0);
+        assert_eq!(stats.bytes_in, input.len() as u64);
+        assert!(out.is_empty());
+
+        // With the full declared payload present, the typed `oversized`
+        // error comes back and the session continues to a shutdown.
+        let header = binary::encode_header(binary::KIND_SOLVE_DENSE, 8000);
+        let mut input = header.to_vec();
+        input.extend_from_slice(&vec![0u8; 8000]);
+        input.extend_from_slice(b"{\"op\":\"shutdown\"}\n");
+        let opts = SessionOptions { max_frame_bytes: Some(4096), ..SessionOptions::default() };
+        let (stats, out) = run_raw(&input, opts);
+        assert_eq!((stats.frames, stats.errors), (2, 1));
+        let text = String::from_utf8(out).unwrap();
+        let frames: Vec<_> = text.lines().map(|l| decode_response(l).unwrap()).collect();
+        let ResponseFrame::Error { code, message } = &frames[0] else { panic!("{frames:?}") };
+        assert_eq!(*code, ErrorCode::Oversized);
+        assert!(message.contains("8000") && message.contains("4096"), "{message}");
+        assert_eq!(frames[1], ResponseFrame::Goodbye { served: 0 });
     }
 
     #[test]

@@ -135,6 +135,9 @@ fn every_wire_key_the_codec_emits_is_documented() {
         encode_response(&metrics),
         encode_response(&ResponseFrame::error(ErrorCode::Busy, "try later")),
         encode_response(&ResponseFrame::Goodbye { served: 3 }),
+        // The negotiation member must be documented too — it can ride
+        // any frame in either direction.
+        ebv_solve::wire::encode_request_negotiating(&RequestFrame::Metrics),
     ];
 
     let mut missing = Vec::new();
@@ -151,6 +154,60 @@ fn every_wire_key_the_codec_emits_is_documented() {
         missing.is_empty(),
         "wire keys emitted by the codec but not documented (backticked) in docs/PROTOCOL.md: {missing:?}"
     );
+}
+
+#[test]
+fn binary_frame_constants_match_the_documented_spec() {
+    use ebv_solve::wire::binary;
+    // The doc's header example must be the real encoding of a dense
+    // solve header declaring a 16-byte payload.
+    let hex: Vec<String> =
+        binary::encode_header(binary::KIND_SOLVE_DENSE, 16).iter().map(|b| format!("{b:02X}")).collect();
+    let line = hex.join(" ");
+    assert!(DOC.contains(&line), "doc header example must be the real bytes: {line}");
+    assert!(DOC.contains("`0xEB 0x56`"), "magic bytes documented");
+    assert_eq!(binary::MAGIC, [0xEB, 0x56]);
+    assert_eq!(binary::VERSION, 1);
+    assert_eq!(binary::HEADER_LEN, 12);
+    for (kind, name) in [
+        (binary::KIND_SOLVE_DENSE, "solve"),
+        (binary::KIND_SOLVE_SPARSE, "solve_sparse"),
+        (binary::KIND_SOLUTION, "solution"),
+    ] {
+        assert!(
+            DOC.contains(&format!("`{kind:#04x}`")),
+            "binary kind for {name} missing from the doc as {kind:#04x}"
+        );
+    }
+}
+
+#[test]
+fn negotiation_examples_are_real_frames_with_the_ext_member() {
+    use ebv_solve::wire::{decode_request_ext, decode_response_ext, DecodeOptions};
+    // The documented offer is exactly what the client encoder emits,
+    // and it decodes with the negotiation member set.
+    let offer = doc_examples()
+        .into_iter()
+        .find(|l| l.contains("\"accept_binary\":true") && l.contains("\"op\":\"metrics\""))
+        .expect("the doc shows an accept_binary offer");
+    assert_eq!(
+        offer,
+        ebv_solve::wire::encode_request_negotiating(&RequestFrame::Metrics),
+        "the documented offer drifted from the encoder"
+    );
+    let (frame, ext) = decode_request_ext(&offer, &DecodeOptions::default()).unwrap();
+    assert_eq!(frame, RequestFrame::Metrics);
+    assert!(ext.accept_binary);
+
+    // The documented ack (spliced onto the next NDJSON response)
+    // decodes as that response plus the member.
+    let ack = doc_examples()
+        .into_iter()
+        .find(|l| l.contains("\"accept_binary\":true") && l.contains("\"op\":\"goodbye\""))
+        .expect("the doc shows the ack riding an NDJSON response");
+    let (frame, ext) = decode_response_ext(&ack).unwrap();
+    assert_eq!(frame, ResponseFrame::Goodbye { served: 2 });
+    assert!(ext.accept_binary);
 }
 
 #[test]

@@ -1,0 +1,323 @@
+//! Integration: the negotiated binary wire format against the NDJSON
+//! reference — format equivalence and hostile-input containment.
+//!
+//! The load-bearing assertion is bitwise identity: a session that
+//! negotiates `accept_binary` and ships its solves as length-prefixed
+//! binary frames receives solutions whose `x` vectors, residuals, and
+//! matrix keys are identical *to the bit* to what a pure-NDJSON session
+//! gets on an identically configured service (DESIGN.md §Bit-identity
+//! ledger — the wire encoding is inert on solve results). The hostile
+//! half pins the containment contract of docs/PROTOCOL.md §Binary
+//! frames: malformed binary input maps into the same typed `ErrorCode`
+//! taxonomy NDJSON uses, and the session survives it.
+
+use ebv_solve::config::ServiceConfig;
+use ebv_solve::coordinator::{ServiceHandle, SolverService};
+use ebv_solve::matrix::generate::{diag_dominant_dense, diag_dominant_sparse, rhs, GenSeed};
+use ebv_solve::wire::binary;
+use ebv_solve::wire::{
+    decode_response, encode_request, encode_request_negotiating, serve_session_with, ErrorCode,
+    RequestFrame, ResponseFrame, SessionOptions, SessionStats, WireSolve,
+};
+
+fn start_service() -> ServiceHandle {
+    SolverService::start(ServiceConfig {
+        lanes: 2,
+        max_batch: 4,
+        batch_window_us: 100,
+        queue_capacity: 64,
+        engine_lanes: 2,
+        use_runtime: false,
+        ..ServiceConfig::default()
+    })
+    .unwrap()
+}
+
+/// Run one in-memory session; returns (stats, raw response bytes,
+/// `binary_sessions` as folded into the service metrics).
+fn run_session(input: &[u8], opts: SessionOptions) -> (SessionStats, Vec<u8>, u64) {
+    let svc = start_service();
+    let mut out = Vec::new();
+    let stats = serve_session_with(&svc, input, &mut out, opts).unwrap();
+    let binary_sessions = svc.metrics_snapshot().binary_sessions;
+    svc.shutdown();
+    (stats, out, binary_sessions)
+}
+
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn negotiated_binary_session_is_bitwise_identical_to_ndjson() {
+    let dense_a = diag_dominant_dense(24, GenSeed(91));
+    let db1 = rhs(24, GenSeed(92));
+    // Multi-RHS: the same matrix under a fresh right-hand side rides
+    // the factor cache in both sessions.
+    let db2 = rhs(24, GenSeed(93));
+    let sparse_a = diag_dominant_sparse(40, 4, GenSeed(94));
+    let sb = rhs(40, GenSeed(95));
+    let reqs = [
+        RequestFrame::Solve(WireSolve::dense(dense_a.clone(), db1).with_id(1)),
+        RequestFrame::Solve(WireSolve::dense(dense_a, db2).with_id(2)),
+        RequestFrame::SolveSparse(WireSolve::sparse(sparse_a, sb).with_id(3)),
+    ];
+
+    // Reference: the same requests as pure NDJSON on a fresh service.
+    let mut nd_input = String::new();
+    for r in &reqs {
+        nd_input.push_str(&encode_request(r));
+        nd_input.push('\n');
+    }
+    nd_input.push_str("{\"op\":\"shutdown\"}\n");
+    let (nd_stats, nd_out, nd_binary) = run_session(nd_input.as_bytes(), SessionOptions::default());
+    assert_eq!(nd_binary, 0, "the reference session never negotiates");
+    let nd_frames: Vec<ResponseFrame> = String::from_utf8(nd_out)
+        .unwrap()
+        .lines()
+        .map(|l| decode_response(l).unwrap())
+        .collect();
+
+    // Candidate: first request NDJSON carrying the offer, the rest as
+    // binary frames.
+    let mut input = Vec::new();
+    input.extend_from_slice(encode_request_negotiating(&reqs[0]).as_bytes());
+    input.push(b'\n');
+    for r in &reqs[1..] {
+        input.extend_from_slice(&binary::encode_request_binary(r).unwrap());
+    }
+    input.extend_from_slice(b"{\"op\":\"shutdown\"}\n");
+    let (stats, out, negotiated) = run_session(&input, SessionOptions::default());
+    assert_eq!(negotiated, 1);
+    assert_eq!((stats.frames, stats.solves, stats.errors), (4, 3, 0));
+    assert_eq!(stats.bytes_in, input.len() as u64);
+    assert_eq!(stats.bytes_out, out.len() as u64);
+    assert!(
+        stats.frames == nd_stats.frames && stats.solves == nd_stats.solves,
+        "both sessions served the same work: {stats:?} vs {nd_stats:?}"
+    );
+
+    let frames = binary::decode_response_stream(&out).unwrap();
+    assert_eq!(frames.len(), nd_frames.len());
+    for (nd, (bin, _)) in nd_frames.iter().zip(&frames) {
+        match (nd, bin) {
+            (ResponseFrame::Solution(a), ResponseFrame::Solution(b)) => {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    bits(a.result.as_ref().unwrap()),
+                    bits(b.result.as_ref().unwrap()),
+                    "x drifted across wire formats (id {})",
+                    a.id
+                );
+                assert_eq!(a.residual.to_bits(), b.residual.to_bits(), "id {}", a.id);
+                assert_eq!(a.matrix_key, b.matrix_key, "fingerprint keying drifted");
+                assert_eq!(a.backend, b.backend);
+            }
+            (ResponseFrame::Goodbye { served: a }, ResponseFrame::Goodbye { served: b }) => {
+                assert_eq!(a, b)
+            }
+            other => panic!("frame shape drifted across formats: {other:?}"),
+        }
+    }
+    // The multi-RHS pair shares one matrix key in both sessions.
+    let key_of = |f: &ResponseFrame| match f {
+        ResponseFrame::Solution(s) => s.matrix_key,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(key_of(&nd_frames[0]), key_of(&nd_frames[1]));
+    assert_eq!(key_of(&frames[0].0), key_of(&frames[1].0));
+}
+
+#[test]
+fn mixed_session_interleaves_formats_after_negotiation() {
+    let a = diag_dominant_dense(8, GenSeed(96));
+    // Offer on a metrics frame (so the ack is visible as a spliced
+    // member), then: binary solve, NDJSON solve, binary solve again.
+    let offer = encode_request_negotiating(&RequestFrame::Metrics);
+    let bin1 = binary::encode_request_binary(&RequestFrame::Solve(
+        WireSolve::dense(a.clone(), vec![1.0; 8]).with_id(10),
+    ))
+    .unwrap();
+    let nd = encode_request(&RequestFrame::Solve(
+        WireSolve::dense(a.clone(), vec![2.0; 8]).with_id(11),
+    ));
+    let bin2 = binary::encode_request_binary(&RequestFrame::Solve(
+        WireSolve::dense(a, vec![3.0; 8]).with_id(12),
+    ))
+    .unwrap();
+
+    let mut input = Vec::new();
+    input.extend_from_slice(offer.as_bytes());
+    input.push(b'\n');
+    input.extend_from_slice(&bin1);
+    input.extend_from_slice(nd.as_bytes());
+    input.push(b'\n');
+    input.extend_from_slice(&bin2);
+    input.extend_from_slice(b"{\"op\":\"shutdown\"}\n");
+
+    let (stats, out, negotiated) = run_session(&input, SessionOptions::default());
+    assert_eq!(negotiated, 1, "one latch per session, however many frames follow");
+    assert_eq!((stats.frames, stats.solves, stats.errors), (5, 3, 0));
+
+    let frames = binary::decode_response_stream(&out).unwrap();
+    assert_eq!(frames.len(), 5);
+    assert!(frames[0].1.accept_binary, "ack rides the first response after the offer");
+    assert!(matches!(&frames[0].0, ResponseFrame::Metrics(_)));
+    let ids: Vec<u64> = frames[1..4]
+        .iter()
+        .map(|(f, _)| match f {
+            ResponseFrame::Solution(s) => {
+                assert!(s.result.is_ok());
+                s.id
+            }
+            other => panic!("{other:?}"),
+        })
+        .collect();
+    assert_eq!(ids, vec![10, 11, 12], "both request encodings are answered in order");
+    assert_eq!(frames[4].0, ResponseFrame::Goodbye { served: 3 });
+}
+
+#[test]
+fn hostile_binary_frames_get_typed_errors_and_the_session_survives() {
+    let a = diag_dominant_dense(6, GenSeed(97));
+    let good_frame = RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 6]).with_id(5));
+    let good = binary::encode_request_binary(&good_frame).unwrap();
+
+    // (a) Length/payload mismatch: the header's declared length and the
+    // consumed payload agree, but the shape inside implies more bytes.
+    // Framing stays in sync; the decode fails typed.
+    let mut mismatch = good.clone();
+    let short = (mismatch.len() - binary::HEADER_LEN - 8) as u64;
+    mismatch[4..12].copy_from_slice(&short.to_le_bytes());
+    mismatch.truncate(binary::HEADER_LEN + short as usize);
+
+    // (b) Unknown kind: header parses (so the payload can be consumed
+    // in sync), the decoder refuses it.
+    let mut unknown = binary::encode_header(0x7F, 4).to_vec();
+    unknown.extend_from_slice(&[9, 9, 9, 9]);
+
+    // (c) Declared length over the cap: discarded in a streaming skip,
+    // answered `oversized`.
+    let over_len: usize = 1 << 20;
+    let mut oversized = binary::encode_header(binary::KIND_SOLVE_DENSE, over_len as u64).to_vec();
+    oversized.extend_from_slice(&vec![0u8; over_len]);
+
+    let mut input = Vec::new();
+    input.extend_from_slice(encode_request_negotiating(&RequestFrame::Metrics).as_bytes());
+    input.push(b'\n');
+    input.extend_from_slice(&mismatch);
+    input.extend_from_slice(&unknown);
+    input.extend_from_slice(&oversized);
+    input.extend_from_slice(&good);
+    input.extend_from_slice(b"{\"op\":\"shutdown\"}\n");
+
+    let cap = 64 * 1024;
+    assert!(good.len() <= cap, "cap must admit the real frame");
+    let opts = SessionOptions { max_frame_bytes: Some(cap), ..SessionOptions::default() };
+    let (stats, out, negotiated) = run_session(&input, opts);
+    assert_eq!(negotiated, 1);
+    assert_eq!((stats.frames, stats.solves, stats.errors), (6, 1, 3));
+    assert_eq!(stats.bytes_in, input.len() as u64, "hostile payloads were consumed, not held");
+
+    let frames = binary::decode_response_stream(&out).unwrap();
+    assert_eq!(frames.len(), 6);
+    assert!(matches!(&frames[0].0, ResponseFrame::Metrics(_)));
+    let expect_error = |i: usize, code: ErrorCode, needle: &str| match &frames[i].0 {
+        ResponseFrame::Error { code: c, message } => {
+            assert_eq!(*c, code, "frame {i}: {message}");
+            assert!(message.contains(needle), "frame {i}: {message}");
+        }
+        other => panic!("frame {i}: expected error, got {other:?}"),
+    };
+    expect_error(1, ErrorCode::Decode, "length mismatch");
+    expect_error(2, ErrorCode::Decode, "unknown frame kind");
+    expect_error(3, ErrorCode::Oversized, "max_frame_bytes");
+    let ResponseFrame::Solution(s) = &frames[4].0 else { panic!("{frames:?}") };
+    assert!(s.result.is_ok(), "the session still solves after three hostile frames");
+    assert_eq!(s.id, 5);
+    assert_eq!(frames[5].0, ResponseFrame::Goodbye { served: 1 });
+}
+
+#[test]
+fn binary_before_negotiation_is_refused_with_a_decode_error() {
+    let a = diag_dominant_dense(5, GenSeed(98));
+    let bin = binary::encode_request_binary(&RequestFrame::Solve(WireSolve::dense(
+        a.clone(),
+        vec![1.0; 5],
+    )))
+    .unwrap();
+    let nd = encode_request(&RequestFrame::Solve(WireSolve::dense(a, vec![2.0; 5])));
+    let mut input = bin;
+    input.extend_from_slice(nd.as_bytes());
+    input.extend_from_slice(b"\n{\"op\":\"shutdown\"}\n");
+
+    let (stats, out, negotiated) = run_session(&input, SessionOptions::default());
+    assert_eq!(negotiated, 0, "an unsolicited binary frame is not an offer");
+    assert_eq!((stats.frames, stats.solves, stats.errors), (3, 1, 1));
+    // Never negotiated, so every response is an NDJSON line.
+    let frames: Vec<ResponseFrame> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| decode_response(l).unwrap())
+        .collect();
+    let ResponseFrame::Error { code, message } = &frames[0] else { panic!("{frames:?}") };
+    assert_eq!(*code, ErrorCode::Decode);
+    assert!(message.contains("accept_binary"), "the refusal names the fix: {message}");
+    assert!(matches!(&frames[1], ResponseFrame::Solution(s) if s.result.is_ok()));
+    assert_eq!(frames[2], ResponseFrame::Goodbye { served: 1 });
+}
+
+#[test]
+fn mid_frame_disconnect_ends_the_session_quietly() {
+    // Truncated header: five bytes of a twelve-byte header, then EOF.
+    let header = binary::encode_header(binary::KIND_SOLVE_DENSE, 64);
+    let (stats, out, _) = run_session(&header[..5], SessionOptions::default());
+    assert_eq!(stats, SessionStats { bytes_in: 5, ..SessionStats::default() });
+    assert!(out.is_empty(), "no half-frame is ever answered");
+
+    // Full header, partial payload, then EOF — like a text client
+    // hanging up mid-line, the session ends without a frame or error.
+    let a = diag_dominant_dense(6, GenSeed(99));
+    let full =
+        binary::encode_request_binary(&RequestFrame::Solve(WireSolve::dense(a, vec![1.0; 6])))
+            .unwrap();
+    let cut = &full[..full.len() - 10];
+    let (stats, out, _) = run_session(cut, SessionOptions::default());
+    assert_eq!((stats.frames, stats.errors), (0, 0));
+    assert_eq!(stats.bytes_in, cut.len() as u64);
+    assert!(out.is_empty());
+}
+
+#[test]
+fn bad_magic_tail_and_version_are_typed_decode_errors() {
+    // Right first byte, wrong second: the header is rejected after
+    // exactly HEADER_LEN consumed bytes, so a well-placed next frame
+    // still parses.
+    let mut bad_magic = binary::encode_header(binary::KIND_SOLVE_DENSE, 0);
+    bad_magic[1] = 0x00;
+    let mut input = bad_magic.to_vec();
+    input.extend_from_slice(b"{\"op\":\"shutdown\"}\n");
+    let (stats, out, _) = run_session(&input, SessionOptions::default());
+    assert_eq!((stats.frames, stats.errors), (2, 1));
+    let frames: Vec<ResponseFrame> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| decode_response(l).unwrap())
+        .collect();
+    assert!(
+        matches!(&frames[0], ResponseFrame::Error { code: ErrorCode::Decode, message }
+            if message.contains("magic")),
+        "{frames:?}"
+    );
+    assert_eq!(frames[1], ResponseFrame::Goodbye { served: 0 });
+
+    // Unsupported version: same containment, different message.
+    let mut bad_version = binary::encode_header(binary::KIND_SOLVE_DENSE, 0);
+    bad_version[2] = 9;
+    let mut input = bad_version.to_vec();
+    input.extend_from_slice(b"{\"op\":\"shutdown\"}\n");
+    let (stats, out, _) = run_session(&input, SessionOptions::default());
+    assert_eq!((stats.frames, stats.errors), (2, 1));
+    let text = String::from_utf8(out).unwrap();
+    assert!(text.contains("version"), "{text}");
+}
