@@ -1,19 +1,32 @@
 //! Panel ablation: column-at-a-time (`nb=1`) vs blocked-panel EBV
 //! factorization on the persistent lane engine, across the
-//! trailing-update microkernel variants.
+//! trailing-update microkernel variants and the two lane scheduling
+//! disciplines.
 //!
 //! The rank-1 trailing update sweeps the whole trailing matrix once per
 //! column; an `nb`-wide panel sweeps it once per panel, trading `nb`
 //! passes for one rank-`nb` GEMM-style pass per row. How that pass is
 //! executed is the second ablation axis: the `unroll4`/`unroll8`
 //! register kernels vs the `tiled` L1/L2 cache-blocked kernel (see
-//! DESIGN.md §Microkernel). Cases run kernel × `nb ∈ {1, 8, 64}` at
-//! dense sizes up to 1024 on 4 fold lanes, assert `nb=1` is
-//! bit-identical to `SeqLu` and wider panels agree componentwise, and
-//! record the barrier-step counts from `FactorPlan::dense_blocked` so
-//! the schedule-level story travels with the timings. Writes the
-//! standard bench report and a repo-level `BENCH_panel.json` summary
-//! (skipped in `EBV_BENCH_SMOKE=1` mode — see
+//! DESIGN.md §Microkernel). The third axis is the schedule: the
+//! `barrier` discipline pays one engine barrier entry per blocked step,
+//! while `dataflow` drains the whole panel DAG inside a single engine
+//! step with dependency counters and panel lookahead (DESIGN.md
+//! §Dataflow scheduling). Cases run kernel × `nb ∈ {1, 8, 64}` ×
+//! schedule at dense sizes up to 1024 on 4 fold lanes and assert, in
+//! every mode including `EBV_BENCH_SMOKE=1`:
+//!
+//! - `nb=1` is bit-identical to `SeqLu`, wider panels componentwise;
+//! - dataflow factors are bitwise identical to their barrier twins;
+//! - measured engine barrier entries equal the plan's account —
+//!   `FactorPlan::dense_blocked(..).barriers` under `barrier`, and
+//!   `FactorPlan::dense_blocked_dataflow(..).barriers` (= 1, strictly
+//!   fewer) when dataflow engages (`nb > 1`, multi-panel);
+//! - per-lane barrier-wait nanoseconds are measured for both modes via
+//!   the lane profiler (`LaneProfileSnapshot::delta_since`).
+//!
+//! Writes the standard bench report and a repo-level `BENCH_panel.json`
+//! summary (skipped in `EBV_BENCH_SMOKE=1` mode — see
 //! `bench::write_repo_summary`).
 //!
 //! ```sh
@@ -27,10 +40,26 @@ use std::time::Duration;
 use ebv_solve::bench::{self, Bencher, Report};
 use ebv_solve::ebv::plan::FactorPlan;
 use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
-use ebv_solve::exec::LaneEngine;
+use ebv_solve::exec::{LaneEngine, Schedule};
 use ebv_solve::matrix::generate::{diag_dominant_dense, GenSeed};
+use ebv_solve::obs;
 use ebv_solve::solver::{EbvLu, Kernel, LuSolver, SeqLu};
 use ebv_solve::util::json::Json;
+
+struct Case {
+    name: String,
+    kernel: Kernel,
+    sched: Schedule,
+    n: usize,
+    nb: usize,
+    /// Barrier entries the plan accounts for this mode.
+    planned_barriers: usize,
+    /// Barrier entries the engine actually recorded for one factor.
+    measured_barriers: usize,
+    /// Σ over lanes of barrier-wait ns for that same factor.
+    wait_ns: u64,
+    median: f64,
+}
 
 fn main() {
     let lanes = 4;
@@ -49,64 +78,138 @@ fn main() {
     }
     .or_smoke();
 
-    let mut report = Report::new("Panel ablation — kernel × panel width on the blocked EBV factor");
-    report.set_headers(&["case", "barrier steps", "median, s", "vs nb=1"]);
-    // (case name, kernel, n, nb, barriers, median seconds)
-    let mut results: Vec<(String, Kernel, usize, usize, usize, f64)> = Vec::new();
+    let mut report = Report::new(
+        "Panel ablation — kernel × panel width × schedule on the blocked EBV factor",
+    );
+    report.set_headers(&["case", "barriers plan=measured", "wait ns Σ", "median, s", "vs nb=1"]);
+    let mut results: Vec<Case> = Vec::new();
 
     for &n in &sizes {
         let a = diag_dominant_dense(n, GenSeed(4000 + n as u64));
         let reference = SeqLu::new().factor(&a).expect("factor");
-        let schedule = LaneSchedule::build(n, lanes, RowDist::EbvFold);
+        let lane_schedule = LaneSchedule::build(n, lanes, RowDist::EbvFold);
 
         for &kernel in &kernels {
-            // Per-kernel baseline, measured under identical conditions
-            // (the nb=1 column path itself never runs the microkernel).
-            let mut nb1_median = 0.0f64;
+            // The barrier pass stores its packed factors per width so
+            // the dataflow pass can assert bitwise identity against its
+            // exact twin (same n, nb, kernel, engine).
+            let mut barrier_bits: Vec<Vec<f64>> = Vec::new();
 
-            for &nb in &widths {
-                let solver = EbvLu::with_lanes(lanes)
-                    .seq_threshold(0)
-                    .panel(nb)
-                    .kernel(kernel)
-                    .with_engine(Arc::clone(&engine));
-                let case = format!("factor n={n} nb={nb} kern={}", kernel.name());
-                let stats = bencher.run(&case, || solver.factor(&a).expect("factor"));
+            for &sched in &[Schedule::Barrier, Schedule::Dataflow] {
+                // Per-(kernel, schedule) baseline, measured under
+                // identical conditions (the nb=1 column path itself
+                // never runs the microkernel).
+                let mut nb1_median = 0.0f64;
 
-                // Correctness rides along with every timing: nb=1 must
-                // be bit-identical to SeqLu for every kernel, wider
-                // panels componentwise-close. The bound is looser than
-                // the property suite's 1e-9 (which runs n <= 150)
-                // because reordering error grows with n and with the
-                // O(n) magnitudes of these dominant systems.
-                let f = solver.factor(&a).expect("factor");
-                let diff = f.packed().max_abs_diff(reference.packed());
-                if nb == 1 {
+                for (wi, &nb) in widths.iter().enumerate() {
+                    let solver = EbvLu::with_lanes(lanes)
+                        .seq_threshold(0)
+                        .panel(nb)
+                        .kernel(kernel)
+                        .schedule(sched)
+                        .with_engine(Arc::clone(&engine));
+                    let case = format!(
+                        "factor n={n} nb={nb} kern={} sched={}",
+                        kernel.name(),
+                        sched.name()
+                    );
+                    let stats = bencher.run(&case, || solver.factor(&a).expect("factor"));
+
+                    // One instrumented factor outside the timing loop:
+                    // barrier-entry counts and per-lane wait ns.
+                    obs::set_enabled(true);
+                    let prof_before = engine.lane_profile();
+                    let steps_before = engine.stats();
+                    let dep_before = engine.dep_stats();
+                    let f = solver.factor(&a).expect("factor");
+                    let measured = (engine.stats().steps - steps_before.steps) as usize;
+                    let dep_runs = engine.dep_stats().runs - dep_before.runs;
+                    let wait = engine.lane_profile().delta_since(&prof_before);
+                    obs::set_enabled(false);
+                    let wait_ns: u64 = wait.wait_ns.iter().sum();
+
+                    // Correctness rides along with every timing: nb=1
+                    // must be bit-identical to SeqLu for every kernel,
+                    // wider panels componentwise-close. The bound is
+                    // looser than the property suite's 1e-9 (which runs
+                    // n <= 150) because reordering error grows with n
+                    // and with the O(n) magnitudes of these dominant
+                    // systems.
+                    let diff = f.packed().max_abs_diff(reference.packed());
+                    if nb == 1 {
+                        assert_eq!(
+                            diff, 0.0,
+                            "{case}: nb=1 must reproduce SeqLu bitwise"
+                        );
+                    } else {
+                        assert!(diff < 1e-8, "{case}: drifted {diff:e} from SeqLu");
+                    }
+
+                    // The dataflow schedule must reproduce the barrier
+                    // schedule's bits exactly — same (nb, kernel)
+                    // arithmetic, different synchronization only.
+                    match sched {
+                        Schedule::Barrier => barrier_bits.push(f.packed().data().to_vec()),
+                        Schedule::Dataflow => assert_eq!(
+                            f.packed().data(),
+                            barrier_bits[wi].as_slice(),
+                            "{case}: dataflow bits diverged from barrier"
+                        ),
+                    }
+
+                    // Schedule-level live asserts: the measured barrier
+                    // entries equal what the plan accounts.
+                    let plan_barriers = FactorPlan::dense_blocked(n, nb, &lane_schedule).barriers;
+                    let dataflow_engaged = sched == Schedule::Dataflow && nb > 1 && n > nb;
+                    let planned = if dataflow_engaged {
+                        let account =
+                            FactorPlan::dense_blocked_dataflow(n, nb, &lane_schedule);
+                        assert!(
+                            account.barriers < plan_barriers,
+                            "{case}: dataflow must enter strictly fewer barriers \
+                             ({} vs {plan_barriers})",
+                            account.barriers
+                        );
+                        assert_eq!(dep_runs, 1, "{case}: one dep-scheduled drain");
+                        account.barriers
+                    } else {
+                        // Barrier discipline, requested or fallen back
+                        // to (nb=1 column path, single covering panel).
+                        assert_eq!(dep_runs, 0, "{case}: no dep-scheduled drain");
+                        if nb == 1 {
+                            n - 1 // fused column steps, one barrier each
+                        } else {
+                            plan_barriers
+                        }
+                    };
                     assert_eq!(
-                        diff, 0.0,
-                        "n={n} kern={}: nb=1 must reproduce SeqLu bitwise",
-                        kernel.name()
+                        measured, planned,
+                        "{case}: engine recorded {measured} barrier entries, plan says {planned}"
                     );
-                } else {
-                    assert!(
-                        diff < 1e-8,
-                        "n={n} nb={nb} kern={}: drifted {diff:e} from SeqLu",
-                        kernel.name()
-                    );
-                }
 
-                let barriers = FactorPlan::dense_blocked(n, nb, &schedule).barriers;
-                if nb == 1 {
-                    nb1_median = stats.median;
+                    if nb == 1 {
+                        nb1_median = stats.median;
+                    }
+                    report.push_row(vec![
+                        case.clone(),
+                        format!("{planned}={measured}"),
+                        wait_ns.to_string(),
+                        format!("{:.6}", stats.median),
+                        format!("{:.2}x", nb1_median / stats.median),
+                    ]);
+                    results.push(Case {
+                        name: case,
+                        kernel,
+                        sched,
+                        n,
+                        nb,
+                        planned_barriers: planned,
+                        measured_barriers: measured,
+                        wait_ns,
+                        median: stats.median,
+                    });
+                    report.push_stats(stats);
                 }
-                report.push_row(vec![
-                    case.clone(),
-                    barriers.to_string(),
-                    format!("{:.6}", stats.median),
-                    format!("{:.2}x", nb1_median / stats.median),
-                ]);
-                results.push((case, kernel, n, nb, barriers, stats.median));
-                report.push_stats(stats);
             }
         }
 
@@ -139,6 +242,7 @@ fn main() {
         println!("report: {}", p.display());
     }
     println!("engine stats: {:?}", engine.stats());
+    println!("dep stats: {:?}", engine.dep_stats());
 
     // Repo-level summary the docs reference (BENCH_panel.json).
     let doc = Json::obj([
@@ -148,22 +252,31 @@ fn main() {
         ("panel_widths", Json::arr(widths.iter().map(|&w| Json::from(w)))),
         ("kernels", Json::arr(kernels.iter().map(|k| Json::from(k.name())))),
         (
+            "schedules",
+            Json::arr(Schedule::ALL.iter().map(|s| Json::from(s.name()))),
+        ),
+        (
             "cases",
-            Json::arr(results.iter().map(|(name, kernel, n, nb, barriers, median)| {
-                // Speedup baseline: the same kernel's nb=1 run.
+            Json::arr(results.iter().map(|c| {
+                // Speedup baseline: the same kernel + schedule's nb=1 run.
                 let nb1 = results
                     .iter()
-                    .find(|(_, k2, n2, nb2, _, _)| k2 == kernel && n2 == n && *nb2 == 1)
-                    .map(|(_, _, _, _, _, m)| *m)
-                    .unwrap_or(*median);
+                    .find(|o| {
+                        o.kernel == c.kernel && o.sched == c.sched && o.n == c.n && o.nb == 1
+                    })
+                    .map(|o| o.median)
+                    .unwrap_or(c.median);
                 Json::obj([
-                    ("name", Json::from(name.clone())),
-                    ("kernel", Json::from(kernel.name())),
-                    ("n", Json::from(*n)),
-                    ("panel_width", Json::from(*nb)),
-                    ("barrier_steps", Json::from(*barriers)),
-                    ("median_s", Json::from(*median)),
-                    ("speedup_vs_nb1", Json::from(nb1 / *median)),
+                    ("name", Json::from(c.name.clone())),
+                    ("kernel", Json::from(c.kernel.name())),
+                    ("schedule", Json::from(c.sched.name())),
+                    ("n", Json::from(c.n)),
+                    ("panel_width", Json::from(c.nb)),
+                    ("barrier_steps", Json::from(c.planned_barriers)),
+                    ("measured_barrier_entries", Json::from(c.measured_barriers)),
+                    ("barrier_wait_ns", Json::from(c.wait_ns as usize)),
+                    ("median_s", Json::from(c.median)),
+                    ("speedup_vs_nb1", Json::from(nb1 / c.median)),
                 ])
             })),
         ),
@@ -175,22 +288,20 @@ fn main() {
         println!("wrote {}", out.display());
     }
 
-    // Direction check (skipped in smoke mode — tiny shapes are noise):
-    // at the largest size, for every kernel, the widest panel must not
-    // lose to the rank-1 column path.
+    // Direction checks (skipped in smoke mode — tiny shapes are noise).
     if !smoke {
         let n_max = *sizes.iter().max().expect("sizes nonempty");
+        let case = |kernel: Kernel, sched: Schedule, nb: usize| {
+            results
+                .iter()
+                .find(|c| c.kernel == kernel && c.sched == sched && c.n == n_max && c.nb == nb)
+                .expect("case present")
+        };
         for &kernel in &kernels {
-            let t1 = results
-                .iter()
-                .find(|(_, k, n, nb, _, _)| *k == kernel && *n == n_max && *nb == 1)
-                .expect("nb=1 case")
-                .5;
-            let t64 = results
-                .iter()
-                .find(|(_, k, n, nb, _, _)| *k == kernel && *n == n_max && *nb == 64)
-                .expect("nb=64 case")
-                .5;
+            // At the largest size the widest panel must not lose to the
+            // rank-1 column path (the blocked-panel claim).
+            let t1 = case(kernel, Schedule::Barrier, 1).median;
+            let t64 = case(kernel, Schedule::Barrier, 64).median;
             assert!(
                 t64 <= t1 * 1.10,
                 "n={n_max} kern={}: blocked nb=64 ({t64:.6}s) lost to \
@@ -201,6 +312,32 @@ fn main() {
                 "claim check: kern={} nb=64 ≤ 1.10 × nb=1 at n={n_max} ({:.2}x speedup) ✓",
                 kernel.name(),
                 t1 / t64
+            );
+
+            // The dataflow claim: with ~1000× fewer barrier entries the
+            // lanes' measured barrier-wait must not grow. (Wall-clock
+            // medians are printed, not asserted — the win there depends
+            // on core count and panel shape; the barrier-entry and
+            // wait-ns accounting is the structural story.)
+            let b64 = case(kernel, Schedule::Barrier, 64);
+            let d64 = case(kernel, Schedule::Dataflow, 64);
+            assert!(
+                d64.wait_ns <= b64.wait_ns,
+                "n={n_max} kern={}: dataflow barrier-wait {} ns exceeds barrier's {} ns",
+                kernel.name(),
+                d64.wait_ns,
+                b64.wait_ns
+            );
+            println!(
+                "claim check: kern={} sched=dataflow wait {} ns ≤ barrier wait {} ns \
+                 ({} vs {} barrier entries), median {:.6}s vs {:.6}s ✓",
+                kernel.name(),
+                d64.wait_ns,
+                b64.wait_ns,
+                d64.measured_barriers,
+                b64.measured_barriers,
+                d64.median,
+                b64.median
             );
         }
     }

@@ -1,27 +1,34 @@
 //! Sparse refactorization ablation: monolithic Gilbert–Peierls
 //! factorization vs the symbolic/numeric split on the persistent lane
-//! engine.
+//! engine, under both lane scheduling disciplines.
 //!
 //! The serving workload (wire-protocol sessions resending matrices with
 //! a fixed sparsity pattern and changing values) pays the monolithic
 //! `SparseLu::factor` cost on every request. With the split, symbolic
 //! analysis runs once per *pattern* and each request pays only the
-//! level-parallel numeric sweep (`SparseSymbolic::factor_par_on`), so
-//! this bench times four cases per matrix:
+//! numeric sweep, so this bench times five cases per matrix:
 //!
 //! * `full factor` — `SparseLu::factor`, symbolic + numeric every call;
 //! * `symbolic` — `SparseSymbolic::analyze` alone (the one-time cost);
 //! * `numeric lanes=1` — sequential refactorization over the pattern;
-//! * `numeric lanes=4` — the level-parallel engine job.
+//! * `numeric lanes=4` — the level-parallel engine job (`barrier`:
+//!   one engine barrier entry per DAG level);
+//! * `numeric lanes=4 dataflow` — per-row dependency counters
+//!   (`--schedule dataflow`: the whole DAG drains inside one engine
+//!   barrier entry, DESIGN.md §Dataflow scheduling).
 //!
-//! Correctness rides along with every timing: all refactorization
-//! outputs must be **bitwise identical** to the monolithic factors,
+//! Correctness rides along with every timing, in every mode including
+//! `EBV_BENCH_SMOKE=1`: all refactorization outputs — both schedules,
 //! including a same-pattern/different-values refactor (the cache-reuse
-//! case). The barrier story travels too: `FactorPlan::sparse_levels`
-//! counts one synchronization per DAG level against the row-per-barrier
-//! baseline. Writes the standard bench report and a repo-level
-//! `BENCH_sparse.json` summary (skipped in `EBV_BENCH_SMOKE=1` mode —
-//! see `bench::write_repo_summary`).
+//! case) — must be **bitwise identical** to the monolithic factors. The
+//! barrier story travels too: `FactorPlan::sparse_levels` counts one
+//! synchronization per DAG level against the row-per-barrier baseline,
+//! `FactorPlan::sparse_dataflow` accounts the dependency-counted drain
+//! (1 barrier, strictly fewer than the level count), and the engine's
+//! measured barrier entries and per-lane barrier-wait ns are asserted
+//! against both accounts. Writes the standard bench report and a
+//! repo-level `BENCH_sparse.json` summary (skipped in
+//! `EBV_BENCH_SMOKE=1` mode — see `bench::write_repo_summary`).
 //!
 //! ```sh
 //! cargo bench --bench ablation_sparse_refactor
@@ -33,8 +40,9 @@ use std::time::Duration;
 use ebv_solve::bench::{self, Bencher, Report};
 use ebv_solve::ebv::plan::FactorPlan;
 use ebv_solve::ebv::schedule::{LaneSchedule, RowDist};
-use ebv_solve::exec::LaneEngine;
+use ebv_solve::exec::{LaneEngine, Schedule};
 use ebv_solve::matrix::generate::poisson_2d;
+use ebv_solve::obs;
 use ebv_solve::solver::{SparseLu, SparseSymbolic};
 use ebv_solve::testutil::rescale_csr;
 use ebv_solve::util::json::Json;
@@ -59,18 +67,23 @@ fn main() {
         "case",
         "n",
         "nnz(L+U)",
-        "DAG levels",
+        "barriers plan→measured",
+        "wait ns Σ",
         "median, s",
         "vs full factor",
     ]);
     // (case, n, grid, median seconds, full-factor median)
     let mut results: Vec<(String, usize, usize, f64, f64)> = Vec::new();
+    // Per-grid schedule accounting for the JSON summary.
+    let mut accounting: Vec<Json> = Vec::new();
 
     for &g in &grids {
         let a = poisson_2d(g);
         let n = a.rows();
         let reference = SparseLu::new().factor(&a).expect("factor");
         let sym = SparseSymbolic::analyze(&a).expect("symbolic");
+        let sym_df =
+            SparseSymbolic::analyze(&a).expect("symbolic").with_schedule(Schedule::Dataflow);
         let factor_nnz = reference.l().nnz() + reference.u().nnz();
 
         let full = bencher.run(&format!("full factor n={n}"), || {
@@ -85,44 +98,135 @@ fn main() {
         let numeric_par = bencher.run(&format!("numeric lanes={lanes} n={n}"), || {
             sym.factor_par_on(&a, lanes, &engine).expect("numeric")
         });
+        let numeric_df = bencher.run(&format!("numeric lanes={lanes} dataflow n={n}"), || {
+            sym_df.factor_par_on(&a, lanes, &engine).expect("numeric")
+        });
 
         // Bitwise contract rides along with every timing run.
         let f_seq = sym.factor(&a).expect("numeric");
         let f_par = sym.factor_par_on(&a, lanes, &engine).expect("numeric");
+        let f_df = sym_df.factor_par_on(&a, lanes, &engine).expect("numeric");
         assert_eq!(f_seq.l(), reference.l(), "n={n}: sequential numeric drifted");
         assert_eq!(f_seq.u(), reference.u(), "n={n}: sequential numeric drifted");
         assert_eq!(f_par.l(), reference.l(), "n={n}: parallel numeric drifted");
         assert_eq!(f_par.u(), reference.u(), "n={n}: parallel numeric drifted");
+        assert_eq!(f_df.l(), reference.l(), "n={n}: dataflow numeric drifted");
+        assert_eq!(f_df.u(), reference.u(), "n={n}: dataflow numeric drifted");
         // Same pattern, new values: the cached-symbolic reuse case.
         let a2 = rescale_csr(&a, 1.75);
         let ref2 = SparseLu::new().factor(&a2).expect("factor");
         let f2 = sym.factor_par_on(&a2, lanes, &engine).expect("refactor");
         assert_eq!(f2.l(), ref2.l(), "n={n}: refactor with new values drifted");
         assert_eq!(f2.u(), ref2.u(), "n={n}: refactor with new values drifted");
+        let f2df = sym_df.factor_par_on(&a2, lanes, &engine).expect("refactor");
+        assert_eq!(f2df.l(), ref2.l(), "n={n}: dataflow refactor drifted");
+        assert_eq!(f2df.u(), ref2.u(), "n={n}: dataflow refactor drifted");
 
-        // Barrier accounting from the symbolic DAG.
+        // Barrier accounting from the symbolic DAG, plan-side …
         let sched = LaneSchedule::build(n, lanes, RowDist::EbvFold);
         let lvl_plan =
             FactorPlan::sparse_levels(reference.l(), reference.u(), sym.levels(), &sched);
         assert_eq!(lvl_plan.barriers, sym.level_count());
+        let account = FactorPlan::sparse_dataflow(reference.l(), reference.u());
+        assert_eq!(account.barriers, 1, "n={n}: dataflow drains in one barrier entry");
+        assert!(
+            account.barriers < lvl_plan.barriers,
+            "n={n}: dataflow must account strictly fewer barriers than {} levels",
+            lvl_plan.barriers
+        );
+        assert_eq!(
+            account.total_flops,
+            lvl_plan.lane_flops.iter().sum::<usize>(),
+            "n={n}: dataflow account must conserve the level plan's lane flops"
+        );
 
-        for (case, stats) in [
-            ("full factor", &full),
-            ("symbolic", &symbolic),
-            ("numeric lanes=1", &numeric_seq),
-            ("numeric lanes=4", &numeric_par),
+        // … and engine-side: one instrumented refactorization per
+        // discipline, with the lane profiler measuring barrier-wait ns.
+        obs::set_enabled(true);
+        let prof0 = engine.lane_profile();
+        let steps0 = engine.stats();
+        let dep0 = engine.dep_stats();
+        sym.factor_par_on(&a, lanes, &engine).expect("numeric");
+        let barrier_measured = (engine.stats().steps - steps0.steps) as usize;
+        let barrier_dep_runs = engine.dep_stats().runs - dep0.runs;
+        let barrier_wait: u64 =
+            engine.lane_profile().delta_since(&prof0).wait_ns.iter().sum();
+        let prof1 = engine.lane_profile();
+        let steps1 = engine.stats();
+        let dep1 = engine.dep_stats();
+        sym_df.factor_par_on(&a, lanes, &engine).expect("numeric");
+        let dataflow_measured = (engine.stats().steps - steps1.steps) as usize;
+        let dataflow_dep_runs = engine.dep_stats().runs - dep1.runs;
+        let dataflow_wait: u64 =
+            engine.lane_profile().delta_since(&prof1).wait_ns.iter().sum();
+        obs::set_enabled(false);
+
+        assert_eq!(barrier_dep_runs, 0, "n={n}: level path never dep-schedules");
+        // The level path may fall back to the sequential sweep when
+        // every level is below the split threshold (0 engine steps);
+        // otherwise it pays one barrier entry per level.
+        assert!(
+            barrier_measured == 0 || barrier_measured == sym.level_count(),
+            "n={n}: level path recorded {barrier_measured} barrier entries, \
+             expected 0 (fallback) or {} (one per level)",
+            sym.level_count()
+        );
+        if n >= lanes * 4 {
+            assert_eq!(
+                dataflow_measured, account.barriers,
+                "n={n}: dataflow must drain the DAG in one engine step"
+            );
+            assert_eq!(dataflow_dep_runs, 1, "n={n}: one dep-scheduled drain");
+        } else {
+            assert_eq!(dataflow_dep_runs, 0, "n={n}: tiny system keeps the sweep");
+        }
+        if !smoke && barrier_measured > 0 {
+            assert!(
+                dataflow_wait <= barrier_wait,
+                "n={n}: dataflow barrier-wait {dataflow_wait} ns exceeds the level \
+                 path's {barrier_wait} ns across {barrier_measured} barrier entries"
+            );
+        }
+        accounting.push(Json::obj([
+            ("n", Json::from(n)),
+            ("levels", Json::from(sym.level_count())),
+            ("barrier_entries_barrier", Json::from(barrier_measured)),
+            ("barrier_entries_dataflow", Json::from(dataflow_measured)),
+            ("barrier_wait_ns_barrier", Json::from(barrier_wait as usize)),
+            ("barrier_wait_ns_dataflow", Json::from(dataflow_wait as usize)),
+            ("dataflow_total_flops", Json::from(account.total_flops)),
+            ("dataflow_critical_path_flops", Json::from(account.critical_path_flops)),
+        ]));
+
+        for (case, stats, barriers, wait) in [
+            ("full factor", &full, "-".to_string(), "-".to_string()),
+            ("symbolic", &symbolic, "-".to_string(), "-".to_string()),
+            ("numeric lanes=1", &numeric_seq, "-".to_string(), "-".to_string()),
+            (
+                "numeric lanes=4",
+                &numeric_par,
+                format!("{}→{barrier_measured}", lvl_plan.barriers),
+                barrier_wait.to_string(),
+            ),
+            (
+                "numeric lanes=4 dataflow",
+                &numeric_df,
+                format!("{}→{dataflow_measured}", account.barriers),
+                dataflow_wait.to_string(),
+            ),
         ] {
             report.push_row(vec![
                 format!("{case} n={n}"),
                 n.to_string(),
                 factor_nnz.to_string(),
-                sym.level_count().to_string(),
+                barriers,
+                wait,
                 format!("{:.6}", stats.median),
                 format!("{:.2}x", full.median / stats.median),
             ]);
             results.push((case.to_string(), n, g, stats.median, full.median));
         }
-        for stats in [full, symbolic, numeric_seq, numeric_par] {
+        for stats in [full, symbolic, numeric_seq, numeric_par, numeric_df] {
             report.push_stats(stats);
         }
     }
@@ -132,6 +236,7 @@ fn main() {
         println!("report: {}", p.display());
     }
     println!("engine stats: {:?}", engine.stats());
+    println!("dep stats: {:?}", engine.dep_stats());
 
     // Repo-level summary the docs reference (BENCH_sparse.json).
     let doc = Json::obj([
@@ -140,10 +245,17 @@ fn main() {
         ("lanes", Json::from(lanes)),
         ("grids", Json::arr(grids.iter().map(|&g| Json::from(g)))),
         (
+            "schedules",
+            Json::arr(Schedule::ALL.iter().map(|s| Json::from(s.name()))),
+        ),
+        (
             "cases",
             Json::arr(results.iter().map(|(case, n, g, median, full_median)| {
+                let schedule =
+                    if case.contains("dataflow") { "dataflow" } else { "barrier" };
                 Json::obj([
                     ("name", Json::from(format!("{case} n={n}"))),
+                    ("schedule", Json::from(schedule)),
                     ("n", Json::from(*n)),
                     ("grid", Json::from(*g)),
                     ("median_s", Json::from(*median)),
@@ -151,6 +263,7 @@ fn main() {
                 ])
             })),
         ),
+        ("schedule_accounting", Json::arr(accounting.into_iter())),
     ]);
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sparse.json");
     if bench::write_repo_summary(&out, &doc).unwrap_or(false) {
@@ -160,7 +273,8 @@ fn main() {
     // Direction check (skipped in smoke mode — tiny shapes are noise):
     // at the largest size, the numeric refactorization a repeat
     // same-pattern request pays must beat re-running the full
-    // factorization; the split exists to win exactly here.
+    // factorization under both schedules; the split exists to win
+    // exactly here.
     if !smoke {
         let n_max = grids.iter().map(|&g| g * g).max().expect("grids nonempty");
         let find = |case: &str| {
@@ -173,15 +287,22 @@ fn main() {
         let t_full = find("full factor");
         let t_par = find("numeric lanes=4");
         let t_seq = find("numeric lanes=1");
+        let t_df = find("numeric lanes=4 dataflow");
         assert!(
             t_par <= t_full * 1.05,
             "n={n_max}: parallel numeric refactor ({t_par:.6}s) lost to the monolithic \
              factorization ({t_full:.6}s)"
         );
+        assert!(
+            t_df <= t_full * 1.05,
+            "n={n_max}: dataflow numeric refactor ({t_df:.6}s) lost to the monolithic \
+             factorization ({t_full:.6}s)"
+        );
         println!(
             "claim check: numeric refactor ≤ 1.05 × full factor at n={n_max} \
-             ({:.2}x vs full, {:.2}x vs sequential numeric) ✓",
+             (barrier {:.2}x, dataflow {:.2}x vs full; {:.2}x vs sequential numeric) ✓",
             t_full / t_par,
+            t_full / t_df,
             t_seq / t_par
         );
     }

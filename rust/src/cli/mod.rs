@@ -106,7 +106,9 @@ COMMANDS:
     solve     Generate a system and solve it
               --kind dense|sparse|poisson   (default dense)
               --n <size>                    (default 512)
-              --solver seq|ebv|blocked|gauss-jordan (default ebv)
+              --solver seq|ebv|blocked|gauss-jordan|refined (default ebv;
+                                             refined = ebv + iterative
+                                             refinement)
               --lanes <k>                   (default #cpus)
               --panel-width <nb>            (blocked EBV panel width;
                                              default 64, 1 = exact
@@ -115,6 +117,13 @@ COMMANDS:
                                              auto|unroll4|unroll8|tiled;
                                              default auto — EBV_KERNEL
                                              env or tiled)
+              --schedule <s>                (lane scheduling discipline:
+                                             barrier|dataflow; default
+                                             barrier, dataflow swaps the
+                                             per-step/per-level barriers
+                                             for dependency-counted tasks
+                                             with panel lookahead —
+                                             bitwise-identical results)
               --sparse-parallel <bool>      (sparse kinds: symbolic/numeric
                                              split with level-parallel
                                              refactorization; default true,
@@ -176,6 +185,9 @@ COMMANDS:
                                              width; default 64)
               --kernel <k>                  (trailing-update microkernel:
                                              auto|unroll4|unroll8|tiled)
+              --schedule <s>                (lane scheduling discipline:
+                                             barrier|dataflow; default
+                                             barrier)
               --sparse-parallel <bool>      (sparse symbolic/numeric split
                                              with pattern-keyed symbolic
                                              caching; default true)
@@ -263,6 +275,12 @@ mod tests {
     fn usage_documents_the_kernel_knob() {
         assert!(USAGE.contains("--kernel"), "solve/serve/metrics should list --kernel");
         assert!(USAGE.contains("auto|unroll4|unroll8|tiled"));
+    }
+
+    #[test]
+    fn usage_documents_the_schedule_knob() {
+        assert!(USAGE.contains("--schedule"), "solve/serve should list --schedule");
+        assert!(USAGE.contains("barrier|dataflow"));
     }
 
     #[test]

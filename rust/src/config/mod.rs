@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::ebv::schedule::RowDist;
+use crate::exec::Schedule;
 use crate::solver::kernel::Kernel;
 use crate::util::error::{EbvError, Result};
 
@@ -135,6 +136,13 @@ pub struct ServiceConfig {
     /// are bitwise identical; `unroll8` agrees componentwise. The
     /// sparse numeric sweep is bitwise-invariant under every choice.
     pub kernel: Kernel,
+    /// Lane scheduling discipline of the parallel factorizations and
+    /// sparse trisolves (`exec::Schedule`): `barrier` (the default —
+    /// one engine step per column/panel/level) or `dataflow` (per-task
+    /// dependency counters, lanes self-schedule inside a single engine
+    /// step). Results are bitwise identical either way; device-sharded
+    /// (`devices > 1`) and sequential paths always run barrier-style.
+    pub schedule: Schedule,
     /// Sparse symbolic/numeric split: factor sparse systems as a cached
     /// pattern analysis plus a level-parallel numeric sweep on the
     /// shared engine (`true`, the default), or the monolithic
@@ -176,6 +184,7 @@ impl Default for ServiceConfig {
             devices: 1,
             panel_width: crate::solver::lu_ebv::DEFAULT_PANEL_WIDTH,
             kernel: Kernel::Auto,
+            schedule: Schedule::Barrier,
             sparse_parallel: true,
             artifacts_dir: "artifacts".to_string(),
             use_runtime: false,
@@ -203,6 +212,12 @@ impl ServiceConfig {
                 EbvError::Config(format!("service.kernel: unknown kernel `{name}`"))
             })?,
         };
+        let schedule = match raw.get("service", "schedule") {
+            None => d.schedule,
+            Some(name) => Schedule::parse(&name).ok_or_else(|| {
+                EbvError::Config(format!("service.schedule: unknown schedule `{name}`"))
+            })?,
+        };
         let cfg = ServiceConfig {
             lanes: raw.get_parsed("service", "lanes", d.lanes)?,
             dist,
@@ -213,6 +228,7 @@ impl ServiceConfig {
             devices: raw.get_parsed("service", "devices", d.devices)?,
             panel_width: raw.get_parsed("service", "panel_width", d.panel_width)?,
             kernel,
+            schedule,
             sparse_parallel: raw.get_parsed("service", "sparse_parallel", d.sparse_parallel)?,
             artifacts_dir: raw
                 .get("service", "artifacts_dir")
@@ -326,6 +342,21 @@ mod tests {
         let err = ServiceConfig::from_raw(&raw).unwrap_err();
         assert!(
             err.to_string().contains("service.kernel: unknown kernel `simd512`"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn schedule_knob_parses() {
+        assert_eq!(ServiceConfig::default().schedule, Schedule::Barrier);
+        for (name, want) in [("barrier", Schedule::Barrier), ("dataflow", Schedule::Dataflow)] {
+            let raw = RawConfig::parse(&format!("[service]\nschedule = \"{name}\"\n")).unwrap();
+            assert_eq!(ServiceConfig::from_raw(&raw).unwrap().schedule, want, "{name}");
+        }
+        let raw = RawConfig::parse("[service]\nschedule = \"wavefront\"\n").unwrap();
+        let err = ServiceConfig::from_raw(&raw).unwrap_err();
+        assert!(
+            err.to_string().contains("service.schedule: unknown schedule `wavefront`"),
             "{err}"
         );
     }

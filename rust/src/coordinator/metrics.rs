@@ -111,6 +111,10 @@ pub struct MetricsSnapshot {
     /// service handle fills it in; `Auto` until then, like
     /// `panel_width`'s zero).
     pub kernel: crate::solver::Kernel,
+    /// Lane scheduling discipline the workers run (`service.schedule`:
+    /// barrier-stepped or dependency-counted dataflow). `Barrier` until
+    /// a service handle fills it in, like `kernel`'s `Auto`.
+    pub schedule: crate::exec::Schedule,
     /// Device shards of the two-level runtime (`service.devices`;
     /// 1 = flat engine). Like the engine fields, zero until a
     /// service handle merges its device-set stats in.
@@ -283,6 +287,7 @@ impl ServiceMetrics {
             engine_barrier_waits: 0,
             panel_width: 0,
             kernel: crate::solver::Kernel::Auto,
+            schedule: crate::exec::Schedule::Barrier,
             devices: 0,
             device_lanes: 0,
             device_jobs: 0,
@@ -508,6 +513,7 @@ mod tests {
         // kernel come from the service handle.
         assert_eq!(s.panel_width, 0);
         assert_eq!(s.kernel, crate::solver::Kernel::Auto);
+        assert_eq!(s.schedule, crate::exec::Schedule::Barrier);
         assert_eq!(s.devices, 0, "device fields come from merge_devices");
     }
 

@@ -94,6 +94,7 @@ impl SolverService {
             dist: cfg.dist,
             panel_width: cfg.panel_width.max(1),
             kernel: cfg.kernel,
+            schedule: cfg.schedule,
             sparse_parallel: cfg.sparse_parallel,
             engine,
             device_set,
@@ -332,6 +333,7 @@ impl ServiceHandle {
         // Report the *resolved* kernel (never `auto`): what the workers
         // actually dispatch, including an `EBV_KERNEL` override.
         snap.kernel = self.ctx.kernel.resolve();
+        snap.schedule = self.ctx.schedule;
         match &self.ctx.device_set {
             Some(set) => {
                 snap = ServiceMetrics::merge_devices(snap, set.snapshot());
@@ -555,6 +557,30 @@ mod tests {
         // collapsed (to the env override or the tiled default).
         assert_eq!(svc.metrics_snapshot().kernel, crate::solver::Kernel::Unroll8);
         svc.shutdown();
+    }
+
+    #[test]
+    fn configured_schedule_reaches_workers_and_metrics() {
+        let mut cfg = test_cfg();
+        cfg.schedule = crate::exec::Schedule::Dataflow;
+        let svc = SolverService::start(cfg).unwrap();
+        // Both classes exercise their dataflow paths (dense n=160
+        // clears the sequential threshold), and answers match the
+        // barrier-scheduled service bitwise.
+        let a = Arc::new(diag_dominant_dense(160, GenSeed(98)));
+        let sa = Arc::new(diag_dominant_sparse(96, 5, GenSeed(99)));
+        let xd = svc.solve_dense_blocking(Arc::clone(&a), vec![1.0; 160], None).unwrap();
+        let xs = svc.solve_sparse_blocking(Arc::clone(&sa), vec![1.0; 96], None).unwrap();
+        assert!(xd.result.is_ok() && xs.result.is_ok());
+        assert_eq!(svc.metrics_snapshot().schedule, crate::exec::Schedule::Dataflow);
+        svc.shutdown();
+        let base = SolverService::start(test_cfg()).unwrap();
+        assert_eq!(base.metrics_snapshot().schedule, crate::exec::Schedule::Barrier);
+        let bd = base.solve_dense_blocking(a, vec![1.0; 160], None).unwrap();
+        let bs = base.solve_sparse_blocking(sa, vec![1.0; 96], None).unwrap();
+        assert_eq!(xd.result, bd.result, "dense answers must be bitwise equal");
+        assert_eq!(xs.result, bs.result, "sparse answers must be bitwise equal");
+        base.shutdown();
     }
 
     #[test]

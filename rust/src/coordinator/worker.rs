@@ -140,6 +140,12 @@ pub struct WorkerCtx {
     /// bitwise-invariant under it. Possibly `Auto` here — resolved per
     /// factorization (and once for the metrics snapshot).
     pub kernel: crate::solver::Kernel,
+    /// Lane scheduling discipline (`service.schedule`): barrier-stepped
+    /// (the default) or dependency-counted dataflow with panel
+    /// lookahead. Threaded into the dense factorization, the sparse
+    /// numeric refactorization and the trisolves; bitwise-identical
+    /// results either way. Device-sharded runs keep barriers.
+    pub schedule: crate::exec::Schedule,
     /// Sparse symbolic/numeric split (`service.sparse_parallel`): factor
     /// sparse systems as a cached symbolic analysis plus a level-parallel
     /// numeric sweep on the engine, instead of the monolithic sequential
@@ -295,6 +301,7 @@ fn dense_factors(
         .with_dist(ctx.dist)
         .panel(ctx.panel_width)
         .kernel(ctx.kernel)
+        .schedule(ctx.schedule)
         .with_engine(Arc::clone(&ctx.engine));
     if let Some(set) = &ctx.device_set {
         solver = solver.with_devices(Arc::clone(set));
@@ -369,7 +376,11 @@ fn sparse_factors(req: &SolveRequest, ctx: &WorkerCtx) -> Result<Arc<SparseLuFac
                 s
             }
             None => {
-                let s = Arc::new(SparseSymbolic::analyze(a)?.with_kernel(ctx.kernel));
+                let s = Arc::new(
+                    SparseSymbolic::analyze(a)?
+                        .with_kernel(ctx.kernel)
+                        .with_schedule(ctx.schedule),
+                );
                 if let Some(pk) = req.pattern_key {
                     ctx.cache.lock().expect("cache").put_symbolic(pk, Arc::clone(&s));
                 }
@@ -491,6 +502,7 @@ mod tests {
             dist: RowDist::EbvFold,
             panel_width: 64,
             kernel: crate::solver::Kernel::Auto,
+            schedule: crate::exec::Schedule::Barrier,
             sparse_parallel: true,
             engine: Arc::new(LaneEngine::new(2)),
             device_set,
@@ -672,6 +684,34 @@ mod tests {
         }
         assert_eq!(answers[0], answers[1], "sharded answers must be bitwise flat");
         assert!(set.snapshot().sharded_jobs >= 1, "{:?}", set.snapshot());
+    }
+
+    #[test]
+    fn dataflow_scheduled_worker_is_bitwise_barrier() {
+        // Flipping the schedule knob must not move a single bit of any
+        // answer — dense (n=160 clears the sequential threshold, so the
+        // lookahead path actually runs) or sparse.
+        let mut df = ctx();
+        Arc::get_mut(&mut df).unwrap().schedule = crate::exec::Schedule::Dataflow;
+        let barrier = ctx();
+        let a = Arc::new(diag_dominant_dense(160, GenSeed(91)));
+        let sa = Arc::new(diag_dominant_sparse(96, 5, GenSeed(92)));
+        let mut answers = Vec::new();
+        for ctx in [&barrier, &df] {
+            let reqs = vec![
+                SolveRequest::dense(0, Arc::clone(&a), vec![1.0; 160], None),
+                SolveRequest::sparse(1, Arc::clone(&sa), vec![1.0; 96], None),
+            ];
+            let mut got = Vec::new();
+            for req in reqs {
+                let batch = Batch { requests: vec![req], opened_at: Instant::now() };
+                let resps = deliver(batch, ctx);
+                assert!(resps[0].result.is_ok(), "{:?}", resps[0].result);
+                got.push(resps[0].result.clone().unwrap());
+            }
+            answers.push(got);
+        }
+        assert_eq!(answers[0], answers[1], "dataflow answers must be bitwise barrier");
     }
 
     #[test]

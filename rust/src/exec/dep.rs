@@ -1,0 +1,456 @@
+//! Dependency-counted dataflow scheduling: the barrier-free execution
+//! mode for DAG-shaped work.
+//!
+//! The epoch-barrier model ([`LaneEngine::run_steps`]) charges one
+//! global barrier per elimination step — `FactorPlan` prices
+//! `(n-1) + panels` of them for dense and one per DAG level for
+//! sparse, and the PR-6 profiler measures the per-lane wait each one
+//! costs. GLU 3.0-style factorization and self-scheduling triangular
+//! solvers (PAPERS.md) show the alternative: give every task an atomic
+//! *remaining-dependency* counter, let finishing tasks decrement their
+//! children, and have lanes pull whatever is ready from a shared queue.
+//! The whole DAG then executes as **one** engine step — a single
+//! barrier entry per run regardless of depth.
+//!
+//! Two rules make the mode safe and bit-stable:
+//!
+//! * **Happens-before through the counters.** A task's completion
+//!   performs an `AcqRel` `fetch_sub` on each child's counter; the
+//!   lane that takes the counter to zero publishes the child with a
+//!   `Release` store, and claimants spin with `Acquire` loads. RMWs on
+//!   one counter form a release sequence, so *every* parent's writes —
+//!   not just the last decrementer's — are visible to the child before
+//!   it runs. Task arithmetic therefore never observes a torn or stale
+//!   operand, and results are bitwise independent of lane count and
+//!   interleaving (pinned in `tests/prop_schedule.rs`).
+//! * **The break/panic protocol is preserved.** The scheduler runs
+//!   inside an ordinary engine job, but lanes waiting on unpublished
+//!   queue slots spin on the scheduler's own stop flag — so a breaking
+//!   or panicking task must raise that flag *before* unwinding into
+//!   the team's handler, or its siblings would wait forever for work
+//!   that will never be published. [`run_dataflow`] does exactly that:
+//!   `StepCtl::Break` and panics both stop the scheduler first; the
+//!   panic payload then re-raises on the submitting thread via the
+//!   team's existing stash, and the pool survives (stress-tested in
+//!   `tests/prop_schedule.rs` to the `exec_engine.rs` bar).
+//!
+//! The queue is a fixed-size array MPMC: one slot per task, `0` the
+//! empty sentinel (tasks are stored as `task + 1`), `tail` counting
+//! publishes and `head` counting claims. A claimant whose slot is not
+//! yet published spins (budgeted, then yields) until the producing
+//! lane stores it — claims never exceed the task count, and in an
+//! acyclic graph every claimed slot is eventually published unless the
+//! run stops early. Graphs must be acyclic; construction asserts at
+//! least one root so a cyclic graph fails fast instead of deadlocking.
+//!
+//! See `rust/DESIGN.md` §Dataflow scheduling for the ledger rows this
+//! mode adds and the fallback matrix (which paths stay barrier-stepped).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+use crate::exec::{LaneEngine, StepCtl};
+
+/// Execution schedule for the parallel factor/solve paths: classic
+/// barrier-per-step epochs, or dependency-counted dataflow. Named so
+/// CLI flags, config files, metrics, and the wire codec agree on
+/// spelling (the `RowDist`/`Kernel` idiom).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Schedule {
+    /// One global epoch barrier per elimination step / DAG level — the
+    /// paper's `__syncthreads()` shape, and the default until dataflow
+    /// is benched ahead on the target machine.
+    #[default]
+    Barrier,
+    /// Dependency-counted self-scheduling: ready tasks run as soon as
+    /// their inputs land, one barrier entry per whole run.
+    Dataflow,
+}
+
+impl Schedule {
+    /// Every schedule, in documentation order.
+    pub const ALL: [Schedule; 2] = [Schedule::Barrier, Schedule::Dataflow];
+
+    /// Stable lowercase name used by `--schedule`, metrics, and the
+    /// wire codec.
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Barrier => "barrier",
+            Schedule::Dataflow => "dataflow",
+        }
+    }
+
+    /// Inverse of [`Schedule::name`].
+    pub fn parse(s: &str) -> Option<Schedule> {
+        Schedule::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// A task DAG under construction: per-task remaining-dependency counts
+/// plus the forward (parent → children) adjacency the scheduler walks
+/// on completion. Tasks are dense indices `0..tasks`; edges are added
+/// parent-first by the solver building the graph.
+#[derive(Debug, Clone)]
+pub struct DepGraph {
+    deps: Vec<u32>,
+    children: Vec<Vec<usize>>,
+    edges: usize,
+}
+
+impl DepGraph {
+    /// An edgeless graph of `tasks` tasks (all initially ready).
+    pub fn new(tasks: usize) -> DepGraph {
+        DepGraph { deps: vec![0; tasks], children: vec![Vec::new(); tasks], edges: 0 }
+    }
+
+    #[inline]
+    pub fn tasks(&self) -> usize {
+        self.deps.len()
+    }
+
+    #[inline]
+    pub fn edges(&self) -> usize {
+        self.edges
+    }
+
+    /// Declare that `child` must not start before `parent` completes.
+    /// Duplicate edges are allowed (the counter balances because each
+    /// completion decrements once per recorded edge).
+    pub fn add_edge(&mut self, parent: usize, child: usize) {
+        assert!(parent < self.tasks() && child < self.tasks(), "DepGraph: edge out of range");
+        assert_ne!(parent, child, "DepGraph: self-edge would deadlock");
+        self.deps[child] += 1;
+        self.children[parent].push(child);
+        self.edges += 1;
+    }
+}
+
+/// Budgeted spin before yielding while waiting on an unpublished slot —
+/// same shape as the team's job-wait spin.
+const SPIN_BUDGET: u32 = 1 << 10;
+
+/// The runtime state of one dataflow run: counters, flattened
+/// adjacency, and the array MPMC ready queue.
+struct DepScheduler {
+    remaining: Vec<AtomicU32>,
+    child_ptr: Vec<usize>,
+    child_idx: Vec<usize>,
+    /// One slot per task; `0` = empty, else `task + 1`.
+    slots: Vec<AtomicUsize>,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    stop: AtomicBool,
+    /// Total empty-slot spin iterations across all lanes (the honest
+    /// "wait" figure for this mode — dataflow spin time counts as busy
+    /// in the lane profiler's accounting).
+    spins: AtomicU64,
+}
+
+impl DepScheduler {
+    fn new(graph: &DepGraph) -> DepScheduler {
+        let tasks = graph.tasks();
+        let sched = DepScheduler {
+            remaining: graph.deps.iter().map(|&d| AtomicU32::new(d)).collect(),
+            child_ptr: {
+                let mut ptr = Vec::with_capacity(tasks + 1);
+                ptr.push(0);
+                let mut acc = 0;
+                for c in &graph.children {
+                    acc += c.len();
+                    ptr.push(acc);
+                }
+                ptr
+            },
+            child_idx: graph.children.iter().flat_map(|c| c.iter().copied()).collect(),
+            slots: (0..tasks).map(|_| AtomicUsize::new(0)).collect(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            spins: AtomicU64::new(0),
+        };
+        let mut roots = 0;
+        for (t, &d) in graph.deps.iter().enumerate() {
+            if d == 0 {
+                sched.push(t);
+                roots += 1;
+            }
+        }
+        assert!(tasks == 0 || roots > 0, "DepScheduler: graph has no roots (cycle)");
+        sched
+    }
+
+    /// Publish a ready task. Each task is pushed exactly once, so the
+    /// publish index never exceeds the slot count.
+    #[inline]
+    fn push(&self, task: usize) {
+        let t = self.tail.fetch_add(1, Ordering::Relaxed);
+        self.slots[t].store(task + 1, Ordering::Release);
+    }
+
+    /// Claim the next task, spinning until its slot is published.
+    /// Returns `None` when every task has been claimed or the run
+    /// stopped early (break or panic elsewhere).
+    fn pop(&self, spins_local: &mut u64) -> Option<usize> {
+        let h = self.head.fetch_add(1, Ordering::Relaxed);
+        if h >= self.slots.len() {
+            return None;
+        }
+        let mut spin = 0u32;
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                return None;
+            }
+            let v = self.slots[h].load(Ordering::Acquire);
+            if v != 0 {
+                return Some(v - 1);
+            }
+            spin = spin.saturating_add(1);
+            *spins_local += 1;
+            if spin > SPIN_BUDGET {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    /// Retire a finished task: decrement each child's counter and
+    /// publish the ones that hit zero. The `AcqRel` RMW chains every
+    /// parent's writes into the child's claim (see module docs).
+    fn complete(&self, task: usize) {
+        let (lo, hi) = (self.child_ptr[task], self.child_ptr[task + 1]);
+        for &c in &self.child_idx[lo..hi] {
+            if self.remaining[c].fetch_sub(1, Ordering::AcqRel) == 1 {
+                self.push(c);
+            }
+        }
+    }
+
+    /// One lane's work loop: claim, run, retire, until the queue is
+    /// drained or the run stops. A breaking task raises `stop` and
+    /// forwards `Break`; a panicking task raises `stop` *first* so
+    /// sibling lanes stop spinning, then unwinds into the team's
+    /// catch/stash/re-raise protocol.
+    fn drain<F>(&self, worker: usize, f: &F) -> StepCtl
+    where
+        F: Fn(usize, usize) -> StepCtl + Sync,
+    {
+        let mut spins_local = 0u64;
+        let mut ctl = StepCtl::Continue;
+        while let Some(task) = self.pop(&mut spins_local) {
+            match catch_unwind(AssertUnwindSafe(|| f(worker, task))) {
+                Ok(StepCtl::Continue) => self.complete(task),
+                Ok(StepCtl::Break) => {
+                    self.stop.store(true, Ordering::Release);
+                    ctl = StepCtl::Break;
+                    break;
+                }
+                Err(payload) => {
+                    self.stop.store(true, Ordering::Release);
+                    if spins_local > 0 {
+                        self.spins.fetch_add(spins_local, Ordering::Relaxed);
+                    }
+                    resume_unwind(payload);
+                }
+            }
+        }
+        if spins_local > 0 {
+            self.spins.fetch_add(spins_local, Ordering::Relaxed);
+        }
+        ctl
+    }
+}
+
+/// Execute `graph` as one dataflow run on `engine`: every lane
+/// self-schedules ready tasks, `f(worker, task)` runs each task exactly
+/// once with all parents completed (and their writes visible), and the
+/// whole run costs a single engine step — one barrier entry — no matter
+/// how deep the DAG is. `worker` is the executing virtual lane in
+/// `0..engine.lanes()`, for per-lane scratch via
+/// [`LaneSlots`](crate::exec::LaneSlots).
+///
+/// `StepCtl::Break` from a task stops the run after in-flight tasks
+/// finish (tasks not yet claimed never start); a panicking task
+/// re-raises on the submitting thread and leaves the pool serviceable,
+/// exactly like the barrier path. On a single-lane engine the run is
+/// inline and sequential — bitwise the same result, by the
+/// happens-before argument in the module docs.
+pub fn run_dataflow<F>(engine: &LaneEngine, graph: &DepGraph, f: F)
+where
+    F: Fn(usize, usize) -> StepCtl + Sync,
+{
+    if graph.tasks() == 0 {
+        return;
+    }
+    let sched = DepScheduler::new(graph);
+    let width = engine.lanes().max(1);
+    engine.run_steps(width, 1, |worker, _step| sched.drain(worker, &f));
+    engine.record_dep_run(graph.tasks() as u64, sched.spins.load(Ordering::Relaxed));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+
+    #[test]
+    fn schedule_names_parse_round_trip() {
+        for s in Schedule::ALL {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(Schedule::parse("levels"), None);
+        assert_eq!(Schedule::default(), Schedule::Barrier);
+    }
+
+    #[test]
+    fn empty_graph_is_a_no_op() {
+        let engine = LaneEngine::new(2);
+        run_dataflow(&engine, &DepGraph::new(0), |_, _| panic!("no tasks to run"));
+    }
+
+    #[test]
+    fn chain_runs_in_dependency_order() {
+        let n = 64;
+        let mut g = DepGraph::new(n);
+        for t in 1..n {
+            g.add_edge(t - 1, t);
+        }
+        assert_eq!(g.edges(), n - 1);
+        let engine = LaneEngine::new(4);
+        let order = Mutex::new(Vec::new());
+        run_dataflow(&engine, &g, |_, task| {
+            order.lock().unwrap().push(task);
+            StepCtl::Continue
+        });
+        assert_eq!(*order.lock().unwrap(), (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn diamond_runs_each_task_once_with_parents_first() {
+        // 0 -> {1..=6} -> 7, repeated 8 times in sequence.
+        let layers = 8;
+        let per = 8; // 1 source + 6 middles + 1 sink
+        let mut g = DepGraph::new(layers * per);
+        for l in 0..layers {
+            let base = l * per;
+            for m in 1..=6 {
+                g.add_edge(base, base + m);
+                g.add_edge(base + m, base + 7);
+            }
+            if l > 0 {
+                g.add_edge(base - 1, base);
+            }
+        }
+        let engine = LaneEngine::new(4);
+        let runs: Vec<AtomicUsize> = (0..g.tasks()).map(|_| AtomicUsize::new(0)).collect();
+        let order = Mutex::new(Vec::new());
+        run_dataflow(&engine, &g, |_, task| {
+            runs[task].fetch_add(1, Ordering::Relaxed);
+            order.lock().unwrap().push(task);
+            StepCtl::Continue
+        });
+        for r in &runs {
+            assert_eq!(r.load(Ordering::Relaxed), 1);
+        }
+        let order = order.lock().unwrap();
+        let pos = |t: usize| order.iter().position(|&x| x == t).unwrap();
+        for l in 0..layers {
+            let base = l * per;
+            for m in 1..=6 {
+                assert!(pos(base) < pos(base + m));
+                assert!(pos(base + m) < pos(base + 7));
+            }
+        }
+    }
+
+    #[test]
+    fn break_stops_unclaimed_tasks() {
+        let n = 100;
+        let mut g = DepGraph::new(n);
+        for t in 1..n {
+            g.add_edge(t - 1, t);
+        }
+        let engine = LaneEngine::new(4);
+        let ran = AtomicUsize::new(0);
+        run_dataflow(&engine, &g, |_, task| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            if task == 10 {
+                StepCtl::Break
+            } else {
+                StepCtl::Continue
+            }
+        });
+        // A chain serializes execution, so exactly tasks 0..=10 ran.
+        assert_eq!(ran.load(Ordering::Relaxed), 11);
+    }
+
+    #[test]
+    fn panicking_task_reraises_and_pool_survives() {
+        let engine = LaneEngine::new(4);
+        let mut g = DepGraph::new(32);
+        for t in 1..32 {
+            g.add_edge(0, t);
+        }
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_dataflow(&engine, &g, |_, task| {
+                if task == 7 {
+                    panic!("task 7 exploded");
+                }
+                StepCtl::Continue
+            });
+        }));
+        let payload = caught.expect_err("panic must re-raise on the submitter");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "task 7 exploded");
+
+        // The pool must remain serviceable for both execution modes.
+        let hits = AtomicUsize::new(0);
+        engine.run_steps(4, 2, |_, _| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            StepCtl::Continue
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+        let again = AtomicUsize::new(0);
+        run_dataflow(&engine, &DepGraph::new(5), |_, _| {
+            again.fetch_add(1, Ordering::Relaxed);
+            StepCtl::Continue
+        });
+        assert_eq!(again.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "no roots")]
+    fn cyclic_graph_fails_fast() {
+        let mut g = DepGraph::new(2);
+        g.add_edge(0, 1);
+        g.add_edge(1, 0);
+        let engine = LaneEngine::new(1);
+        run_dataflow(&engine, &g, |_, _| StepCtl::Continue);
+    }
+
+    #[test]
+    fn dep_stats_count_runs_and_tasks() {
+        let engine = LaneEngine::new(2);
+        let before = engine.dep_stats();
+        run_dataflow(&engine, &DepGraph::new(3), |_, _| StepCtl::Continue);
+        run_dataflow(&engine, &DepGraph::new(4), |_, _| StepCtl::Continue);
+        let after = engine.dep_stats();
+        assert_eq!(after.runs - before.runs, 2);
+        assert_eq!(after.tasks - before.tasks, 7);
+    }
+
+    #[test]
+    fn single_lane_engine_runs_inline_and_in_order() {
+        let engine = LaneEngine::new(1);
+        let mut g = DepGraph::new(8);
+        for t in 1..8 {
+            g.add_edge(t - 1, t);
+        }
+        let order = Mutex::new(Vec::new());
+        run_dataflow(&engine, &g, |worker, task| {
+            assert_eq!(worker, 0);
+            order.lock().unwrap().push(task);
+            StepCtl::Continue
+        });
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+}

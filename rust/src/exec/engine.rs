@@ -3,7 +3,7 @@
 //! default engine used by the standalone solver API.
 
 use std::fmt;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::exec::stats::{EngineStats, EngineStatsSnapshot};
@@ -48,6 +48,33 @@ pub struct LaneEngine {
     /// Measured per-lane busy/wait accumulators (obs profiler); shared
     /// with the team's workers, written only while profiling is on.
     profile: Arc<LaneProfile>,
+    /// Dataflow-mode counters (see [`crate::exec::dep`]): runs, tasks,
+    /// and queue-spin iterations, recorded per [`run_dataflow`] call.
+    ///
+    /// [`run_dataflow`]: crate::exec::run_dataflow
+    dep: DepCounters,
+}
+
+/// Process-lifetime counters for the dataflow scheduler, one set per
+/// engine. Relaxed accumulation — these are whole-run tallies, not a
+/// synchronization mechanism.
+#[derive(Debug, Default)]
+struct DepCounters {
+    runs: AtomicU64,
+    tasks: AtomicU64,
+    spins: AtomicU64,
+}
+
+/// Snapshot of an engine's dataflow counters: how many dataflow runs it
+/// executed, how many tasks they covered, and how many empty-slot spin
+/// iterations lanes burned waiting for work to be published (the
+/// dataflow analogue of barrier wait, reported by the ablation benches
+/// alongside the profiler's wait ns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DepStatsSnapshot {
+    pub runs: u64,
+    pub tasks: u64,
+    pub spins: u64,
 }
 
 impl fmt::Debug for LaneEngine {
@@ -78,6 +105,7 @@ impl LaneEngine {
             submit: Mutex::new(()),
             stats: EngineStats::default(),
             profile,
+            dep: DepCounters::default(),
         }
     }
 
@@ -181,6 +209,24 @@ impl LaneEngine {
     /// (all zeros unless the process ran with profiling on).
     pub fn lane_profile(&self) -> LaneProfileSnapshot {
         self.profile.snapshot()
+    }
+
+    /// Detached dataflow-mode counters (see
+    /// [`run_dataflow`](crate::exec::run_dataflow)): all zeros until
+    /// some path runs with `Schedule::Dataflow`.
+    pub fn dep_stats(&self) -> DepStatsSnapshot {
+        DepStatsSnapshot {
+            runs: self.dep.runs.load(Ordering::Relaxed),
+            tasks: self.dep.tasks.load(Ordering::Relaxed),
+            spins: self.dep.spins.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Tally one completed dataflow run (called by `dep::run_dataflow`).
+    pub(crate) fn record_dep_run(&self, tasks: u64, spins: u64) {
+        self.dep.runs.fetch_add(1, Ordering::Relaxed);
+        self.dep.tasks.fetch_add(tasks, Ordering::Relaxed);
+        self.dep.spins.fetch_add(spins, Ordering::Relaxed);
     }
 }
 

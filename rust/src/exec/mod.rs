@@ -29,14 +29,18 @@
 //! realizes.
 
 pub mod barrier;
+pub mod dep;
 pub mod devices;
 pub mod engine;
 pub mod stats;
 pub mod team;
 
 pub use barrier::EpochBarrier;
+pub use dep::{run_dataflow, DepGraph, Schedule};
 pub use devices::{DeviceSet, DeviceSetSnapshot, ExchangeBuffer};
-pub use engine::{default_lanes, engine_or_global, global, LaneEngine, StepCtl, StepFn};
+pub use engine::{
+    default_lanes, engine_or_global, global, DepStatsSnapshot, LaneEngine, StepCtl, StepFn,
+};
 pub use stats::{EngineStats, EngineStatsSnapshot};
 
 /// Shared mutable slot array for engine jobs whose virtual lanes write

@@ -18,7 +18,7 @@ use ebv_solve::gpusim::{
 use ebv_solve::matrix::generate::{
     diag_dominant_dense, diag_dominant_sparse, poisson_2d, rhs, GenSeed,
 };
-use ebv_solve::exec::DeviceSet;
+use ebv_solve::exec::{DeviceSet, Schedule};
 use ebv_solve::runtime::Manifest;
 use ebv_solve::solver::{solver_by_name, EbvLu, Kernel, LuSolver, SparseLu, SparseSymbolic};
 use ebv_solve::util::fmt;
@@ -72,6 +72,20 @@ fn kernel_arg(args: &Args) -> ebv_solve::Result<Kernel> {
     }
 }
 
+/// Parse `--schedule` into a [`Schedule`] (absent = `barrier`, the
+/// epoch-stepped default; `dataflow` swaps in the dependency-counted
+/// lane scheduler — bitwise-identical results either way).
+fn schedule_arg(args: &Args) -> ebv_solve::Result<Schedule> {
+    match args.opt("schedule") {
+        None => Ok(Schedule::Barrier),
+        Some(name) => Schedule::parse(name).ok_or_else(|| {
+            ebv_solve::EbvError::Config(format!(
+                "--schedule: unknown schedule `{name}` (expected barrier|dataflow)"
+            ))
+        }),
+    }
+}
+
 fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
     if args.flag("profile") {
         return cmd_solve_profiled(args);
@@ -86,6 +100,7 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
     let panel = args.opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?;
     let devices = args.opt_positive("devices", 1usize)?;
     let kernel = kernel_arg(args)?;
+    let schedule = schedule_arg(args)?;
     // Two-level sharded runtime: split the lane budget across devices.
     let device_set = (devices > 1)
         .then(|| Arc::new(DeviceSet::new(devices, lanes.div_ceil(devices).max(1))));
@@ -122,9 +137,10 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
                     snap.exchange_steps
                 );
             } else {
-                let solver = solver_by_name(solver_name, lanes, panel, kernel).ok_or_else(|| {
-                    ebv_solve::EbvError::Config(format!("unknown solver `{solver_name}`"))
-                })?;
+                let solver = solver_by_name(solver_name, lanes, panel, kernel, schedule)
+                    .ok_or_else(|| {
+                        ebv_solve::EbvError::Config(format!("unknown solver `{solver_name}`"))
+                    })?;
                 let t0 = Instant::now();
                 let x = solver.solve(&a, &b)?;
                 let dt = t0.elapsed().as_secs_f64();
@@ -149,7 +165,7 @@ fn cmd_solve(args: &Args) -> ebv_solve::Result<()> {
                 // and the per-values refactorization are separate costs
                 // — the second is what repeat same-pattern traffic pays.
                 let t0 = Instant::now();
-                let sym = SparseSymbolic::analyze(&a)?.with_kernel(kernel);
+                let sym = SparseSymbolic::analyze(&a)?.with_kernel(kernel).with_schedule(schedule);
                 let t_sym = t0.elapsed().as_secs_f64();
                 let t1 = Instant::now();
                 let f = match &device_set {
@@ -221,6 +237,7 @@ fn cmd_solve_binary(args: &Args) -> ebv_solve::Result<()> {
         engine_lanes: lanes,
         panel_width: args.opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         kernel: kernel_arg(args)?,
+        schedule: schedule_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         ..ServiceConfig::default()
     };
@@ -372,6 +389,7 @@ fn cmd_solve_profiled(args: &Args) -> ebv_solve::Result<()> {
         devices,
         panel_width: panel,
         kernel: kernel_arg(args)?,
+        schedule: schedule_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         profiling: true,
         ..ServiceConfig::default()
@@ -484,6 +502,7 @@ fn cmd_metrics(args: &Args) -> ebv_solve::Result<()> {
         devices: args.opt_positive("devices", 1usize)?,
         panel_width: args.opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         kernel: kernel_arg(args)?,
+        schedule: schedule_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         profiling: !args.flag("no-profile"),
         ..ServiceConfig::default()
@@ -541,6 +560,7 @@ fn cmd_serve(args: &Args) -> ebv_solve::Result<()> {
         panel_width: args
             .opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         kernel: kernel_arg(args)?,
+        schedule: schedule_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         use_runtime: args.flag("runtime"),
         max_sessions: args.opt_positive("max-sessions", 8usize)?,
@@ -648,6 +668,7 @@ fn cmd_serve_trace(args: &Args) -> ebv_solve::Result<()> {
         panel_width: args
             .opt_positive("panel-width", ebv_solve::solver::DEFAULT_PANEL_WIDTH)?,
         kernel: kernel_arg(args)?,
+        schedule: schedule_arg(args)?,
         sparse_parallel: args.opt_parsed("sparse-parallel", true)?,
         use_runtime: args.flag("runtime"),
         profiling: args.flag("profile"),

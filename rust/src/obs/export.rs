@@ -101,6 +101,9 @@ pub fn prometheus(m: &MetricsSnapshot) -> String {
     let _ = writeln!(out, "# HELP ebv_kernel Resolved trailing-update microkernel.");
     let _ = writeln!(out, "# TYPE ebv_kernel gauge");
     let _ = writeln!(out, "ebv_kernel{{kernel=\"{}\"}} 1", m.kernel.name());
+    let _ = writeln!(out, "# HELP ebv_schedule Lane scheduling discipline.");
+    let _ = writeln!(out, "# TYPE ebv_schedule gauge");
+    let _ = writeln!(out, "ebv_schedule{{schedule=\"{}\"}} 1", m.schedule.name());
     out
 }
 
@@ -194,6 +197,7 @@ mod tests {
             engine_barrier_waits: 18,
             panel_width: 19,
             kernel: crate::solver::Kernel::Tiled,
+            schedule: crate::exec::Schedule::Dataflow,
             devices: 20,
             device_lanes: 21,
             device_jobs: 22,
@@ -252,6 +256,7 @@ mod tests {
             "ebv_wire_bytes_in_total 48",
             "ebv_wire_bytes_out_total 49",
             "ebv_kernel{kernel=\"tiled\"} 1",
+            "ebv_schedule{schedule=\"dataflow\"} 1",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

@@ -90,6 +90,26 @@ impl LaneProfileSnapshot {
         max_mean_imbalance(&loads)
     }
 
+    /// Per-lane delta against an earlier snapshot of the same profile —
+    /// what the ablation benches use to attribute busy/wait nanoseconds
+    /// to one measured region (e.g. a single factor under one schedule)
+    /// on a long-lived engine whose accumulators never reset. Lane
+    /// vectors of different lengths (different engines) are truncated to
+    /// the shorter; counters that went backwards saturate to zero.
+    pub fn delta_since(&self, base: &LaneProfileSnapshot) -> LaneProfileSnapshot {
+        let delta = |now: &[u64], then: &[u64]| -> Vec<u64> {
+            now.iter()
+                .zip(then.iter().chain(std::iter::repeat(&0)))
+                .map(|(&a, &b)| a.saturating_sub(b))
+                .collect()
+        };
+        LaneProfileSnapshot {
+            busy_ns: delta(&self.busy_ns, &base.busy_ns),
+            wait_ns: delta(&self.wait_ns, &base.wait_ns),
+            jobs: self.jobs.saturating_sub(base.jobs),
+        }
+    }
+
     /// Barrier-wait share of total lane time, in `[0, 1]`.
     pub fn wait_fraction(&self) -> f64 {
         let busy = self.total_busy_ns() as f64;
@@ -133,6 +153,24 @@ mod tests {
         // max_mean_imbalance's zero-mean convention.
         let s = LaneProfileSnapshot::default();
         assert_eq!(s.measured_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn delta_since_isolates_a_region() {
+        let p = LaneProfile::new(2);
+        p.record(0, 100, 10);
+        p.record(1, 50, 5);
+        p.record_job();
+        let base = p.snapshot();
+        p.record(0, 40, 4);
+        p.record(1, 60, 6);
+        p.record_job();
+        let d = p.snapshot().delta_since(&base);
+        assert_eq!(d.busy_ns, vec![40, 60]);
+        assert_eq!(d.wait_ns, vec![4, 6]);
+        assert_eq!(d.jobs, 1);
+        // Delta against a fresh baseline is the snapshot itself.
+        assert_eq!(p.snapshot().delta_since(&LaneProfileSnapshot::default()), p.snapshot());
     }
 
     #[test]

@@ -279,6 +279,91 @@ pub unsafe fn trailing_update(
     }
 }
 
+/// Column-ranged sibling of [`trailing_update`]: apply the same
+/// rank-`nb` update to columns `[cols_lo, cols_hi)` only, where
+/// `panel_end <= cols_lo <= cols_hi <= stride`.
+///
+/// **Bit-inertness of the column split.** Every kernel's inner loops
+/// iterate over the *panel* (`k`) dimension with fuse groups anchored
+/// at `panel_start` (unrolled paths) or at the fixed
+/// `panel_start + m·KC` tile boundaries (tiled path, `KC % 8 == 0`);
+/// the trailing (`j`) dimension only selects which independent output
+/// elements receive that identical k-sweep. Splitting the call at any
+/// column therefore changes no element's operand order or fuse
+/// grouping: any partition of `[panel_end, cols_end)` into
+/// `trailing_update_cols` calls is **bitwise identical** to one full
+/// [`trailing_update`], for every kernel (pinned by
+/// `column_partition_never_changes_bits` below). This is what lets the
+/// dataflow dense path carve one panel's trailing sweep into
+/// lookahead pieces without touching the numeric ledger.
+///
+/// # Safety
+/// As [`trailing_update`], with the write range narrowed: the caller
+/// has exclusive write access to `[cols_lo, cols_hi)` of every row in
+/// `rows`, read access to their finalized `[panel_start, panel_end)`
+/// multipliers, and the panel rows' `[cols_lo, cols_hi)` (`U12` slab)
+/// are finalized and published before the call.
+pub unsafe fn trailing_update_cols(
+    kernel: Kernel,
+    view: MatView,
+    rows: &[usize],
+    panel_start: usize,
+    panel_end: usize,
+    cols_lo: usize,
+    cols_hi: usize,
+) {
+    debug_assert!(panel_end <= cols_lo && cols_lo <= cols_hi);
+    let width = panel_end - panel_start;
+    if width == 0 || cols_lo >= cols_hi || rows.is_empty() {
+        return;
+    }
+    match kernel.resolve() {
+        Kernel::Auto => unreachable!("resolve() returns a concrete kernel"),
+        Kernel::Unroll4 => {
+            for &i in rows {
+                // SAFETY: the multiplier slice [panel_start, panel_end)
+                // is finalized and disjoint from the written tail
+                // (cols_lo >= panel_end), per the function contract.
+                let l_i = view.row(i, panel_start, panel_end);
+                let tail = view.row_mut(i, cols_lo, cols_hi);
+                axpy_rank_k_4(view, l_i, panel_start, tail, cols_lo);
+            }
+        }
+        Kernel::Unroll8 => {
+            for &i in rows {
+                let l_i = view.row(i, panel_start, panel_end);
+                let tail = view.row_mut(i, cols_lo, cols_hi);
+                axpy_rank_k_8(view, l_i, panel_start, tail, cols_lo);
+            }
+        }
+        Kernel::Tiled => {
+            // Same MC×KC×NR sweep as the full call; k-tile anchors stay
+            // at panel_start + m·KC, so fuse grouping per element is
+            // unchanged no matter where the column range starts.
+            for row_chunk in rows.chunks(MC) {
+                let mut k0 = panel_start;
+                while k0 < panel_end {
+                    let k1 = (k0 + KC).min(panel_end);
+                    let mut j0 = cols_lo;
+                    while j0 < cols_hi {
+                        let j1 = (j0 + NR).min(cols_hi);
+                        for &i in row_chunk {
+                            // SAFETY: per the function contract — the
+                            // multiplier k-tile is finalized and
+                            // disjoint from the owned trailing tile.
+                            let l_i = view.row(i, k0, k1);
+                            let tail = view.row_mut(i, j0, j1);
+                            axpy_rank_k_4(view, l_i, k0, tail, j0);
+                        }
+                        j0 = j1;
+                    }
+                    k0 = k1;
+                }
+            }
+        }
+    }
+}
+
 /// One row's rank-`l.len()` update over `tail`, four panel columns
 /// fused per sweep: `tail[j] -= Σ_p l[p] · U[k_base + p, j_base + j]`.
 ///
@@ -599,6 +684,37 @@ mod tests {
                 trailing_update(k, view, lo, ps, pe, n);
             }
             assert_eq!(bits(&whole), bits(&m), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn column_partition_never_changes_bits() {
+        // Split the trailing columns as the dataflow lookahead does
+        // (near / far pieces): covering [pe, n) with ranged calls at
+        // deliberately NR/KC-misaligned cut points must be bitwise
+        // identical to one full call — for every kernel, including
+        // cuts landing mid-tile and a degenerate empty range.
+        let n = 180;
+        let (ps, pe) = (8usize, 8 + KC + 7);
+        let mut a = vec![0.0f64; n * n];
+        fill(&mut a, 11);
+        for i in (pe..n).step_by(4) {
+            a[i * n + ps] = 0.0; // exercise zero-skip paths both sides
+        }
+        let rows: Vec<usize> = (pe..n).filter(|r| r % 7 != 0).collect();
+        let cuts = [pe, pe + 5, pe + NR - 1, pe + NR - 1, pe + NR + KC + 3, n];
+        for k in [Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled] {
+            let whole = run(k, &a, n, &rows, ps, pe);
+            let mut m = a.clone();
+            let view = MatView::from_raw(m.as_mut_ptr(), n);
+            for w in cuts.windows(2) {
+                // SAFETY: as in `run`; the column ranges are disjoint
+                // and all ≥ pe.
+                unsafe {
+                    trailing_update_cols(k, view, &rows, ps, pe, w[0], w[1]);
+                }
+            }
+            assert_eq!(bits(&whole), bits(&m), "{k:?}: column split must be bit-inert");
         }
     }
 

@@ -40,7 +40,9 @@
 use std::sync::{Arc, Mutex};
 
 use crate::ebv::schedule::{panels, LaneSchedule, RowDist};
-use crate::exec::{DeviceSet, ExchangeBuffer, LaneEngine, StepCtl};
+use crate::exec::{
+    run_dataflow, DepGraph, DeviceSet, ExchangeBuffer, LaneEngine, Schedule, StepCtl,
+};
 use crate::matrix::DenseMatrix;
 use crate::solver::kernel::{self, Kernel};
 use crate::solver::pivot::Permutation;
@@ -76,6 +78,18 @@ pub struct EbvLu {
     /// exchange each step. Bitwise identical to the flat path for
     /// every device count.
     devices: Option<Arc<DeviceSet>>,
+    /// Execution schedule of the blocked elimination:
+    /// [`Schedule::Barrier`] steps every lane through the
+    /// `blocked_steps` sequence; [`Schedule::Dataflow`] runs the same
+    /// arithmetic as a dependency-counted task DAG with panel
+    /// lookahead (one barrier entry per factorization). Factors are
+    /// **bitwise identical** across the two schedules for every
+    /// `(nb, kernel, lanes, dist, devices)` — the lookahead only
+    /// re-partitions work whose per-element operand order is fixed.
+    /// Paths without a blocked trailing update (`panel(1)`, the
+    /// sequential fall-through, single-panel sizes) and device-sharded
+    /// runs keep the barrier shape regardless of the knob.
+    schedule: Schedule,
 }
 
 impl EbvLu {
@@ -90,6 +104,7 @@ impl EbvLu {
             kernel: Kernel::Auto,
             engine: None,
             devices: None,
+            schedule: Schedule::Barrier,
         }
     }
 
@@ -147,6 +162,16 @@ impl EbvLu {
         self
     }
 
+    /// Select the execution schedule of the blocked elimination
+    /// (default [`Schedule::Barrier`]). `dataflow` overlaps panel
+    /// factorizations with the previous panel's far trailing updates —
+    /// same bits, fewer barrier entries (see the field docs for the
+    /// fallback matrix).
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
     pub fn lanes(&self) -> usize {
         self.lanes
     }
@@ -163,6 +188,11 @@ impl EbvLu {
     /// Configured microkernel choice (possibly [`Kernel::Auto`]).
     pub fn kernel_choice(&self) -> Kernel {
         self.kernel
+    }
+
+    /// Configured execution schedule.
+    pub fn schedule_choice(&self) -> Schedule {
+        self.schedule
     }
 }
 
@@ -214,6 +244,18 @@ impl LuSolver for EbvLu {
         let _t = crate::obs::SpanTimer::start(crate::obs::Phase::NumericFactor);
         if self.panel <= 1 {
             parallel_eliminate(&mut lu, &schedule, self.pivot_tol, engine)?;
+        } else if self.schedule == Schedule::Dataflow && panels(n, self.panel).len() >= 2 {
+            // Dataflow needs at least two panels to have a trailing
+            // update to overlap; a single covering panel falls through
+            // to the (bitwise identical) barrier path.
+            parallel_eliminate_blocked_dataflow(
+                &mut lu,
+                &schedule,
+                self.panel,
+                self.kernel.resolve(),
+                self.pivot_tol,
+                engine,
+            )?;
         } else {
             parallel_eliminate_blocked(
                 &mut lu,
@@ -493,6 +535,230 @@ fn parallel_eliminate_blocked(
     Ok(())
 }
 
+/// One task of the dataflow blocked elimination (see
+/// [`parallel_eliminate_blocked_dataflow`]).
+#[derive(Debug, Clone, Copy)]
+enum DfTask {
+    /// Factor one whole panel: every Col step of `[start, end)`, all
+    /// active rows, executed sequentially by whichever lane claims the
+    /// task. Per-row arithmetic is identical to the barrier Col steps
+    /// (rows are independent within a step), so the single-runner
+    /// shape changes no bits.
+    Panel { start: usize, end: usize },
+    /// One lane's slice of a panel's trailing update, narrowed to a
+    /// column range: rows of `lane` in `[row_lo, row_hi)`, columns
+    /// `[cols_lo, cols_hi)` — a [`kernel::trailing_update_cols`] call.
+    Piece {
+        lane: usize,
+        row_lo: usize,
+        row_hi: usize,
+        panel_start: usize,
+        panel_end: usize,
+        cols_lo: usize,
+        cols_hi: usize,
+    },
+}
+
+/// Dataflow blocked elimination with **panel lookahead**: the same
+/// arithmetic as [`parallel_eliminate_blocked`], re-partitioned into a
+/// dependency-counted task DAG so panel `k+1`'s column factorization
+/// starts as soon as panel `k`'s trailing update has covered panel
+/// `k+1`'s columns — overlapping the narrow, badly-parallel panel work
+/// with the wide trailing sweep instead of barrier-stepping everyone
+/// through both. One engine step (one barrier entry) per
+/// factorization, versus `(n-1) + panels` for the barrier schedule.
+///
+/// Task decomposition, per panel `p` with columns `[ps, pe)` and next
+/// panel end `pe2` (pieces exist for every panel but the last):
+///
+/// * `Panel(p)` — all Col steps of the panel, every active row;
+/// * `Near(p, l)` — lane `l`'s rows `>= pe`, columns `[pe, pe2)`: the
+///   slab panel `p+1` needs next;
+/// * `FarHead(p, l)` — lane `l`'s rows in `[pe, pe2)` (panel `p+1`'s
+///   own rows), columns `[pe2, n)`;
+/// * `FarTail(p, l)` — lane `l`'s rows `>= pe2`, columns `[pe2, n)`:
+///   the piece that overlaps `Panel(p+1)`.
+///
+/// Edges: `Panel(p) ← Near(p-1, ∀l) + FarHead(p-1, ∀l)`, and every
+/// piece of panel `p` ← `Panel(p)` + `FarTail(p-1, l)` (same lane).
+/// `FarTail(p-1, ·)` is deliberately **not** a parent of `Panel(p)` —
+/// it writes rows `>= pe` at columns `>= pe`, while `Panel(p)` touches
+/// its panel rows (`< pe`) at any column and deeper rows only at
+/// columns `< pe`: disjoint, so the two run concurrently. That overlap
+/// is the whole win; everything the panel reads (its rows' multiplier
+/// columns, the pivot rows full-width) is covered by the `Near` and
+/// `FarHead` parents, transitively through the per-lane `FarTail`
+/// chain.
+///
+/// **Bit-identity.** Row partition (existing ledger) and column
+/// partition ([`kernel::trailing_update_cols`]) of a trailing update
+/// are both per-element inert, and the dep edges reproduce exactly the
+/// reads-after-writes the barrier sequence enforced — so factors are
+/// bitwise identical to the barrier schedule for every
+/// `(nb, kernel, lanes, dist)`, and bit-stable across engine sizes
+/// (tasks are defined by the *schedule's* lane ownership, not by which
+/// OS lane executes them). Pinned in `tests/prop_schedule.rs` and the
+/// `dataflow_*` tests below.
+fn parallel_eliminate_blocked_dataflow(
+    lu: &mut DenseMatrix,
+    schedule: &LaneSchedule,
+    nb: usize,
+    kern: Kernel,
+    pivot_tol: f64,
+    engine: &LaneEngine,
+) -> Result<()> {
+    let n = lu.rows();
+    let panel_list = panels(n, nb);
+    let m = panel_list.len();
+    debug_assert!(m >= 2, "caller guarantees at least two panels");
+    let vl = schedule.lanes();
+    let shared = SharedMatrix { ptr: lu.data_mut().as_mut_ptr(), cols: n };
+    let first_bad: Mutex<Option<(usize, f64)>> = Mutex::new(None);
+
+    // Task ids: panels first (Panel(p) = p), pieces appended in
+    // (panel, kind, lane) order.
+    let mut tasks: Vec<DfTask> = panel_list
+        .iter()
+        .map(|&(start, end)| DfTask::Panel { start, end })
+        .collect();
+    let mut near = vec![usize::MAX; (m - 1) * vl];
+    let mut far_head = vec![usize::MAX; (m - 1) * vl];
+    let mut far_tail = vec![usize::MAX; (m - 1) * vl];
+    for p in 0..m - 1 {
+        let (ps, pe) = panel_list[p];
+        let pe2 = panel_list[p + 1].1;
+        for l in 0..vl {
+            near[p * vl + l] = tasks.len();
+            tasks.push(DfTask::Piece {
+                lane: l,
+                row_lo: pe,
+                row_hi: n,
+                panel_start: ps,
+                panel_end: pe,
+                cols_lo: pe,
+                cols_hi: pe2,
+            });
+            if pe2 < n {
+                far_head[p * vl + l] = tasks.len();
+                tasks.push(DfTask::Piece {
+                    lane: l,
+                    row_lo: pe,
+                    row_hi: pe2,
+                    panel_start: ps,
+                    panel_end: pe,
+                    cols_lo: pe2,
+                    cols_hi: n,
+                });
+                far_tail[p * vl + l] = tasks.len();
+                tasks.push(DfTask::Piece {
+                    lane: l,
+                    row_lo: pe2,
+                    row_hi: n,
+                    panel_start: ps,
+                    panel_end: pe,
+                    cols_lo: pe2,
+                    cols_hi: n,
+                });
+            }
+        }
+    }
+
+    let mut graph = DepGraph::new(tasks.len());
+    for p in 1..m {
+        for l in 0..vl {
+            graph.add_edge(near[(p - 1) * vl + l], p);
+            if far_head[(p - 1) * vl + l] != usize::MAX {
+                graph.add_edge(far_head[(p - 1) * vl + l], p);
+            }
+        }
+    }
+    for p in 0..m - 1 {
+        for l in 0..vl {
+            for ids in [&near, &far_head, &far_tail] {
+                let id = ids[p * vl + l];
+                if id == usize::MAX {
+                    continue;
+                }
+                graph.add_edge(p, id);
+                if p > 0 && far_tail[(p - 1) * vl + l] != usize::MAX {
+                    graph.add_edge(far_tail[(p - 1) * vl + l], id);
+                }
+            }
+        }
+    }
+
+    run_dataflow(engine, &graph, |_worker, t| {
+        match tasks[t] {
+            DfTask::Panel { start, end } => {
+                for r in start..end.min(n.saturating_sub(1)) {
+                    // SAFETY: every write to row r is sequenced before
+                    // this task by the dep edges (its own earlier Col
+                    // steps run in this task; older-panel updates are
+                    // parents); concurrent pieces write rows >= end at
+                    // columns >= end only.
+                    let pivot_row = unsafe { shared.row(r) };
+                    let piv = pivot_row[r];
+                    if piv.abs() < pivot_tol {
+                        let mut bad = first_bad.lock().expect("pivot slot");
+                        if bad.is_none() {
+                            *bad = Some((r, piv));
+                        }
+                        return StepCtl::Break;
+                    }
+                    let inv = 1.0 / piv;
+                    for i in r + 1..n {
+                        // SAFETY: rows below the pivot are written only
+                        // by this task at columns < end (deep rows) or
+                        // are panel rows no piece touches.
+                        let row_i = unsafe { shared.row_mut(i) };
+                        let f = row_i[r] * inv;
+                        row_i[r] = f;
+                        if f == 0.0 {
+                            continue;
+                        }
+                        let hi = if i < end { n } else { end };
+                        for (t, &p) in
+                            row_i[r + 1..hi].iter_mut().zip(pivot_row[r + 1..hi].iter())
+                        {
+                            *t -= f * p;
+                        }
+                    }
+                }
+            }
+            DfTask::Piece { lane, row_lo, row_hi, panel_start, panel_end, cols_lo, cols_hi } => {
+                let from = schedule.rows_from(lane, row_lo);
+                let rows = &from[..from.partition_point(|&i| i < row_hi)];
+                // SAFETY: the rows are one schedule lane's, further
+                // disjoint across pieces by the row/column ranges; the
+                // panel rows read (U12 at these columns) were finalized
+                // by the parent tasks, published through the dep
+                // counters' AcqRel chain.
+                unsafe {
+                    kernel::trailing_update_cols(
+                        kern,
+                        kernel::MatView::from_raw(shared.ptr, shared.cols),
+                        rows,
+                        panel_start,
+                        panel_end,
+                        cols_lo,
+                        cols_hi,
+                    )
+                };
+            }
+        }
+        StepCtl::Continue
+    });
+
+    if let Some((step, value)) = first_bad.into_inner().expect("pivot slot") {
+        return Err(EbvError::SingularPivot { step, value, tol: pivot_tol });
+    }
+    let last = lu.get(n - 1, n - 1);
+    if last.abs() < pivot_tol {
+        return Err(EbvError::SingularPivot { step: n - 1, value: last, tol: pivot_tol });
+    }
+    Ok(())
+}
+
 /// Device-sharded blocked-panel elimination: the step sequence of
 /// [`parallel_eliminate_blocked`] on a [`DeviceSet`]. Col steps
 /// broadcast the trailing pivot row through the staged exchange (and
@@ -747,6 +1013,104 @@ mod tests {
                 "nb={nb}: {err:?}"
             );
         }
+    }
+
+    #[test]
+    fn dataflow_is_bitwise_barrier_for_every_lane_dist_kernel_and_engine() {
+        // The lookahead DAG only re-partitions work whose per-element
+        // operand order is fixed by (nb, kernel) — so the dataflow
+        // schedule must reproduce the barrier factors bit for bit,
+        // for every lane count, distribution, microkernel and engine
+        // size.
+        let n = 80;
+        for nb in [8usize, 32] {
+            let a = diag_dominant_dense(n, GenSeed(41));
+            for kern in [Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled] {
+                let reference = blocked(2, nb).kernel(kern).factor(&a).unwrap();
+                for dist in RowDist::ALL {
+                    for lanes in [2usize, 3, 5] {
+                        for engine_lanes in [1usize, 2, 4] {
+                            let engine = Arc::new(LaneEngine::new(engine_lanes));
+                            let f = blocked(lanes, nb)
+                                .with_dist(dist)
+                                .kernel(kern)
+                                .schedule(Schedule::Dataflow)
+                                .with_engine(engine)
+                                .factor(&a)
+                                .unwrap();
+                            assert_eq!(
+                                f.packed().max_abs_diff(reference.packed()),
+                                0.0,
+                                "nb={nb} {kern:?} {dist:?} lanes={lanes} \
+                                 engine_lanes={engine_lanes}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dataflow_detects_singular_pivot_on_the_same_step() {
+        let mut a = diag_dominant_dense(64, GenSeed(34));
+        for j in 0..64 {
+            a.set(30, j, 0.0);
+        }
+        for nb in [8usize, 16] {
+            let barrier = blocked(4, nb).factor(&a);
+            let dataflow = blocked(4, nb).schedule(Schedule::Dataflow).factor(&a);
+            let step_of = |r: &Result<DenseLuFactors>| match r {
+                Err(EbvError::SingularPivot { step, .. }) => *step,
+                other => panic!("nb={nb}: expected SingularPivot, got {other:?}"),
+            };
+            // Panel tasks run in panel order and check pivots in the
+            // barrier's column order, so the reported step agrees.
+            assert_eq!(step_of(&barrier), step_of(&dataflow), "nb={nb}");
+            assert_eq!(step_of(&barrier), 30, "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn dataflow_single_panel_falls_back_to_barrier_bits() {
+        // nb >= n leaves nothing to overlap; the knob must quietly keep
+        // the (bitwise SeqLu-exact) covering-panel path.
+        let a = diag_dominant_dense(40, GenSeed(32));
+        let reference = SeqLu::new().factor(&a).unwrap();
+        let f = blocked(3, 40).schedule(Schedule::Dataflow).factor(&a).unwrap();
+        assert_eq!(f.packed().max_abs_diff(reference.packed()), 0.0);
+    }
+
+    #[test]
+    fn dataflow_costs_one_engine_step_per_factor() {
+        let n = 80;
+        let nb = 8;
+        let a = diag_dominant_dense(n, GenSeed(35));
+        let engine = Arc::new(LaneEngine::new(3));
+
+        let before = engine.stats();
+        let dep_before = engine.dep_stats();
+        blocked(4, nb)
+            .schedule(Schedule::Dataflow)
+            .with_engine(Arc::clone(&engine))
+            .factor(&a)
+            .unwrap();
+        let after = engine.stats();
+        let dep_after = engine.dep_stats();
+        // The whole DAG drains inside a single barrier-separated step,
+        // while the barrier schedule would pay one per blocked step.
+        assert_eq!(after.steps - before.steps, 1);
+        assert_eq!(dep_after.runs - dep_before.runs, 1);
+        assert!(dep_after.tasks > dep_before.tasks);
+
+        let before = engine.stats();
+        blocked(4, nb).with_engine(Arc::clone(&engine)).factor(&a).unwrap();
+        let after = engine.stats();
+        assert_eq!(
+            (after.steps - before.steps) as usize,
+            blocked_steps(n, nb).len(),
+            "barrier schedule pays one barrier entry per blocked step"
+        );
     }
 
     #[test]

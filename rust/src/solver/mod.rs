@@ -170,20 +170,24 @@ pub trait LuSolver: Send + Sync {
 
 /// Look a solver up by its config name. `panel` is the blocked-panel
 /// width the EBV solver runs with, `kernel` the trailing-update
-/// microkernel both blocked solvers dispatch to (other solvers ignore
-/// both).
+/// microkernel both blocked solvers dispatch to, `schedule` the lane
+/// scheduling discipline the EBV solver runs under (other solvers
+/// ignore all three).
 pub fn solver_by_name(
     name: &str,
     lanes: usize,
     panel: usize,
     kernel: Kernel,
+    schedule: crate::exec::Schedule,
 ) -> Option<Box<dyn LuSolver>> {
+    let ebv = || EbvLu::with_lanes(lanes).panel(panel).kernel(kernel).schedule(schedule);
     match name {
         "seq" => Some(Box::new(SeqLu::new())),
         "seq-pivot" => Some(Box::new(SeqLu::with_pivoting())),
-        "ebv" => Some(Box::new(EbvLu::with_lanes(lanes).panel(panel).kernel(kernel))),
+        "ebv" => Some(Box::new(ebv())),
         "blocked" => Some(Box::new(BlockedLu::new().with_kernel(kernel))),
         "gauss-jordan" => Some(Box::new(GaussJordan::new())),
+        "refined" => Some(Box::new(Refined::new(ebv()))),
         _ => None,
     }
 }
@@ -259,12 +263,32 @@ mod tests {
 
     #[test]
     fn solver_registry_resolves_names() {
-        for name in ["seq", "seq-pivot", "ebv", "blocked", "gauss-jordan"] {
-            assert!(
-                solver_by_name(name, 2, DEFAULT_PANEL_WIDTH, Kernel::Auto).is_some(),
-                "{name}"
-            );
+        use crate::exec::Schedule;
+        for name in ["seq", "seq-pivot", "ebv", "blocked", "gauss-jordan", "refined"] {
+            for schedule in Schedule::ALL {
+                let s = solver_by_name(name, 2, DEFAULT_PANEL_WIDTH, Kernel::Auto, schedule);
+                assert_eq!(s.expect(name).name(), name, "{name} {schedule:?}");
+            }
         }
-        assert!(solver_by_name("nope", 2, DEFAULT_PANEL_WIDTH, Kernel::Auto).is_none());
+        assert!(
+            solver_by_name("nope", 2, DEFAULT_PANEL_WIDTH, Kernel::Auto, Schedule::Barrier)
+                .is_none()
+        );
+    }
+
+    #[test]
+    fn registry_refined_solves_to_tight_residual() {
+        // The registered wrapper must actually refine: a refined EBV
+        // solve of a well-conditioned system lands at ~machine-level
+        // relative residual regardless of schedule.
+        use crate::exec::Schedule;
+        let n = 96;
+        let a = diag_dominant_dense(n, GenSeed(6));
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).cos()).collect();
+        for schedule in Schedule::ALL {
+            let s = solver_by_name("refined", 3, 8, Kernel::Auto, schedule).unwrap();
+            let x = s.solve(&a, &b).unwrap();
+            assert!(a.residual(&x, &b) < 1e-10, "{schedule:?}");
+        }
     }
 }

@@ -168,6 +168,47 @@ mod tests {
     }
 
     #[test]
+    fn report_residual_is_the_returned_solutions_residual() {
+        // The contract callers lean on: `rel_residual` in the report is
+        // exactly the relative residual of the `x` handed back (not the
+        // pre-correction one), and `converged` is `rel_residual <= tol`.
+        let a = diag_dominant_dense(32, GenSeed(71));
+        let b = rhs(32, GenSeed(72));
+        for tol in [1e-12, 0.0] {
+            let (x, rep) =
+                Refined::new(SeqLu::new()).tol(tol).solve_reported(&a, &b).unwrap();
+            assert_eq!(rep.rel_residual, rel_residual_dense(&a, &x, &b), "tol={tol}");
+            assert_eq!(rep.converged, rep.rel_residual <= tol, "tol={tol}");
+        }
+    }
+
+    #[test]
+    fn refinement_tightens_f32_degraded_factors() {
+        // Factors rounded through f32 start ~1e-7; refinement against
+        // the f64 matrix must pull the residual back under 1e-12 and
+        // report strict improvement over iteration zero.
+        let n = 48;
+        let a = diag_dominant_dense(n, GenSeed(73));
+        let b = rhs(n, GenSeed(74));
+        let exact = SeqLu::new().factor(&a).unwrap();
+        let mut lu = exact.packed().clone();
+        for i in 0..n {
+            for j in 0..n {
+                lu.set(i, j, lu.get(i, j) as f32 as f64);
+            }
+        }
+        let degraded = DenseLuFactors::new(lu, exact.perm().clone());
+        let x0 = degraded.solve(&b).unwrap();
+        let start = rel_residual_dense(&a, &x0, &b);
+        assert!(start > 1e-11, "f32 factors should be visibly off: {start}");
+        let (x, rep) = refine_with_factors(&degraded, &a, &b, 10, 1e-12).unwrap();
+        assert!(rep.converged, "{rep:?}");
+        assert!(rep.iterations >= 1, "{rep:?}");
+        assert!(rep.rel_residual < start, "{rep:?} vs {start}");
+        assert!(rel_residual_dense(&a, &x, &b) <= 1e-12);
+    }
+
+    #[test]
     fn respects_iteration_cap() {
         let a = diag_dominant_dense(20, GenSeed(65));
         let b = rhs(20, GenSeed(66));

@@ -13,10 +13,12 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::exec::Schedule;
 use crate::matrix::CsrMatrix;
 use crate::solver::trisolve::{
-    levels_of_lower, levels_of_upper, sparse_backward, sparse_backward_levels,
-    sparse_forward_unit, sparse_forward_unit_levels,
+    levels_of_lower, levels_of_upper, sparse_backward, sparse_backward_dataflow,
+    sparse_backward_levels, sparse_forward_unit, sparse_forward_unit_dataflow,
+    sparse_forward_unit_levels,
 };
 use crate::util::error::{EbvError, Result};
 
@@ -31,6 +33,14 @@ pub struct SparseLuFactors {
     by_level: Vec<Vec<usize>>,
     /// Rows grouped by dependency level of `U` (parallel backward solve).
     u_by_level: Vec<Vec<usize>>,
+    /// Parallel-solve scheduling discipline. [`Schedule::Barrier`] walks
+    /// the level lists with one engine step per level;
+    /// [`Schedule::Dataflow`] replaces the level barriers with per-row
+    /// dependency counters. Per-row arithmetic is identical either way,
+    /// so both produce bitwise-equal solutions — the level structure is
+    /// retained as the fallback (and for sharded solves, which stay on
+    /// levels regardless).
+    schedule: Schedule,
 }
 
 impl SparseLuFactors {
@@ -42,7 +52,20 @@ impl SparseLuFactors {
     pub(crate) fn from_parts(l: CsrMatrix, u: CsrMatrix) -> SparseLuFactors {
         let (_, by_level) = levels_of_lower(&l);
         let (_, u_by_level) = levels_of_upper(&u);
-        SparseLuFactors { l, u, by_level, u_by_level }
+        SparseLuFactors { l, u, by_level, u_by_level, schedule: Schedule::Barrier }
+    }
+
+    /// Pick the parallel-solve scheduling discipline (builder style, so
+    /// `SparseSymbolic::assemble` can stamp its own knob onto every
+    /// factor object it produces). Defaults to [`Schedule::Barrier`].
+    pub fn with_schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// The scheduling discipline parallel solves will use.
+    pub fn schedule_choice(&self) -> Schedule {
+        self.schedule
     }
 
     #[inline]
@@ -97,6 +120,10 @@ impl SparseLuFactors {
         lanes: usize,
         engine: &crate::exec::LaneEngine,
     ) -> Result<Vec<f64>> {
+        if self.schedule == Schedule::Dataflow {
+            let y = sparse_forward_unit_dataflow(&self.l, b, lanes, engine)?;
+            return sparse_backward_dataflow(&self.u, &y, lanes, engine);
+        }
         let y = sparse_forward_unit_levels(&self.l, b, &self.by_level, lanes, engine)?;
         sparse_backward_levels(&self.u, &y, &self.u_by_level, lanes, engine)
     }
@@ -366,6 +393,23 @@ mod tests {
         let seq = f.solve(&b).unwrap();
         for lanes in [2usize, 3, 8] {
             assert_eq!(f.solve_par(&b, lanes).unwrap(), seq, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn dataflow_scheduled_solves_are_bitwise_barrier() {
+        // The schedule knob swaps barriers for dependency counters; row
+        // arithmetic is untouched, so the solves agree bit-for-bit.
+        let a = poisson_2d(11);
+        let (_, b) = manufactured_solution(&a, GenSeed(50));
+        let f = SparseLu::new().factor(&a).unwrap();
+        assert_eq!(f.schedule_choice(), Schedule::Barrier);
+        let df = f.clone().with_schedule(Schedule::Dataflow);
+        assert_eq!(df.schedule_choice(), Schedule::Dataflow);
+        let seq = f.solve(&b).unwrap();
+        for lanes in [2usize, 3, 8] {
+            assert_eq!(f.solve_par(&b, lanes).unwrap(), seq, "barrier lanes={lanes}");
+            assert_eq!(df.solve_par(&b, lanes).unwrap(), seq, "dataflow lanes={lanes}");
         }
     }
 

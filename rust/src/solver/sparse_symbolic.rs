@@ -48,7 +48,7 @@ use std::collections::BinaryHeap;
 use std::sync::Mutex;
 
 use crate::ebv::equalize::{equalize_hierarchical, equalize_weights};
-use crate::exec::{DeviceSet, LaneEngine, LaneSlots, StepCtl};
+use crate::exec::{run_dataflow, DepGraph, DeviceSet, LaneEngine, LaneSlots, Schedule, StepCtl};
 use crate::matrix::CsrMatrix;
 use crate::solver::kernel::{scatter_axpy, Kernel};
 use crate::solver::sparse_lu::SparseLuFactors;
@@ -87,6 +87,18 @@ pub struct SparseSymbolic {
     /// exact guard order, so every kernel choice is bitwise identical
     /// here (proven by `rust/tests/prop_sparse.rs`).
     kernel: Kernel,
+    /// Execution schedule of the parallel numeric phase (and, carried
+    /// into the assembled factors, of the parallel trisolves):
+    /// [`Schedule::Barrier`] steps lanes through the DAG levels;
+    /// [`Schedule::Dataflow`] gives every row a remaining-dependency
+    /// counter over the symbolic `L` pattern and lets lanes
+    /// self-schedule ready rows — one barrier entry per
+    /// refactorization instead of one per level. Bitwise identical
+    /// either way (each row's arithmetic depends only on the pattern
+    /// and its finalized dependencies). The device-sharded path keeps
+    /// the level schedule regardless (the staged exchange is
+    /// level-structured).
+    schedule: Schedule,
 }
 
 impl SparseSymbolic {
@@ -204,6 +216,7 @@ impl SparseSymbolic {
             by_level,
             row_cost,
             kernel: Kernel::Auto,
+            schedule: Schedule::Barrier,
         })
     }
 
@@ -220,6 +233,20 @@ impl SparseSymbolic {
     /// Configured microkernel choice (possibly [`Kernel::Auto`]).
     pub fn kernel_choice(&self) -> Kernel {
         self.kernel
+    }
+
+    /// Select the execution schedule of the parallel numeric phase
+    /// (default [`Schedule::Barrier`]); carried into the assembled
+    /// factors so their parallel trisolves follow the same choice. See
+    /// the field docs for the fallback matrix.
+    pub fn with_schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Configured execution schedule.
+    pub fn schedule_choice(&self) -> Schedule {
+        self.schedule
     }
 
     #[inline]
@@ -377,7 +404,9 @@ impl SparseSymbolic {
         }
         let l = CsrMatrix::from_raw(n, n, lp, li, lv)?;
         let u = CsrMatrix::from_raw(n, n, up, ui, uv)?;
-        Ok(SparseLuFactors::from_parts(l, u))
+        // The factors inherit the schedule so their parallel trisolves
+        // follow the same barrier/dataflow choice as the factorization.
+        Ok(SparseLuFactors::from_parts(l, u).with_schedule(self.schedule))
     }
 
     /// Sequential numeric refactorization over the cached pattern.
@@ -427,6 +456,9 @@ impl SparseSymbolic {
         self.check(a)?;
         if lanes <= 1 {
             return self.factor(a);
+        }
+        if self.schedule == Schedule::Dataflow {
+            return self.factor_dataflow_on(a, lanes, engine);
         }
 
         enum LevelChunks<'x> {
@@ -491,6 +523,79 @@ impl SparseSymbolic {
                     }
                     return StepCtl::Break;
                 }
+            }
+            StepCtl::Continue
+        });
+
+        if let Some((step, value)) = bad.into_inner().expect("pivot slot") {
+            return Err(EbvError::SingularPivot { step, value, tol: self.pivot_tol });
+        }
+        self.assemble(&l_val, &u_val)
+    }
+
+    /// Dataflow numeric refactorization: one task per row, whose
+    /// remaining-dependency counter is its symbolic `L`-row length and
+    /// whose children are the transpose of the `L` pattern — rows run
+    /// the moment their last dependency's `U` values land, with no
+    /// level barriers at all (one engine step per refactorization; the
+    /// level structure stays behind as the barrier fallback and the
+    /// planner's cost model). Each executing lane scatters into its own
+    /// dense accumulator, which [`SparseSymbolic::numeric_row`] restores
+    /// to all-zero — so lane assignment, engine size, and completion
+    /// interleaving are all bit-inert and the factors are bitwise
+    /// identical to [`SparseSymbolic::factor`] (pinned in the tests
+    /// below and `tests/prop_schedule.rs`).
+    ///
+    /// Tiny systems (`n < lanes * 4`, the level path's single-chunk
+    /// threshold applied globally) keep the sequential sweep — task
+    /// bookkeeping would dominate.
+    ///
+    /// Concurrent failures: every failing row records, the **lowest**
+    /// step wins — the same row the sequential sweep reports unless
+    /// several pivots fail in one run, where the barrier path's
+    /// first-seen row is itself scheduling-dependent.
+    fn factor_dataflow_on(
+        &self,
+        a: &CsrMatrix,
+        lanes: usize,
+        engine: &LaneEngine,
+    ) -> Result<SparseLuFactors> {
+        if self.n < lanes * 4 {
+            return self.factor(a);
+        }
+        let _t = crate::obs::SpanTimer::start(crate::obs::Phase::NumericFactor);
+
+        let mut graph = DepGraph::new(self.n);
+        for i in 0..self.n {
+            for pos in self.l_ptr[i]..self.l_ptr[i + 1] {
+                graph.add_edge(self.l_idx[pos], i);
+            }
+        }
+
+        let mut l_val = vec![0.0f64; self.l_idx.len()];
+        let mut u_val = vec![0.0f64; self.u_idx.len()];
+        let l_shared = SharedF64(l_val.as_mut_ptr());
+        let u_shared = SharedF64(u_val.as_mut_ptr());
+        // One dense accumulator per *executing* lane (workers are the
+        // engine's lanes here, not schedule vlanes).
+        let workers = engine.lanes().max(1);
+        let mut accs: Vec<Vec<f64>> = (0..workers).map(|_| vec![0.0f64; self.n]).collect();
+        let acc_slots = LaneSlots::new(&mut accs);
+        let bad: Mutex<Option<(usize, f64)>> = Mutex::new(None);
+
+        run_dataflow(engine, &graph, |worker, i| {
+            // SAFETY: each worker touches only its own accumulator
+            // slot; row i's l/u ranges are written by this task alone;
+            // every dependency row completed first (dep edges), its
+            // writes published by the counters' AcqRel chain.
+            let acc = unsafe { acc_slots.slot(worker) };
+            let outcome = unsafe { self.numeric_row(i, a, &mut acc[..], l_shared.0, u_shared.0) };
+            if let Err((step, value)) = outcome {
+                let mut slot = bad.lock().expect("pivot slot");
+                if slot.map_or(true, |(s, _)| step < s) {
+                    *slot = Some((step, value));
+                }
+                return StepCtl::Break;
             }
             StepCtl::Continue
         });
@@ -685,6 +790,81 @@ mod tests {
                 assert_eq!(f.u(), reference.u(), "lanes={lanes} engine={engine_lanes}");
             }
         }
+    }
+
+    #[test]
+    fn dataflow_numeric_is_bitwise_sequential() {
+        // Per-row dependency counters replace the level barriers; each
+        // row still computes from the same finalized dependencies, so
+        // the factors are bitwise identical for every lane count and
+        // engine size.
+        let a = poisson_2d(12);
+        let sym = SparseSymbolic::analyze(&a).unwrap().with_schedule(Schedule::Dataflow);
+        let reference = SparseLu::new().factor(&a).unwrap();
+        for lanes in [2usize, 3, 8] {
+            for engine_lanes in [1usize, 2, 4] {
+                let engine = LaneEngine::new(engine_lanes);
+                let f = sym.factor_par_on(&a, lanes, &engine).unwrap();
+                assert_eq!(f.l(), reference.l(), "lanes={lanes} engine={engine_lanes}");
+                assert_eq!(f.u(), reference.u(), "lanes={lanes} engine={engine_lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn dataflow_costs_one_engine_step() {
+        let a = poisson_2d(12);
+        let sym = SparseSymbolic::analyze(&a).unwrap().with_schedule(Schedule::Dataflow);
+        let engine = LaneEngine::new(3);
+        let before = engine.stats();
+        let dep_before = engine.dep_stats();
+        sym.factor_par_on(&a, 4, &engine).unwrap();
+        let after = engine.stats();
+        let dep_after = engine.dep_stats();
+        assert_eq!(after.steps - before.steps, 1, "whole DAG in one barrier entry");
+        assert_eq!(dep_after.runs - dep_before.runs, 1);
+        assert_eq!(dep_after.tasks - dep_before.tasks, sym.n() as u64);
+    }
+
+    #[test]
+    fn dataflow_detects_numerically_singular_pivot() {
+        let a = CsrMatrix::from_raw(
+            2,
+            2,
+            vec![0, 2, 4],
+            vec![0, 1, 0, 1],
+            vec![1.0, 2.0, 0.5, 1.0],
+        )
+        .unwrap();
+        let sym = SparseSymbolic::analyze(&a).unwrap().with_schedule(Schedule::Dataflow);
+        // n < lanes*4 falls back to the sequential sweep — still the
+        // same error.
+        let err = sym.factor_par_on(&a, 4, &LaneEngine::new(2));
+        assert!(matches!(err, Err(EbvError::SingularPivot { step: 1, .. })), "{err:?}");
+        // A grid large enough to run the dataflow path proper, with one
+        // poisoned row: an all-zero row pins its pivot to exact zero
+        // (its multipliers and updates all vanish), and no other pivot
+        // fails, so the reported step is deterministic in both modes.
+        let g = poisson_2d(10);
+        let n = g.rows();
+        let bad_row = n / 2;
+        let mut vals = g.values().to_vec();
+        for v in &mut vals[g.row_ptr()[bad_row]..g.row_ptr()[bad_row + 1]] {
+            *v = 0.0;
+        }
+        let poisoned =
+            CsrMatrix::from_raw(n, n, g.row_ptr().to_vec(), g.col_idx().to_vec(), vals).unwrap();
+        let sym = SparseSymbolic::analyze(&poisoned)
+            .unwrap()
+            .with_schedule(Schedule::Dataflow);
+        let seq = sym.factor(&poisoned);
+        let par = sym.factor_par_on(&poisoned, 4, &LaneEngine::new(4));
+        let step_of = |r: &Result<SparseLuFactors>| match r {
+            Err(EbvError::SingularPivot { step, .. }) => *step,
+            other => panic!("expected SingularPivot, got {other:?}"),
+        };
+        assert_eq!(step_of(&seq), bad_row);
+        assert_eq!(step_of(&par), bad_row);
     }
 
     #[test]

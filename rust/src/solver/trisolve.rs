@@ -14,7 +14,7 @@
 use std::sync::Mutex;
 
 use crate::ebv::schedule::LaneSchedule;
-use crate::exec::{DeviceSet, LaneEngine, StepCtl};
+use crate::exec::{run_dataflow, DepGraph, DeviceSet, LaneEngine, StepCtl};
 use crate::matrix::{CsrMatrix, DenseMatrix};
 use crate::util::error::{EbvError, Result};
 
@@ -431,6 +431,123 @@ pub fn sparse_backward_levels(
                 unsafe { *x_ptr.0.add(i) = acc / diag };
             }
         }
+        StepCtl::Continue
+    });
+
+    if let Some(step) = bad.into_inner().expect("diag slot") {
+        return Err(EbvError::SingularPivot { step, value: 0.0, tol: 0.0 });
+    }
+    Ok(x)
+}
+
+/// Dataflow parallel sparse forward substitution: one task per row
+/// whose dependency counter is its `L`-row length (children are the
+/// pattern transpose), self-scheduled by the engine's lanes — the
+/// GPU-style self-scheduling trisolve, one barrier entry per solve
+/// instead of one per level. Each row performs the exact op sequence of
+/// [`sparse_forward_unit`] against dependencies its counters prove
+/// finalized, so results are **bitwise identical** to the sequential
+/// and level-stepped solves for every lane count and engine size.
+/// Small systems (`n < lanes * 4`) and `lanes <= 1` keep the
+/// sequential sweep, mirroring the level path's fall-through policy.
+pub fn sparse_forward_unit_dataflow(
+    l: &CsrMatrix,
+    b: &[f64],
+    lanes: usize,
+    engine: &LaneEngine,
+) -> Result<Vec<f64>> {
+    if b.len() != l.rows() {
+        return Err(EbvError::Shape("rhs length mismatch".into()));
+    }
+    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Trisolve);
+    let n = l.rows();
+    if lanes <= 1 || n < lanes * 4 {
+        return sparse_forward_unit(l, b);
+    }
+    let mut graph = DepGraph::new(n);
+    for i in 0..n {
+        let (cols, _) = l.row(i);
+        for &j in cols {
+            debug_assert!(j < i, "L must be strictly lower triangular");
+            graph.add_edge(j, i);
+        }
+    }
+    let mut y = b.to_vec();
+    let y_ptr = SharedVec(y.as_mut_ptr());
+
+    run_dataflow(engine, &graph, |_worker, i| {
+        let (cols, vals) = l.row(i);
+        // SAFETY: row i is written by this task alone; every y[j] it
+        // reads was finalized by a parent task and published through
+        // the dep counters' AcqRel chain.
+        let mut acc = unsafe { *y_ptr.0.add(i) };
+        for (&j, &v) in cols.iter().zip(vals.iter()) {
+            acc -= v * unsafe { *y_ptr.0.add(j) };
+        }
+        unsafe { *y_ptr.0.add(i) = acc };
+        StepCtl::Continue
+    });
+    Ok(y)
+}
+
+/// Dataflow parallel sparse backward substitution `U x = y`: the
+/// bottom-up mirror of [`sparse_forward_unit_dataflow`] — row `i`
+/// depends on every `x[j]`, `j > i`, in its `U` row. Bitwise identical
+/// to [`sparse_backward`] for every lane count and engine size; same
+/// sequential fall-throughs as the forward solve.
+///
+/// A zero diagonal stops the run through the scheduler's break
+/// protocol; with several zero diagonals the **lowest failing row** is
+/// reported (concurrent failures race, so the minimum is kept — the
+/// level-stepped path's lowest-level row may differ, which callers
+/// must not pin).
+pub fn sparse_backward_dataflow(
+    u: &CsrMatrix,
+    y: &[f64],
+    lanes: usize,
+    engine: &LaneEngine,
+) -> Result<Vec<f64>> {
+    if y.len() != u.rows() {
+        return Err(EbvError::Shape("rhs length mismatch".into()));
+    }
+    let _t = crate::obs::SpanTimer::start(crate::obs::Phase::Trisolve);
+    let n = u.rows();
+    if lanes <= 1 || n < lanes * 4 {
+        return sparse_backward(u, y);
+    }
+    let mut graph = DepGraph::new(n);
+    for i in 0..n {
+        let (cols, _) = u.row(i);
+        for &j in cols.iter().filter(|&&j| j > i) {
+            graph.add_edge(j, i);
+        }
+    }
+    let mut x = y.to_vec();
+    let x_ptr = SharedVec(x.as_mut_ptr());
+    let bad = Mutex::new(None::<usize>);
+
+    run_dataflow(engine, &graph, |_worker, i| {
+        let (cols, vals) = u.row(i);
+        // SAFETY: as the forward solve — exclusive write to x[i],
+        // finalized reads of x[j > i].
+        let mut acc = unsafe { *x_ptr.0.add(i) };
+        let mut diag = 0.0;
+        for (&j, &v) in cols.iter().zip(vals.iter()) {
+            if j == i {
+                diag = v;
+            } else {
+                debug_assert!(j > i, "U must be upper triangular");
+                acc -= v * unsafe { *x_ptr.0.add(j) };
+            }
+        }
+        if diag == 0.0 {
+            let mut slot = bad.lock().expect("diag slot");
+            if slot.map_or(true, |s| i < s) {
+                *slot = Some(i);
+            }
+            return StepCtl::Break;
+        }
+        unsafe { *x_ptr.0.add(i) = acc / diag };
         StepCtl::Continue
     });
 
@@ -864,6 +981,61 @@ mod tests {
         let (_, by_level) = levels_of_upper(&u);
         assert_eq!(by_level.len(), 1);
         let err = sparse_backward_levels(&u, &[1.0; 8], &by_level, 2, engine());
+        assert!(
+            matches!(err, Err(EbvError::SingularPivot { step: 5, .. })),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn dataflow_solves_are_bitwise_sequential() {
+        // Self-scheduled rows replace the level barriers; per-row op
+        // sequences are unchanged, so both substitutions reproduce the
+        // sequential bits for every lane count and engine size.
+        let a = diag_dominant_sparse(90, 5, GenSeed(23));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let b: Vec<f64> = (0..90).map(|i| (i as f64 * 0.5).sin()).collect();
+        let seq_y = sparse_forward_unit(f.l(), &b).unwrap();
+        let seq_x = sparse_backward(f.u(), &seq_y).unwrap();
+        for lanes in [2usize, 4, 7] {
+            for engine_lanes in [1usize, 2, 3] {
+                let engine = LaneEngine::new(engine_lanes);
+                let y = sparse_forward_unit_dataflow(f.l(), &b, lanes, &engine).unwrap();
+                assert_eq!(y, seq_y, "fwd lanes={lanes} engine={engine_lanes}");
+                let x = sparse_backward_dataflow(f.u(), &y, lanes, &engine).unwrap();
+                assert_eq!(x, seq_x, "bwd lanes={lanes} engine={engine_lanes}");
+            }
+        }
+        // lanes <= 1 and tiny systems keep the sequential sweep.
+        let y = sparse_forward_unit_dataflow(f.l(), &b, 1, engine()).unwrap();
+        assert_eq!(y, seq_y);
+    }
+
+    #[test]
+    fn dataflow_solves_cost_one_engine_step_each() {
+        let a = diag_dominant_sparse(90, 5, GenSeed(24));
+        let f = SparseLu::new().factor(&a).unwrap();
+        let b: Vec<f64> = (0..90).map(|i| (i as f64 * 0.7).cos()).collect();
+        let engine = LaneEngine::new(3);
+        let before = engine.stats();
+        let dep_before = engine.dep_stats();
+        let y = sparse_forward_unit_dataflow(f.l(), &b, 4, &engine).unwrap();
+        sparse_backward_dataflow(f.u(), &y, 4, &engine).unwrap();
+        let after = engine.stats();
+        let dep_after = engine.dep_stats();
+        assert_eq!(after.steps - before.steps, 2, "one barrier entry per solve");
+        assert_eq!(dep_after.runs - dep_before.runs, 2);
+    }
+
+    #[test]
+    fn dataflow_backward_detects_zero_diagonal() {
+        // Diagonal U (no deps, all rows ready at once) with one zero —
+        // big enough for the dataflow path to engage on 2 lanes.
+        let mut vals = vec![2.0; 16];
+        vals[5] = 0.0;
+        let u =
+            CsrMatrix::from_raw(16, 16, (0..=16).collect(), (0..16).collect(), vals).unwrap();
+        let err = sparse_backward_dataflow(&u, &[1.0; 16], 2, &LaneEngine::new(2));
         assert!(
             matches!(err, Err(EbvError::SingularPivot { step: 5, .. })),
             "{err:?}"

@@ -528,9 +528,11 @@ pub fn encode_response(frame: &ResponseFrame) -> String {
                 m.engine_barrier_waits,
                 m.panel_width
             );
-            // Kernel names are lowercase identifiers — no JSON escaping
-            // needed (`auto|unroll4|unroll8|tiled`).
+            // Kernel and schedule names are lowercase identifiers — no
+            // JSON escaping needed (`auto|unroll4|unroll8|tiled`,
+            // `barrier|dataflow`).
             let _ = write!(out, ",\"kernel\":\"{}\"", m.kernel.name());
+            let _ = write!(out, ",\"schedule\":\"{}\"", m.schedule.name());
             let _ = write!(
                 out,
                 ",\"devices\":{},\"device_lanes\":{},\"device_jobs\":{},\
@@ -918,6 +920,12 @@ pub fn decode_response_ext(line: &str) -> Result<(ResponseFrame, FrameExt)> {
                     acc.metrics.kernel = crate::solver::Kernel::parse(&name)
                         .ok_or_else(|| jerr(format!("field `kernel`: unknown kernel `{name}`")))?;
                 }
+                "schedule" => {
+                    let name = expect_str(&mut sc, &k)?;
+                    acc.metrics.schedule = crate::exec::Schedule::parse(&name).ok_or_else(
+                        || jerr(format!("field `schedule`: unknown schedule `{name}`")),
+                    )?;
+                }
                 "devices" => acc.metrics.devices = as_index(expect_num(&mut sc, &k)?, &k)?,
                 "device_lanes" => {
                     acc.metrics.device_lanes = as_index(expect_num(&mut sc, &k)?, &k)?
@@ -1238,6 +1246,7 @@ mod tests {
             engine_barrier_waits: 2480,
             panel_width: 64,
             kernel: crate::solver::Kernel::Tiled,
+            schedule: crate::exec::Schedule::Dataflow,
             devices: 2,
             device_lanes: 2,
             device_jobs: 7,
@@ -1306,6 +1315,7 @@ mod tests {
             engine_barrier_waits: 18,
             panel_width: 19,
             kernel: crate::solver::Kernel::Unroll8,
+            schedule: crate::exec::Schedule::Dataflow,
             devices: 20,
             device_lanes: 21,
             device_jobs: 22,
@@ -1347,6 +1357,15 @@ mod tests {
         let line = line.replace("\"kernel\":\"auto\"", "\"kernel\":\"simd512\"");
         let err = decode_response(&line).unwrap_err();
         assert!(err.to_string().contains("unknown kernel `simd512`"), "{err}");
+    }
+
+    #[test]
+    fn unknown_schedule_name_is_a_decode_error() {
+        let line = encode_response(&ResponseFrame::Metrics(MetricsSnapshot::default()));
+        assert!(line.contains("\"schedule\":\"barrier\""), "{line}");
+        let line = line.replace("\"schedule\":\"barrier\"", "\"schedule\":\"wavefront\"");
+        let err = decode_response(&line).unwrap_err();
+        assert!(err.to_string().contains("unknown schedule `wavefront`"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Property suite pinning the dataflow lane scheduling discipline
+//! (`--schedule dataflow`, DESIGN.md §Dataflow scheduling).
+//!
+//! The contract:
+//!
+//! * the dense blocked factorization is **bitwise identical** across
+//!   `Schedule::{Barrier, Dataflow}` for every panel width, kernel,
+//!   lane count, `RowDist`, and device count — the dataflow DAG (panel
+//!   lookahead included) reorders execution, never operands;
+//! * the sparse numeric refactorization under per-row dependency
+//!   counters is bitwise identical to the level-scheduled path and to
+//!   the monolithic `SparseLu::factor`, including same-pattern/
+//!   different-values refactorizations;
+//! * the dependency-counted sparse triangular solves are bitwise
+//!   identical to the sequential substitutions for every lane and
+//!   engine size;
+//! * a panicking task inside the dataflow scheduler re-raises on the
+//!   submitting thread and leaves the engine pool serviceable — the
+//!   same panic/break protocol as the barrier path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use ebv_solve::ebv::schedule::RowDist;
+use ebv_solve::exec::{run_dataflow, DepGraph, DeviceSet, LaneEngine, Schedule, StepCtl};
+use ebv_solve::matrix::generate::{
+    diag_dominant_dense, diag_dominant_sparse, poisson_2d, rhs, GenSeed,
+};
+use ebv_solve::solver::{EbvLu, Kernel, LuSolver, SparseLu, SparseSymbolic};
+use ebv_solve::testutil::rescale_csr;
+
+/// The dense acceptance grid: schedule × nb × kernel × lanes × RowDist
+/// × devices, every cell bitwise equal to one per-(nb, kernel)
+/// baseline. The baseline is the barrier run the rest of the repo
+/// already pins against `SeqLu`; what this grid adds is that the
+/// dataflow DAG — including the panel-lookahead overlap, and including
+/// the fallbacks (nb=1 column path, single covering panel, sharded
+/// device sets) — never moves a bit.
+#[test]
+fn dense_factor_is_bitwise_stable_across_the_schedule_grid() {
+    let n = 96;
+    let a = diag_dominant_dense(n, GenSeed(1201));
+    let engine = Arc::new(LaneEngine::new(4));
+    let set = Arc::new(DeviceSet::new(2, 2));
+
+    for nb in [1usize, 8, 64] {
+        for kernel in [Kernel::Unroll4, Kernel::Unroll8, Kernel::Tiled] {
+            let baseline = EbvLu::with_lanes(4)
+                .seq_threshold(0)
+                .panel(nb)
+                .kernel(kernel)
+                .with_engine(Arc::clone(&engine))
+                .factor(&a)
+                .unwrap();
+            for schedule in Schedule::ALL {
+                for dist in RowDist::ALL {
+                    for lanes in [1usize, 3, 4] {
+                        let f = EbvLu::with_lanes(lanes)
+                            .seq_threshold(0)
+                            .panel(nb)
+                            .kernel(kernel)
+                            .with_dist(dist)
+                            .schedule(schedule)
+                            .with_engine(Arc::clone(&engine))
+                            .factor(&a)
+                            .unwrap();
+                        assert_eq!(
+                            f.packed().data(),
+                            baseline.packed().data(),
+                            "nb={nb} kern={} sched={} dist={dist:?} lanes={lanes}",
+                            kernel.name(),
+                            schedule.name()
+                        );
+                    }
+                    // D=2: the sharded path keeps the barrier discipline
+                    // regardless of the knob — still bitwise.
+                    let f = EbvLu::with_lanes(4)
+                        .seq_threshold(0)
+                        .panel(nb)
+                        .kernel(kernel)
+                        .with_dist(dist)
+                        .schedule(schedule)
+                        .with_devices(Arc::clone(&set))
+                        .factor(&a)
+                        .unwrap();
+                    assert_eq!(
+                        f.packed().data(),
+                        baseline.packed().data(),
+                        "sharded nb={nb} kern={} sched={} dist={dist:?}",
+                        kernel.name(),
+                        schedule.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Lookahead engages only with at least two panels; a panel covering
+/// the whole matrix must fall back to barrier bits (and does not
+/// dep-schedule at all).
+#[test]
+fn dense_single_panel_and_tiny_systems_fall_back() {
+    let engine = Arc::new(LaneEngine::new(3));
+    for n in [5usize, 40] {
+        let a = diag_dominant_dense(n, GenSeed(1300 + n as u64));
+        let dep_before = engine.dep_stats().runs;
+        let barrier = EbvLu::with_lanes(3)
+            .seq_threshold(0)
+            .panel(64) // one covering panel for both sizes
+            .with_engine(Arc::clone(&engine))
+            .factor(&a)
+            .unwrap();
+        let dataflow = EbvLu::with_lanes(3)
+            .seq_threshold(0)
+            .panel(64)
+            .schedule(Schedule::Dataflow)
+            .with_engine(Arc::clone(&engine))
+            .factor(&a)
+            .unwrap();
+        assert_eq!(dataflow.packed().data(), barrier.packed().data(), "n={n}");
+        assert_eq!(engine.dep_stats().runs, dep_before, "n={n}: no dataflow drain");
+    }
+}
+
+/// The sparse acceptance grid: per-row dependency counters ≡ level
+/// barriers ≡ monolithic factorization, bit for bit, for every lane
+/// count and engine size — on a Poisson pattern (real fill, shallow
+/// DAG) and an unstructured random pattern, including the cache-reuse
+/// refactorization with new values.
+#[test]
+fn sparse_refactor_is_bitwise_across_schedules() {
+    let engines: Vec<Arc<LaneEngine>> =
+        [1usize, 2, 4].iter().map(|&l| Arc::new(LaneEngine::new(l))).collect();
+    let mats = [poisson_2d(10), diag_dominant_sparse(120, 5, GenSeed(1401))];
+    for a in &mats {
+        let n = a.rows();
+        let reference = SparseLu::new().factor(a).unwrap();
+        let a2 = rescale_csr(a, 1.5);
+        let ref2 = SparseLu::new().factor(&a2).unwrap();
+        for schedule in Schedule::ALL {
+            let sym = SparseSymbolic::analyze(a).unwrap().with_schedule(schedule);
+            for lanes in [1usize, 2, 5, 8] {
+                for engine in &engines {
+                    let f = sym.factor_par_on(a, lanes, engine).unwrap();
+                    let ctx = format!(
+                        "n={n} sched={} lanes={lanes} engine={}",
+                        schedule.name(),
+                        engine.lanes()
+                    );
+                    assert_eq!(f.l(), reference.l(), "{ctx}");
+                    assert_eq!(f.u(), reference.u(), "{ctx}");
+                    // The factors carry the schedule into their solves.
+                    assert_eq!(f.schedule_choice(), schedule, "{ctx}");
+                    let f2 = sym.factor_par_on(&a2, lanes, engine).unwrap();
+                    assert_eq!(f2.l(), ref2.l(), "refactor {ctx}");
+                    assert_eq!(f2.u(), ref2.u(), "refactor {ctx}");
+                }
+            }
+        }
+    }
+}
+
+/// Dependency-counted triangular solves ≡ sequential substitution for
+/// every lane and engine size, carried end-to-end through
+/// `SparseLuFactors::solve_par_on` under both schedules.
+#[test]
+fn sparse_solves_are_bitwise_across_schedules() {
+    let a = poisson_2d(11);
+    let n = a.rows();
+    let b = rhs(n, GenSeed(1501));
+    let f = SparseLu::new().factor(&a).unwrap();
+    let sequential = f.solve(&b).unwrap();
+    for schedule in Schedule::ALL {
+        let f = f.clone().with_schedule(schedule);
+        for lanes in [1usize, 2, 4, 8] {
+            for engine_lanes in [1usize, 2, 4] {
+                let engine = LaneEngine::new(engine_lanes);
+                let x = f.solve_par_on(&b, lanes, &engine).unwrap();
+                assert_eq!(
+                    x,
+                    sequential,
+                    "sched={} lanes={lanes} engine={engine_lanes}",
+                    schedule.name()
+                );
+            }
+        }
+    }
+}
+
+/// Panic-injection stress: a task that panics mid-DAG must re-raise on
+/// the submitting thread with its original payload, unclaimed tasks
+/// must never start, and the engine pool must stay serviceable for
+/// both further dataflow runs and barrier work — repeated to shake out
+/// lane/scheduler interleavings.
+#[test]
+fn dep_scheduler_panic_reraises_and_pool_survives() {
+    let engine = Arc::new(LaneEngine::new(3));
+    for round in 0..8u32 {
+        // Fan-out DAG with enough parallelism that sibling lanes are
+        // mid-claim when the poisoned task fires.
+        let tasks = 96;
+        let mut g = DepGraph::new(tasks);
+        for t in 1..tasks {
+            g.add_edge((t - 1) / 2, t);
+        }
+        let poisoned = 10 + (round as usize % 3);
+        let started = AtomicUsize::new(0);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_dataflow(&engine, &g, |_worker, task| {
+                started.fetch_add(1, Ordering::Relaxed);
+                if task == poisoned {
+                    panic!("injected {round}");
+                }
+                StepCtl::Continue
+            });
+        }));
+        let payload = caught.expect_err("panic must reach the submitter");
+        let msg = payload
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| payload.downcast_ref::<&str>().copied())
+            .unwrap_or("");
+        assert!(msg.contains("injected"), "round {round}: payload {msg:?}");
+        // Stopped early: the poisoned task's descendants never started.
+        assert!(
+            started.load(Ordering::Relaxed) < tasks,
+            "round {round}: stop flag failed to halt the drain"
+        );
+
+        // The pool survives — a fresh dataflow run drains completely …
+        let done = AtomicUsize::new(0);
+        run_dataflow(&engine, &g, |_, _| {
+            done.fetch_add(1, Ordering::Relaxed);
+            StepCtl::Continue
+        });
+        assert_eq!(done.load(Ordering::Relaxed), tasks, "round {round}");
+
+        // … and barrier work on the same pool still runs to the right
+        // answer.
+        let a = diag_dominant_dense(40, GenSeed(1600 + u64::from(round)));
+        let b = vec![1.0; 40];
+        let x = EbvLu::with_lanes(3)
+            .seq_threshold(0)
+            .with_engine(Arc::clone(&engine))
+            .solve(&a, &b)
+            .unwrap();
+        assert!(a.residual(&x, &b) < 1e-9, "round {round}");
+    }
+}

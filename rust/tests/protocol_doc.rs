@@ -156,6 +156,37 @@ fn every_wire_key_the_codec_emits_is_documented() {
     );
 }
 
+/// The `schedule` metrics key is part of the contract: the doc's
+/// fully-populated example carries the non-default name, it decodes to
+/// the enum (not a passthrough string), re-encodes verbatim, and both
+/// wire names stay documented.
+#[test]
+fn metrics_schedule_key_is_pinned() {
+    use ebv_solve::exec::Schedule;
+
+    let metrics_example = doc_examples()
+        .into_iter()
+        .find(|l| l.contains("\"op\":\"metrics\"") && l.contains("submitted"))
+        .expect("the doc documents a full metrics response");
+    assert!(
+        metrics_example.contains("\"schedule\":\"dataflow\""),
+        "the doc's metrics example should exercise the non-default schedule"
+    );
+    let decoded = decode_response(&metrics_example).expect("doc metrics example decodes");
+    let ResponseFrame::Metrics(snap) = &decoded else {
+        panic!("metrics example decoded to {decoded:?}");
+    };
+    assert_eq!(snap.schedule, Schedule::Dataflow);
+    assert!(encode_response(&decoded).contains("\"schedule\":\"dataflow\""));
+    for schedule in Schedule::ALL {
+        assert!(
+            DOC.contains(&format!("`\"{}\"`", schedule.name())),
+            "schedule name {} missing from docs/PROTOCOL.md",
+            schedule.name()
+        );
+    }
+}
+
 #[test]
 fn binary_frame_constants_match_the_documented_spec() {
     use ebv_solve::wire::binary;
